@@ -1,0 +1,58 @@
+//! Quickstart: build a tiny power-law dataset on disk, run one epoch of
+//! storage-based data preparation + training, and print the report.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use agnes::config::AgnesConfig;
+use agnes::coordinator::ModeledCompute;
+use agnes::metrics::{fmt_bytes, fmt_ns};
+use agnes::runtime::{ArtifactPaths, XlaCompute};
+use agnes::AgnesRunner;
+
+fn main() -> anyhow::Result<()> {
+    // 1. configure — `tiny` is a 2k-node power-law graph with 32-dim
+    //    features, 16 KB blocks, hyperbatches of 8 minibatches of 64
+    let config = AgnesConfig::tiny();
+    println!("config:\n{}", config.to_toml());
+
+    // 2. open — generates the on-disk block stores on first use
+    let mut runner = AgnesRunner::open(config)?;
+    println!(
+        "dataset {}: {} nodes, {} edges, {} graph blocks",
+        runner.dataset.spec.name,
+        runner.dataset.spec.num_nodes,
+        runner.dataset.spec.num_edges,
+        runner.graph_store.num_blocks(),
+    );
+
+    // 3. train one epoch — uses the AOT-compiled JAX/Pallas step when
+    //    `make artifacts` has run, else a modeled compute stage
+    let result = if ArtifactPaths::in_dir("artifacts", "sage").exist() {
+        let mut compute = XlaCompute::load("artifacts", "sage")?;
+        let r = runner.run_epoch(0, &mut compute)?;
+        println!("compute backend: XLA (AOT sage), {} steps", compute.steps);
+        r
+    } else {
+        println!("compute backend: modeled (run `make artifacts` for the real one)");
+        runner.run_epoch(0, &mut ModeledCompute::new(2_000_000))?
+    };
+
+    // 4. report
+    let m = &result.metrics;
+    println!("\n=== epoch report ===");
+    println!("minibatches          {}", m.minibatches);
+    println!("sampled nodes        {}", m.sampled_nodes);
+    println!("gathered features    {}", m.gathered_features);
+    println!("storage requests     {}", m.device.num_requests);
+    println!("storage bytes        {}", fmt_bytes(m.device.total_bytes));
+    println!("storage time (sim)   {}", fmt_ns(m.sample_io_ns + m.gather_io_ns));
+    println!("achieved bandwidth   {}/s", fmt_bytes(m.device.achieved_bandwidth() as u64));
+    println!("graph buffer hits    {:.1}%", m.graph_hit_ratio * 100.0);
+    println!("feature cache hits   {:.1}%", m.feature_hit_ratio * 100.0);
+    println!("prep fraction        {:.1}%", m.prep_fraction() * 100.0);
+    println!("loss                 {:.4}", result.mean_loss);
+    println!("accuracy             {:.3}", result.accuracy);
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT lowering: JAX train steps -> HLO text + manifest + initial params.
+
+Runs ONCE at build time (``make artifacts``); the rust coordinator loads
+the artifacts through the PJRT C API and python never appears on the
+training path.
+
+Interchange is HLO *text*, not a serialized ``HloModuleProto``: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts \
+        --models gcn,sage,gat --batch 64 --fanouts 5,5 \
+        --feature-dim 32 --hidden 32 --classes 8 --lr 0.05
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build_artifact(out_dir, name, batch, fanouts, feature_dim, hidden, classes, lr, seed,
+                   agg="pallas"):
+    if agg == "ref":
+        # CPU-deployment variant: the Pallas kernel's interpret-mode
+        # lowering costs ~3.5x on CPU vs the identical pure-jnp formula
+        # (EXPERIMENTS.md §Perf L2). On TPU targets keep "pallas".
+        from .kernels.ref import fanout_mean_project_ref
+
+        M.fanout_mean_project = lambda c, w, **k: fanout_mean_project_ref(c, w)
+    names, values = M.init_params(name, feature_dim, hidden, classes, len(fanouts), seed)
+    step = M.make_train_step(name, batch, fanouts, len(values), lr)
+    feats, labels, mask = M.example_shapes(batch, tuple(fanouts), feature_dim)
+    param_shapes = [jax.ShapeDtypeStruct(v.shape, v.dtype) for v in values]
+    lowered = jax.jit(step).lower(*param_shapes, feats, labels, mask)
+    hlo = to_hlo_text(lowered)
+    # inference variant (logits only): used by the rust runtime for
+    # held-out accuracy evaluation
+    infer = M.make_infer(name, batch, fanouts, len(values))
+    infer_hlo = to_hlo_text(jax.jit(infer).lower(*param_shapes, feats))
+
+    total = sum(M.level_sizes(batch, fanouts))
+    manifest = {
+        "model": name,
+        "batch": batch,
+        "fanouts": fanouts,
+        "feature_dim": feature_dim,
+        "hidden": hidden,
+        "classes": classes,
+        "total_nodes": total,
+        "params": [{"name": n, "shape": list(v.shape)} for n, v in zip(names, values)],
+        "learning_rate": lr,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+        f.write(hlo)
+    with open(os.path.join(out_dir, f"{name}_infer.hlo.txt"), "w") as f:
+        f.write(infer_hlo)
+    with open(os.path.join(out_dir, f"{name}.manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    flat = np.concatenate([np.asarray(v, np.float32).ravel() for v in values])
+    flat.astype("<f4").tofile(os.path.join(out_dir, f"{name}.params.bin"))
+    print(f"  {name}: hlo {len(hlo) / 1e6:.2f} MB, {len(values)} params, total_nodes {total}")
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="gcn,sage,gat")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--fanouts", default="5,5")
+    ap.add_argument("--feature-dim", type=int, default=32)
+    ap.add_argument("--hidden", type=int, default=32)
+    ap.add_argument("--classes", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--agg", choices=["pallas", "ref"], default="pallas",
+                    help="aggregation impl lowered into the HLO")
+    args = ap.parse_args()
+    fanouts = [int(x) for x in args.fanouts.split(",") if x]
+    print(
+        f"AOT: batch={args.batch} fanouts={fanouts} F={args.feature_dim} "
+        f"H={args.hidden} C={args.classes} lr={args.lr} -> {args.out_dir}"
+    )
+    for name in args.models.split(","):
+        build_artifact(
+            args.out_dir,
+            name.strip(),
+            args.batch,
+            fanouts,
+            args.feature_dim,
+            args.hidden,
+            args.classes,
+            args.lr,
+            args.seed,
+            agg=args.agg,
+        )
+    # stamp so `make artifacts` can skip rebuilds
+    with open(os.path.join(args.out_dir, "BUILT"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,220 @@
+"""L1 Pallas kernel: fused fanout-mean aggregation + projection.
+
+The computation hot spot of every GNN layer in this repo is
+
+    out[n, h] = mean(children[n, f, d], axis=1) @ w[d, h]
+
+i.e. the neighbor-aggregation step fused with the first matmul that
+consumes it. On a TPU this is the MXU-friendly formulation of GNN
+aggregation (DESIGN.md §Hardware-Adaptation): the mean is a cheap VPU
+reduction over a VMEM-resident ``[TILE, f, d]`` block, and the projection
+is a ``[TILE, d] x [d, h]`` systolic-array matmul. ``BlockSpec`` expresses
+the HBM->VMEM schedule: the grid walks parent-node tiles; ``w`` is
+broadcast to every grid step.
+
+VMEM budget per grid step (f32):
+    TILE*f*d (children) + d*h (weights) + TILE*h (out)
+with the default TILE=128 and the paper-scale shapes (f=10, d=256, h=256)
+that is 128*10*256*4 + 256*256*4 + 128*256*4 ≈ 1.5 MB — comfortably within
+a TPU core's ~16 MB VMEM, leaving room for double buffering.
+
+``pallas_call`` has no automatic reverse-mode rule, so the kernel carries
+an analytic ``custom_vjp`` (the backward itself reuses the fanout-mean
+structure):
+
+    d_children[n, j, :] = (g @ w.T)[n, :] / f      (same for every j)
+    d_w = mean(children, axis=1).T @ g
+
+The kernel MUST run with ``interpret=True`` here: this image has no TPU
+and real Mosaic lowering emits a custom-call the CPU PJRT plugin cannot
+execute. Correctness is pinned to the pure-jnp oracle in ``ref.py``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE = 128
+
+
+def _agg_kernel(children_ref, w_ref, out_ref):
+    """One grid step: children_ref [TILE, f, d], w_ref [d, h] -> out [TILE, h]."""
+    children = children_ref[...]
+    # fanout mean — VPU reduction while the tile is VMEM-resident
+    agg = jnp.mean(children, axis=1)
+    # projection — MXU matmul; keep f32 accumulation
+    out_ref[...] = jnp.dot(agg, w_ref[...], preferred_element_type=jnp.float32).astype(
+        out_ref.dtype
+    )
+
+
+def _mean_kernel(children_ref, out_ref):
+    """Fanout mean only: [TILE, f, d] -> [TILE, d] (used by the backward)."""
+    out_ref[...] = jnp.mean(children_ref[...], axis=1).astype(out_ref.dtype)
+
+
+def _pallas_fmp(children, w, tile):
+    n, f, d = children.shape
+    _, h = w.shape
+    tile = min(tile, max(n, 1))
+    n_pad = -(-n // tile) * tile
+    if n_pad != n:
+        children = jnp.pad(children, ((0, n_pad - n), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _agg_kernel,
+        grid=(n_pad // tile,),
+        in_specs=[
+            # walk parent-node tiles; fanout and feature dims stay whole
+            pl.BlockSpec((tile, f, d), lambda i: (i, 0, 0)),
+            # weights broadcast to every grid step
+            pl.BlockSpec((d, h), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, h), children.dtype),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(children, w)
+    return out[:n]
+
+
+def _pallas_fanout_mean(children, tile):
+    n, f, d = children.shape
+    tile = min(tile, max(n, 1))
+    n_pad = -(-n // tile) * tile
+    if n_pad != n:
+        children = jnp.pad(children, ((0, n_pad - n), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _mean_kernel,
+        grid=(n_pad // tile,),
+        in_specs=[pl.BlockSpec((tile, f, d), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), children.dtype),
+        interpret=True,
+    )(children)
+    return out[:n]
+
+
+@functools.lru_cache(maxsize=None)
+def _fmp_with_tile(tile):
+    @jax.custom_vjp
+    def fmp(children, w):
+        return _pallas_fmp(children, w, tile)
+
+    def fwd(children, w):
+        return _pallas_fmp(children, w, tile), (children, w)
+
+    def bwd(res, g):
+        children, w = res
+        n, f, d = children.shape
+        # d_children: every child slot receives g @ w.T / f
+        gw = jnp.dot(g, w.T, preferred_element_type=jnp.float32).astype(children.dtype)
+        d_children = jnp.broadcast_to(gw[:, None, :] / f, (n, f, d))
+        # d_w = mean(children).T @ g — reuse the Pallas fanout-mean
+        agg = _pallas_fanout_mean(children, tile)
+        d_w = jnp.dot(agg.T, g, preferred_element_type=jnp.float32).astype(w.dtype)
+        return d_children, d_w
+
+    fmp.defvjp(fwd, bwd)
+    return fmp
+
+
+def fanout_mean_project(children: jnp.ndarray, w: jnp.ndarray, *, tile: int = DEFAULT_TILE):
+    """Fused ``mean(children, axis=1) @ w`` as a Pallas kernel.
+
+    ``children``: ``[n, f, d]``; ``w``: ``[d, h]``; returns ``[n, h]``.
+    ``n`` is padded up to a multiple of ``tile`` internally; the pad rows
+    are dropped before returning. Differentiable via an analytic
+    ``custom_vjp``.
+    """
+    d, d2 = children.shape[2], w.shape[0]
+    assert d == d2, f"inner dims differ: {d} vs {d2}"
+    return _fmp_with_tile(tile)(children, w)
+
+
+def vmem_bytes(tile: int, f: int, d: int, h: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint of one grid step (perf accounting)."""
+    return dtype_bytes * (tile * f * d + d * h + tile * h)
+
+
+# ---------------------------------------------------------------------------
+# GAT attention kernel
+# ---------------------------------------------------------------------------
+
+LEAKY_SLOPE = 0.2
+
+
+def _gat_kernel(h_self_ref, h_all_ref, a_self_ref, a_nbr_ref, out_ref):
+    """One grid step of single-head additive attention.
+
+    h_self [TILE, d], h_all [TILE, k, d], a_self/a_nbr [1, d] -> out [TILE, d].
+    The scores are two matvecs (MXU-friendly as skinny matmuls), the
+    softmax is a VPU reduction over the fanout axis while the tile is
+    VMEM-resident, and the weighted sum is a batched contraction.
+    """
+    h_self = h_self_ref[...]
+    h_all = h_all_ref[...]
+    a_self = a_self_ref[0, :]
+    a_nbr = a_nbr_ref[0, :]
+    e = jnp.dot(h_self, a_self)[:, None] + jnp.einsum("nkd,d->nk", h_all, a_nbr)
+    e = jnp.where(e >= 0, e, LEAKY_SLOPE * e)
+    e = e - jnp.max(e, axis=1, keepdims=True)
+    w = jnp.exp(e)
+    alpha = w / jnp.sum(w, axis=1, keepdims=True)
+    out_ref[...] = jnp.einsum("nk,nkd->nd", alpha, h_all).astype(out_ref.dtype)
+
+
+def _pallas_gat(h_self, h_all, a_self, a_nbr, tile):
+    n, k, d = h_all.shape
+    tile = min(tile, max(n, 1))
+    n_pad = -(-n // tile) * tile
+    if n_pad != n:
+        h_self = jnp.pad(h_self, ((0, n_pad - n), (0, 0)))
+        h_all = jnp.pad(h_all, ((0, n_pad - n), (0, 0), (0, 0)))
+    out = pl.pallas_call(
+        _gat_kernel,
+        grid=(n_pad // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((tile, k, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), h_all.dtype),
+        interpret=True,
+    )(h_self, h_all, a_self[None, :], a_nbr[None, :])
+    return out[:n]
+
+
+@functools.lru_cache(maxsize=None)
+def _gat_with_tile(tile):
+    from .ref import gat_attention_ref
+
+    @jax.custom_vjp
+    def gat(h_self, h_all, a_self, a_nbr):
+        return _pallas_gat(h_self, h_all, a_self, a_nbr, tile)
+
+    def fwd(h_self, h_all, a_self, a_nbr):
+        return _pallas_gat(h_self, h_all, a_self, a_nbr, tile), (h_self, h_all, a_self, a_nbr)
+
+    def bwd(res, g):
+        # backward recomputes through the (identical) jnp formulation —
+        # attention trees are small, recompute beats storing the softmax
+        _, vjp = jax.vjp(lambda *a: gat_attention_ref(*a, slope=LEAKY_SLOPE), *res)
+        return vjp(g)
+
+    gat.defvjp(fwd, bwd)
+    return gat
+
+
+def gat_attention(h_self, h_all, a_self, a_nbr, *, tile: int = DEFAULT_TILE):
+    """Single-head additive GAT attention as a Pallas kernel.
+
+    ``h_self [n, d]``, ``h_all [n, k, d]``, ``a_self``/``a_nbr [d]`` →
+    ``[n, d]``. Matches ``ref.gat_attention_ref``; differentiable via a
+    recompute ``custom_vjp``.
+    """
+    assert h_all.shape[0] == h_self.shape[0] and h_all.shape[2] == h_self.shape[1]
+    return _gat_with_tile(tile)(h_self, h_all, a_self, a_nbr)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the CORE correctness references: every Pallas kernel in this
+package must match its oracle to float tolerance under pytest
+(``python/tests/test_kernel.py``), for every shape/dtype combination the
+models use.
+"""
+
+import jax.numpy as jnp
+
+
+def fanout_mean_project_ref(children: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Mean over the fanout axis, then project.
+
+    The GNN aggregation hot spot: ``children`` is ``[n, f, d]`` (each of
+    ``n`` parent slots has ``f`` sampled child embeddings), ``w`` is
+    ``[d, h]``. Returns ``mean(children, axis=1) @ w`` of shape ``[n, h]``.
+    """
+    return jnp.mean(children, axis=1) @ w
+
+
+def fanout_mean_ref(children: jnp.ndarray) -> jnp.ndarray:
+    """Plain fanout mean: ``[n, f, d] -> [n, d]``."""
+    return jnp.mean(children, axis=1)
+
+
+def gat_attention_ref(h_self, h_all, a_self, a_nbr, slope=0.2):
+    """Single-head additive GAT attention over the fanout axis.
+
+    ``h_self``: ``[n, d]`` projected self embeddings; ``h_all``:
+    ``[n, k, d]`` projected attendees (self + children); ``a_self``,
+    ``a_nbr``: ``[d]`` attention vectors. Returns ``[n, d]``:
+    ``sum_k softmax_k(leakyrelu(h_self·a_self + h_all·a_nbr)) * h_all``.
+    """
+    import jax
+
+    e = jax.nn.leaky_relu(
+        (h_self @ a_self)[:, None] + h_all @ a_nbr, negative_slope=slope
+    )
+    alpha = jax.nn.softmax(e, axis=1)
+    return jnp.einsum("nk,nkd->nd", alpha, h_all)

@@ -1,0 +1,193 @@
+"""L2: the paper's GNN computation stage in JAX (build-time only).
+
+The sampler (rust L3) produces fixed-fanout *trees* per minibatch: level 0
+holds the B targets, level l+1 holds exactly ``fanouts[l]`` sampled
+children per level-l slot, contiguously — so child j of parent p sits at
+row ``p * f + j``. That fixed layout means the whole model is static-shape
+and lowers to ONE HLO executable (no gather indices cross the FFI).
+
+Three 3-layer models, matching the paper's §4.1:
+  * GCN  — mean over {self} ∪ children, then a single projection
+  * SAGE — self projection + (Pallas-fused) mean-children projection
+  * GAT  — single-head additive attention over {self} ∪ children
+
+The per-layer aggregation hot spot runs through the Pallas kernel
+(``kernels.agg.fanout_mean_project``); everything else is plain jnp.
+
+The exported train step's positional signature (see rust/src/runtime):
+    step(p_0 .. p_{k-1}, feats[total, F], labels i32[B], mask f32[B])
+      -> (p'_0 .. p'_{k-1}, loss f32, correct f32)
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.agg import fanout_mean_project, gat_attention
+
+LEAKY_SLOPE = 0.2
+
+
+def level_sizes(batch, fanouts):
+    sizes = [batch]
+    for f in fanouts:
+        sizes.append(sizes[-1] * f)
+    return sizes
+
+
+def split_levels(feats, batch, fanouts):
+    """Split the concatenated [total, d] feature matrix into tree levels."""
+    sizes = level_sizes(batch, fanouts)
+    out, off = [], 0
+    for s in sizes:
+        out.append(feats[off : off + s])
+        off += s
+    return out
+
+
+# --------------------------------------------------------------------------
+# parameter initialization (also serialized to params.bin for the runtime)
+# --------------------------------------------------------------------------
+
+def _glorot(rng, fan_in, fan_out):
+    scale = np.sqrt(6.0 / (fan_in + fan_out))
+    return rng.uniform(-scale, scale, size=(fan_in, fan_out)).astype(np.float32)
+
+
+def init_params(model, feature_dim, hidden, classes, num_layers, seed=0):
+    """Returns ``(names, values)`` — positional parameter order is fixed."""
+    rng = np.random.default_rng(seed)
+    names, values = [], []
+
+    def add(name, arr):
+        names.append(name)
+        values.append(jnp.asarray(arr))
+
+    dims = [feature_dim] + [hidden] * (num_layers - 1) + [classes]
+    for layer in range(num_layers):
+        d_in, d_out = dims[layer], dims[layer + 1]
+        if model == "gcn":
+            add(f"l{layer}.w", _glorot(rng, d_in, d_out))
+            add(f"l{layer}.b", np.zeros(d_out, np.float32))
+        elif model == "sage":
+            add(f"l{layer}.w_self", _glorot(rng, d_in, d_out))
+            add(f"l{layer}.w_nbr", _glorot(rng, d_in, d_out))
+            add(f"l{layer}.b", np.zeros(d_out, np.float32))
+        elif model == "gat":
+            add(f"l{layer}.w", _glorot(rng, d_in, d_out))
+            add(f"l{layer}.a_self", (rng.standard_normal(d_out) * 0.1).astype(np.float32))
+            add(f"l{layer}.a_nbr", (rng.standard_normal(d_out) * 0.1).astype(np.float32))
+            add(f"l{layer}.b", np.zeros(d_out, np.float32))
+        else:
+            raise ValueError(f"unknown model {model!r}")
+    return names, values
+
+
+# --------------------------------------------------------------------------
+# layers (children: [n, f, d_in]; self_h: [n, d_in]) -> [n, d_out]
+# --------------------------------------------------------------------------
+
+def gcn_layer(p, self_h, children):
+    """GCN: mean over {self} ∪ children, single projection (Pallas-fused)."""
+    w, b = p
+    n, f, d = children.shape
+    both = jnp.concatenate([self_h[:, None, :], children], axis=1)  # [n, f+1, d]
+    return fanout_mean_project(both, w) + b
+
+
+def sage_layer(p, self_h, children):
+    """GraphSAGE: W_self·self + W_nbr·mean(children)."""
+    w_self, w_nbr, b = p
+    agg = fanout_mean_project(children, w_nbr)  # Pallas hot spot
+    return self_h @ w_self + agg + b
+
+
+def gat_layer(p, self_h, children):
+    """Single-head GAT over {self} ∪ children; the attention itself is the
+    Pallas kernel (`kernels.agg.gat_attention`)."""
+    w, a_self, a_nbr, b = p
+    h_self = self_h @ w  # [n, d_out]
+    h_all = jnp.concatenate([self_h[:, None, :], children], axis=1) @ w  # [n, f+1, d_out]
+    return gat_attention(h_self, h_all, a_self, a_nbr) + b
+
+
+LAYER_FNS = {"gcn": (gcn_layer, 2), "sage": (sage_layer, 3), "gat": (gat_layer, 4)}
+
+
+# --------------------------------------------------------------------------
+# forward + train step
+# --------------------------------------------------------------------------
+
+def forward(model, params, feats, batch, fanouts):
+    """Tree message passing: k GNN layers collapse k+1 levels into logits.
+
+    ``params`` is the flat positional list from ``init_params``.
+    """
+    layer_fn, n_per = LAYER_FNS[model]
+    k = len(fanouts)
+    levels = split_levels(feats, batch, fanouts)
+    h = levels  # h[j] is the current embedding of level j
+    for layer in range(k):
+        p = tuple(params[layer * n_per : (layer + 1) * n_per])
+        f = fanouts  # fanout between level j and j+1 is fanouts[j]
+        new_h = []
+        for j in range(k - layer):
+            n_j = h[j].shape[0]
+            d = h[j].shape[1]
+            children = h[j + 1].reshape(n_j, f[j], d)
+            z = layer_fn(p, h[j], children)
+            if layer < k - 1:
+                z = jax.nn.relu(z)
+            new_h.append(z)
+        h = new_h
+    return h[0]  # [batch, classes]
+
+
+def loss_and_acc(model, params, feats, labels, mask, batch, fanouts):
+    logits = forward(model, params, feats, batch, fanouts)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    correct = jnp.sum((jnp.argmax(logits, axis=-1) == labels) * mask)
+    return loss, correct
+
+
+def make_train_step(model, batch, fanouts, num_params, lr):
+    """Positional train step closed over static shapes (for jit/lowering)."""
+
+    def step(*args):
+        params = list(args[:num_params])
+        feats, labels, mask = args[num_params:]
+
+        def loss_fn(ps):
+            return loss_and_acc(model, ps, feats, labels, mask, batch, fanouts)
+
+        (loss, correct), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        new_params = [p - lr * g for p, g in zip(params, grads)]
+        return (*new_params, loss, correct)
+
+    return step
+
+
+def make_infer(model, batch, fanouts, num_params):
+    """Positional inference fn returning logits (accuracy evaluation)."""
+
+    def infer(*args):
+        params = list(args[:num_params])
+        (feats,) = args[num_params:]
+        return (forward(model, params, feats, batch, fanouts),)
+
+    return infer
+
+
+@functools.lru_cache(maxsize=None)
+def example_shapes(batch, fanouts, feature_dim):
+    total = sum(level_sizes(batch, list(fanouts)))
+    return (
+        jax.ShapeDtypeStruct((total, feature_dim), jnp.float32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.float32),
+    )

@@ -1,0 +1,94 @@
+//! Figure 6 — the headline comparison: AGNES vs Ginex / GNNDrive /
+//! MariusGNN / OUTRE across the five datasets under both memory settings
+//! (32 GB and 8 GB, scaled), plus the per-model table (MariusGNN and
+//! OUTRE are SAGE-only → "N.A.", as in the paper).
+//!
+//! `cargo bench --bench fig6_main`
+
+use agnes::config::GnnModel;
+use agnes::coordinator::ModeledCompute;
+use agnes::util::bench::{
+    bench_config, run_epoch_by_name, secs, supports, with_setting2, Table, MODELED_COMPUTE_NS,
+};
+
+const DATASETS: &[(&str, f64)] =
+    &[("ig", 0.5), ("tw", 0.1), ("pa", 0.1), ("fr", 0.05), ("yh", 0.01)];
+const SYSTEMS: &[&str] = &["agnes", "ginex", "gnndrive", "mariusgnn", "outre"];
+
+/// Epoch time on the modeled testbed: simulated storage time + modeled
+/// compute (host CPU wall is a sandbox artifact — EXPERIMENTS.md
+/// §Methodology).
+fn epoch_secs(system: &str, config: &agnes::config::AgnesConfig) -> anyhow::Result<(u64, f64)> {
+    let mut compute = ModeledCompute::new(MODELED_COMPUTE_NS);
+    let r = run_epoch_by_name(system, config, &mut compute)?;
+    let storage = r.metrics.sample_io_ns + r.metrics.gather_io_ns;
+    let total = storage + compute.simulated_ns;
+    Ok((total, storage as f64 / total.max(1) as f64))
+}
+
+fn main() -> anyhow::Result<()> {
+    for (setting, is2) in [("Setting 1 (32 GB scaled)", false), ("Setting 2 (8 GB scaled)", true)]
+    {
+        println!("\n=== Figure 6 {setting}: epoch time (s), SAGE ===\n");
+        let mut t = Table::new(
+            if is2 { "fig6_setting2" } else { "fig6_setting1" },
+            &["dataset", "agnes", "ginex", "gnndrive", "mariusgnn", "outre", "vs_ginex"],
+        );
+        for &(ds, scale) in DATASETS {
+            let mut cells = vec![ds.to_uppercase()];
+            let mut agnes_t = 0u64;
+            let mut ginex_t = 0u64;
+            for &system in SYSTEMS {
+                let mut config = bench_config(ds, scale);
+                config.train.model = GnnModel::Sage;
+                if is2 {
+                    config = with_setting2(config);
+                }
+                let (total, _) = epoch_secs(system, &config)?;
+                cells.push(secs(total));
+                if system == "agnes" {
+                    agnes_t = total;
+                } else if system == "ginex" {
+                    ginex_t = total;
+                }
+            }
+            // the paper reports speedup over "the best-performing
+            // competitor, Ginex"; at 1/1000 scale MariusGNN can degenerate
+            // to in-memory training when the scaled dataset fits its
+            // buffer (see EXPERIMENTS.md §Fig6)
+            cells.push(format!("{:.2}x", ginex_t as f64 / agnes_t.max(1) as f64));
+            t.row(cells);
+        }
+        t.finish();
+    }
+
+    println!("\n=== Figure 6 per-model (IG, Setting 1): epoch time (s) ===\n");
+    let mut t = Table::new(
+        "fig6_models",
+        &["model", "agnes", "ginex", "gnndrive", "mariusgnn", "outre"],
+    );
+    for model in GnnModel::all() {
+        let mut cells = vec![model.name().to_string()];
+        for &system in SYSTEMS {
+            if !supports(system, model) {
+                cells.push("N.A.".into());
+                continue;
+            }
+            let mut config = bench_config("ig", 0.5);
+            config.train.model = model;
+            // GAT aggregates over fanout+1 attendees: model compute cost up
+            let mult = if model == GnnModel::Gat { 2 } else { 1 };
+            let mut compute = ModeledCompute::new(MODELED_COMPUTE_NS * mult);
+            let r = run_epoch_by_name(system, &config, &mut compute)?;
+            let storage = r.metrics.sample_io_ns + r.metrics.gather_io_ns;
+            cells.push(secs(storage + compute.simulated_ns));
+        }
+        t.row(cells);
+    }
+    t.finish();
+    println!(
+        "\nShape check vs paper: AGNES wins every cell; the gap widens under \
+         Setting 2 (paper: up to 3.1x / 4.1x over Ginex)."
+    );
+    Ok(())
+}

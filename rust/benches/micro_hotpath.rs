@@ -1,0 +1,105 @@
+//! Hot-path microbenchmarks for the perf pass (EXPERIMENTS.md §Perf):
+//! wall-clock throughput of the L3 primitives — block decode, bucket
+//! build, hyperbatch sampling sweep, hyperbatch gather sweep — measured
+//! with the device model silenced (pure CPU cost).
+//!
+//! `cargo bench --bench micro_hotpath`
+
+use agnes::config::AgnesConfig;
+use agnes::coordinator::NullCompute;
+use agnes::memory::{BufferPool, FeatureCache};
+use agnes::op::bucket::Bucket;
+use agnes::op::{gather_hyperbatch, sample_hyperbatch};
+use agnes::storage::block::GraphBlock;
+use agnes::storage::IoEngine;
+use agnes::util::bench::{bench_config, Table};
+use agnes::AgnesRunner;
+use std::time::Instant;
+
+fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
+    let t0 = Instant::now();
+    let r = f();
+    (r, t0.elapsed().as_secs_f64())
+}
+
+fn main() -> anyhow::Result<()> {
+    // free device: isolate CPU cost of the hot loops
+    let mut config: AgnesConfig = bench_config("pa", 0.1);
+    config.device.bandwidth = 1e15;
+    config.device.request_overhead = 0.0;
+    let mut runner = AgnesRunner::open(config.clone())?;
+    let hbs = runner.epoch_hyperbatches(0);
+    let hb = &hbs[0];
+    let targets_total: usize = hb.iter().map(Vec::len).sum();
+
+    let mut t = Table::new("micro_hotpath", &["primitive", "items", "secs", "throughput"]);
+
+    // 1. block decode
+    let raw = runner.graph_store.read_block_raw(agnes::storage::BlockId(0), 1)?;
+    let (_, dt) = time(|| {
+        for _ in 0..2000 {
+            std::hint::black_box(GraphBlock::decode(&raw));
+        }
+    });
+    t.row(vec![
+        "block_decode".into(),
+        "2000 blocks".into(),
+        format!("{dt:.4}"),
+        format!("{:.0} MB/s", 2000.0 * raw.len() as f64 / dt / 1e6),
+    ]);
+
+    // 2. bucket build over the hyperbatch frontier
+    let (bucket, dt) = time(|| Bucket::for_graph(hb, runner.graph_store.index()));
+    t.row(vec![
+        "bucket_build".into(),
+        format!("{} entries", bucket.num_entries()),
+        format!("{dt:.4}"),
+        format!("{:.2} M entries/s", bucket.num_entries() as f64 / dt / 1e6),
+    ]);
+
+    // 3. hyperbatch sampling sweep
+    let engine = IoEngine::new(config.io.num_threads, config.io.async_depth);
+    let mut pool = BufferPool::new(config.graph_buffer_blocks());
+    let (out, dt) = time(|| {
+        sample_hyperbatch(&runner.graph_store, &mut pool, &engine, hb, &[10, 10, 10], 1).unwrap()
+    });
+    let sampled = out.total_sampled();
+    t.row(vec![
+        "sample_hyperbatch".into(),
+        format!("{sampled} nodes"),
+        format!("{dt:.4}"),
+        format!("{:.2} M nodes/s", sampled as f64 / dt / 1e6),
+    ]);
+
+    // 4. hyperbatch gather sweep
+    let node_sets: Vec<Vec<u32>> = (0..hb.len()).map(|mb| out.flat_nodes(mb)).collect();
+    let gathered: usize = node_sets.iter().map(Vec::len).sum();
+    let mut fpool = BufferPool::new(config.feature_buffer_blocks());
+    let mut cache = FeatureCache::new(config.memory.feature_cache_entries, 2);
+    let (_, dt) = time(|| {
+        gather_hyperbatch(&runner.feature_store, &mut fpool, &mut cache, &engine, &node_sets)
+            .unwrap()
+    });
+    t.row(vec![
+        "gather_hyperbatch".into(),
+        format!("{gathered} vectors"),
+        format!("{dt:.4}"),
+        format!(
+            "{:.2} M vec/s ({:.0} MB/s)",
+            gathered as f64 / dt / 1e6,
+            gathered as f64 * config.dataset.feature_dim as f64 * 4.0 / dt / 1e6
+        ),
+    ]);
+
+    // 5. full prep epoch wall (CPU only)
+    let (r, dt) = time(|| runner.run_epoch(0, &mut NullCompute).unwrap());
+    t.row(vec![
+        "prep_epoch_wall".into(),
+        format!("{} targets", targets_total),
+        format!("{dt:.4}"),
+        format!("{:.2} K targets/s", targets_total as f64 / dt / 1e3),
+    ]);
+    let _ = r;
+    t.finish();
+    Ok(())
+}

@@ -1,0 +1,414 @@
+//! Shared machinery for the baseline systems: per-node ("node-perspective")
+//! k-hop tree sampling and feature gathering with pluggable caches — the
+//! I/O pattern the paper identifies as the bottleneck (§1: existing methods
+//! "simply read a few nodes from storage whenever they are required for GNN
+//! training, thereby generating a significant number of small storage
+//! I/Os").
+//!
+//! The sampled trees use the exact same fixed-fanout layout as AGNES's
+//! sampler (same per-slot RNG), so for a given seed all systems train on
+//! identical minibatches — the comparison isolates I/O handling, which is
+//! what the paper varies too.
+
+use crate::storage::store::{FeatureStore, GraphStore};
+use crate::Result;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Deterministic per-slot RNG — identical to the AGNES sampler's, so
+/// baselines draw the same neighbor samples.
+#[inline]
+pub fn slot_rng(seed: u64, layer: usize, mb: u32, slot: u32) -> u64 {
+    let mut z = seed
+        ^ (layer as u64).wrapping_mul(0x9E3779B97F4A7C15)
+        ^ ((mb as u64) << 32 | slot as u64).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+pub fn next_u64(state: &mut u64) -> u64 {
+    *state ^= *state >> 12;
+    *state ^= *state << 25;
+    *state ^= *state >> 27;
+    state.wrapping_mul(0x2545F4914F6CDD1D)
+}
+
+/// An in-memory adjacency cache for per-node sampling.
+pub trait AdjacencyCache {
+    fn get(&mut self, v: u32) -> Option<Arc<Vec<u32>>>;
+    fn put(&mut self, v: u32, adj: Arc<Vec<u32>>);
+    fn hits(&self) -> u64;
+    fn misses(&self) -> u64;
+}
+
+/// Unbounded-until-budget LRU-less adjacency cache keyed by node; Ginex
+/// statically caches the hottest (highest-degree) nodes, so admission is
+/// by a degree threshold with a byte budget.
+pub struct DegreeAdjCache {
+    budget_bytes: u64,
+    used_bytes: u64,
+    map: HashMap<u32, Arc<Vec<u32>>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl DegreeAdjCache {
+    pub fn new(budget_bytes: u64) -> DegreeAdjCache {
+        DegreeAdjCache { budget_bytes, used_bytes: 0, map: HashMap::new(), hits: 0, misses: 0 }
+    }
+}
+
+impl AdjacencyCache for DegreeAdjCache {
+    fn get(&mut self, v: u32) -> Option<Arc<Vec<u32>>> {
+        match self.map.get(&v) {
+            Some(a) => {
+                self.hits += 1;
+                Some(a.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    fn put(&mut self, v: u32, adj: Arc<Vec<u32>>) {
+        let bytes = 4 * adj.len() as u64 + 16;
+        if self.used_bytes + bytes <= self.budget_bytes {
+            self.used_bytes += bytes;
+            self.map.insert(v, adj);
+        }
+    }
+
+    fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// Per-node sampled tree for one minibatch (same layout as AGNES).
+pub type Levels = Vec<Vec<u32>>;
+
+/// Sample one minibatch's fixed-fanout tree with per-node adjacency reads:
+/// every cache miss issues one small storage I/O of the node's extent
+/// rounded to `io_unit` (Ginex's 4 KB page, Fig 4 sweeps it).
+pub fn sample_minibatch_per_node(
+    store: &GraphStore,
+    cache: &mut dyn AdjacencyCache,
+    targets: &[u32],
+    fanouts: &[usize],
+    seed: u64,
+    mb: u32,
+    io_unit: u64,
+    concurrency: u32,
+) -> Result<Levels> {
+    let mut levels: Levels = vec![targets.to_vec()];
+    let mut current = targets.to_vec();
+    for (layer, &fanout) in fanouts.iter().enumerate() {
+        let mut next = vec![0u32; current.len() * fanout];
+        for (slot, &v) in current.iter().enumerate() {
+            let adj = match cache.get(v) {
+                Some(a) => a,
+                None => {
+                    let a = Arc::new(store.read_node_direct(v, io_unit, concurrency)?);
+                    cache.put(v, a.clone());
+                    a
+                }
+            };
+            let mut rng = slot_rng(seed, layer, mb, slot as u32);
+            let dst = &mut next[slot * fanout..(slot + 1) * fanout];
+            if adj.is_empty() {
+                dst.fill(v);
+            } else {
+                for o in dst.iter_mut() {
+                    *o = adj[(next_u64(&mut rng) % adj.len() as u64) as usize];
+                }
+            }
+        }
+        levels.push(next.clone());
+        current = next;
+    }
+    Ok(levels)
+}
+
+/// Sample one minibatch's tree entirely in memory (no device charge) —
+/// used by MariusGNN/OUTRE arms whose data is buffer-resident at sampling
+/// time. Adjacencies still come from the real store files.
+pub fn sample_minibatch_in_memory(
+    store: &GraphStore,
+    targets: &[u32],
+    fanouts: &[usize],
+    seed: u64,
+    mb: u32,
+) -> Result<Levels> {
+    let mut memo: HashMap<u32, Arc<Vec<u32>>> = HashMap::new();
+    let mut levels: Levels = vec![targets.to_vec()];
+    let mut current = targets.to_vec();
+    for (layer, &fanout) in fanouts.iter().enumerate() {
+        let mut next = vec![0u32; current.len() * fanout];
+        for (slot, &v) in current.iter().enumerate() {
+            let adj = match memo.get(&v) {
+                Some(a) => a.clone(),
+                None => {
+                    let a = Arc::new(store.read_adjacency_uncharged(v)?);
+                    memo.insert(v, a.clone());
+                    a
+                }
+            };
+            let mut rng = slot_rng(seed, layer, mb, slot as u32);
+            let dst = &mut next[slot * fanout..(slot + 1) * fanout];
+            if adj.is_empty() {
+                dst.fill(v);
+            } else {
+                for o in dst.iter_mut() {
+                    *o = adj[(next_u64(&mut rng) % adj.len() as u64) as usize];
+                }
+            }
+        }
+        levels.push(next.clone());
+        current = next;
+    }
+    Ok(levels)
+}
+
+/// A feature cache for per-node gathering.
+pub trait FeatCache {
+    /// Returns true if `v` was served from memory.
+    fn access(&mut self, v: u32) -> bool;
+    fn hits(&self) -> u64;
+    fn misses(&self) -> u64;
+}
+
+/// Belady's optimal replacement over a known access sequence — Ginex's
+/// "provably optimal in-memory caching" for feature vectors. Build it from
+/// the superbatch's full access trace, then replay.
+pub struct BeladyFeatCache {
+    capacity: usize,
+    /// next-use lists per node (indices into the trace, ascending).
+    next_use: HashMap<u32, std::collections::VecDeque<usize>>,
+    resident: std::collections::BTreeSet<(std::cmp::Reverse<usize>, u32)>,
+    resident_of: HashMap<u32, usize>, // node -> its next-use key in `resident`
+    cursor: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl BeladyFeatCache {
+    /// `trace` is the full, ordered feature-access sequence of the
+    /// superbatch (known after its sampling pass — exactly Ginex's design).
+    pub fn new(capacity: usize, trace: &[u32]) -> BeladyFeatCache {
+        let mut next_use: HashMap<u32, std::collections::VecDeque<usize>> = HashMap::new();
+        for (i, &v) in trace.iter().enumerate() {
+            next_use.entry(v).or_default().push_back(i);
+        }
+        BeladyFeatCache {
+            capacity,
+            next_use,
+            resident: Default::default(),
+            resident_of: HashMap::new(),
+            cursor: 0,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    fn next_use_after_now(&mut self, v: u32) -> usize {
+        let q = self.next_use.entry(v).or_default();
+        while let Some(&front) = q.front() {
+            if front <= self.cursor {
+                q.pop_front();
+            } else {
+                return front;
+            }
+        }
+        usize::MAX // never used again
+    }
+}
+
+impl FeatCache for BeladyFeatCache {
+    fn access(&mut self, v: u32) -> bool {
+        let hit = self.resident_of.contains_key(&v);
+        if hit {
+            self.hits += 1;
+            // refresh position with the new next use
+            let old = self.resident_of[&v];
+            self.resident.remove(&(std::cmp::Reverse(old), v));
+        } else {
+            self.misses += 1;
+            if self.capacity == 0 {
+                self.cursor += 1;
+                return false;
+            }
+            if self.resident_of.len() >= self.capacity {
+                // evict the entry with the farthest next use (first in the
+                // Reverse-ordered set)
+                if let Some(&(std::cmp::Reverse(far), victim)) = self.resident.iter().next() {
+                    self.resident.remove(&(std::cmp::Reverse(far), victim));
+                    self.resident_of.remove(&victim);
+                }
+            }
+        }
+        self.cursor += 1;
+        let nu = self.next_use_after_now(v);
+        self.resident.insert((std::cmp::Reverse(nu), v));
+        self.resident_of.insert(v, nu);
+        hit
+    }
+
+    fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// Plain LRU feature cache (GNNDrive / OUTRE style).
+pub struct LruFeatCache {
+    capacity: usize,
+    clock: u64,
+    map: HashMap<u32, u64>,
+    by_age: std::collections::BTreeSet<(u64, u32)>,
+    hits: u64,
+    misses: u64,
+}
+
+impl LruFeatCache {
+    pub fn new(capacity: usize) -> LruFeatCache {
+        LruFeatCache { capacity, clock: 0, map: HashMap::new(), by_age: Default::default(), hits: 0, misses: 0 }
+    }
+}
+
+impl FeatCache for LruFeatCache {
+    fn access(&mut self, v: u32) -> bool {
+        self.clock += 1;
+        if let Some(&age) = self.map.get(&v) {
+            self.hits += 1;
+            self.by_age.remove(&(age, v));
+            self.by_age.insert((self.clock, v));
+            self.map.insert(v, self.clock);
+            true
+        } else {
+            self.misses += 1;
+            if self.capacity == 0 {
+                return false;
+            }
+            if self.map.len() >= self.capacity {
+                if let Some(&(age, victim)) = self.by_age.iter().next() {
+                    self.by_age.remove(&(age, victim));
+                    self.map.remove(&victim);
+                }
+            }
+            self.map.insert(v, self.clock);
+            self.by_age.insert((self.clock, v));
+            false
+        }
+    }
+
+    fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    fn misses(&self) -> u64 {
+        self.misses
+    }
+}
+
+/// Gather a minibatch's features per node: cache hits are free, misses
+/// issue one small I/O each (size = vector bytes rounded to `io_unit`).
+/// Returns number of storage reads issued.
+pub fn gather_minibatch_per_node(
+    store: &FeatureStore,
+    cache: &mut dyn FeatCache,
+    nodes: &[u32],
+    io_unit: u64,
+    concurrency: u32,
+) -> Result<u64> {
+    let mut reads = 0u64;
+    let bytes = (store.layout.feature_dim * 4) as u64;
+    let charged = bytes.next_multiple_of(io_unit);
+    let mut miss_sizes: Vec<u64> = Vec::new();
+    for &v in nodes {
+        if !cache.access(v) {
+            miss_sizes.push(charged);
+            reads += 1;
+        }
+    }
+    store.ssd.submit_batch(&miss_sizes, concurrency);
+    Ok(reads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn belady_is_optimal_on_classic_trace() {
+        // trace: a b c a b d a with capacity 3 — OPT has 4 misses (a,b,c,d)
+        let trace = [1, 2, 3, 1, 2, 4, 1];
+        let mut c = BeladyFeatCache::new(3, &trace);
+        let mut misses = 0;
+        for &v in &trace {
+            if !c.access(v) {
+                misses += 1;
+            }
+        }
+        assert_eq!(misses, 4);
+    }
+
+    #[test]
+    fn belady_beats_lru() {
+        // cyclic trace of 4 items with capacity 3: LRU thrashes (0 hits),
+        // Belady keeps 2 of them resident.
+        let trace: Vec<u32> = (0..40).map(|i| i % 4).collect();
+        let mut lru = LruFeatCache::new(3);
+        let mut bel = BeladyFeatCache::new(3, &trace);
+        let (mut lru_hits, mut bel_hits) = (0, 0);
+        for &v in &trace {
+            if lru.access(v) {
+                lru_hits += 1;
+            }
+            if bel.access(v) {
+                bel_hits += 1;
+            }
+        }
+        assert_eq!(lru_hits, 0, "LRU must thrash on cyclic trace");
+        assert!(bel_hits > 20, "Belady hits {bel_hits}");
+    }
+
+    #[test]
+    fn lru_basic() {
+        let mut c = LruFeatCache::new(2);
+        assert!(!c.access(1));
+        assert!(!c.access(2));
+        assert!(c.access(1));
+        assert!(!c.access(3)); // evicts 2
+        assert!(!c.access(2));
+        assert_eq!(c.hits(), 1);
+    }
+
+    #[test]
+    fn degree_cache_budget() {
+        let mut c = DegreeAdjCache::new(100);
+        c.put(1, Arc::new(vec![0; 10])); // 56 bytes
+        c.put(2, Arc::new(vec![0; 10])); // would exceed -> rejected after first? 56+56=112>100
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_caches() {
+        let mut b = BeladyFeatCache::new(0, &[1, 1, 1]);
+        assert!(!b.access(1));
+        assert!(!b.access(1));
+        let mut l = LruFeatCache::new(0);
+        assert!(!l.access(1));
+        assert!(!l.access(1));
+    }
+}

@@ -1,0 +1,49 @@
+//! Reimplementations of the paper's competing systems on the same storage
+//! substrate (DESIGN.md §Substitutions): Ginex [22], GNNDrive [8],
+//! MariusGNN [29], OUTRE [26] and the DistDGL [40] distributed cost model.
+//!
+//! Each baseline reproduces the *I/O pattern* that defines it — per-node
+//! small storage I/Os with its particular caching/buffering policy — which
+//! is the quantity every figure of the paper's evaluation compares.
+
+pub mod common;
+pub mod distdgl;
+pub mod ginex;
+pub mod gnndrive;
+pub mod marius;
+pub mod outre;
+
+pub use distdgl::DistDglModel;
+pub use ginex::GinexRunner;
+pub use gnndrive::GnnDriveRunner;
+pub use marius::MariusRunner;
+pub use outre::OutreRunner;
+
+use crate::coordinator::{ComputeBackend, EpochResult};
+use crate::Result;
+
+/// A storage-based GNN training system that can run one training epoch —
+/// implemented by [`crate::AgnesRunner`] and every baseline, so benches
+/// drive them uniformly.
+pub trait TrainingSystem {
+    fn system_name(&self) -> &'static str;
+    fn run_training_epoch(
+        &mut self,
+        epoch: usize,
+        compute: &mut dyn ComputeBackend,
+    ) -> Result<EpochResult>;
+}
+
+impl TrainingSystem for crate::AgnesRunner {
+    fn system_name(&self) -> &'static str {
+        "agnes"
+    }
+
+    fn run_training_epoch(
+        &mut self,
+        epoch: usize,
+        compute: &mut dyn ComputeBackend,
+    ) -> Result<EpochResult> {
+        self.run_epoch(epoch, compute)
+    }
+}

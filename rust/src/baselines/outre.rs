@@ -1,0 +1,233 @@
+//! OUTRE-like baseline (Sheng et al., VLDB 2024 [26]).
+//!
+//! OUTRE is an out-of-core *de-redundancy* framework: (i)
+//! **partition-based batch construction** — target nodes of a minibatch are
+//! drawn from the same partition, raising locality of the per-node reads —
+//! and (ii) **historical embeddings** — nodes whose embedding was computed
+//! recently reuse it instead of being re-expanded, pruning the sampled
+//! tree (neighborhood + temporal redundancy).
+//!
+//! It reduces the *number* of small I/Os (the paper's Figure 6 places it
+//! between Ginex and AGNES on several datasets) but each remaining I/O is
+//! still small and synchronous, so it cannot reach block-I/O bandwidth.
+//! SAGE-only, like MariusGNN ("N.A." in Figure 6 for GCN/GAT).
+
+use super::common::{
+    gather_minibatch_per_node, sample_minibatch_per_node, DegreeAdjCache, FeatCache, LruFeatCache,
+};
+use super::TrainingSystem;
+use crate::config::AgnesConfig;
+use crate::coordinator::{
+    prepare_dataset, ComputeBackend, EpochResult, MinibatchData, PreparedDataset,
+};
+use crate::graph::generate::{synth_feature, synth_label};
+use crate::graph::partition::{range_partition, Partitioning};
+use crate::metrics::{RunMetrics, StageTimer};
+use crate::op::{make_minibatches, select_targets};
+use crate::storage::block::FeatureBlockLayout;
+use crate::storage::device::{SharedSsd, SsdModel};
+use crate::storage::store::{FeatureStore, GraphStore};
+use crate::Result;
+use std::collections::HashSet;
+
+/// The OUTRE-like system.
+pub struct OutreRunner {
+    pub config: AgnesConfig,
+    pub dataset: PreparedDataset,
+    pub ssd: SharedSsd,
+    pub graph_store: GraphStore,
+    pub feature_store: FeatureStore,
+    pub partitioning: Partitioning,
+    adj_cache: DegreeAdjCache,
+    feat_cache: LruFeatCache,
+    /// Nodes with a valid historical embedding (bounded).
+    historical: HashSet<u32>,
+    historical_capacity: usize,
+}
+
+impl OutreRunner {
+    pub fn supports_model(model: crate::config::GnnModel) -> bool {
+        model == crate::config::GnnModel::Sage
+    }
+
+    pub fn open(config: AgnesConfig) -> Result<OutreRunner> {
+        let dataset = prepare_dataset(&config)?;
+        let ssd = SsdModel::new(config.device.spec());
+        let graph_store = GraphStore::open(&dataset.paths, ssd.clone())?;
+        let layout = FeatureBlockLayout {
+            block_size: config.io.block_size,
+            feature_dim: dataset.spec.feature_dim,
+        };
+        let feature_store =
+            FeatureStore::open(&dataset.paths, layout, dataset.spec.num_nodes, ssd.clone())?;
+        let num_partitions = 16.max(dataset.spec.num_nodes / 4096);
+        let partitioning = range_partition(dataset.spec.num_nodes, num_partitions);
+        let adj_cache = DegreeAdjCache::new(config.memory.graph_buffer_bytes / 2);
+        let dim_bytes = dataset.spec.feature_dim as u64 * 4;
+        // feature budget split between feature cache and historical table
+        let feat_capacity = (config.memory.feature_buffer_bytes / dim_bytes / 2) as usize;
+        let historical_capacity = (config.memory.feature_buffer_bytes / dim_bytes / 2) as usize;
+        Ok(OutreRunner {
+            config,
+            dataset,
+            ssd,
+            graph_store,
+            feature_store,
+            partitioning,
+            adj_cache,
+            feat_cache: LruFeatCache::new(feat_capacity),
+            historical: HashSet::new(),
+            historical_capacity,
+        })
+    }
+}
+
+impl TrainingSystem for OutreRunner {
+    fn system_name(&self) -> &'static str {
+        "outre"
+    }
+
+    fn run_training_epoch(
+        &mut self,
+        epoch: usize,
+        compute: &mut dyn ComputeBackend,
+    ) -> Result<EpochResult> {
+        let t = self.config.train.clone();
+        // partition-based batch construction: order targets by partition
+        let mut targets = select_targets(
+            self.dataset.spec.num_nodes,
+            t.target_fraction,
+            t.seed.wrapping_add(epoch as u64),
+        );
+        targets.sort_by_key(|&v| self.partitioning.assignment[v as usize]);
+        let minibatches = make_minibatches(&targets, t.minibatch_size);
+
+        let mut metrics = RunMetrics::default();
+        let mut acc = (0f64, 0u64, 0u64, 0u64);
+        let dim = self.dataset.spec.feature_dim;
+        let classes = self.dataset.spec.num_classes;
+        let dseed = self.dataset.spec.seed;
+        let threads = self.config.io.num_threads as u32;
+
+        for (mb, tgt) in minibatches.iter().enumerate() {
+            let io_before = self.ssd.busy_ns();
+            // historical-embedding pruning: targets whose embedding is
+            // fresh skip re-expansion entirely (temporal de-redundancy)
+            let (reused, expand): (Vec<u32>, Vec<u32>) =
+                tgt.iter().partition(|v| self.historical.contains(v));
+            let levels;
+            {
+                let _t = StageTimer::new(&mut metrics.sample_wall_ns);
+                levels = sample_minibatch_per_node(
+                    &self.graph_store,
+                    &mut self.adj_cache,
+                    &expand,
+                    &t.fanouts,
+                    t.seed,
+                    mb as u32,
+                    4096,
+                    threads,
+                )?;
+            }
+            let io_mid = self.ssd.busy_ns();
+            metrics.sample_io_ns += io_mid - io_before;
+            metrics.sampled_nodes += levels.iter().skip(1).map(|l| l.len() as u64).sum::<u64>();
+
+            let nodes: Vec<u32> = levels.iter().flatten().copied().collect();
+            {
+                let _t = StageTimer::new(&mut metrics.gather_wall_ns);
+                gather_minibatch_per_node(
+                    &self.feature_store,
+                    &mut self.feat_cache,
+                    &nodes,
+                    4096,
+                    threads,
+                )?;
+            }
+            metrics.gather_io_ns += self.ssd.busy_ns() - io_mid;
+            metrics.gathered_features += nodes.len() as u64;
+
+            // refresh historical table with this minibatch's computed nodes
+            for &v in tgt {
+                if self.historical.len() < self.historical_capacity {
+                    self.historical.insert(v);
+                }
+            }
+            let _ = &reused;
+
+            let mut features = Vec::with_capacity(nodes.len() * dim);
+            for &v in &nodes {
+                features.extend(synth_feature(v, dim, dseed));
+            }
+            let data = MinibatchData {
+                levels,
+                features,
+                feature_dim: dim,
+                labels: expand.iter().map(|&v| synth_label(v, classes, dim, dseed)).collect(),
+                fanouts: t.fanouts.clone(),
+            };
+            let _t = StageTimer::new(&mut metrics.compute_wall_ns);
+            let r = compute.train_step(&data)?;
+            acc.0 += r.loss as f64;
+            acc.1 += r.correct as u64;
+            acc.2 += r.total as u64;
+            acc.3 += 1;
+            metrics.minibatches += 1;
+        }
+        metrics.device = self.ssd.stats();
+        metrics.feature_hit_ratio = {
+            let (h, m) = (self.feat_cache.hits(), self.feat_cache.misses());
+            if h + m == 0 {
+                0.0
+            } else {
+                h as f64 / (h + m) as f64
+            }
+        };
+        Ok(EpochResult {
+            metrics,
+            mean_loss: if acc.3 == 0 { 0.0 } else { (acc.0 / acc.3 as f64) as f32 },
+            accuracy: if acc.2 == 0 { 0.0 } else { acc.1 as f32 / acc.2 as f32 },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::ginex::GinexRunner;
+    use crate::coordinator::NullCompute;
+
+    fn cfg() -> AgnesConfig {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+        std::mem::forget(tmp);
+        c
+    }
+
+    #[test]
+    fn outre_reduces_ios_vs_ginex() {
+        let c = cfg();
+        let mut o = OutreRunner::open(c.clone()).unwrap();
+        let mut g = GinexRunner::open(c).unwrap();
+        // second epoch: historical table warm
+        o.run_training_epoch(0, &mut NullCompute).unwrap();
+        o.ssd.reset();
+        let ro = o.run_training_epoch(1, &mut NullCompute).unwrap();
+        g.run_training_epoch(0, &mut NullCompute).unwrap();
+        g.ssd.reset();
+        let rg = g.run_training_epoch(1, &mut NullCompute).unwrap();
+        assert!(
+            ro.metrics.sampled_nodes < rg.metrics.sampled_nodes,
+            "historical embeddings must prune the sampled tree ({} vs {})",
+            ro.metrics.sampled_nodes,
+            rg.metrics.sampled_nodes
+        );
+    }
+
+    #[test]
+    fn sage_only() {
+        assert!(OutreRunner::supports_model(crate::config::GnnModel::Sage));
+        assert!(!OutreRunner::supports_model(crate::config::GnnModel::Gat));
+    }
+}

@@ -1,0 +1,448 @@
+//! Configuration system: every knob of the paper's evaluation is a field
+//! here, loadable from a flat TOML-subset file (`[section]` headers +
+//! `key = value` lines, `#` comments) with CLI overrides, plus presets for
+//! the paper's two memory settings (§4.1: Setting 1 = 32 GB, Setting 2 =
+//! 8 GB, halved between topology and features — scaled by the same factor
+//! as the datasets, see DESIGN.md §Substitutions).
+
+use crate::graph::layout::Layout;
+use crate::storage::device::SsdSpec;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Which GNN model the computation stage runs (paper: 3-layer each).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GnnModel {
+    Gcn,
+    Sage,
+    Gat,
+}
+
+impl std::str::FromStr for GnnModel {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "gcn" => Ok(GnnModel::Gcn),
+            "sage" | "graphsage" => Ok(GnnModel::Sage),
+            "gat" => Ok(GnnModel::Gat),
+            other => Err(format!("unknown model {other:?}")),
+        }
+    }
+}
+
+impl GnnModel {
+    pub fn name(&self) -> &'static str {
+        match self {
+            GnnModel::Gcn => "gcn",
+            GnnModel::Sage => "sage",
+            GnnModel::Gat => "gat",
+        }
+    }
+
+    pub fn all() -> [GnnModel; 3] {
+        [GnnModel::Gcn, GnnModel::Sage, GnnModel::Gat]
+    }
+}
+
+/// Dataset selection.
+#[derive(Debug, Clone)]
+pub struct DatasetConfig {
+    /// Preset name: ig | tw | pa | fr | yh | tiny.
+    pub name: String,
+    /// Scale factor over the 1/1000-of-paper base sizes.
+    pub scale: f64,
+    /// Feature dimension |F| (paper: 128 / 256; sensitivity: 64–512).
+    pub feature_dim: usize,
+    /// On-disk node ordering (paper layout = degree, after RealGraph).
+    pub layout: Layout,
+    /// Directory holding the built stores.
+    pub data_dir: String,
+}
+
+impl Default for DatasetConfig {
+    fn default() -> Self {
+        DatasetConfig {
+            name: "ig".into(),
+            scale: 1.0,
+            feature_dim: 128,
+            layout: Layout::Degree,
+            data_dir: "data".into(),
+        }
+    }
+}
+
+/// Storage-device model parameters (see [`SsdSpec`]).
+#[derive(Debug, Clone)]
+pub struct DeviceConfig {
+    /// Per-SSD sequential bandwidth, bytes/s.
+    pub bandwidth: f64,
+    /// Per-request overhead, seconds.
+    pub request_overhead: f64,
+    /// NVMe queue depth per SSD.
+    pub queue_depth: u32,
+    /// RAID0 array size (paper: 1–4).
+    pub num_ssds: u32,
+}
+
+impl Default for DeviceConfig {
+    fn default() -> Self {
+        let s = SsdSpec::default();
+        DeviceConfig {
+            bandwidth: s.bandwidth,
+            request_overhead: s.request_overhead,
+            queue_depth: s.queue_depth,
+            num_ssds: s.num_ssds,
+        }
+    }
+}
+
+impl DeviceConfig {
+    pub fn spec(&self) -> SsdSpec {
+        SsdSpec {
+            bandwidth: self.bandwidth,
+            request_overhead: self.request_overhead,
+            queue_depth: self.queue_depth,
+            num_ssds: self.num_ssds,
+        }
+    }
+}
+
+/// I/O processing parameters.
+#[derive(Debug, Clone)]
+pub struct IoConfig {
+    /// Block size in bytes (paper default 1 MB; Fig 9 sweeps 64 KB–4 MB).
+    pub block_size: usize,
+    /// CPU threads for data preparation (paper: 16).
+    pub num_threads: usize,
+    /// Outstanding async requests per thread.
+    pub async_depth: u32,
+}
+
+impl Default for IoConfig {
+    fn default() -> Self {
+        IoConfig { block_size: 1 << 20, num_threads: 16, async_depth: 8 }
+    }
+}
+
+/// Memory budgets (paper §4.1 settings, scaled).
+#[derive(Debug, Clone)]
+pub struct MemoryConfig {
+    /// Graph-buffer budget in bytes.
+    pub graph_buffer_bytes: u64,
+    /// Feature-buffer budget in bytes.
+    pub feature_buffer_bytes: u64,
+    /// Feature-cache budget in vectors.
+    pub feature_cache_entries: usize,
+    /// Access-count admission threshold for the feature cache.
+    pub feature_cache_threshold: u32,
+}
+
+impl Default for MemoryConfig {
+    fn default() -> Self {
+        // Setting 1 scaled by 1/1000: 16 MB + 16 MB.
+        MemoryConfig {
+            graph_buffer_bytes: 16 << 20,
+            feature_buffer_bytes: 16 << 20,
+            feature_cache_entries: 8192,
+            feature_cache_threshold: 2,
+        }
+    }
+}
+
+impl MemoryConfig {
+    /// Paper Setting 1 (32 GB) scaled by 1/1000 → 16 MB + 16 MB.
+    pub fn setting1() -> MemoryConfig {
+        MemoryConfig::default()
+    }
+
+    /// Paper Setting 2 (8 GB, I/O-intensive) scaled → 4 MB + 4 MB.
+    pub fn setting2() -> MemoryConfig {
+        MemoryConfig {
+            graph_buffer_bytes: 4 << 20,
+            feature_buffer_bytes: 4 << 20,
+            feature_cache_entries: 2048,
+            feature_cache_threshold: 2,
+        }
+    }
+}
+
+/// Training-loop parameters.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: GnnModel,
+    /// Target nodes per minibatch (paper: 1000).
+    pub minibatch_size: usize,
+    /// Minibatches per hyperbatch (paper: 1024; Fig 9 sweeps 64–2048).
+    pub hyperbatch_size: usize,
+    /// Neighbor-sampling fanout per layer (paper: (10,10,10)).
+    pub fanouts: Vec<usize>,
+    pub epochs: usize,
+    /// Fraction of nodes that are labeled training targets.
+    pub target_fraction: f64,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: GnnModel::Sage,
+            minibatch_size: 1000,
+            hyperbatch_size: 1024,
+            fanouts: vec![10, 10, 10],
+            epochs: 1,
+            target_fraction: 0.1,
+            seed: 1,
+        }
+    }
+}
+
+/// Top-level configuration.
+#[derive(Debug, Clone, Default)]
+pub struct AgnesConfig {
+    pub dataset: DatasetConfig,
+    pub device: DeviceConfig,
+    pub io: IoConfig,
+    pub memory: MemoryConfig,
+    pub train: TrainConfig,
+}
+
+impl AgnesConfig {
+    /// Load from a flat `[section]` / `key = value` file; unknown keys are
+    /// an error (catches typos), missing keys keep their defaults.
+    pub fn from_toml_file(path: impl AsRef<Path>) -> crate::Result<AgnesConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml_str(&text)
+    }
+
+    pub fn from_toml_str(text: &str) -> crate::Result<AgnesConfig> {
+        let mut c = AgnesConfig::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            let value = value.trim().trim_matches('"');
+            c.set(&section, key, value)
+                .map_err(|e| anyhow::anyhow!("line {}: {e}", lineno + 1))?;
+        }
+        Ok(c)
+    }
+
+    fn set(&mut self, section: &str, key: &str, value: &str) -> Result<(), String> {
+        fn p<T: std::str::FromStr>(v: &str) -> Result<T, String>
+        where
+            T::Err: std::fmt::Display,
+        {
+            v.parse::<T>().map_err(|e| format!("bad value {v:?}: {e}"))
+        }
+        match (section, key) {
+            ("dataset", "name") => self.dataset.name = value.to_string(),
+            ("dataset", "scale") => self.dataset.scale = p(value)?,
+            ("dataset", "feature_dim") => self.dataset.feature_dim = p(value)?,
+            ("dataset", "layout") => self.dataset.layout = value.parse()?,
+            ("dataset", "data_dir") => self.dataset.data_dir = value.to_string(),
+            ("device", "bandwidth") => self.device.bandwidth = p(value)?,
+            ("device", "request_overhead") => self.device.request_overhead = p(value)?,
+            ("device", "queue_depth") => self.device.queue_depth = p(value)?,
+            ("device", "num_ssds") => self.device.num_ssds = p(value)?,
+            ("io", "block_size") => self.io.block_size = p(value)?,
+            ("io", "num_threads") => self.io.num_threads = p(value)?,
+            ("io", "async_depth") => self.io.async_depth = p(value)?,
+            ("memory", "graph_buffer_bytes") => self.memory.graph_buffer_bytes = p(value)?,
+            ("memory", "feature_buffer_bytes") => self.memory.feature_buffer_bytes = p(value)?,
+            ("memory", "feature_cache_entries") => self.memory.feature_cache_entries = p(value)?,
+            ("memory", "feature_cache_threshold") => {
+                self.memory.feature_cache_threshold = p(value)?
+            }
+            ("train", "model") => self.train.model = value.parse()?,
+            ("train", "minibatch_size") => self.train.minibatch_size = p(value)?,
+            ("train", "hyperbatch_size") => self.train.hyperbatch_size = p(value)?,
+            ("train", "fanouts") => {
+                self.train.fanouts = value
+                    .trim_matches(['[', ']'])
+                    .split(',')
+                    .map(|x| p::<usize>(x.trim()))
+                    .collect::<Result<_, _>>()?
+            }
+            ("train", "epochs") => self.train.epochs = p(value)?,
+            ("train", "target_fraction") => self.train.target_fraction = p(value)?,
+            ("train", "seed") => self.train.seed = p(value)?,
+            _ => return Err(format!("unknown key {section}.{key}")),
+        }
+        Ok(())
+    }
+
+    /// Serialize (round-trips through [`Self::from_toml_str`]).
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        let mut w = |s: &str| {
+            out.push_str(s);
+            out.push('\n');
+        };
+        w("[dataset]");
+        w(&format!("name = \"{}\"", self.dataset.name));
+        w(&format!("scale = {}", self.dataset.scale));
+        w(&format!("feature_dim = {}", self.dataset.feature_dim));
+        w(&format!("layout = \"{}\"", layout_name(self.dataset.layout)));
+        w(&format!("data_dir = \"{}\"", self.dataset.data_dir));
+        w("\n[device]");
+        w(&format!("bandwidth = {}", self.device.bandwidth));
+        w(&format!("request_overhead = {}", self.device.request_overhead));
+        w(&format!("queue_depth = {}", self.device.queue_depth));
+        w(&format!("num_ssds = {}", self.device.num_ssds));
+        w("\n[io]");
+        w(&format!("block_size = {}", self.io.block_size));
+        w(&format!("num_threads = {}", self.io.num_threads));
+        w(&format!("async_depth = {}", self.io.async_depth));
+        w("\n[memory]");
+        w(&format!("graph_buffer_bytes = {}", self.memory.graph_buffer_bytes));
+        w(&format!("feature_buffer_bytes = {}", self.memory.feature_buffer_bytes));
+        w(&format!("feature_cache_entries = {}", self.memory.feature_cache_entries));
+        w(&format!("feature_cache_threshold = {}", self.memory.feature_cache_threshold));
+        w("\n[train]");
+        w(&format!("model = \"{}\"", self.train.model.name()));
+        w(&format!("minibatch_size = {}", self.train.minibatch_size));
+        w(&format!("hyperbatch_size = {}", self.train.hyperbatch_size));
+        let fan: Vec<String> = self.train.fanouts.iter().map(|f| f.to_string()).collect();
+        w(&format!("fanouts = [{}]", fan.join(", ")));
+        w(&format!("epochs = {}", self.train.epochs));
+        w(&format!("target_fraction = {}", self.train.target_fraction));
+        w(&format!("seed = {}", self.train.seed));
+        out
+    }
+
+    /// A small config for tests and the quickstart example.
+    pub fn tiny() -> AgnesConfig {
+        AgnesConfig {
+            dataset: DatasetConfig {
+                name: "tiny".into(),
+                scale: 1.0,
+                feature_dim: 32,
+                layout: Layout::Degree,
+                data_dir: "data/tiny".into(),
+            },
+            io: IoConfig { block_size: 16 << 10, num_threads: 4, async_depth: 4 },
+            memory: MemoryConfig {
+                graph_buffer_bytes: 256 << 10,
+                feature_buffer_bytes: 256 << 10,
+                feature_cache_entries: 512,
+                feature_cache_threshold: 2,
+            },
+            train: TrainConfig {
+                minibatch_size: 64,
+                hyperbatch_size: 8,
+                fanouts: vec![5, 5],
+                target_fraction: 0.2,
+                ..Default::default()
+            },
+            ..Default::default()
+        }
+    }
+
+    /// Graph-buffer capacity in blocks.
+    pub fn graph_buffer_blocks(&self) -> usize {
+        (self.memory.graph_buffer_bytes / self.io.block_size as u64).max(1) as usize
+    }
+
+    /// Feature-buffer capacity in blocks.
+    pub fn feature_buffer_blocks(&self) -> usize {
+        (self.memory.feature_buffer_bytes / self.io.block_size as u64).max(1) as usize
+    }
+
+    /// Flat `section.key → value` view (debug / reporting).
+    pub fn flatten(&self) -> BTreeMap<String, String> {
+        let mut m = BTreeMap::new();
+        let mut section = String::new();
+        for line in self.to_toml().lines() {
+            let line = line.trim();
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                m.insert(format!("{section}.{}", k.trim()), v.trim().to_string());
+            }
+        }
+        m
+    }
+}
+
+fn layout_name(l: Layout) -> &'static str {
+    match l {
+        Layout::Natural => "natural",
+        Layout::Degree => "degree",
+        Layout::Bfs => "bfs",
+        Layout::Shuffle => "shuffle",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_roundtrip() {
+        let mut c = AgnesConfig::tiny();
+        c.train.fanouts = vec![7, 3, 2];
+        c.device.num_ssds = 4;
+        let text = c.to_toml();
+        let back = AgnesConfig::from_toml_str(&text).unwrap();
+        assert_eq!(back.train.fanouts, vec![7, 3, 2]);
+        assert_eq!(back.device.num_ssds, 4);
+        assert_eq!(back.dataset.name, "tiny");
+        assert_eq!(back.io.block_size, 16 << 10);
+        assert_eq!(back.dataset.layout, Layout::Degree);
+    }
+
+    #[test]
+    fn partial_config_uses_defaults() {
+        let back = AgnesConfig::from_toml_str("[train]\nminibatch_size = 7\n").unwrap();
+        assert_eq!(back.train.minibatch_size, 7);
+        assert_eq!(back.train.hyperbatch_size, 1024);
+        assert_eq!(back.io.num_threads, 16);
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let text = "# top\n[io]\nblock_size = 4096  # bytes\n\nnum_threads = 2\n";
+        let c = AgnesConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.io.block_size, 4096);
+        assert_eq!(c.io.num_threads, 2);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(AgnesConfig::from_toml_str("[io]\nblok_size = 1\n").is_err());
+        assert!(AgnesConfig::from_toml_str("[io]\njust a line\n").is_err());
+    }
+
+    #[test]
+    fn settings_scaled() {
+        let s1 = MemoryConfig::setting1();
+        let s2 = MemoryConfig::setting2();
+        assert_eq!(s1.graph_buffer_bytes / s2.graph_buffer_bytes, 4);
+    }
+
+    #[test]
+    fn buffer_blocks_rounding() {
+        let mut c = AgnesConfig::default();
+        c.memory.graph_buffer_bytes = 3 << 20;
+        c.io.block_size = 1 << 20;
+        assert_eq!(c.graph_buffer_blocks(), 3);
+        c.memory.graph_buffer_bytes = 1;
+        assert_eq!(c.graph_buffer_blocks(), 1); // min one frame
+    }
+
+    #[test]
+    fn model_parse() {
+        assert_eq!("GraphSAGE".parse::<GnnModel>().unwrap(), GnnModel::Sage);
+        assert!("mlp".parse::<GnnModel>().is_err());
+    }
+}

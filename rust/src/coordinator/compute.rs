@@ -1,0 +1,128 @@
+//! Computation-stage backends.
+//!
+//! The coordinator hands each prepared minibatch to a [`ComputeBackend`]:
+//! * [`NullCompute`] — data-preparation-only runs (the paper's Fig 4, 9,
+//!   10, 11 measure the preparation stage);
+//! * [`ModeledCompute`] — charges a fixed per-minibatch compute cost
+//!   calibrated from the real executable, so full-figure benches don't pay
+//!   the wall-clock of thousands of XLA executions;
+//! * `runtime::XlaCompute` — the real thing: the AOT-compiled JAX/Pallas
+//!   HLO executed on the PJRT CPU client (see [`crate::runtime`]).
+
+use crate::Result;
+
+/// One prepared minibatch, ready for the accelerator.
+#[derive(Debug, Clone)]
+pub struct MinibatchData {
+    /// Node arrays per tree level (level 0 = targets).
+    pub levels: Vec<Vec<u32>>,
+    /// Contiguous features of all levels' nodes, in level order
+    /// (`sum(level sizes) * feature_dim`).
+    pub features: Vec<f32>,
+    pub feature_dim: usize,
+    /// Labels of the level-0 targets.
+    pub labels: Vec<u32>,
+    /// Sampling fanouts (fixed shapes).
+    pub fanouts: Vec<usize>,
+}
+
+impl MinibatchData {
+    /// Total node slots across levels.
+    pub fn total_nodes(&self) -> usize {
+        self.levels.iter().map(Vec::len).sum()
+    }
+}
+
+/// Result of one training step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepResult {
+    pub loss: f32,
+    /// Correct predictions among the targets (for accuracy curves).
+    pub correct: u32,
+    pub total: u32,
+}
+
+/// The computation stage (paper Figure 1 steps (iv)–(v)).
+pub trait ComputeBackend {
+    fn train_step(&mut self, mb: &MinibatchData) -> Result<StepResult>;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str {
+        "compute"
+    }
+}
+
+/// No computation (prep-only benches).
+#[derive(Debug, Default)]
+pub struct NullCompute;
+
+impl ComputeBackend for NullCompute {
+    fn train_step(&mut self, mb: &MinibatchData) -> Result<StepResult> {
+        Ok(StepResult { loss: 0.0, correct: 0, total: mb.labels.len() as u32 })
+    }
+
+    fn name(&self) -> &'static str {
+        "null"
+    }
+}
+
+/// Fixed-cost compute model: spins for `ns_per_step` simulated nanoseconds
+/// (accounted, not slept) so figure benches include a computation stage of
+/// realistic relative size without executing XLA thousands of times.
+#[derive(Debug)]
+pub struct ModeledCompute {
+    pub ns_per_step: u64,
+    /// Accumulated simulated compute nanoseconds.
+    pub simulated_ns: u64,
+}
+
+impl ModeledCompute {
+    pub fn new(ns_per_step: u64) -> ModeledCompute {
+        ModeledCompute { ns_per_step, simulated_ns: 0 }
+    }
+}
+
+impl ComputeBackend for ModeledCompute {
+    fn train_step(&mut self, mb: &MinibatchData) -> Result<StepResult> {
+        self.simulated_ns += self.ns_per_step;
+        Ok(StepResult { loss: 0.0, correct: 0, total: mb.labels.len() as u32 })
+    }
+
+    fn name(&self) -> &'static str {
+        "modeled"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mb() -> MinibatchData {
+        MinibatchData {
+            levels: vec![vec![1, 2], vec![3, 4, 5, 6]],
+            features: vec![0.0; 6 * 4],
+            feature_dim: 4,
+            labels: vec![0, 1],
+            fanouts: vec![2],
+        }
+    }
+
+    #[test]
+    fn null_counts_targets() {
+        let r = NullCompute.train_step(&mb()).unwrap();
+        assert_eq!(r.total, 2);
+    }
+
+    #[test]
+    fn modeled_accumulates() {
+        let mut c = ModeledCompute::new(1000);
+        c.train_step(&mb()).unwrap();
+        c.train_step(&mb()).unwrap();
+        assert_eq!(c.simulated_ns, 2000);
+    }
+
+    #[test]
+    fn total_nodes_sums_levels() {
+        assert_eq!(mb().total_nodes(), 6);
+    }
+}

@@ -1,0 +1,104 @@
+//! Dataset preparation: generate (or reuse) the on-disk stores for a
+//! configured dataset — synthetic power-law topology, the configured
+//! locality layout, graph + feature block stores, and a spec sidecar.
+
+use crate::config::AgnesConfig;
+use crate::graph::datasets::DatasetSpec;
+use crate::storage::block::FeatureBlockLayout;
+use crate::storage::builder::{build_feature_store, build_graph_store, StorePaths};
+use crate::Result;
+use std::path::Path;
+
+/// Everything `prepare_dataset` produced / found on disk.
+#[derive(Debug, Clone)]
+pub struct PreparedDataset {
+    pub spec: DatasetSpec,
+    pub paths: StorePaths,
+}
+
+fn spec_for(config: &AgnesConfig) -> Result<DatasetSpec> {
+    let d = &config.dataset;
+    if d.name.eq_ignore_ascii_case("tiny") {
+        let mut s = DatasetSpec::tiny();
+        s.feature_dim = d.feature_dim;
+        return Ok(s);
+    }
+    DatasetSpec::preset(&d.name, d.scale, d.feature_dim)
+        .ok_or_else(|| anyhow::anyhow!("unknown dataset preset {:?}", d.name))
+}
+
+/// Key that invalidates a built dataset when any build-relevant knob moves.
+fn build_key(config: &AgnesConfig, spec: &DatasetSpec) -> String {
+    format!(
+        "{}-s{}-f{}-{:?}-bs{}-seed{}",
+        spec.name,
+        config.dataset.scale,
+        spec.feature_dim,
+        config.dataset.layout,
+        config.io.block_size,
+        spec.seed
+    )
+}
+
+/// Generate and persist the dataset stores if absent (idempotent —
+/// subsequent calls with the same config reuse the files).
+pub fn prepare_dataset(config: &AgnesConfig) -> Result<PreparedDataset> {
+    let spec = spec_for(config)?;
+    let dir = Path::new(&config.dataset.data_dir).join(build_key(config, &spec));
+    let paths = StorePaths::in_dir(&dir);
+    let stamp = dir.join("BUILT");
+    if stamp.exists() {
+        return Ok(PreparedDataset { spec, paths });
+    }
+    let g = spec.generate();
+    let perm = config.dataset.layout.permutation(&g, spec.seed);
+    let g = g.relabel(&perm);
+    build_graph_store(&g, config.io.block_size, &paths)?;
+    let layout = FeatureBlockLayout { block_size: config.io.block_size, feature_dim: spec.feature_dim };
+    build_feature_store(g.num_nodes(), layout, &paths, spec.seed)?;
+    std::fs::write(dir.join("spec.json"), spec.to_json().to_string())?;
+    std::fs::write(stamp, b"ok")?;
+    Ok(PreparedDataset { spec, paths })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(dir: &Path) -> AgnesConfig {
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = dir.to_string_lossy().into_owned();
+        c
+    }
+
+    #[test]
+    fn prepare_is_idempotent() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let c = cfg(tmp.path());
+        let a = prepare_dataset(&c).unwrap();
+        let mtime = std::fs::metadata(&a.paths.graph_blocks).unwrap().modified().unwrap();
+        let b = prepare_dataset(&c).unwrap();
+        assert_eq!(a.paths.graph_blocks, b.paths.graph_blocks);
+        let mtime2 = std::fs::metadata(&b.paths.graph_blocks).unwrap().modified().unwrap();
+        assert_eq!(mtime, mtime2, "second call must not rebuild");
+    }
+
+    #[test]
+    fn different_block_size_rebuilds_elsewhere() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let c1 = cfg(tmp.path());
+        let mut c2 = cfg(tmp.path());
+        c2.io.block_size *= 2;
+        let a = prepare_dataset(&c1).unwrap();
+        let b = prepare_dataset(&c2).unwrap();
+        assert_ne!(a.paths.graph_blocks, b.paths.graph_blocks);
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = cfg(tmp.path());
+        c.dataset.name = "doesnotexist".into();
+        assert!(prepare_dataset(&c).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Synthetic power-law graph generators.
+//!
+//! The paper evaluates on five real-world web-scale graphs (Table 2). Those
+//! datasets (and the hardware to hold them) are not available here, so we
+//! generate Chung–Lu / preferential-attachment graphs with a matching
+//! power-law degree distribution — the property §1 of the paper identifies
+//! as the root cause of the many-small-I/Os problem ("the majority of nodes
+//! have only a few edges while a small number of nodes have a huge number
+//! of edges"). See DESIGN.md §Substitutions.
+
+use super::CsrGraph;
+use crate::util::rng::Rng;
+
+/// Parameters for the Chung–Lu power-law generator.
+#[derive(Debug, Clone)]
+pub struct PowerLawParams {
+    pub num_nodes: usize,
+    /// Target number of directed edges.
+    pub num_edges: usize,
+    /// Power-law exponent of the expected-degree sequence (real-world
+    /// graphs: 2.0–2.5; twitter-2010 ≈ 2.276).
+    pub exponent: f64,
+    pub seed: u64,
+}
+
+impl Default for PowerLawParams {
+    fn default() -> Self {
+        PowerLawParams { num_nodes: 10_000, num_edges: 120_000, exponent: 2.2, seed: 42 }
+    }
+}
+
+/// Expected-degree (Chung–Lu) power-law graph.
+///
+/// Draws `num_edges` directed edges where endpoint probabilities are
+/// proportional to a Zipf-like weight `w_v = (v + v0)^(-1/(exponent-1))`,
+/// then CSR-ifies. O(E) time, deterministic under `seed`.
+pub fn chung_lu(p: &PowerLawParams) -> CsrGraph {
+    let n = p.num_nodes;
+    assert!(n >= 2, "need at least 2 nodes");
+    let mut rng = Rng::seed_from_u64(p.seed);
+    // weight_v ∝ (v + v0)^-alpha with alpha = 1/(exponent-1): node ids are
+    // already "degree-ordered" (hub = small id). Benches that want a random
+    // on-disk order apply a shuffle permutation afterwards.
+    let alpha = 1.0 / (p.exponent - 1.0);
+    let v0 = 1.0_f64;
+    let mut cum = Vec::with_capacity(n);
+    let mut acc = 0.0_f64;
+    for v in 0..n {
+        acc += (v as f64 + v0).powf(-alpha);
+        cum.push(acc);
+    }
+    let total = acc;
+    let sample = |rng: &mut Rng| -> u32 {
+        let x = rng.gen_f64() * total;
+        // binary search the cumulative weights
+        match cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => i as u32,
+            Err(i) => (i.min(n - 1)) as u32,
+        }
+    };
+    let mut edges = Vec::with_capacity(p.num_edges);
+    for _ in 0..p.num_edges {
+        let s = sample(&mut rng);
+        let mut t = sample(&mut rng);
+        if t == s {
+            t = (t + 1) % n as u32; // avoid trivial self loops
+        }
+        edges.push((s, t));
+    }
+    CsrGraph::from_edges(n, &edges)
+}
+
+/// Barabási–Albert-style preferential attachment (used for ablation
+/// workloads that need guaranteed connectivity).
+pub fn preferential_attachment(num_nodes: usize, edges_per_node: usize, seed: u64) -> CsrGraph {
+    assert!(num_nodes > edges_per_node && edges_per_node >= 1);
+    let mut rng = Rng::seed_from_u64(seed);
+    // repeated-nodes list trick: sampling uniformly from `endpoints` is
+    // sampling proportional to degree.
+    let mut endpoints: Vec<u32> = (0..edges_per_node as u32).collect();
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(num_nodes * edges_per_node);
+    for v in edges_per_node as u32..num_nodes as u32 {
+        for _ in 0..edges_per_node {
+            let t = endpoints[rng.gen_range(endpoints.len())];
+            edges.push((v, t));
+            edges.push((t, v));
+            endpoints.push(t);
+            endpoints.push(v);
+        }
+    }
+    CsrGraph::from_edges(num_nodes, &edges)
+}
+
+/// Deterministic synthetic feature vector for node `v` (unit-norm-ish,
+/// reproducible without storing the full matrix in memory). Used both when
+/// writing the feature store and by tests as the oracle.
+#[inline]
+pub fn synth_feature(v: u32, dim: usize, seed: u64) -> Vec<f32> {
+    let mut state = (v as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ seed;
+    let mut out = Vec::with_capacity(dim);
+    for _ in 0..dim {
+        // xorshift64*
+        state ^= state >> 12;
+        state ^= state << 25;
+        state ^= state >> 27;
+        let r = state.wrapping_mul(0x2545F4914F6CDD1D);
+        // map to [-0.5, 0.5)
+        out.push(((r >> 11) as f64 / (1u64 << 53) as f64) as f32 - 0.5);
+    }
+    out
+}
+
+/// Deterministic synthetic class label for node `v` in `[0, num_classes)`:
+/// a quantile bucket of the first feature component (uniform in
+/// [-0.5, 0.5)), so labels are an exactly learnable function of the input
+/// features — gives Fig 12 a real accuracy curve.
+#[inline]
+pub fn synth_label(v: u32, num_classes: usize, dim: usize, seed: u64) -> u32 {
+    let f = synth_feature(v, 1.max(dim.min(1)), seed);
+    let unit = (f[0] + 0.5).clamp(0.0, 0.999_999);
+    (unit * num_classes as f32) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chung_lu_deterministic_and_sized() {
+        let p = PowerLawParams { num_nodes: 1000, num_edges: 12_000, exponent: 2.2, seed: 7 };
+        let g1 = chung_lu(&p);
+        let g2 = chung_lu(&p);
+        assert_eq!(g1, g2);
+        assert_eq!(g1.num_nodes(), 1000);
+        assert_eq!(g1.num_edges(), 12_000);
+    }
+
+    #[test]
+    fn chung_lu_is_heavy_tailed() {
+        let p = PowerLawParams { num_nodes: 5000, num_edges: 60_000, exponent: 2.1, seed: 1 };
+        let g = chung_lu(&p);
+        // hubs exist: max degree far above the average
+        assert!(g.max_degree() as f64 > 10.0 * g.avg_degree());
+        // and the majority of nodes are low degree (power-law mass)
+        let low = (0..g.num_nodes() as u32).filter(|&v| g.degree(v) <= 12).count();
+        assert!(low as f64 > 0.5 * g.num_nodes() as f64);
+    }
+
+    #[test]
+    fn pref_attachment_connected_degrees() {
+        let g = preferential_attachment(500, 3, 3);
+        assert_eq!(g.num_nodes(), 500);
+        // every non-seed node has at least `m` out-edges
+        for v in 3..500u32 {
+            assert!(g.degree(v) >= 3, "node {v} degree {}", g.degree(v));
+        }
+    }
+
+    #[test]
+    fn synth_feature_deterministic() {
+        let a = synth_feature(123, 64, 9);
+        let b = synth_feature(123, 64, 9);
+        let c = synth_feature(124, 64, 9);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a.len(), 64);
+        assert!(a.iter().all(|x| (-0.5..0.5).contains(x)));
+    }
+
+    #[test]
+    fn synth_label_in_range() {
+        for v in 0..200 {
+            assert!(synth_label(v, 16, 128, 0) < 16);
+        }
+    }
+}

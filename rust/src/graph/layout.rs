@@ -1,0 +1,181 @@
+//! Locality-aware data layout (paper §3.2, following RealGraph [9, 10]).
+//!
+//! "We assign consecutive node IDs to the nodes likely to be accessed
+//! together at the same or adjacent iteration(s)" — objects are stored in
+//! blocks in ascending node-id order, so a relabeling that clusters
+//! co-accessed nodes directly clusters them into the same / adjacent
+//! blocks, reducing the number of accessed blocks and raising sequential
+//! access.
+//!
+//! We provide three orderings:
+//! * [`degree_order`] — hubs first (RealGraph's layout; hot nodes share a
+//!   few always-cached blocks),
+//! * [`bfs_order`] — BFS from the highest-degree node (neighborhood
+//!   locality; co-sampled nodes get adjacent ids),
+//! * [`shuffle_order`] — adversarial random layout used by benches to model
+//!   datasets with no locality (and as the baseline the paper's layout is
+//!   compared against).
+
+use super::CsrGraph;
+use crate::util::rng::Rng;
+use std::collections::VecDeque;
+
+/// Permutation `perm[old] = new` ordering nodes by descending out-degree
+/// (ties by old id, so the permutation is deterministic).
+pub fn degree_order(g: &CsrGraph) -> Vec<u32> {
+    let n = g.num_nodes();
+    let mut by_degree: Vec<u32> = (0..n as u32).collect();
+    by_degree.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
+    let mut perm = vec![0u32; n];
+    for (new, &old) in by_degree.iter().enumerate() {
+        perm[old as usize] = new as u32;
+    }
+    perm
+}
+
+/// BFS relabeling from the highest-degree node; unreachable components are
+/// appended in degree order. Neighbors are visited in degree order so hubs
+/// cluster at the front of the id space.
+pub fn bfs_order(g: &CsrGraph) -> Vec<u32> {
+    let n = g.num_nodes();
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut seen = vec![false; n];
+    let mut roots: Vec<u32> = (0..n as u32).collect();
+    roots.sort_by_key(|&v| (std::cmp::Reverse(g.degree(v)), v));
+    let mut queue = VecDeque::new();
+    for &root in &roots {
+        if seen[root as usize] {
+            continue;
+        }
+        seen[root as usize] = true;
+        queue.push_back(root);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            let mut nbrs: Vec<u32> = g
+                .neighbors(v)
+                .iter()
+                .copied()
+                .filter(|&t| !seen[t as usize])
+                .collect();
+            nbrs.sort_by_key(|&t| (std::cmp::Reverse(g.degree(t)), t));
+            for t in nbrs {
+                if !seen[t as usize] {
+                    seen[t as usize] = true;
+                    queue.push_back(t);
+                }
+            }
+        }
+    }
+    let mut perm = vec![0u32; n];
+    for (new, &old) in order.iter().enumerate() {
+        perm[old as usize] = new as u32;
+    }
+    perm
+}
+
+/// Uniform-random permutation (deterministic under `seed`).
+pub fn shuffle_order(num_nodes: usize, seed: u64) -> Vec<u32> {
+    let mut perm: Vec<u32> = (0..num_nodes as u32).collect();
+    Rng::seed_from_u64(seed).shuffle(&mut perm);
+    perm
+}
+
+/// Which layout to apply when building the on-disk stores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// Keep generator order (generator emits hubs-first already).
+    Natural,
+    /// Descending-degree relabeling (paper's default, after [9, 10]).
+    Degree,
+    /// BFS from the largest hub.
+    Bfs,
+    /// Adversarial random order.
+    Shuffle,
+}
+
+impl Layout {
+    /// Compute `perm[old] = new` for this layout (identity for `Natural`).
+    pub fn permutation(self, g: &CsrGraph, seed: u64) -> Vec<u32> {
+        match self {
+            Layout::Natural => (0..g.num_nodes() as u32).collect(),
+            Layout::Degree => degree_order(g),
+            Layout::Bfs => bfs_order(g),
+            Layout::Shuffle => shuffle_order(g.num_nodes(), seed),
+        }
+    }
+}
+
+impl std::str::FromStr for Layout {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "natural" => Ok(Layout::Natural),
+            "degree" => Ok(Layout::Degree),
+            "bfs" => Ok(Layout::Bfs),
+            "shuffle" => Ok(Layout::Shuffle),
+            other => Err(format!("unknown layout {other:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{chung_lu, PowerLawParams};
+
+    fn is_permutation(perm: &[u32]) -> bool {
+        let mut seen = vec![false; perm.len()];
+        for &p in perm {
+            if seen[p as usize] {
+                return false;
+            }
+            seen[p as usize] = true;
+        }
+        true
+    }
+
+    #[test]
+    fn degree_order_is_permutation_and_sorted() {
+        let g = chung_lu(&PowerLawParams { num_nodes: 300, num_edges: 3000, ..Default::default() });
+        let perm = degree_order(&g);
+        assert!(is_permutation(&perm));
+        let r = g.relabel(&perm);
+        // degrees non-increasing in the new id space
+        for v in 1..r.num_nodes() as u32 {
+            assert!(r.degree(v - 1) >= r.degree(v));
+        }
+    }
+
+    #[test]
+    fn bfs_order_is_permutation() {
+        let g = chung_lu(&PowerLawParams { num_nodes: 500, num_edges: 4000, ..Default::default() });
+        let perm = bfs_order(&g);
+        assert!(is_permutation(&perm));
+    }
+
+    #[test]
+    fn shuffle_is_permutation_and_seeded() {
+        let a = shuffle_order(1000, 5);
+        let b = shuffle_order(1000, 5);
+        let c = shuffle_order(1000, 6);
+        assert!(is_permutation(&a));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn layout_enum_dispatch() {
+        let g = chung_lu(&PowerLawParams { num_nodes: 100, num_edges: 600, ..Default::default() });
+        for l in [Layout::Natural, Layout::Degree, Layout::Bfs, Layout::Shuffle] {
+            let p = l.permutation(&g, 1);
+            assert!(is_permutation(&p), "{l:?}");
+        }
+        assert_eq!(Layout::Natural.permutation(&g, 0), (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn layout_fromstr() {
+        assert_eq!("degree".parse::<Layout>().unwrap(), Layout::Degree);
+        assert!("bogus".parse::<Layout>().is_err());
+    }
+}

@@ -1,0 +1,155 @@
+//! Graph substrate: CSR topology, synthetic power-law generators, the
+//! locality-aware relabeling layout from the paper (§3.2 storage layer),
+//! dataset presets matching Table 2, and a partitioner used by the
+//! MariusGNN / OUTRE / DistDGL baselines.
+
+pub mod datasets;
+pub mod generate;
+pub mod io;
+pub mod layout;
+pub mod partition;
+
+pub use datasets::DatasetSpec;
+
+/// Compressed-sparse-row graph: out-neighbors of node `v` are
+/// `targets[offsets[v] .. offsets[v + 1]]`.
+///
+/// Node ids are `u32` (the paper's largest graph, yahoo-web, has 1.4 B
+/// nodes; our scaled reproductions stay well under `u32::MAX`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CsrGraph {
+    /// `offsets.len() == num_nodes() + 1`.
+    pub offsets: Vec<u64>,
+    /// Flattened adjacency lists.
+    pub targets: Vec<u32>,
+}
+
+impl CsrGraph {
+    /// Build a CSR graph from an edge list (duplicates preserved,
+    /// self-loops allowed — matches how SNAP datasets are consumed).
+    pub fn from_edges(num_nodes: usize, edges: &[(u32, u32)]) -> Self {
+        let mut degree = vec![0u64; num_nodes];
+        for &(s, _) in edges {
+            degree[s as usize] += 1;
+        }
+        let mut offsets = vec![0u64; num_nodes + 1];
+        for v in 0..num_nodes {
+            offsets[v + 1] = offsets[v] + degree[v];
+        }
+        let mut cursor = offsets.clone();
+        let mut targets = vec![0u32; edges.len()];
+        for &(s, t) in edges {
+            let c = &mut cursor[s as usize];
+            targets[*c as usize] = t;
+            *c += 1;
+        }
+        CsrGraph { offsets, targets }
+    }
+
+    #[inline]
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Neighbors of `v`.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.targets[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Apply a relabeling permutation: `perm[old] = new`. Adjacency lists
+    /// are re-sorted by new id so the on-disk layout is deterministic.
+    pub fn relabel(&self, perm: &[u32]) -> CsrGraph {
+        let n = self.num_nodes();
+        assert_eq!(perm.len(), n);
+        let mut inv = vec![0u32; n];
+        for (old, &new) in perm.iter().enumerate() {
+            inv[new as usize] = old as u32;
+        }
+        let mut offsets = vec![0u64; n + 1];
+        for new in 0..n {
+            let old = inv[new] as u32;
+            offsets[new + 1] = offsets[new] + self.degree(old) as u64;
+        }
+        let mut targets = vec![0u32; self.num_edges()];
+        for new in 0..n {
+            let old = inv[new] as u32;
+            let dst = &mut targets[offsets[new] as usize..offsets[new + 1] as usize];
+            for (slot, &t) in dst.iter_mut().zip(self.neighbors(old)) {
+                *slot = perm[t as usize];
+            }
+            dst.sort_unstable();
+        }
+        CsrGraph { offsets, targets }
+    }
+
+    /// Average degree.
+    pub fn avg_degree(&self) -> f64 {
+        self.num_edges() as f64 / self.num_nodes().max(1) as f64
+    }
+
+    /// Maximum out-degree (the power-law "hub" size).
+    pub fn max_degree(&self) -> usize {
+        (0..self.num_nodes() as u32).map(|v| self.degree(v)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> CsrGraph {
+        // 0 -> 1,2 ; 1 -> 3 ; 2 -> 3 ; 3 -> (none)
+        CsrGraph::from_edges(4, &[(0, 1), (0, 2), (1, 3), (2, 3)])
+    }
+
+    #[test]
+    fn csr_from_edges_roundtrip() {
+        let g = diamond();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(1), &[3]);
+        assert_eq!(g.neighbors(2), &[3]);
+        assert_eq!(g.neighbors(3), &[] as &[u32]);
+        assert_eq!(g.degree(0), 2);
+    }
+
+    #[test]
+    fn relabel_preserves_structure() {
+        let g = diamond();
+        // reverse permutation: old i -> new (3 - i)
+        let perm: Vec<u32> = (0..4).map(|i| 3 - i).collect();
+        let r = g.relabel(&perm);
+        assert_eq!(r.num_edges(), 4);
+        // old node 0 (new 3) pointed at old 1,2 (new 2,1)
+        assert_eq!(r.neighbors(3), &[1, 2]);
+        assert_eq!(r.neighbors(2), &[0]); // old 1 -> old 3 (new 0)
+        assert_eq!(r.neighbors(0), &[] as &[u32]);
+    }
+
+    #[test]
+    fn relabel_identity_is_noop() {
+        let g = diamond();
+        let perm: Vec<u32> = (0..4).collect();
+        assert_eq!(g.relabel(&perm), g);
+    }
+
+    #[test]
+    fn degree_stats() {
+        let g = diamond();
+        assert_eq!(g.max_degree(), 2);
+        assert!((g.avg_degree() - 1.0).abs() < 1e-9);
+    }
+}

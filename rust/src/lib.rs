@@ -1,0 +1,54 @@
+//! # AGNES — Accelerating Storage-based Training for Graph Neural Networks
+//!
+//! Reproduction of Jang et al., KDD 2026 (DOI 10.1145/3770854.3780309).
+//!
+//! AGNES is a storage-based GNN training framework: the whole graph
+//! (topology + node features) lives on external storage and only the parts
+//! needed for each training iteration are loaded into main memory. The
+//! contribution is a 3-layer architecture that eliminates the paper's
+//! observed bottleneck — a large number of *small* storage I/Os — via
+//!
+//! 1. **block-wise storage I/O** with a locality-aware data layout
+//!    ([`storage`], [`graph::layout`]),
+//! 2. **hyperbatch-based processing**: per loaded block, serve every
+//!    minibatch of a hyperbatch at once ([`op`], [`coordinator`]), and
+//! 3. LRU-with-pinning graph buffering plus an access-count-threshold
+//!    feature cache ([`memory`]).
+//!
+//! The crate layers map onto the paper's architecture:
+//!
+//! | paper layer     | module                         |
+//! |-----------------|--------------------------------|
+//! | storage layer   | [`storage`]                    |
+//! | in-memory layer | [`memory`]                     |
+//! | operation layer | [`op`]                         |
+//! | (driver)        | [`coordinator`]                |
+//!
+//! The GNN computation stage (GCN / GraphSAGE / GAT forward + backward +
+//! optimizer step) is authored in JAX with the aggregation hot-spot as a
+//! Pallas kernel, AOT-lowered to HLO at build time (`python/compile/`), and
+//! executed from rust through the PJRT CPU client ([`runtime`]). Python is
+//! never on the training path.
+//!
+//! Baselines from the paper's evaluation (Ginex, GNNDrive, MariusGNN,
+//! OUTRE, DistDGL) are reimplemented on the same storage substrate in
+//! [`baselines`] so that every figure of the paper can be regenerated
+//! (`rust/benches/fig*.rs`).
+
+pub mod baselines;
+pub mod config;
+pub mod coordinator;
+pub mod graph;
+pub mod memory;
+pub mod metrics;
+pub mod op;
+pub mod runtime;
+pub mod storage;
+pub mod util;
+
+pub use config::{AgnesConfig, DatasetConfig, DeviceConfig, TrainConfig};
+pub use coordinator::AgnesRunner;
+pub use graph::CsrGraph;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

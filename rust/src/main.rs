@@ -1,0 +1,249 @@
+//! AGNES command-line launcher.
+//!
+//! ```text
+//! agnes <command> [flags]
+//!   gen-data   build the on-disk stores for the configured dataset
+//!   train      run storage-based GNN training (AGNES or a baseline)
+//!   prep       data-preparation-only run (no compute) — I/O report
+//!   report     print Table 2 (dataset statistics at the configured scale)
+//!
+//! flags (all optional):
+//!   --config <file>        flat TOML config; CLI flags override it
+//!   --dataset <name>       ig | tw | pa | fr | yh | tiny
+//!   --scale <f>            dataset scale factor
+//!   --feature-dim <n>      |F|
+//!   --block-size <bytes>   storage block size
+//!   --hyperbatch <n>       minibatches per hyperbatch
+//!   --minibatch <n>        targets per minibatch
+//!   --threads <n>          CPU I/O threads
+//!   --ssds <n>             RAID0 array size
+//!   --model <m>            gcn | sage | gat
+//!   --system <s>           agnes | agnes-no | ginex | gnndrive | marius | outre
+//!   --epochs <n>
+//!   --artifacts <dir>      AOT artifact directory (default: artifacts)
+//!   --modeled-compute      modeled compute backend instead of XLA
+//! ```
+
+use agnes::baselines::{GinexRunner, GnnDriveRunner, MariusRunner, OutreRunner, TrainingSystem};
+use agnes::config::{AgnesConfig, GnnModel};
+use agnes::coordinator::{prepare_dataset, ModeledCompute, NullCompute};
+use agnes::graph::datasets::DatasetSpec;
+use agnes::metrics::{fmt_bytes, fmt_ns};
+use agnes::runtime::{ArtifactPaths, XlaCompute};
+use agnes::AgnesRunner;
+use std::collections::HashMap;
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum System {
+    Agnes,
+    AgnesNo,
+    Ginex,
+    Gnndrive,
+    Marius,
+    Outre,
+}
+
+impl std::str::FromStr for System {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "agnes" => Ok(System::Agnes),
+            "agnes-no" => Ok(System::AgnesNo),
+            "ginex" => Ok(System::Ginex),
+            "gnndrive" => Ok(System::Gnndrive),
+            "marius" | "mariusgnn" => Ok(System::Marius),
+            "outre" => Ok(System::Outre),
+            other => Err(format!("unknown system {other:?}")),
+        }
+    }
+}
+
+/// Minimal `--flag value` / `--flag` parser.
+struct Args {
+    command: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> anyhow::Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut flags = HashMap::new();
+        let mut pending: Option<String> = None;
+        for a in it {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some(p) = pending.take() {
+                    flags.insert(p, "true".to_string()); // boolean flag
+                }
+                pending = Some(name.to_string());
+            } else if let Some(p) = pending.take() {
+                flags.insert(p, a);
+            } else {
+                anyhow::bail!("unexpected positional argument {a:?}");
+            }
+        }
+        if let Some(p) = pending.take() {
+            flags.insert(p, "true".to_string());
+        }
+        Ok(Args { command, flags })
+    }
+
+    fn get<T: std::str::FromStr>(&self, name: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.flags.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}")),
+        }
+    }
+
+    fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
+    let mut c = match args.flags.get("config") {
+        Some(p) => AgnesConfig::from_toml_file(p)?,
+        None => AgnesConfig::default(),
+    };
+    if let Some(d) = args.flags.get("dataset") {
+        c.dataset.name = d.clone();
+    }
+    if let Some(s) = args.get::<f64>("scale")? {
+        c.dataset.scale = s;
+    }
+    if let Some(f) = args.get::<usize>("feature-dim")? {
+        c.dataset.feature_dim = f;
+    }
+    if let Some(b) = args.get::<usize>("block-size")? {
+        c.io.block_size = b;
+    }
+    if let Some(h) = args.get::<usize>("hyperbatch")? {
+        c.train.hyperbatch_size = h;
+    }
+    if let Some(m) = args.get::<usize>("minibatch")? {
+        c.train.minibatch_size = m;
+    }
+    if let Some(t) = args.get::<usize>("threads")? {
+        c.io.num_threads = t;
+    }
+    if let Some(n) = args.get::<u32>("ssds")? {
+        c.device.num_ssds = n;
+    }
+    if let Some(m) = args.flags.get("model") {
+        c.train.model = m.parse::<GnnModel>().map_err(|e| anyhow::anyhow!(e))?;
+    }
+    Ok(c)
+}
+
+fn run_system(
+    system: System,
+    config: AgnesConfig,
+    epochs: usize,
+    compute: &mut dyn agnes::coordinator::ComputeBackend,
+) -> anyhow::Result<()> {
+    let mut sys: Box<dyn TrainingSystem> = match system {
+        System::Agnes => Box::new(AgnesRunner::open(config)?),
+        System::AgnesNo => {
+            let mut c = config;
+            c.train.hyperbatch_size = 1;
+            Box::new(AgnesRunner::open(c)?)
+        }
+        System::Ginex => Box::new(GinexRunner::open(config)?),
+        System::Gnndrive => Box::new(GnnDriveRunner::open(config)?),
+        System::Marius => Box::new(MariusRunner::open(config)?),
+        System::Outre => Box::new(OutreRunner::open(config)?),
+    };
+    println!("system={}", sys.system_name());
+    for epoch in 0..epochs {
+        let r = sys.run_training_epoch(epoch, compute)?;
+        let m = &r.metrics;
+        println!(
+            "epoch {epoch}: total={} prep={:.1}% sample_io={} gather_io={} \
+             loss={:.4} acc={:.3} | io: {} reqs, {}, achieved_bw={}/s",
+            fmt_ns(m.total_ns()),
+            m.prep_fraction() * 100.0,
+            fmt_ns(m.sample_io_ns),
+            fmt_ns(m.gather_io_ns),
+            r.mean_loss,
+            r.accuracy,
+            m.device.num_requests,
+            fmt_bytes(m.device.total_bytes),
+            fmt_bytes(m.device.achieved_bandwidth() as u64),
+        );
+    }
+    Ok(())
+}
+
+const HELP: &str = "agnes — storage-based GNN training (AGNES, KDD'26)\n\
+commands: gen-data | train | prep | report | help\n\
+see `rust/src/main.rs` header or README for flags";
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse()?;
+    let config = build_config(&args)?;
+    match args.command.as_str() {
+        "gen-data" => {
+            let d = prepare_dataset(&config)?;
+            println!(
+                "dataset {} ready: {} nodes, {} edges, dir={:?}",
+                d.spec.name, d.spec.num_nodes, d.spec.num_edges, d.paths.dir
+            );
+        }
+        "report" => {
+            println!("Table 2 (scaled by {}):", config.dataset.scale);
+            println!(
+                "{:<6} {:>12} {:>14} {:>12} {:>12}",
+                "name", "#nodes", "#edges", "|F|=128", "|F|=256"
+            );
+            for s in DatasetSpec::all(config.dataset.scale, 128) {
+                let s256 = DatasetSpec { feature_dim: 256, ..s.clone() };
+                println!(
+                    "{:<6} {:>12} {:>14} {:>12} {:>12}",
+                    s.name,
+                    s.num_nodes,
+                    s.num_edges,
+                    fmt_bytes(s.feature_bytes() + s.topology_bytes()),
+                    fmt_bytes(s256.feature_bytes() + s256.topology_bytes()),
+                );
+            }
+        }
+        "prep" => {
+            let system = args.get::<System>("system")?.unwrap_or(System::Agnes);
+            run_system(system, config, 1, &mut NullCompute)?;
+        }
+        "train" => {
+            let system = args.get::<System>("system")?.unwrap_or(System::Agnes);
+            let epochs = args.get::<usize>("epochs")?.unwrap_or(1);
+            let artifacts =
+                args.flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".to_string());
+            if args.has("modeled-compute") {
+                let mut compute = ModeledCompute::new(5_000_000);
+                run_system(system, config, epochs, &mut compute)?;
+            } else {
+                let name = config.train.model.name().to_string();
+                let paths = ArtifactPaths::in_dir(&artifacts, &name);
+                anyhow::ensure!(
+                    paths.exist(),
+                    "artifacts for model {name:?} not found in {artifacts:?}; run `make artifacts` \
+                     or pass --modeled-compute"
+                );
+                let mut compute = XlaCompute::load(&artifacts, &name)?;
+                run_system(system, config, epochs, &mut compute)?;
+                println!(
+                    "compute: {} steps, transfer={} execute={}",
+                    compute.steps,
+                    fmt_ns(compute.transfer_ns),
+                    fmt_ns(compute.execute_ns)
+                );
+            }
+        }
+        _ => println!("{HELP}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,254 @@
+//! Block buffer with LRU-and-pinning replacement.
+//!
+//! The paper (§3.4 (1)): "AGNES uses dynamic caching based on an LRU
+//! mechanism … to pin graph blocks already in the graph buffer (e.g., the
+//! blocks processed in previous iterations) to prevent them from being
+//! replaced until they are completely processed in the current iteration.
+//! AGNES unpins these blocks after they are completely processed."
+//!
+//! The pool is generic over the cached value (decoded [`GraphBlock`]s for
+//! the graph buffer, raw bytes for the feature buffer) and doubles as the
+//! buffer index table `T_buf` — `get` *is* the table lookup.
+
+use crate::storage::BlockId;
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Hit/miss/eviction counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// `insert` calls rejected because every frame was pinned.
+    pub pin_stalls: u64,
+}
+
+impl PoolStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Frame<V> {
+    value: Arc<V>,
+    pin_count: u32,
+    /// LRU timestamp (monotone counter).
+    last_used: u64,
+}
+
+/// An LRU block buffer with per-block pin counts. Capacity is in blocks
+/// (the byte budget divided by the block size — both layers' buffers are
+/// sized that way in the paper's memory settings).
+pub struct BufferPool<V> {
+    capacity: usize,
+    frames: HashMap<BlockId, Frame<V>>,
+    clock: u64,
+    stats: PoolStats,
+}
+
+impl<V> BufferPool<V> {
+    pub fn new(capacity: usize) -> BufferPool<V> {
+        assert!(capacity >= 1, "buffer needs at least one frame");
+        BufferPool { capacity, frames: HashMap::with_capacity(capacity), clock: 0, stats: PoolStats::default() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.frames.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.frames.is_empty()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.stats
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = PoolStats::default();
+    }
+
+    /// Buffer-index-table lookup: returns the cached block and bumps LRU.
+    /// Counts a hit or miss.
+    pub fn get(&mut self, b: BlockId) -> Option<Arc<V>> {
+        self.clock += 1;
+        match self.frames.get_mut(&b) {
+            Some(f) => {
+                f.last_used = self.clock;
+                self.stats.hits += 1;
+                Some(f.value.clone())
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without touching LRU order or stats.
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.frames.contains_key(&b)
+    }
+
+    /// Fetch without counting hit/miss stats (bumps LRU). Used for the
+    /// second lookup of a block within one sweep run so hit ratios reflect
+    /// block-level accesses, not implementation double-checks.
+    pub fn peek(&mut self, b: BlockId) -> Option<Arc<V>> {
+        self.clock += 1;
+        self.frames.get_mut(&b).map(|f| {
+            f.last_used = self.clock;
+            f.value.clone()
+        })
+    }
+
+    /// Insert a block, evicting the LRU *unpinned* frame if full. Returns
+    /// the evicted block id, if any. If every frame is pinned the pool
+    /// grows transiently (stall counted) — the coordinator sizes hyperbatch
+    /// pins below capacity so this is exceptional, not the steady state.
+    pub fn insert(&mut self, b: BlockId, value: Arc<V>) -> Option<BlockId> {
+        self.clock += 1;
+        if let Some(f) = self.frames.get_mut(&b) {
+            f.value = value;
+            f.last_used = self.clock;
+            return None;
+        }
+        let mut evicted = None;
+        if self.frames.len() >= self.capacity {
+            let victim = self
+                .frames
+                .iter()
+                .filter(|(_, f)| f.pin_count == 0)
+                .min_by_key(|(_, f)| f.last_used)
+                .map(|(&id, _)| id);
+            match victim {
+                Some(id) => {
+                    self.frames.remove(&id);
+                    self.stats.evictions += 1;
+                    evicted = Some(id);
+                }
+                None => {
+                    self.stats.pin_stalls += 1;
+                }
+            }
+        }
+        self.frames.insert(b, Frame { value, pin_count: 0, last_used: self.clock });
+        evicted
+    }
+
+    /// Pin a resident block (no-op if absent). Pins nest.
+    pub fn pin(&mut self, b: BlockId) {
+        if let Some(f) = self.frames.get_mut(&b) {
+            f.pin_count += 1;
+        }
+    }
+
+    /// Unpin a resident block (saturating).
+    pub fn unpin(&mut self, b: BlockId) {
+        if let Some(f) = self.frames.get_mut(&b) {
+            f.pin_count = f.pin_count.saturating_sub(1);
+        }
+    }
+
+    /// Number of currently pinned frames.
+    pub fn pinned(&self) -> usize {
+        self.frames.values().filter(|f| f.pin_count > 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(cap: usize) -> BufferPool<u32> {
+        BufferPool::new(cap)
+    }
+
+    #[test]
+    fn hit_miss_accounting() {
+        let mut p = pool(2);
+        assert!(p.get(BlockId(1)).is_none());
+        p.insert(BlockId(1), Arc::new(10));
+        assert_eq!(*p.get(BlockId(1)).unwrap(), 10);
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        assert_eq!(s.hit_ratio(), 0.5);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut p = pool(2);
+        p.insert(BlockId(1), Arc::new(1));
+        p.insert(BlockId(2), Arc::new(2));
+        p.get(BlockId(1)); // 2 is now LRU
+        let evicted = p.insert(BlockId(3), Arc::new(3));
+        assert_eq!(evicted, Some(BlockId(2)));
+        assert!(p.contains(BlockId(1)) && p.contains(BlockId(3)));
+    }
+
+    #[test]
+    fn pinned_blocks_survive_eviction() {
+        let mut p = pool(2);
+        p.insert(BlockId(1), Arc::new(1));
+        p.insert(BlockId(2), Arc::new(2));
+        p.pin(BlockId(1));
+        p.get(BlockId(1)); // 1 is MRU *and* pinned; 2 is victim
+        p.insert(BlockId(3), Arc::new(3));
+        // now 3 is MRU, 1 pinned; inserting 4 must evict 3, not 1
+        p.get(BlockId(1));
+        let evicted = p.insert(BlockId(4), Arc::new(4));
+        assert_eq!(evicted, Some(BlockId(3)));
+        assert!(p.contains(BlockId(1)));
+    }
+
+    #[test]
+    fn all_pinned_stalls_but_grows() {
+        let mut p = pool(1);
+        p.insert(BlockId(1), Arc::new(1));
+        p.pin(BlockId(1));
+        let evicted = p.insert(BlockId(2), Arc::new(2));
+        assert_eq!(evicted, None);
+        assert_eq!(p.stats().pin_stalls, 1);
+        assert_eq!(p.len(), 2); // transient overflow
+    }
+
+    #[test]
+    fn unpin_restores_evictability() {
+        let mut p = pool(1);
+        p.insert(BlockId(1), Arc::new(1));
+        p.pin(BlockId(1));
+        p.unpin(BlockId(1));
+        let evicted = p.insert(BlockId(2), Arc::new(2));
+        assert_eq!(evicted, Some(BlockId(1)));
+    }
+
+    #[test]
+    fn pins_nest() {
+        let mut p = pool(1);
+        p.insert(BlockId(1), Arc::new(1));
+        p.pin(BlockId(1));
+        p.pin(BlockId(1));
+        p.unpin(BlockId(1));
+        assert_eq!(p.pinned(), 1); // still pinned once
+        p.unpin(BlockId(1));
+        assert_eq!(p.pinned(), 0);
+    }
+
+    #[test]
+    fn reinsert_updates_value() {
+        let mut p = pool(2);
+        p.insert(BlockId(1), Arc::new(1));
+        p.insert(BlockId(1), Arc::new(99));
+        assert_eq!(*p.get(BlockId(1)).unwrap(), 99);
+        assert_eq!(p.len(), 1);
+    }
+}

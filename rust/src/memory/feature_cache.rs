@@ -1,0 +1,279 @@
+//! Feature cache `C_f` with access-count admission (paper §3.4 (2)).
+//!
+//! "AGNES counts the number of accesses to each feature vector and
+//! maintains only feature vectors whose access counts exceed a certain
+//! threshold in a feature cache in main memory. The others are written back
+//! to storage at each minibatch and reloaded when they are required."
+//!
+//! The cache index table `T_ch^f` is the internal hash map. Admission:
+//! a vector becomes cache-resident once its lifetime access count passes
+//! `threshold`; capacity pressure evicts the *coldest* resident vector
+//! (lowest count, then least recently used), tracked in an ordered
+//! eviction index so admission and eviction are O(log n) — the original
+//! O(capacity) eviction scan was the top bottleneck of the gather hot path
+//! (EXPERIMENTS.md §Perf).
+
+use std::collections::{BTreeSet, HashMap};
+
+/// Cache statistics.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct FeatureCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub admissions: u64,
+    pub evictions: u64,
+}
+
+impl FeatureCacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+struct Entry {
+    feature: Vec<f32>,
+    /// This entry's current key in the eviction index.
+    key: (u32, u64),
+}
+
+/// Access-count-threshold feature cache.
+pub struct FeatureCache {
+    /// Max resident vectors (memory budget / vector bytes).
+    capacity: usize,
+    /// Admission threshold on lifetime access count.
+    threshold: u32,
+    counts: HashMap<u32, u32>,
+    resident: HashMap<u32, Entry>,
+    /// Eviction order: (count, last_used, node) ascending — the first
+    /// element is always the coldest resident.
+    evict_index: BTreeSet<(u32, u64, u32)>,
+    clock: u64,
+    stats: FeatureCacheStats,
+}
+
+impl FeatureCache {
+    pub fn new(capacity: usize, threshold: u32) -> FeatureCache {
+        FeatureCache {
+            capacity,
+            threshold,
+            counts: HashMap::new(),
+            resident: HashMap::new(),
+            evict_index: BTreeSet::new(),
+            clock: 0,
+            stats: FeatureCacheStats::default(),
+        }
+    }
+
+    /// Budget in vectors.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.resident.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.resident.is_empty()
+    }
+
+    pub fn stats(&self) -> FeatureCacheStats {
+        self.stats
+    }
+
+    /// Lifetime access count of `v`.
+    pub fn count(&self, v: u32) -> u32 {
+        self.counts.get(&v).copied().unwrap_or(0)
+    }
+
+    /// Look up node `v`'s vector, recording the access. Returns `None` on
+    /// miss (caller fetches from the feature store and calls [`Self::fill`]).
+    pub fn get(&mut self, v: u32) -> Option<&[f32]> {
+        self.clock += 1;
+        let count = {
+            let c = self.counts.entry(v).or_insert(0);
+            *c += 1;
+            *c
+        };
+        if let Some(e) = self.resident.get_mut(&v) {
+            self.stats.hits += 1;
+            // lazy re-keying: the eviction index only needs the *order* of
+            // coldness, so refresh an entry's key when its count has moved
+            // meaningfully (+8) — two BTree ops per hit was ~30% of gather
+            // (EXPERIMENTS.md §Perf)
+            if count >= e.key.0 + 8 {
+                let (old_count, old_used) = e.key;
+                self.evict_index.remove(&(old_count, old_used, v));
+                e.key = (count, self.clock);
+                self.evict_index.insert((count, self.clock, v));
+            }
+            Some(&e.feature)
+        } else {
+            self.stats.misses += 1;
+            None
+        }
+    }
+
+    /// Would [`Self::fill`] admit `v` right now? Lets the gather hot path
+    /// skip materializing a vector that would be rejected anyway.
+    pub fn wants(&self, v: u32) -> bool {
+        if self.capacity == 0 || self.resident.contains_key(&v) {
+            return false;
+        }
+        let count = self.count(v);
+        if count < self.threshold {
+            return false;
+        }
+        if self.resident.len() >= self.capacity {
+            match self.evict_index.iter().next() {
+                Some(&(victim_count, _, _)) => victim_count < count,
+                None => false,
+            }
+        } else {
+            true
+        }
+    }
+
+    /// Offer a fetched vector for admission. Admits only when the lifetime
+    /// count exceeds the threshold ("infrequently accessed feature vectors
+    /// are written back to storage at each minibatch") and, at capacity,
+    /// only over a strictly colder incumbent (no thrash).
+    pub fn fill(&mut self, v: u32, feature: Vec<f32>) {
+        if !self.wants(v) {
+            return;
+        }
+        if self.resident.len() >= self.capacity {
+            if let Some(&(c, u, victim)) = self.evict_index.iter().next() {
+                self.evict_index.remove(&(c, u, victim));
+                self.resident.remove(&victim);
+                self.stats.evictions += 1;
+            }
+        }
+        self.clock += 1;
+        let key = (self.count(v), self.clock);
+        self.evict_index.insert((key.0, key.1, v));
+        self.resident.insert(v, Entry { feature, key });
+        self.stats.admissions += 1;
+    }
+
+    /// Drop all residents but keep counts (epoch boundary).
+    pub fn clear_resident(&mut self) {
+        self.resident.clear();
+        self.evict_index.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn f(v: u32) -> Vec<f32> {
+        vec![v as f32; 4]
+    }
+
+    #[test]
+    fn below_threshold_not_admitted() {
+        let mut c = FeatureCache::new(10, 3);
+        assert!(c.get(1).is_none());
+        c.fill(1, f(1)); // count 1 < 3
+        assert!(c.get(1).is_none());
+        c.fill(1, f(1)); // count 2 < 3
+        assert!(c.get(1).is_none()); // count now 3
+        c.fill(1, f(1)); // admitted
+        assert_eq!(c.get(1).unwrap(), &f(1)[..]);
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn hot_node_evicts_cold_when_full() {
+        let mut c = FeatureCache::new(1, 1);
+        c.get(1);
+        c.fill(1, f(1));
+        assert!(c.get(1).is_some()); // count(1) = 2 now
+        // node 2 becomes hotter
+        for _ in 0..5 {
+            c.get(2);
+        }
+        assert!(c.wants(2));
+        c.fill(2, f(2));
+        assert!(c.get(2).is_some());
+        assert!(c.get(1).is_none());
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn cold_node_does_not_thrash_hot_incumbent() {
+        let mut c = FeatureCache::new(1, 1);
+        for _ in 0..10 {
+            c.get(1);
+        }
+        c.fill(1, f(1));
+        c.get(2);
+        c.get(2);
+        assert!(!c.wants(2)); // count(2)=2 < count(1)=10
+        c.fill(2, f(2));
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_none());
+    }
+
+    #[test]
+    fn zero_capacity_never_admits() {
+        let mut c = FeatureCache::new(0, 0);
+        c.get(1);
+        assert!(!c.wants(1));
+        c.fill(1, f(1));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn clear_resident_keeps_counts() {
+        let mut c = FeatureCache::new(4, 2);
+        for _ in 0..3 {
+            c.get(7);
+        }
+        c.fill(7, f(7));
+        assert!(c.get(7).is_some());
+        c.clear_resident();
+        assert!(c.get(7).is_none());
+        assert!(c.count(7) >= 3); // counts survive
+        c.fill(7, f(7));
+        assert!(c.get(7).is_some()); // immediate re-admission (already hot)
+    }
+
+    #[test]
+    fn hit_ratio_math() {
+        let mut c = FeatureCache::new(4, 0);
+        c.get(1);
+        c.fill(1, f(1));
+        c.get(1);
+        c.get(1);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+        assert!((s.hit_ratio() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eviction_index_consistent_under_churn() {
+        // stress: random access pattern must keep index and map in sync
+        let mut c = FeatureCache::new(8, 1);
+        let mut rng = crate::util::Rng::seed_from_u64(1);
+        for _ in 0..5000 {
+            let v = rng.gen_range(64) as u32;
+            if c.get(v).is_none() {
+                c.fill(v, f(v));
+            }
+        }
+        assert!(c.len() <= 8);
+        assert_eq!(c.evict_index.len(), c.resident.len());
+        // every resident has a matching index entry
+        for (&v, e) in &c.resident {
+            assert!(c.evict_index.contains(&(e.key.0, e.key.1, v)), "node {v} key desync");
+        }
+    }
+}

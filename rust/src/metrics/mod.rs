@@ -1,0 +1,194 @@
+//! Metrics: stage timers (data preparation vs computation — the paper's
+//! Figure 2(a) breakdown), I/O accounting snapshots, and report formatting
+//! shared by the benches.
+
+use crate::storage::device::DeviceStats;
+use std::time::{Duration, Instant};
+
+/// The stages of storage-based GNN training (Figure 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// (i) traverse + sample neighboring nodes.
+    Sample,
+    /// (ii) gather feature vectors.
+    Gather,
+    /// (iii) transfer to the accelerator.
+    Transfer,
+    /// (iv)+(v) forward/backward propagation.
+    Compute,
+}
+
+/// Per-run metrics. Times are split into *wall* nanoseconds (CPU work
+/// actually done here) and *simulated device* nanoseconds (the SSD model's
+/// clock) — total time = wall work + simulated storage time, which is how
+/// every figure reports "execution time".
+#[derive(Debug, Default, Clone)]
+pub struct RunMetrics {
+    pub sample_wall_ns: u64,
+    pub gather_wall_ns: u64,
+    pub transfer_wall_ns: u64,
+    pub compute_wall_ns: u64,
+    /// Simulated storage nanoseconds attributed to sampling.
+    pub sample_io_ns: u64,
+    /// Simulated storage nanoseconds attributed to gathering.
+    pub gather_io_ns: u64,
+    /// Device snapshot at end of run.
+    pub device: DeviceStats,
+    /// Graph-buffer cache hit ratio.
+    pub graph_hit_ratio: f64,
+    /// Feature-cache hit ratio.
+    pub feature_hit_ratio: f64,
+    pub minibatches: u64,
+    pub sampled_nodes: u64,
+    pub gathered_features: u64,
+}
+
+impl RunMetrics {
+    /// Data-preparation nanoseconds (sample + gather + transfer + storage).
+    pub fn prep_ns(&self) -> u64 {
+        self.sample_wall_ns
+            + self.gather_wall_ns
+            + self.transfer_wall_ns
+            + self.sample_io_ns
+            + self.gather_io_ns
+    }
+
+    /// Total execution nanoseconds.
+    pub fn total_ns(&self) -> u64 {
+        self.prep_ns() + self.compute_wall_ns
+    }
+
+    /// Fraction of the run spent in data preparation (Figure 2(a)).
+    pub fn prep_fraction(&self) -> f64 {
+        let t = self.total_ns();
+        if t == 0 {
+            0.0
+        } else {
+            self.prep_ns() as f64 / t as f64
+        }
+    }
+
+    /// Seconds helper for reports.
+    pub fn total_secs(&self) -> f64 {
+        self.total_ns() as f64 * 1e-9
+    }
+
+    pub fn merge(&mut self, o: &RunMetrics) {
+        self.sample_wall_ns += o.sample_wall_ns;
+        self.gather_wall_ns += o.gather_wall_ns;
+        self.transfer_wall_ns += o.transfer_wall_ns;
+        self.compute_wall_ns += o.compute_wall_ns;
+        self.sample_io_ns += o.sample_io_ns;
+        self.gather_io_ns += o.gather_io_ns;
+        self.device.merge(&o.device);
+        self.minibatches += o.minibatches;
+        self.sampled_nodes += o.sampled_nodes;
+        self.gathered_features += o.gathered_features;
+        // ratios: keep the last run's (benches report per-config runs)
+        self.graph_hit_ratio = o.graph_hit_ratio;
+        self.feature_hit_ratio = o.feature_hit_ratio;
+    }
+}
+
+/// RAII wall-clock stage timer accumulating into a counter.
+pub struct StageTimer<'a> {
+    start: Instant,
+    sink: &'a mut u64,
+}
+
+impl<'a> StageTimer<'a> {
+    pub fn new(sink: &'a mut u64) -> StageTimer<'a> {
+        StageTimer { start: Instant::now(), sink }
+    }
+}
+
+impl Drop for StageTimer<'_> {
+    fn drop(&mut self) {
+        *self.sink += self.start.elapsed().as_nanos() as u64;
+    }
+}
+
+/// Format nanoseconds human-readably for bench tables.
+pub fn fmt_ns(ns: u64) -> String {
+    let d = Duration::from_nanos(ns);
+    if d.as_secs() >= 100 {
+        format!("{:.0}s", d.as_secs_f64())
+    } else if d.as_secs_f64() >= 1.0 {
+        format!("{:.2}s", d.as_secs_f64())
+    } else if d.as_millis() >= 1 {
+        format!("{:.1}ms", d.as_secs_f64() * 1e3)
+    } else {
+        format!("{}µs", d.as_micros())
+    }
+}
+
+/// Format bytes human-readably.
+pub fn fmt_bytes(b: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b}B")
+    } else {
+        format!("{v:.2}{}", UNITS[u])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prep_fraction_math() {
+        let m = RunMetrics {
+            sample_wall_ns: 10,
+            gather_wall_ns: 20,
+            transfer_wall_ns: 5,
+            compute_wall_ns: 15,
+            sample_io_ns: 30,
+            gather_io_ns: 20,
+            ..Default::default()
+        };
+        assert_eq!(m.prep_ns(), 85);
+        assert_eq!(m.total_ns(), 100);
+        assert!((m.prep_fraction() - 0.85).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_timer_accumulates() {
+        let mut sink = 0u64;
+        {
+            let _t = StageTimer::new(&mut sink);
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        assert!(sink >= 1_000_000, "sink {sink}");
+        let before = sink;
+        {
+            let _t = StageTimer::new(&mut sink);
+        }
+        assert!(sink >= before);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = RunMetrics { sample_wall_ns: 1, minibatches: 2, ..Default::default() };
+        let b = RunMetrics { sample_wall_ns: 3, minibatches: 4, graph_hit_ratio: 0.5, ..Default::default() };
+        a.merge(&b);
+        assert_eq!(a.sample_wall_ns, 4);
+        assert_eq!(a.minibatches, 6);
+        assert_eq!(a.graph_hit_ratio, 0.5);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(1536), "1.50KB");
+        assert_eq!(fmt_ns(1_500), "1µs");
+        assert_eq!(fmt_ns(2_000_000), "2.0ms");
+        assert_eq!(fmt_ns(1_500_000_000), "1.50s");
+    }
+}

@@ -1,0 +1,83 @@
+//! Minibatch / hyperbatch construction.
+//!
+//! Targets are the labeled training nodes; each epoch shuffles them,
+//! splits them into minibatches of `minibatch_size` (paper: 1000), and
+//! groups `hyperbatch_size` consecutive minibatches (paper: 1024) into one
+//! hyperbatch processed per block-sweep.
+
+use crate::util::rng::Rng;
+
+/// Pick the epoch's target nodes: a deterministic `fraction` of all nodes,
+/// shuffled by `seed` (stands in for the labeled train split).
+pub fn select_targets(num_nodes: usize, fraction: f64, seed: u64) -> Vec<u32> {
+    let k = ((num_nodes as f64 * fraction).round() as usize).clamp(1, num_nodes);
+    let mut all: Vec<u32> = (0..num_nodes as u32).collect();
+    Rng::seed_from_u64(seed).shuffle(&mut all);
+    all.truncate(k);
+    all
+}
+
+/// Split targets into minibatches (last one may be short).
+pub fn make_minibatches(targets: &[u32], minibatch_size: usize) -> Vec<Vec<u32>> {
+    assert!(minibatch_size >= 1);
+    targets.chunks(minibatch_size).map(|c| c.to_vec()).collect()
+}
+
+/// Group minibatches into hyperbatches of `hyperbatch_size` minibatches.
+/// `hyperbatch_size == 1` degenerates to per-minibatch processing
+/// (the AGNES-No ablation).
+pub fn make_hyperbatches(minibatches: Vec<Vec<u32>>, hyperbatch_size: usize) -> Vec<Vec<Vec<u32>>> {
+    assert!(hyperbatch_size >= 1);
+    let mut out = Vec::new();
+    let mut it = minibatches.into_iter().peekable();
+    while it.peek().is_some() {
+        out.push(it.by_ref().take(hyperbatch_size).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn targets_deterministic_and_sized() {
+        let a = select_targets(1000, 0.1, 5);
+        let b = select_targets(1000, 0.1, 5);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 100);
+        let c = select_targets(1000, 0.1, 6);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn targets_clamped() {
+        assert_eq!(select_targets(10, 0.0, 1).len(), 1);
+        assert_eq!(select_targets(10, 5.0, 1).len(), 10);
+    }
+
+    #[test]
+    fn minibatch_split() {
+        let t: Vec<u32> = (0..10).collect();
+        let mbs = make_minibatches(&t, 4);
+        assert_eq!(mbs.len(), 3);
+        assert_eq!(mbs[2], vec![8, 9]);
+    }
+
+    #[test]
+    fn hyperbatch_grouping() {
+        let mbs: Vec<Vec<u32>> = (0..7).map(|i| vec![i]).collect();
+        let hbs = make_hyperbatches(mbs, 3);
+        assert_eq!(hbs.len(), 3);
+        assert_eq!(hbs[0].len(), 3);
+        assert_eq!(hbs[2].len(), 1);
+    }
+
+    #[test]
+    fn hyperbatch_size_one_is_per_minibatch() {
+        let mbs: Vec<Vec<u32>> = (0..4).map(|i| vec![i]).collect();
+        let hbs = make_hyperbatches(mbs.clone(), 1);
+        assert_eq!(hbs.len(), 4);
+        assert_eq!(hbs[0][0], mbs[0]);
+    }
+}

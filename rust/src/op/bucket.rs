@@ -1,0 +1,152 @@
+//! Bucket matrix `Bck` (paper §3.4 (3)).
+//!
+//! "`Bck` has rows and columns corresponding to the number of blocks and
+//! minibatches in a hyperbatch … each cell `Bck_{i,j}` includes the nodes
+//! to be processed in the corresponding minibatch within a specific block.
+//! AGNES identifies the nodes to be processed efficiently by scanning a row
+//! of the matrix, `Bck_{i,:}`."
+//!
+//! The matrix is sparse in practice (a minibatch touches few blocks), so a
+//! row is stored as a list of non-empty `(minibatch, cells)` entries inside
+//! a `BTreeMap` keyed by block id — iterating the map visits blocks in
+//! **ascending** order, which is what makes the storage access pattern
+//! sequential. Each cell entry is `(slot, node)`: `slot` is the node's
+//! position in the minibatch's (layer) node array, so sampling/gathering
+//! can write results to their fixed positions while sweeping in block
+//! order.
+
+use crate::storage::block::FeatureBlockLayout;
+use crate::storage::object_index::ObjectIndexTable;
+use crate::storage::BlockId;
+use std::collections::BTreeMap;
+
+/// One `(slot, node)` entry of a bucket cell.
+pub type Entry = (u32, u32);
+
+/// Sparse bucket matrix: block id → non-empty cells `(minibatch, entries)`.
+#[derive(Debug, Default, Clone)]
+pub struct Bucket {
+    pub rows: BTreeMap<BlockId, Vec<(u32, Vec<Entry>)>>,
+}
+
+impl Bucket {
+    /// Build the graph-side bucket: assign each frontier node of each
+    /// minibatch to the (first) block holding its object (hub
+    /// continuations are resolved during sampling). Nodes outside the index
+    /// are skipped.
+    pub fn for_graph(frontiers: &[Vec<u32>], index: &ObjectIndexTable) -> Bucket {
+        let mut b = Bucket::default();
+        for (mb, nodes) in frontiers.iter().enumerate() {
+            for (slot, &v) in nodes.iter().enumerate() {
+                if let Some(block) = index.block_of(v) {
+                    b.push(block, mb as u32, slot as u32, v);
+                }
+            }
+        }
+        b
+    }
+
+    /// Build the feature-side bucket from each minibatch's required node
+    /// list (feature blocks are pure arithmetic — no index table needed).
+    /// `skip(mb, slot, node)` filters entries already served by the feature
+    /// cache.
+    pub fn for_features(
+        node_sets: &[Vec<u32>],
+        layout: &FeatureBlockLayout,
+        mut skip: impl FnMut(u32, u32, u32) -> bool,
+    ) -> Bucket {
+        let mut b = Bucket::default();
+        for (mb, nodes) in node_sets.iter().enumerate() {
+            for (slot, &v) in nodes.iter().enumerate() {
+                if !skip(mb as u32, slot as u32, v) {
+                    b.push(BlockId(layout.block_of(v)), mb as u32, slot as u32, v);
+                }
+            }
+        }
+        b
+    }
+
+    /// Append node `v` (at `slot` of minibatch `mb`) to row `block`.
+    pub fn push(&mut self, block: BlockId, mb: u32, slot: u32, v: u32) {
+        let row = self.rows.entry(block).or_default();
+        match row.last_mut() {
+            Some((m, entries)) if *m == mb => entries.push((slot, v)),
+            _ => row.push((mb, vec![(slot, v)])),
+        }
+    }
+
+    /// Blocks touched, in ascending order.
+    pub fn blocks(&self) -> Vec<BlockId> {
+        self.rows.keys().copied().collect()
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Total node entries across all cells.
+    pub fn num_entries(&self) -> usize {
+        self.rows.values().flat_map(|r| r.iter().map(|(_, n)| n.len())).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn index() -> ObjectIndexTable {
+        ObjectIndexTable { ranges: vec![(0, 9), (10, 19), (20, 29)] }
+    }
+
+    #[test]
+    fn graph_bucket_groups_by_block_and_minibatch() {
+        let frontiers = vec![vec![1, 11, 2], vec![12, 25]];
+        let b = Bucket::for_graph(&frontiers, &index());
+        assert_eq!(b.blocks(), vec![BlockId(0), BlockId(1), BlockId(2)]);
+        // block 0 has mb0 nodes 1 (slot 0) and 2 (slot 2)
+        assert_eq!(b.rows[&BlockId(0)], vec![(0, vec![(0, 1), (2, 2)])]);
+        // block 1 has mb0 {11@1} and mb1 {12@0}
+        assert_eq!(b.rows[&BlockId(1)], vec![(0, vec![(1, 11)]), (1, vec![(0, 12)])]);
+        assert_eq!(b.num_entries(), 5);
+    }
+
+    #[test]
+    fn out_of_index_nodes_skipped() {
+        let b = Bucket::for_graph(&[vec![5, 99]], &index());
+        assert_eq!(b.num_entries(), 1);
+    }
+
+    #[test]
+    fn ascending_block_iteration() {
+        let mut b = Bucket::default();
+        b.push(BlockId(7), 0, 0, 1);
+        b.push(BlockId(2), 0, 1, 2);
+        b.push(BlockId(5), 1, 0, 3);
+        assert_eq!(b.blocks(), vec![BlockId(2), BlockId(5), BlockId(7)]);
+    }
+
+    #[test]
+    fn feature_bucket_arithmetic_and_skip() {
+        let layout = FeatureBlockLayout { block_size: 1024, feature_dim: 32 }; // 8 per block
+        let sets = vec![vec![0, 7, 8, 16]];
+        let b = Bucket::for_features(&sets, &layout, |_, _, _| false);
+        assert_eq!(b.blocks(), vec![BlockId(0), BlockId(1), BlockId(2)]);
+        assert_eq!(b.rows[&BlockId(0)], vec![(0, vec![(0, 0), (1, 7)])]);
+        // skip everything in block 0
+        let b = Bucket::for_features(&sets, &layout, |_, _, v| v < 8);
+        assert_eq!(b.blocks(), vec![BlockId(1), BlockId(2)]);
+    }
+
+    #[test]
+    fn duplicate_nodes_kept_per_cell() {
+        // duplicates matter: the same node may appear at several slots
+        let layout = FeatureBlockLayout { block_size: 1024, feature_dim: 32 };
+        let b = Bucket::for_features(&[vec![1, 1, 1]], &layout, |_, _, _| false);
+        assert_eq!(b.num_entries(), 3);
+        assert_eq!(b.rows[&BlockId(0)], vec![(0, vec![(0, 1), (1, 1), (2, 1)])]);
+    }
+}

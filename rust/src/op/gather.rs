@@ -1,0 +1,217 @@
+//! Hyperbatch gathering process (paper §3.2 G-1..G-3, Algorithm 1 lines
+//! 13–18).
+//!
+//! For each minibatch the features of every sampled node (all tree levels,
+//! in level order) are collected into one *contiguous* f32 buffer ready to
+//! be transferred to the accelerator.
+//!
+//! Order of service:
+//! 1. feature cache `C_f` hits fill their slots directly (§3.4 (2));
+//! 2. the misses of **all** minibatches of the hyperbatch are grouped by
+//!    feature block in a [`Bucket`] and served with one ascending
+//!    block-wise sweep — each feature block is read once per hyperbatch
+//!    regardless of how many minibatches need it.
+
+use super::bucket::Bucket;
+use crate::memory::{BufferPool, FeatureCache};
+use crate::storage::store::FeatureStore;
+use crate::storage::{BlockId, IoEngine};
+use crate::Result;
+use std::sync::Arc;
+
+/// Decode little-endian f32 bytes into `dst`. On little-endian hosts the
+/// representation is identical, so this is a single memcpy — the byteswap
+/// loop was ~25% of gather time (EXPERIMENTS.md §Perf).
+#[inline]
+fn copy_f32_le(src: &[u8], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len() * 4);
+    #[cfg(target_endian = "little")]
+    unsafe {
+        std::ptr::copy_nonoverlapping(src.as_ptr(), dst.as_mut_ptr() as *mut u8, src.len());
+    }
+    #[cfg(not(target_endian = "little"))]
+    {
+        use byteorder::ByteOrder;
+        byteorder::LittleEndian::read_f32_into(src, dst);
+    }
+}
+
+/// Gather result: one contiguous feature buffer per minibatch
+/// (`features[mb].len() == node_sets[mb].len() * feature_dim`).
+#[derive(Debug, Clone)]
+pub struct GatherOutput {
+    pub features: Vec<Vec<f32>>,
+    /// Slots served by the feature cache.
+    pub cache_hits: u64,
+    /// Slots served from feature blocks.
+    pub block_fills: u64,
+}
+
+/// Gather features for a hyperbatch. `node_sets[mb]` is minibatch `mb`'s
+/// full sampled-node list (see [`super::sampler::SampleOutput::flat_nodes`]).
+pub fn gather_hyperbatch(
+    store: &FeatureStore,
+    pool: &mut BufferPool<Vec<u8>>,
+    cache: &mut FeatureCache,
+    engine: &IoEngine,
+    node_sets: &[Vec<u32>],
+) -> Result<GatherOutput> {
+    let dim = store.layout.feature_dim;
+    let mut out: Vec<Vec<f32>> =
+        node_sets.iter().map(|nodes| vec![0f32; nodes.len() * dim]).collect();
+    let mut cache_hits = 0u64;
+    let mut block_fills = 0u64;
+
+    // pass 1: feature-cache lookups (C_f / T_ch^f)
+    let bucket = Bucket::for_features(node_sets, &store.layout, |mb, slot, v| {
+        if let Some(f) = cache.get(v) {
+            let dst = &mut out[mb as usize][slot as usize * dim..(slot as usize + 1) * dim];
+            dst.copy_from_slice(f);
+            cache_hits += 1;
+            true
+        } else {
+            false
+        }
+    });
+
+    // pass 2: block sweep over the misses, bounded by buffer capacity
+    let blocks = bucket.blocks();
+    let run_len = pool.capacity().max(1);
+    for run in blocks.chunks(run_len) {
+        let mut missing: Vec<BlockId> = Vec::new();
+        for &b in run {
+            if pool.get(b).is_none() {
+                missing.push(b);
+            }
+        }
+        if !missing.is_empty() {
+            let loaded = engine.read_feature_blocks(store, &missing)?;
+            for (b, bytes) in missing.iter().zip(loaded) {
+                pool.insert(*b, Arc::new(bytes));
+            }
+        }
+        for &b in run {
+            pool.pin(b);
+        }
+        for &b in run {
+            let bytes = pool.peek(b).expect("run block resident");
+            for (mb, entries) in &bucket.rows[&b] {
+                for &(slot, v) in entries {
+                    // hot loop: decode straight into the output slice — no
+                    // per-node allocation (EXPERIMENTS.md §Perf)
+                    let off = store.layout.slot_offset(v);
+                    let dst = &mut out[*mb as usize]
+                        [slot as usize * dim..(slot as usize + 1) * dim];
+                    copy_f32_le(&bytes[off..off + 4 * dim], dst);
+                    block_fills += 1;
+                    // materialize a copy only if the cache will admit it
+                    if cache.wants(v) {
+                        cache.fill(v, dst.to_vec());
+                    }
+                }
+            }
+            pool.unpin(b);
+        }
+    }
+    Ok(GatherOutput { features: out, cache_hits, block_fills })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::synth_feature;
+    use crate::storage::block::FeatureBlockLayout;
+    use crate::storage::builder::{build_feature_store, StorePaths};
+    use crate::storage::device::{SsdModel, SsdSpec};
+
+    const DIM: usize = 16;
+    const SEED: u64 = 5;
+
+    fn setup(num_nodes: usize) -> (crate::util::TempDir, FeatureStore) {
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        let layout = FeatureBlockLayout { block_size: 1024, feature_dim: DIM }; // 16/block
+        build_feature_store(num_nodes, layout, &paths, SEED).unwrap();
+        let store =
+            FeatureStore::open(&paths, layout, num_nodes, SsdModel::new(SsdSpec::default()))
+                .unwrap();
+        (dir, store)
+    }
+
+    fn expect(v: u32) -> Vec<f32> {
+        synth_feature(v, DIM, SEED)
+    }
+
+    #[test]
+    fn gathered_features_correct_and_contiguous() {
+        let (_d, store) = setup(300);
+        let mut pool = BufferPool::new(4);
+        let mut cache = FeatureCache::new(64, 1);
+        let engine = IoEngine::new(2, 2);
+        let sets = vec![vec![5, 250, 5, 17], vec![100, 0]];
+        let out = gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        assert_eq!(out.features[0].len(), 4 * DIM);
+        for (mb, nodes) in sets.iter().enumerate() {
+            for (slot, &v) in nodes.iter().enumerate() {
+                assert_eq!(
+                    &out.features[mb][slot * DIM..(slot + 1) * DIM],
+                    &expect(v)[..],
+                    "mb {mb} slot {slot} node {v}"
+                );
+            }
+        }
+        assert_eq!(out.cache_hits + out.block_fills, 6);
+    }
+
+    #[test]
+    fn block_read_once_per_hyperbatch() {
+        let (_d, store) = setup(320);
+        let mut pool = BufferPool::new(32);
+        let mut cache = FeatureCache::new(0, u32::MAX); // cache disabled
+        let engine = IoEngine::new(1, 1);
+        // 4 minibatches all hitting the same two blocks (nodes 0..32)
+        let sets: Vec<Vec<u32>> = (0..4).map(|_| (0..32u32).collect()).collect();
+        store.ssd.reset();
+        gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        assert_eq!(store.ssd.stats().num_requests, 2, "two blocks, one read each");
+    }
+
+    #[test]
+    fn cache_serves_repeats() {
+        let (_d, store) = setup(100);
+        let mut pool = BufferPool::new(2);
+        let mut cache = FeatureCache::new(16, 1);
+        let engine = IoEngine::new(1, 1);
+        let sets = vec![vec![3, 3, 3, 3]];
+        // first access: miss (count 1), fill admitted at threshold 1? count(3)=1 >= 1 yes
+        let out1 = gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        assert_eq!(out1.block_fills, 4);
+        let out2 = gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        assert_eq!(out2.cache_hits, 4, "second hyperbatch served by C_f");
+        assert_eq!(out2.features, out1.features);
+    }
+
+    #[test]
+    fn empty_sets_ok() {
+        let (_d, store) = setup(50);
+        let mut pool = BufferPool::new(2);
+        let mut cache = FeatureCache::new(4, 1);
+        let engine = IoEngine::default();
+        let out =
+            gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &[vec![], vec![]]).unwrap();
+        assert!(out.features.iter().all(Vec::is_empty));
+    }
+
+    #[test]
+    fn tiny_pool_still_correct() {
+        let (_d, store) = setup(400);
+        let mut pool = BufferPool::new(1); // pathological budget
+        let mut cache = FeatureCache::new(0, u32::MAX);
+        let engine = IoEngine::new(2, 2);
+        let sets = vec![(0..400u32).step_by(7).collect::<Vec<_>>()];
+        let out = gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        for (slot, &v) in sets[0].iter().enumerate() {
+            assert_eq!(&out.features[0][slot * DIM..(slot + 1) * DIM], &expect(v)[..]);
+        }
+    }
+}

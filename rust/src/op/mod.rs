@@ -1,0 +1,14 @@
+//! Operation layer (paper §3.2 layer 3): CPU computations of data
+//! preparation — the sampling process (S-1..S-3), the gathering process
+//! (G-1..G-3), the bucket matrix of §3.4 (3), and minibatch/hyperbatch
+//! construction.
+
+pub mod batching;
+pub mod bucket;
+pub mod gather;
+pub mod sampler;
+
+pub use batching::{make_hyperbatches, make_minibatches, select_targets};
+pub use bucket::Bucket;
+pub use gather::{gather_hyperbatch, GatherOutput};
+pub use sampler::{sample_hyperbatch, SampleOutput};

@@ -1,0 +1,368 @@
+//! Hyperbatch sampling process (paper §3.2 S-1..S-3, Algorithm 1 lines
+//! 3–12).
+//!
+//! Sampling builds, per minibatch, a fixed-fanout neighbor *tree*: level 0
+//! is the targets; level `l+1` holds, for each slot `p` of level `l`,
+//! exactly `fanouts[l]` sampled neighbors at positions
+//! `[p*f, (p+1)*f)`. Fixed level sizes are what let the computation stage
+//! run as a single AOT-compiled HLO executable with static shapes (see
+//! `python/compile/model.py`).
+//!
+//! The hyperbatch block sweep: per layer, a [`Bucket`] groups every
+//! (minibatch, slot, node) by the block holding the node's object; blocks
+//! are processed in ascending order in bounded *runs* (at most the graph
+//! buffer capacity), each run loaded with one batched async I/O, pinned
+//! for the duration of its processing (§3.4 (1)), and every minibatch's
+//! slots within the block are served before moving on — one block-wise
+//! I/O per block per layer instead of one small I/O per node.
+//!
+//! Zero-degree nodes sample themselves (self-loop fallback, standard in
+//! GraphSAGE implementations).
+
+use super::bucket::Bucket;
+use crate::memory::BufferPool;
+use crate::storage::block::GraphBlock;
+use crate::storage::store::GraphStore;
+use crate::storage::{BlockId, IoEngine};
+use crate::Result;
+use std::sync::Arc;
+
+/// Sampling result for one hyperbatch.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SampleOutput {
+    /// `levels[mb][l]` — layer-`l` node array of minibatch `mb`;
+    /// `levels[mb][0]` are the targets and
+    /// `levels[mb][l+1].len() == levels[mb][l].len() * fanouts[l]`.
+    pub levels: Vec<Vec<Vec<u32>>>,
+}
+
+impl SampleOutput {
+    /// Total sampled node slots (incl. duplicates) across the hyperbatch.
+    pub fn total_sampled(&self) -> u64 {
+        self.levels.iter().flat_map(|mbs| mbs.iter().skip(1)).map(|l| l.len() as u64).sum()
+    }
+
+    /// All levels of one minibatch flattened in level order — the node
+    /// array whose features the gather stage must assemble.
+    pub fn flat_nodes(&self, mb: usize) -> Vec<u32> {
+        self.levels[mb].iter().flatten().copied().collect()
+    }
+}
+
+/// Deterministic per-slot RNG (splitmix64) — cheap enough to seed per
+/// sampled slot, so results are independent of block processing order.
+#[inline]
+fn slot_rng(seed: u64, layer: usize, mb: u32, slot: u32) -> u64 {
+    let mut z = seed
+        ^ (layer as u64).wrapping_mul(0x9E3779B97F4A7C15)
+        ^ ((mb as u64) << 32 | slot as u64).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+#[inline]
+fn next_u64(state: &mut u64) -> u64 {
+    // xorshift64*
+    *state ^= *state >> 12;
+    *state ^= *state << 25;
+    *state ^= *state >> 27;
+    state.wrapping_mul(0x2545F4914F6CDD1D)
+}
+
+/// Sample `fanout` children of `v` (uniform with replacement) given the
+/// node's record in the current block; hub records that are partial pieces
+/// fall back to `full_adj`.
+fn sample_children(
+    v: u32,
+    record: Option<&crate::storage::block::ObjectRecord>,
+    fanout: usize,
+    rng: &mut u64,
+    out: &mut [u32],
+    mut full_adj: impl FnMut(u32) -> Result<Arc<Vec<u32>>>,
+) -> Result<()> {
+    match record {
+        Some(r) if r.total_degree == 0 => out.fill(v),
+        Some(r) if (r.neighbors.len() as u32) == r.total_degree => {
+            for o in out.iter_mut().take(fanout) {
+                *o = r.neighbors[(next_u64(rng) % r.total_degree as u64) as usize];
+            }
+        }
+        _ => {
+            // partial piece (hub spanning blocks) or record elsewhere
+            let adj = full_adj(v)?;
+            if adj.is_empty() {
+                out.fill(v);
+            } else {
+                for o in out.iter_mut().take(fanout) {
+                    *o = adj[(next_u64(rng) % adj.len() as u64) as usize];
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Run the hyperbatch sampling process. `targets` holds the hyperbatch's
+/// minibatches (paper: up to 1024 of them); returns all levels.
+///
+/// `pool` is the graph buffer with its index table; `engine` performs the
+/// batched block-wise I/O.
+pub fn sample_hyperbatch(
+    store: &GraphStore,
+    pool: &mut BufferPool<GraphBlock>,
+    engine: &IoEngine,
+    targets: &[Vec<u32>],
+    fanouts: &[usize],
+    seed: u64,
+) -> Result<SampleOutput> {
+    let mut levels: Vec<Vec<Vec<u32>>> = targets.iter().map(|t| vec![t.clone()]).collect();
+    let mut current: Vec<Vec<u32>> = targets.to_vec();
+
+    for (layer, &fanout) in fanouts.iter().enumerate() {
+        let mut next: Vec<Vec<u32>> =
+            current.iter().map(|c| vec![u32::MAX; c.len() * fanout]).collect();
+        let bucket = Bucket::for_graph(&current, store.index());
+        sweep_blocks(store, pool, engine, &bucket, |pool, block, gb, mb, entries| {
+            for &(slot, v) in entries {
+                let mut rng = slot_rng(seed, layer, mb, slot);
+                let dst = &mut next[mb as usize][slot as usize * fanout..(slot as usize + 1) * fanout];
+                let record = gb.find(v);
+                sample_children(v, record, fanout, &mut rng, dst, |v| {
+                    full_adjacency(store, pool, engine, v)
+                })?;
+                let _ = block;
+            }
+            Ok(())
+        })?;
+        for mb in 0..levels.len() {
+            debug_assert!(next[mb].iter().all(|&x| x != u32::MAX), "unfilled sample slot");
+            levels[mb].push(next[mb].clone());
+        }
+        current = next;
+    }
+    Ok(SampleOutput { levels })
+}
+
+/// Sweep the bucket's blocks in ascending order in runs bounded by the
+/// buffer capacity: batch-load the run's missing blocks, pin the run,
+/// process every cell, unpin. The closure receives the pool so hub
+/// continuation reads can go through the buffer too.
+pub fn sweep_blocks(
+    store: &GraphStore,
+    pool: &mut BufferPool<GraphBlock>,
+    engine: &IoEngine,
+    bucket: &Bucket,
+    mut process: impl FnMut(
+        &mut BufferPool<GraphBlock>,
+        BlockId,
+        &GraphBlock,
+        u32,
+        &[super::bucket::Entry],
+    ) -> Result<()>,
+) -> Result<()> {
+    let blocks = bucket.blocks();
+    // leave headroom for hub-continuation loads within a run; half the
+    // buffer is the processing run, the prefetched next run uses the rest
+    let run_len = (pool.capacity() / 2).saturating_sub(1).max(1);
+    let runs: Vec<&[BlockId]> = blocks.chunks(run_len).collect();
+    // prefetched (block, decoded) pairs for the *next* run
+    let mut prefetched: Vec<(BlockId, GraphBlock)> = Vec::new();
+    for (i, run) in runs.iter().enumerate() {
+        for (b, gb) in prefetched.drain(..) {
+            if !pool.contains(b) {
+                pool.insert(b, Arc::new(gb));
+            }
+        }
+        // (1) which of the run's blocks still miss the buffer? (the `get`
+        // also counts the hit/miss stats, i.e. it is the T_buf lookup)
+        let mut missing: Vec<BlockId> = Vec::new();
+        for &b in run.iter() {
+            if pool.get(b).is_none() {
+                missing.push(b);
+            }
+        }
+        // (2) one batched block-wise storage I/O for the run's misses,
+        // overlapped with prefetching the next run (paper §3.4 (4):
+        // threads do not idle on I/O completion)
+        let next_missing: Vec<BlockId> = runs
+            .get(i + 1)
+            .map(|next| next.iter().copied().filter(|b| !pool.contains(*b)).collect())
+            .unwrap_or_default();
+        let mut next_loaded: Vec<GraphBlock> = Vec::new();
+        std::thread::scope(|s| -> Result<()> {
+            let prefetcher = (!next_missing.is_empty()).then(|| {
+                s.spawn(|| engine.read_graph_blocks(store, &next_missing))
+            });
+            if !missing.is_empty() {
+                let loaded = engine.read_graph_blocks(store, &missing)?;
+                for (b, gb) in missing.iter().zip(loaded) {
+                    pool.insert(*b, Arc::new(gb));
+                }
+            }
+            // (3) pin the run (paper §3.4 (1)), process, unpin — while the
+            // prefetcher streams the next run in the background
+            for &b in run.iter() {
+                pool.pin(b);
+            }
+            for &b in run.iter() {
+                // peek: the residency check above already counted the access
+                let gb = pool.peek(b).expect("run block resident");
+                for (mb, entries) in &bucket.rows[&b] {
+                    process(pool, b, &gb, *mb, entries)?;
+                }
+                pool.unpin(b);
+            }
+            if let Some(h) = prefetcher {
+                next_loaded = h.join().expect("prefetcher panicked")?;
+            }
+            Ok(())
+        })?;
+        prefetched = next_missing.into_iter().zip(next_loaded).collect();
+    }
+    Ok(())
+}
+
+/// Assemble a hub node's full adjacency through the buffer pool (its
+/// continuation blocks are consecutive, so these loads stay sequential).
+fn full_adjacency(
+    store: &GraphStore,
+    pool: &mut BufferPool<GraphBlock>,
+    engine: &IoEngine,
+    v: u32,
+) -> Result<Arc<Vec<u32>>> {
+    let blocks = store.index().blocks_of(v);
+    let mut adj: Vec<u32> = Vec::new();
+    // hold each block's Arc directly while its piece is copied, so a
+    // pathologically small buffer evicting an earlier continuation block
+    // cannot invalidate the assembly
+    for &b in &blocks {
+        let gb: Arc<GraphBlock> = match pool.get(b) {
+            Some(g) => g,
+            None => {
+                let loaded = engine.read_graph_blocks(store, std::slice::from_ref(&b))?;
+                let arc = Arc::new(loaded.into_iter().next().expect("one block"));
+                pool.insert(b, arc.clone());
+                arc
+            }
+        };
+        if let Some(r) = gb.find(v) {
+            if adj.is_empty() {
+                adj = vec![u32::MAX; r.total_degree as usize];
+            }
+            adj[r.adj_offset as usize..r.adj_offset as usize + r.neighbors.len()]
+                .copy_from_slice(&r.neighbors);
+        }
+    }
+    Ok(Arc::new(adj))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{chung_lu, PowerLawParams};
+    use crate::graph::CsrGraph;
+    use crate::storage::builder::{build_graph_store, StorePaths};
+    use crate::storage::device::{SsdModel, SsdSpec};
+    use std::collections::HashSet;
+
+    fn setup(g: &CsrGraph, block_size: usize) -> (crate::util::TempDir, GraphStore) {
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        build_graph_store(g, block_size, &paths).unwrap();
+        let store = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
+        (dir, store)
+    }
+
+    fn graph() -> CsrGraph {
+        chung_lu(&PowerLawParams { num_nodes: 500, num_edges: 6_000, ..Default::default() })
+    }
+
+    #[test]
+    fn level_sizes_fixed() {
+        let g = graph();
+        let (_d, store) = setup(&g, 2048);
+        let mut pool = BufferPool::new(8);
+        let engine = IoEngine::new(2, 4);
+        let targets = vec![vec![1, 2, 3], vec![10, 20]];
+        let out =
+            sample_hyperbatch(&store, &mut pool, &engine, &targets, &[3, 2], 42).unwrap();
+        assert_eq!(out.levels.len(), 2);
+        assert_eq!(out.levels[0][0].len(), 3);
+        assert_eq!(out.levels[0][1].len(), 9);
+        assert_eq!(out.levels[0][2].len(), 18);
+        assert_eq!(out.levels[1][1].len(), 6);
+        assert_eq!(out.total_sampled(), 9 + 18 + 6 + 12);
+        assert_eq!(out.flat_nodes(0).len(), 3 + 9 + 18);
+    }
+
+    #[test]
+    fn sampled_children_are_real_neighbors() {
+        let g = graph();
+        let (_d, store) = setup(&g, 2048);
+        let mut pool = BufferPool::new(8);
+        let engine = IoEngine::new(1, 1);
+        let targets = vec![(0..50u32).collect::<Vec<_>>()];
+        let out = sample_hyperbatch(&store, &mut pool, &engine, &targets, &[4], 7).unwrap();
+        for (slot, &v) in targets[0].iter().enumerate() {
+            let kids = &out.levels[0][1][slot * 4..(slot + 1) * 4];
+            let nbrs: HashSet<u32> = g.neighbors(v).iter().copied().collect();
+            for &k in kids {
+                if nbrs.is_empty() {
+                    assert_eq!(k, v, "zero-degree fallback");
+                } else {
+                    assert!(nbrs.contains(&k), "node {v}: {k} not a neighbor");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed_and_pool_size() {
+        let g = graph();
+        let (_d, store) = setup(&g, 1024);
+        let engine = IoEngine::new(2, 2);
+        let targets = vec![(0..30u32).collect::<Vec<_>>(), (30..60u32).collect::<Vec<_>>()];
+        let mut p1 = BufferPool::new(64);
+        let a = sample_hyperbatch(&store, &mut p1, &engine, &targets, &[3, 3], 9).unwrap();
+        // tiny pool forces evictions + reloads — same samples must come out
+        let mut p2 = BufferPool::new(2);
+        let b = sample_hyperbatch(&store, &mut p2, &engine, &targets, &[3, 3], 9).unwrap();
+        assert_eq!(a, b);
+        let c = sample_hyperbatch(&store, &mut p2, &engine, &targets, &[3, 3], 10).unwrap();
+        assert_ne!(a, c, "different seed should differ");
+    }
+
+    #[test]
+    fn hub_spanning_blocks_sampled_correctly() {
+        // hub node 0 with 3000 neighbors; 4KB blocks -> spans blocks
+        let edges: Vec<(u32, u32)> = (0..3000u32).map(|i| (0, i % 200 + 1)).collect();
+        let g = CsrGraph::from_edges(201, &edges);
+        let (_d, store) = setup(&g, 4096);
+        let mut pool = BufferPool::new(8);
+        let engine = IoEngine::new(1, 1);
+        let out = sample_hyperbatch(&store, &mut pool, &engine, &[vec![0]], &[16], 3).unwrap();
+        let nbrs: HashSet<u32> = g.neighbors(0).iter().copied().collect();
+        for &k in &out.levels[0][1] {
+            assert!(nbrs.contains(&k));
+        }
+    }
+
+    #[test]
+    fn block_io_count_bounded_by_blocks_touched() {
+        // hyperbatch processing: each touched block read at most once per layer
+        let g = graph();
+        let (_d, store) = setup(&g, 2048);
+        let total_blocks = store.num_blocks() as u64;
+        let mut pool = BufferPool::new(total_blocks as usize + 4);
+        let engine = IoEngine::new(2, 4);
+        let targets: Vec<Vec<u32>> = (0..10).map(|m| (m * 40..m * 40 + 40).collect()).collect();
+        store.ssd.reset();
+        sample_hyperbatch(&store, &mut pool, &engine, &targets, &[5, 5], 1).unwrap();
+        let reqs = store.ssd.stats().num_requests;
+        assert!(
+            reqs <= 2 * total_blocks,
+            "block reads {reqs} should be <= 2 sweeps x {total_blocks} blocks"
+        );
+    }
+}

@@ -1,0 +1,439 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas training step (HLO text
+//! produced by `python/compile/aot.py`) and execute it from the rust hot
+//! path. Python is never on the training path — `make artifacts` runs once
+//! at build time.
+//!
+//! ## Artifact contract (produced by `python/compile/aot.py`)
+//!
+//! For every model variant `<name>` three files live in `artifacts/`:
+//! * `<name>.hlo.txt` — HLO text of the jitted train step (text, not a
+//!   serialized proto: jax ≥ 0.5 emits 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids),
+//! * `<name>.manifest.json` — shapes: batch, fanouts, feature_dim, hidden,
+//!   classes, parameter list in positional order,
+//! * `<name>.params.bin` — concatenated little-endian f32 initial
+//!   parameters in the same order.
+//!
+//! The train step's positional signature is
+//! `(p_0 … p_{k-1}, feats[total_nodes, F], labels i32[B], mask f32[B])`
+//! returning the tuple `(p'_0 … p'_{k-1}, loss, correct)`. `mask` makes
+//! short (last) minibatches exact: padded rows carry zero weight.
+
+use crate::coordinator::{ComputeBackend, MinibatchData, StepResult};
+use crate::Result;
+use crate::util::json::Json;
+use anyhow::Context;
+use byteorder::{ByteOrder, LittleEndian};
+use std::path::{Path, PathBuf};
+
+/// One parameter tensor's metadata.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Manifest written by `aot.py` next to each HLO artifact.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    /// Minibatch size B the executable was compiled for.
+    pub batch: usize,
+    pub fanouts: Vec<usize>,
+    pub feature_dim: usize,
+    pub hidden: usize,
+    pub classes: usize,
+    /// Total tree nodes = sum of level sizes.
+    pub total_nodes: usize,
+    pub params: Vec<ParamSpec>,
+    /// Learning rate baked into the step.
+    pub learning_rate: f32,
+}
+
+impl Manifest {
+    pub fn level_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![self.batch];
+        for &f in &self.fanouts {
+            sizes.push(sizes.last().unwrap() * f);
+        }
+        sizes
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        let j = Json::parse(&text)?;
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params must be array"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec {
+                    name: p.req("name")?.as_str().unwrap_or_default().to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow::anyhow!("shape must be array"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let fanouts = j
+            .req("fanouts")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("fanouts must be array"))?
+            .iter()
+            .map(|f| f.as_usize().unwrap_or(0))
+            .collect();
+        let m = Manifest {
+            model: j.req("model")?.as_str().unwrap_or_default().to_string(),
+            batch: j.req("batch")?.as_usize().unwrap_or(0),
+            fanouts,
+            feature_dim: j.req("feature_dim")?.as_usize().unwrap_or(0),
+            hidden: j.req("hidden")?.as_usize().unwrap_or(0),
+            classes: j.req("classes")?.as_usize().unwrap_or(0),
+            total_nodes: j.req("total_nodes")?.as_usize().unwrap_or(0),
+            params,
+            learning_rate: j.req("learning_rate")?.as_f64().unwrap_or(0.0) as f32,
+        };
+        let expect: usize = m.level_sizes().iter().sum();
+        anyhow::ensure!(
+            m.total_nodes == expect,
+            "manifest total_nodes {} != computed {}",
+            m.total_nodes,
+            expect
+        );
+        Ok(m)
+    }
+}
+
+/// Paths of one compiled artifact set.
+#[derive(Debug, Clone)]
+pub struct ArtifactPaths {
+    pub hlo: PathBuf,
+    pub manifest: PathBuf,
+    pub params: PathBuf,
+}
+
+impl ArtifactPaths {
+    pub fn in_dir(dir: impl AsRef<Path>, name: &str) -> ArtifactPaths {
+        let dir = dir.as_ref();
+        ArtifactPaths {
+            hlo: dir.join(format!("{name}.hlo.txt")),
+            manifest: dir.join(format!("{name}.manifest.json")),
+            params: dir.join(format!("{name}.params.bin")),
+        }
+    }
+
+    pub fn exist(&self) -> bool {
+        self.hlo.exists() && self.manifest.exists() && self.params.exists()
+    }
+}
+
+/// The real computation stage: AOT-compiled HLO on the PJRT CPU client.
+/// Parameters live in host literals and are threaded through each step
+/// (the step returns the updated parameters — donated on the XLA side).
+pub struct XlaCompute {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+    params: Vec<xla::Literal>,
+    /// Wall nanoseconds spent building input literals (the paper's
+    /// "transfer" step (iii)).
+    pub transfer_ns: u64,
+    /// Wall nanoseconds inside `execute` (computation stage).
+    pub execute_ns: u64,
+    pub steps: u64,
+}
+
+impl XlaCompute {
+    /// Load and compile `<name>` from `dir` on the PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<XlaCompute> {
+        let paths = ArtifactPaths::in_dir(&dir, name);
+        anyhow::ensure!(
+            paths.exist(),
+            "artifacts for {name:?} missing under {:?} — run `make artifacts`",
+            dir.as_ref()
+        );
+        let manifest = Manifest::load(&paths.manifest)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        let proto = xla::HloModuleProto::from_text_file(
+            paths.hlo.to_str().expect("utf8 path"),
+        )
+        .map_err(|e| anyhow::anyhow!("parse hlo: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp).map_err(|e| anyhow::anyhow!("compile: {e}"))?;
+        let params = load_params(&paths.params, &manifest)?;
+        Ok(XlaCompute { manifest, exe, params, transfer_ns: 0, execute_ns: 0, steps: 0 })
+    }
+
+    /// Current parameter literals (e.g. to checkpoint).
+    pub fn params(&self) -> &[xla::Literal] {
+        &self.params
+    }
+
+    /// Flatten current parameters to f32 (tests / checkpointing).
+    pub fn params_flat(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        for p in &self.params {
+            out.extend(p.to_vec::<f32>().map_err(|e| anyhow::anyhow!("param read: {e}"))?);
+        }
+        Ok(out)
+    }
+
+    /// Build the (feats, labels, mask) literals for a minibatch, padding a
+    /// short batch up to the compiled shapes.
+    fn build_inputs(&self, mb: &MinibatchData) -> Result<(xla::Literal, xla::Literal, xla::Literal)> {
+        let m = &self.manifest;
+        let dim = m.feature_dim;
+        anyhow::ensure!(mb.feature_dim == dim, "feature_dim mismatch: {} vs {dim}", mb.feature_dim);
+        anyhow::ensure!(mb.fanouts == m.fanouts, "fanout mismatch");
+        let b_actual = mb.levels[0].len();
+        anyhow::ensure!(b_actual <= m.batch, "minibatch larger than compiled batch");
+
+        // feats: per level, copy the actual rows and zero-pad to the
+        // compiled level size
+        let mut feats = vec![0f32; m.total_nodes * dim];
+        let mut src_off = 0usize;
+        let mut dst_off = 0usize;
+        for (lvl, compiled_rows) in m.level_sizes().iter().enumerate() {
+            let actual_rows = mb.levels[lvl].len();
+            let n = actual_rows * dim;
+            feats[dst_off..dst_off + n].copy_from_slice(&mb.features[src_off..src_off + n]);
+            src_off += n;
+            dst_off += compiled_rows * dim;
+        }
+        let feats = xla::Literal::vec1(&feats)
+            .reshape(&[m.total_nodes as i64, dim as i64])
+            .map_err(|e| anyhow::anyhow!("feats reshape: {e}"))?;
+
+        let mut labels = vec![0i32; m.batch];
+        for (i, &l) in mb.labels.iter().enumerate() {
+            labels[i] = l as i32;
+        }
+        let labels = xla::Literal::vec1(&labels);
+        let mut mask = vec![0f32; m.batch];
+        mask[..b_actual].fill(1.0);
+        let mask = xla::Literal::vec1(&mask);
+        Ok((feats, labels, mask))
+    }
+}
+
+fn load_params(path: &Path, manifest: &Manifest) -> Result<Vec<xla::Literal>> {
+    let raw = std::fs::read(path)?;
+    let total: usize = manifest.params.iter().map(ParamSpec::elements).sum();
+    anyhow::ensure!(
+        raw.len() == total * 4,
+        "params.bin has {} bytes, manifest wants {}",
+        raw.len(),
+        total * 4
+    );
+    let mut flat = vec![0f32; total];
+    LittleEndian::read_f32_into(&raw, &mut flat);
+    let mut out = Vec::with_capacity(manifest.params.len());
+    let mut off = 0usize;
+    for p in &manifest.params {
+        let n = p.elements();
+        let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&flat[off..off + n])
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("param {} reshape: {e}", p.name))?;
+        out.push(lit);
+        off += n;
+    }
+    Ok(out)
+}
+
+impl ComputeBackend for XlaCompute {
+    fn train_step(&mut self, mb: &MinibatchData) -> Result<StepResult> {
+        let t0 = std::time::Instant::now();
+        let (feats, labels, mask) = self.build_inputs(mb)?;
+        self.transfer_ns += t0.elapsed().as_nanos() as u64;
+        let b_actual = mb.levels[0].len() as u32;
+        let outputs;
+        let t1 = std::time::Instant::now();
+        {
+            let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+            inputs.push(&feats);
+            inputs.push(&labels);
+            inputs.push(&mask);
+            let res = self
+                .exe
+                .execute::<&xla::Literal>(&inputs)
+                .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+            outputs = res[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow::anyhow!("fetch: {e}"))?
+                .to_tuple()
+                .map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        }
+        self.execute_ns += t1.elapsed().as_nanos() as u64;
+        let k = self.manifest.params.len();
+        anyhow::ensure!(outputs.len() == k + 2, "expected {} outputs, got {}", k + 2, outputs.len());
+        let mut it = outputs.into_iter();
+        let mut new_params = Vec::with_capacity(k);
+        for _ in 0..k {
+            new_params.push(it.next().unwrap());
+        }
+        self.params = new_params;
+        let loss = it
+            .next()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("loss: {e}"))?;
+        let correct = it
+            .next()
+            .unwrap()
+            .get_first_element::<f32>()
+            .map_err(|e| anyhow::anyhow!("correct: {e}"))?;
+        self.steps += 1;
+        Ok(StepResult { loss, correct: correct.round() as u32, total: b_actual })
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}
+
+/// Inference-only executable (`<name>_infer.hlo.txt`): logits for a
+/// minibatch under given parameters — used for held-out accuracy curves.
+pub struct XlaInfer {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl XlaInfer {
+    /// Load `<name>_infer` from `dir` (shares `<name>`'s manifest).
+    pub fn load(dir: impl AsRef<Path>, name: &str) -> Result<XlaInfer> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(&dir.join(format!("{name}.manifest.json")))?;
+        let hlo = dir.join(format!("{name}_infer.hlo.txt"));
+        anyhow::ensure!(hlo.exists(), "missing {hlo:?} — run `make artifacts`");
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow::anyhow!("pjrt cpu: {e}"))?;
+        let proto = xla::HloModuleProto::from_text_file(hlo.to_str().expect("utf8 path"))
+            .map_err(|e| anyhow::anyhow!("parse hlo: {e}"))?;
+        let exe = client
+            .compile(&xla::XlaComputation::from_proto(&proto))
+            .map_err(|e| anyhow::anyhow!("compile: {e}"))?;
+        Ok(XlaInfer { manifest, exe })
+    }
+
+    /// Evaluate a prepared minibatch under `params` (e.g.
+    /// [`XlaCompute::params`]). Returns `(correct, total)` on the real
+    /// (unpadded) targets.
+    pub fn eval(&self, params: &[xla::Literal], mb: &MinibatchData) -> Result<(u32, u32)> {
+        let m = &self.manifest;
+        anyhow::ensure!(params.len() == m.params.len(), "param arity");
+        let dim = m.feature_dim;
+        anyhow::ensure!(mb.feature_dim == dim, "feature_dim mismatch");
+        let b_actual = mb.levels[0].len();
+        anyhow::ensure!(b_actual <= m.batch, "minibatch larger than compiled batch");
+        let mut feats = vec![0f32; m.total_nodes * dim];
+        let mut src_off = 0usize;
+        let mut dst_off = 0usize;
+        for (lvl, compiled_rows) in m.level_sizes().iter().enumerate() {
+            let n = mb.levels[lvl].len() * dim;
+            feats[dst_off..dst_off + n].copy_from_slice(&mb.features[src_off..src_off + n]);
+            src_off += n;
+            dst_off += compiled_rows * dim;
+        }
+        let feats = xla::Literal::vec1(&feats)
+            .reshape(&[m.total_nodes as i64, dim as i64])
+            .map_err(|e| anyhow::anyhow!("feats reshape: {e}"))?;
+        let mut inputs: Vec<&xla::Literal> = params.iter().collect();
+        inputs.push(&feats);
+        let res = self
+            .exe
+            .execute::<&xla::Literal>(&inputs)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let logits = res[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e}"))?
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("tuple: {e}"))?;
+        let flat: Vec<f32> = logits.to_vec().map_err(|e| anyhow::anyhow!("logits: {e}"))?;
+        let classes = m.classes;
+        let mut correct = 0u32;
+        for (i, &label) in mb.labels.iter().enumerate() {
+            let row = &flat[i * classes..(i + 1) * classes];
+            let pred = row
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j as u32)
+                .unwrap_or(0);
+            correct += u32::from(pred == label);
+        }
+        Ok((correct, b_actual as u32))
+    }
+}
+
+impl XlaCompute {
+    /// Checkpoint the current parameters (same format as `params.bin`).
+    pub fn save_params(&self, path: impl AsRef<Path>) -> Result<()> {
+        let flat = self.params_flat()?;
+        let mut bytes = vec![0u8; flat.len() * 4];
+        LittleEndian::write_f32_into(&flat, &mut bytes);
+        std::fs::write(path, bytes)?;
+        Ok(())
+    }
+
+    /// Restore parameters from a checkpoint written by [`Self::save_params`].
+    pub fn restore_params(&mut self, path: impl AsRef<Path>) -> Result<()> {
+        self.params = load_params(path.as_ref(), &self.manifest)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_level_sizes() {
+        let m = Manifest {
+            model: "gcn".into(),
+            batch: 4,
+            fanouts: vec![3, 2],
+            feature_dim: 8,
+            hidden: 16,
+            classes: 4,
+            total_nodes: 4 + 12 + 24,
+            params: vec![],
+            learning_rate: 0.1,
+        };
+        assert_eq!(m.level_sizes(), vec![4, 12, 24]);
+    }
+
+    #[test]
+    fn manifest_load_validates_totals() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let p = dir.path().join("m.json");
+        let bad = r#"{"model": "gcn", "batch": 4, "fanouts": [3], "feature_dim": 8,
+            "hidden": 16, "classes": 4, "total_nodes": 99,
+            "params": [], "learning_rate": 0.1}"#;
+        std::fs::write(&p, bad).unwrap();
+        assert!(Manifest::load(&p).is_err());
+    }
+
+    #[test]
+    fn artifact_paths_shape() {
+        let a = ArtifactPaths::in_dir("/tmp/arts", "sage");
+        assert!(a.hlo.ends_with("sage.hlo.txt"));
+        assert!(!a.exist());
+    }
+
+    #[test]
+    fn param_spec_elements() {
+        let p = ParamSpec { name: "w".into(), shape: vec![3, 4, 5] };
+        assert_eq!(p.elements(), 60);
+    }
+}

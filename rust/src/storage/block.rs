@@ -1,0 +1,237 @@
+//! On-disk block formats.
+//!
+//! **Graph block** (paper: "a graph block contains multiple objects, i.e.
+//! multiple nodes and their related edges; if an object exceeds the size of
+//! a single block, the object is split across multiple blocks"):
+//!
+//! ```text
+//! [u32 num_records]
+//! repeat num_records times:
+//!   [u32 node_id] [u32 total_degree] [u32 adj_offset] [u32 count]
+//!   [u32 neighbor] * count
+//! (zero padding to block_size)
+//! ```
+//!
+//! A record is a *piece* of an object: `count` neighbors starting at
+//! `adj_offset` within the node's full adjacency list. Small nodes have one
+//! record (`adj_offset == 0`, `count == total_degree`); hubs span
+//! consecutive blocks with increasing `adj_offset`.
+//!
+//! **Feature block**: fixed-stride packed f32 vectors; node `v` lives in
+//! block `v / per_block` at slot `v % per_block`. No header — the stride is
+//! known from the store metadata, making feature gathering a pure
+//! offset computation (paper's `T_ch^f` is implicit).
+
+use byteorder::{ByteOrder, LittleEndian};
+
+/// Bytes of the per-block record-count header.
+pub const BLOCK_HEADER_BYTES: usize = 4;
+/// Bytes of each object-record header (node_id, total_degree, adj_offset, count).
+pub const OBJ_HEADER_BYTES: usize = 16;
+
+/// One object piece inside a graph block.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ObjectRecord {
+    pub node_id: u32,
+    /// Full adjacency-list length of the node (across all pieces).
+    pub total_degree: u32,
+    /// Index into the full adjacency list where this piece starts.
+    pub adj_offset: u32,
+    /// Neighbor ids in this piece.
+    pub neighbors: Vec<u32>,
+}
+
+/// A decoded graph block.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct GraphBlock {
+    pub records: Vec<ObjectRecord>,
+}
+
+impl GraphBlock {
+    /// Decode a graph block from raw bytes.
+    pub fn decode(buf: &[u8]) -> GraphBlock {
+        let n = LittleEndian::read_u32(&buf[0..4]) as usize;
+        let mut records = Vec::with_capacity(n);
+        let mut pos = BLOCK_HEADER_BYTES;
+        for _ in 0..n {
+            let node_id = LittleEndian::read_u32(&buf[pos..pos + 4]);
+            let total_degree = LittleEndian::read_u32(&buf[pos + 4..pos + 8]);
+            let adj_offset = LittleEndian::read_u32(&buf[pos + 8..pos + 12]);
+            let count = LittleEndian::read_u32(&buf[pos + 12..pos + 16]) as usize;
+            pos += OBJ_HEADER_BYTES;
+            let mut neighbors = vec![0u32; count];
+            LittleEndian::read_u32_into(&buf[pos..pos + 4 * count], &mut neighbors);
+            pos += 4 * count;
+            records.push(ObjectRecord { node_id, total_degree, adj_offset, neighbors });
+        }
+        GraphBlock { records }
+    }
+
+    /// Encode into a `block_size` byte buffer (zero padded). Panics if the
+    /// records do not fit — the builder guarantees the packing.
+    pub fn encode(&self, block_size: usize) -> Vec<u8> {
+        let mut buf = vec![0u8; block_size];
+        LittleEndian::write_u32(&mut buf[0..4], self.records.len() as u32);
+        let mut pos = BLOCK_HEADER_BYTES;
+        for r in &self.records {
+            assert!(
+                pos + OBJ_HEADER_BYTES + 4 * r.neighbors.len() <= block_size,
+                "record overflow: block_size={block_size} pos={pos}"
+            );
+            LittleEndian::write_u32(&mut buf[pos..pos + 4], r.node_id);
+            LittleEndian::write_u32(&mut buf[pos + 4..pos + 8], r.total_degree);
+            LittleEndian::write_u32(&mut buf[pos + 8..pos + 12], r.adj_offset);
+            LittleEndian::write_u32(&mut buf[pos + 12..pos + 16], r.neighbors.len() as u32);
+            pos += OBJ_HEADER_BYTES;
+            LittleEndian::write_u32_into(&r.neighbors, &mut buf[pos..pos + 4 * r.neighbors.len()]);
+            pos += 4 * r.neighbors.len();
+        }
+        buf
+    }
+
+    /// Bytes a record with `count` neighbors occupies.
+    #[inline]
+    pub fn record_bytes(count: usize) -> usize {
+        OBJ_HEADER_BYTES + 4 * count
+    }
+
+    /// Find the record for `node_id` (binary search — records are stored in
+    /// ascending node-id order within a block).
+    pub fn find(&self, node_id: u32) -> Option<&ObjectRecord> {
+        self.records
+            .binary_search_by_key(&node_id, |r| r.node_id)
+            .ok()
+            .map(|i| &self.records[i])
+    }
+}
+
+/// Geometry of the feature store: where node features live.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FeatureBlockLayout {
+    pub block_size: usize,
+    pub feature_dim: usize,
+}
+
+impl FeatureBlockLayout {
+    /// Bytes of one feature vector.
+    #[inline]
+    pub fn feature_bytes(&self) -> usize {
+        self.feature_dim * 4
+    }
+
+    /// Feature vectors per block (at least 1 — a vector larger than a block
+    /// spans blocks via plain offset arithmetic).
+    #[inline]
+    pub fn per_block(&self) -> usize {
+        (self.block_size / self.feature_bytes()).max(1)
+    }
+
+    /// Block that holds node `v`'s feature vector.
+    #[inline]
+    pub fn block_of(&self, v: u32) -> u32 {
+        if self.feature_bytes() <= self.block_size {
+            v / self.per_block() as u32
+        } else {
+            // oversized vectors: byte-offset based
+            (v as u64 * self.feature_bytes() as u64 / self.block_size as u64) as u32
+        }
+    }
+
+    /// Byte offset of node `v`'s vector within its block.
+    #[inline]
+    pub fn slot_offset(&self, v: u32) -> usize {
+        if self.feature_bytes() <= self.block_size {
+            (v as usize % self.per_block()) * self.feature_bytes()
+        } else {
+            (v as u64 * self.feature_bytes() as u64 % self.block_size as u64) as usize
+        }
+    }
+
+    /// Total number of feature blocks for `num_nodes` nodes.
+    pub fn num_blocks(&self, num_nodes: usize) -> u32 {
+        if num_nodes == 0 {
+            return 0;
+        }
+        if self.feature_bytes() <= self.block_size {
+            (num_nodes as u64).div_ceil(self.per_block() as u64) as u32
+        } else {
+            (num_nodes as u64 * self.feature_bytes() as u64).div_ceil(self.block_size as u64) as u32
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_block_roundtrip() {
+        let b = GraphBlock {
+            records: vec![
+                ObjectRecord { node_id: 3, total_degree: 2, adj_offset: 0, neighbors: vec![9, 11] },
+                ObjectRecord { node_id: 5, total_degree: 0, adj_offset: 0, neighbors: vec![] },
+                ObjectRecord {
+                    node_id: 7,
+                    total_degree: 100,
+                    adj_offset: 96,
+                    neighbors: vec![1, 2, 3, 4],
+                },
+            ],
+        };
+        let enc = b.encode(4096);
+        assert_eq!(enc.len(), 4096);
+        let dec = GraphBlock::decode(&enc);
+        assert_eq!(dec, b);
+    }
+
+    #[test]
+    fn graph_block_find() {
+        let b = GraphBlock {
+            records: (0..10u32)
+                .map(|i| ObjectRecord {
+                    node_id: i * 2,
+                    total_degree: 1,
+                    adj_offset: 0,
+                    neighbors: vec![i],
+                })
+                .collect(),
+        };
+        assert_eq!(b.find(6).unwrap().neighbors, vec![3]);
+        assert!(b.find(7).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "record overflow")]
+    fn graph_block_overflow_panics() {
+        let b = GraphBlock {
+            records: vec![ObjectRecord {
+                node_id: 0,
+                total_degree: 100,
+                adj_offset: 0,
+                neighbors: vec![0; 100],
+            }],
+        };
+        b.encode(64);
+    }
+
+    #[test]
+    fn feature_layout_geometry() {
+        let l = FeatureBlockLayout { block_size: 1024, feature_dim: 32 }; // 128 B each, 8/block
+        assert_eq!(l.per_block(), 8);
+        assert_eq!(l.block_of(0), 0);
+        assert_eq!(l.block_of(7), 0);
+        assert_eq!(l.block_of(8), 1);
+        assert_eq!(l.slot_offset(9), 128);
+        assert_eq!(l.num_blocks(17), 3);
+        assert_eq!(l.num_blocks(0), 0);
+    }
+
+    #[test]
+    fn feature_layout_oversized_vector() {
+        // 4096-dim f32 = 16 KB vector in 4 KB blocks: spans 4 blocks.
+        let l = FeatureBlockLayout { block_size: 4096, feature_dim: 4096 };
+        assert_eq!(l.block_of(0), 0);
+        assert_eq!(l.block_of(1), 4);
+        assert_eq!(l.num_blocks(2), 8);
+    }
+}

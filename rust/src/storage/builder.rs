@@ -1,0 +1,258 @@
+//! Store builders: pack a [`CsrGraph`] and synthetic features into the
+//! on-disk block formats (paper §3.2 storage layer: "it divides and stores
+//! the graph topology and feature vectors into multiple blocks").
+
+use super::block::{FeatureBlockLayout, GraphBlock, ObjectRecord, BLOCK_HEADER_BYTES, OBJ_HEADER_BYTES};
+use super::object_index::ObjectIndexTable;
+use crate::graph::generate::synth_feature;
+use crate::graph::CsrGraph;
+use crate::Result;
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+/// File locations of a built dataset.
+#[derive(Debug, Clone)]
+pub struct StorePaths {
+    pub dir: PathBuf,
+    pub graph_blocks: PathBuf,
+    pub graph_meta: PathBuf,
+    pub feature_blocks: PathBuf,
+    /// CSR offsets sidecar (u64 per node + 1): kept in memory by the
+    /// baselines (Ginex keeps `indptr` resident) for per-node direct reads.
+    pub csr_offsets: PathBuf,
+}
+
+impl StorePaths {
+    pub fn in_dir(dir: impl AsRef<Path>) -> StorePaths {
+        let dir = dir.as_ref().to_path_buf();
+        StorePaths {
+            graph_blocks: dir.join("graph.blocks"),
+            graph_meta: dir.join("graph.meta.json"),
+            feature_blocks: dir.join("features.blocks"),
+            csr_offsets: dir.join("graph.offsets"),
+            dir,
+        }
+    }
+}
+
+/// Metadata persisted next to the graph block file.
+#[derive(Debug, Clone)]
+pub struct GraphStoreMeta {
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub block_size: usize,
+    pub num_blocks: u32,
+    pub index: ObjectIndexTable,
+}
+
+impl GraphStoreMeta {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("num_nodes", Json::num(self.num_nodes as f64)),
+            ("num_edges", Json::num(self.num_edges as f64)),
+            ("block_size", Json::num(self.block_size as f64)),
+            ("num_blocks", Json::num(self.num_blocks as f64)),
+            ("index", self.index.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<GraphStoreMeta> {
+        Ok(GraphStoreMeta {
+            num_nodes: j.req("num_nodes")?.as_usize().unwrap_or(0),
+            num_edges: j.req("num_edges")?.as_usize().unwrap_or(0),
+            block_size: j.req("block_size")?.as_usize().unwrap_or(0),
+            num_blocks: j.req("num_blocks")?.as_u64().unwrap_or(0) as u32,
+            index: ObjectIndexTable::from_json(j.req("index")?)?,
+        })
+    }
+}
+
+/// Pack the graph into blocks in ascending node-id order, splitting hub
+/// objects across consecutive blocks. Returns the object index table.
+pub fn build_graph_store(g: &CsrGraph, block_size: usize, paths: &StorePaths) -> Result<GraphStoreMeta> {
+    assert!(
+        block_size >= BLOCK_HEADER_BYTES + OBJ_HEADER_BYTES + 4,
+        "block_size too small: {block_size}"
+    );
+    std::fs::create_dir_all(&paths.dir)?;
+    let mut w = BufWriter::new(File::create(&paths.graph_blocks)?);
+    let capacity = block_size - BLOCK_HEADER_BYTES;
+    let mut index = ObjectIndexTable::default();
+    let mut cur = GraphBlock::default();
+    let mut cur_bytes = 0usize;
+    let flush = |cur: &mut GraphBlock, cur_bytes: &mut usize, w: &mut BufWriter<File>, index: &mut ObjectIndexTable| -> Result<()> {
+        if cur.records.is_empty() {
+            return Ok(());
+        }
+        let first = cur.records.first().unwrap().node_id;
+        let last = cur.records.last().unwrap().node_id;
+        index.ranges.push((first, last));
+        w.write_all(&cur.encode(block_size))?;
+        cur.records.clear();
+        *cur_bytes = 0;
+        Ok(())
+    };
+    for v in 0..g.num_nodes() as u32 {
+        let adj = g.neighbors(v);
+        let total = adj.len();
+        let mut off = 0usize;
+        loop {
+            let remaining = capacity - cur_bytes;
+            // need room for a header plus at least one neighbor (or an
+            // empty record for degree-0 nodes)
+            let min_needed = OBJ_HEADER_BYTES + if total > off { 4 } else { 0 };
+            if remaining < min_needed {
+                flush(&mut cur, &mut cur_bytes, &mut w, &mut index)?;
+                continue;
+            }
+            let fit = (remaining - OBJ_HEADER_BYTES) / 4;
+            let take = fit.min(total - off);
+            cur.records.push(ObjectRecord {
+                node_id: v,
+                total_degree: total as u32,
+                adj_offset: off as u32,
+                neighbors: adj[off..off + take].to_vec(),
+            });
+            cur_bytes += OBJ_HEADER_BYTES + 4 * take;
+            off += take;
+            if off >= total {
+                break;
+            }
+        }
+    }
+    flush(&mut cur, &mut cur_bytes, &mut w, &mut index)?;
+    w.flush()?;
+
+    // CSR offsets sidecar for baseline direct access.
+    let mut ow = BufWriter::new(File::create(&paths.csr_offsets)?);
+    for &o in &g.offsets {
+        ow.write_all(&o.to_le_bytes())?;
+    }
+    ow.flush()?;
+
+    let meta = GraphStoreMeta {
+        num_nodes: g.num_nodes(),
+        num_edges: g.num_edges(),
+        block_size,
+        num_blocks: index.ranges.len() as u32,
+        index,
+    };
+    std::fs::write(&paths.graph_meta, meta.to_json().to_string())?;
+    Ok(meta)
+}
+
+/// Write the feature store: packed f32 vectors in node-id order, generated
+/// by `feature_of` (defaults to [`synth_feature`]).
+pub fn build_feature_store_with(
+    num_nodes: usize,
+    layout: FeatureBlockLayout,
+    paths: &StorePaths,
+    mut feature_of: impl FnMut(u32) -> Vec<f32>,
+) -> Result<()> {
+    std::fs::create_dir_all(&paths.dir)?;
+    let mut w = BufWriter::new(File::create(&paths.feature_blocks)?);
+    let per_block = layout.per_block();
+    let fb = layout.feature_bytes();
+    if fb <= layout.block_size {
+        let mut block = vec![0u8; layout.block_size];
+        let mut slot = 0usize;
+        for v in 0..num_nodes as u32 {
+            let f = feature_of(v);
+            assert_eq!(f.len(), layout.feature_dim);
+            let off = slot * fb;
+            for (i, x) in f.iter().enumerate() {
+                block[off + 4 * i..off + 4 * i + 4].copy_from_slice(&x.to_le_bytes());
+            }
+            slot += 1;
+            if slot == per_block {
+                w.write_all(&block)?;
+                block.iter_mut().for_each(|b| *b = 0);
+                slot = 0;
+            }
+        }
+        if slot > 0 {
+            w.write_all(&block)?;
+        }
+    } else {
+        // oversized vectors: raw stream, block boundaries are virtual
+        for v in 0..num_nodes as u32 {
+            let f = feature_of(v);
+            for x in &f {
+                w.write_all(&x.to_le_bytes())?;
+            }
+        }
+        // pad to block multiple
+        let written = num_nodes as u64 * fb as u64;
+        let pad = written.next_multiple_of(layout.block_size as u64) - written;
+        w.write_all(&vec![0u8; pad as usize])?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Convenience: synthetic deterministic features.
+pub fn build_feature_store(
+    num_nodes: usize,
+    layout: FeatureBlockLayout,
+    paths: &StorePaths,
+    seed: u64,
+) -> Result<()> {
+    build_feature_store_with(num_nodes, layout, paths, |v| synth_feature(v, layout.feature_dim, seed))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{chung_lu, PowerLawParams};
+
+    #[test]
+    fn graph_store_covers_all_nodes() {
+        let g = chung_lu(&PowerLawParams { num_nodes: 500, num_edges: 5_000, ..Default::default() });
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        let meta = build_graph_store(&g, 4096, &paths).unwrap();
+        assert_eq!(meta.num_nodes, 500);
+        // every node is covered by the index
+        for v in 0..500u32 {
+            assert!(meta.index.block_of(v).is_some(), "node {v} missing");
+        }
+        // file size = num_blocks * block_size
+        let len = std::fs::metadata(&paths.graph_blocks).unwrap().len();
+        assert_eq!(len, meta.num_blocks as u64 * 4096);
+    }
+
+    #[test]
+    fn hub_spans_blocks() {
+        // one node with 5000 neighbors in 4KB blocks must span >= 5 blocks
+        let edges: Vec<(u32, u32)> = (0..5000).map(|i| (0u32, (i % 100 + 1) as u32)).collect();
+        let g = CsrGraph::from_edges(101, &edges);
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        let meta = build_graph_store(&g, 4096, &paths).unwrap();
+        let blocks = meta.index.blocks_of(0);
+        assert!(blocks.len() >= 5, "hub blocks {}", blocks.len());
+    }
+
+    #[test]
+    fn index_ranges_ascending() {
+        let g = chung_lu(&PowerLawParams { num_nodes: 1000, num_edges: 20_000, ..Default::default() });
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        let meta = build_graph_store(&g, 2048, &paths).unwrap();
+        for w in meta.index.ranges.windows(2) {
+            assert!(w[0].1 <= w[1].0, "ranges overlap: {:?}", w);
+        }
+    }
+
+    #[test]
+    fn feature_store_size() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        let layout = FeatureBlockLayout { block_size: 1024, feature_dim: 32 }; // 8 per block
+        build_feature_store(100, layout, &paths, 1).unwrap();
+        let len = std::fs::metadata(&paths.feature_blocks).unwrap().len();
+        assert_eq!(len, layout.num_blocks(100) as u64 * 1024);
+    }
+}

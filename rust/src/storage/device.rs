@@ -1,0 +1,285 @@
+//! NVMe SSD cost model (+ RAID0 striping across an SSD array).
+//!
+//! The paper's testbed uses PCIe Gen 4 NVMe SSDs (≈6.7 GB/s each, RAID0 up
+//! to 4 drives). Its central observation is that GNN data preparation
+//! issues a huge number of *small* I/Os that are **IOPS/latency-bound** and
+//! therefore cannot utilize that bandwidth, while AGNES's block-wise I/Os
+//! are **bandwidth-bound**. On this sandbox the OS page cache would mask
+//! exactly that effect, so every read is accounted against this analytic
+//! device model (data still flows from a real file):
+//!
+//! ```text
+//! elapsed(batch) = max( total_bytes / (num_ssds * bandwidth),
+//!                       num_requests * request_overhead / min(concurrency, num_ssds * queue_depth) )
+//! ```
+//!
+//! i.e. a batch of requests submitted with `concurrency` outstanding is
+//! limited either by aggregate bandwidth or by per-request latency divided
+//! by the achieved queue depth. Synchronous per-node reads (Ginex-style,
+//! `concurrency` = #threads) sit on the latency term; AGNES's async 1 MB
+//! block reads sit on the bandwidth term. This reproduces the measured
+//! shape of Figures 2, 4, 9, 10 and 11.
+//!
+//! The model also keeps the paper's Figure 2(b) instrumentation: a
+//! histogram of individual I/O sizes, plus busy-time so benches can report
+//! I/O-bandwidth utilization (Figure 11).
+
+use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Static description of the SSD array.
+#[derive(Debug, Clone, Copy)]
+pub struct SsdSpec {
+    /// Sequential bandwidth of one drive, bytes/s (paper: ~6.7 GB/s).
+    pub bandwidth: f64,
+    /// Fixed service overhead per request (submission + flash read latency
+    /// amortized at QD1), seconds. ~80 µs for 4 KB random reads ⇒ ~12.5 K
+    /// IOPS per synchronous thread, matching Ginex-style behaviour.
+    pub request_overhead: f64,
+    /// NVMe queue depth per drive.
+    pub queue_depth: u32,
+    /// Number of drives in the RAID0 array (paper: 1–4).
+    pub num_ssds: u32,
+}
+
+impl Default for SsdSpec {
+    fn default() -> Self {
+        SsdSpec { bandwidth: 6.7e9, request_overhead: 80e-6, queue_depth: 128, num_ssds: 1 }
+    }
+}
+
+impl SsdSpec {
+    pub fn with_ssds(mut self, n: u32) -> Self {
+        self.num_ssds = n;
+        self
+    }
+
+    /// Aggregate array bandwidth.
+    pub fn array_bandwidth(&self) -> f64 {
+        self.bandwidth * self.num_ssds as f64
+    }
+}
+
+/// Size classes for the Figure 2(b) I/O-size distribution.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum IoClass {
+    Le4K,
+    Le64K,
+    Le256K,
+    Le1M,
+    Gt1M,
+}
+
+impl IoClass {
+    pub fn of(bytes: u64) -> IoClass {
+        match bytes {
+            0..=4096 => IoClass::Le4K,
+            4097..=65536 => IoClass::Le64K,
+            65537..=262144 => IoClass::Le256K,
+            262145..=1048576 => IoClass::Le1M,
+            _ => IoClass::Gt1M,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            IoClass::Le4K => "<=4KB",
+            IoClass::Le64K => "<=64KB",
+            IoClass::Le256K => "<=256KB",
+            IoClass::Le1M => "<=1MB",
+            IoClass::Gt1M => ">1MB",
+        }
+    }
+
+    pub fn all() -> [IoClass; 5] {
+        [IoClass::Le4K, IoClass::Le64K, IoClass::Le256K, IoClass::Le1M, IoClass::Gt1M]
+    }
+}
+
+/// Cumulative device statistics (simulated time in nanoseconds).
+#[derive(Debug, Default, Clone)]
+pub struct DeviceStats {
+    pub num_requests: u64,
+    pub total_bytes: u64,
+    /// Simulated busy nanoseconds (the elapsed device time).
+    pub busy_ns: u64,
+    /// Histogram: requests per size class (same order as `IoClass::all()`).
+    pub size_hist: [u64; 5],
+    /// Bytes per size class.
+    pub bytes_hist: [u64; 5],
+}
+
+impl DeviceStats {
+    /// Achieved bandwidth over busy time, bytes/s.
+    pub fn achieved_bandwidth(&self) -> f64 {
+        if self.busy_ns == 0 {
+            0.0
+        } else {
+            self.total_bytes as f64 / (self.busy_ns as f64 * 1e-9)
+        }
+    }
+
+    pub fn merge(&mut self, other: &DeviceStats) {
+        self.num_requests += other.num_requests;
+        self.total_bytes += other.total_bytes;
+        self.busy_ns += other.busy_ns;
+        for i in 0..5 {
+            self.size_hist[i] += other.size_hist[i];
+            self.bytes_hist[i] += other.bytes_hist[i];
+        }
+    }
+}
+
+/// The simulated SSD array. Thread-safe; all reads in the repo are
+/// accounted here.
+#[derive(Debug)]
+pub struct SsdModel {
+    pub spec: SsdSpec,
+    busy_ns: AtomicU64,
+    stats: Mutex<DeviceStats>,
+}
+
+pub type SharedSsd = Arc<SsdModel>;
+
+impl SsdModel {
+    pub fn new(spec: SsdSpec) -> SharedSsd {
+        Arc::new(SsdModel { spec, busy_ns: AtomicU64::new(0), stats: Mutex::new(DeviceStats::default()) })
+    }
+
+    /// Account a batch of `sizes` read requests issued with `concurrency`
+    /// outstanding requests. Returns the simulated elapsed nanoseconds for
+    /// the batch.
+    pub fn submit_batch(&self, sizes: &[u64], concurrency: u32) -> u64 {
+        if sizes.is_empty() {
+            return 0;
+        }
+        let total: u64 = sizes.iter().sum();
+        let t_bw = total as f64 / self.spec.array_bandwidth();
+        // outstanding requests can never exceed the batch itself
+        let effective_qd = concurrency
+            .min(sizes.len() as u32)
+            .clamp(1, self.spec.queue_depth * self.spec.num_ssds) as f64;
+        let t_lat = sizes.len() as f64 * self.spec.request_overhead / effective_qd;
+        let elapsed_ns = (t_bw.max(t_lat) * 1e9) as u64;
+        self.busy_ns.fetch_add(elapsed_ns, Ordering::Relaxed);
+        let mut s = self.stats.lock().unwrap();
+        s.num_requests += sizes.len() as u64;
+        s.total_bytes += total;
+        s.busy_ns += elapsed_ns;
+        for &sz in sizes {
+            let c = IoClass::of(sz) as usize;
+            s.size_hist[c] += 1;
+            s.bytes_hist[c] += sz;
+        }
+        elapsed_ns
+    }
+
+    /// Account a single synchronous read (`concurrency = 1` from this
+    /// caller's perspective; pass the number of concurrently-reading
+    /// threads for the shared-queue effect).
+    pub fn submit_one(&self, size: u64, concurrency: u32) -> u64 {
+        self.submit_batch(&[size], concurrency)
+    }
+
+    /// Snapshot cumulative stats.
+    pub fn stats(&self) -> DeviceStats {
+        self.stats.lock().unwrap().clone()
+    }
+
+    /// Simulated busy nanoseconds so far.
+    pub fn busy_ns(&self) -> u64 {
+        self.busy_ns.load(Ordering::Relaxed)
+    }
+
+    /// Reset counters (between bench phases).
+    pub fn reset(&self) {
+        self.busy_ns.store(0, Ordering::Relaxed);
+        *self.stats.lock().unwrap() = DeviceStats::default();
+    }
+
+    /// Bandwidth utilization in [0,1]: achieved / array bandwidth.
+    pub fn utilization(&self) -> f64 {
+        self.stats().achieved_bandwidth() / self.spec.array_bandwidth()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(n: u32) -> SharedSsd {
+        SsdModel::new(SsdSpec::default().with_ssds(n))
+    }
+
+    #[test]
+    fn large_sequential_is_bandwidth_bound() {
+        let m = model(1);
+        // 1024 x 1MB async reads at QD64
+        let sizes = vec![1u64 << 20; 1024];
+        let ns = m.submit_batch(&sizes, 64);
+        let expect = (1024.0 * (1u64 << 20) as f64 / 6.7e9) * 1e9;
+        assert!((ns as f64 - expect).abs() / expect < 0.01);
+        // utilization ~ 100%
+        assert!(m.utilization() > 0.99);
+    }
+
+    #[test]
+    fn small_sync_is_latency_bound() {
+        let m = model(1);
+        // 10_000 x 4KB reads from 16 synchronous threads
+        let sizes = vec![4096u64; 10_000];
+        let ns = m.submit_batch(&sizes, 16);
+        let expect = (10_000.0 * 80e-6 / 16.0) * 1e9;
+        assert!((ns as f64 - expect).abs() / expect < 0.01);
+        // achieved bandwidth << device bandwidth (the paper's observation)
+        assert!(m.utilization() < 0.15, "util {}", m.utilization());
+    }
+
+    #[test]
+    fn raid0_scales_bandwidth() {
+        let m1 = model(1);
+        let m4 = model(4);
+        let sizes = vec![1u64 << 20; 256];
+        let t1 = m1.submit_batch(&sizes, 256);
+        let t4 = m4.submit_batch(&sizes, 256);
+        assert!((t1 as f64 / t4 as f64 - 4.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn raid0_does_not_help_sync_small_io() {
+        // Figure 10(e): Ginex unchanged as SSD count grows.
+        let sizes = vec![4096u64; 5_000];
+        let t1 = model(1).submit_batch(&sizes, 16);
+        let t4 = model(4).submit_batch(&sizes, 16);
+        assert_eq!(t1, t4);
+    }
+
+    #[test]
+    fn histogram_classes() {
+        let m = model(1);
+        m.submit_batch(&[1024, 4096, 40_000, 100_000, 1 << 20, 4 << 20], 8);
+        let s = m.stats();
+        assert_eq!(s.size_hist, [2, 1, 1, 1, 1]);
+        assert_eq!(s.num_requests, 6);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = model(1);
+        m.submit_one(4096, 1);
+        assert!(m.busy_ns() > 0);
+        m.reset();
+        assert_eq!(m.busy_ns(), 0);
+        assert_eq!(m.stats().num_requests, 0);
+    }
+
+    #[test]
+    fn concurrency_clamped_to_queue_depth() {
+        let m = model(1);
+        let a = m.submit_batch(&vec![4096; 1000], 128);
+        m.reset();
+        let b = m.submit_batch(&vec![4096; 1000], 100_000);
+        assert_eq!(a, b);
+    }
+}

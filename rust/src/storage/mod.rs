@@ -1,0 +1,34 @@
+//! Storage layer (paper §3.2 layer 1).
+//!
+//! Graph topology and node features are split into fixed-size **blocks**
+//! (default 1 MB) — [`block`] defines the two on-disk formats (graph blocks
+//! hold *objects*, a node plus its adjacency, possibly spanning blocks;
+//! feature blocks hold packed f32 vectors). [`builder`] writes the stores,
+//! [`store`] reads them block-wise, [`object_index`] is the pinned
+//! `T_obj^g` table mapping node ids to blocks, [`device`] is the NVMe SSD
+//! cost model (+ RAID0) that gives benches a faithful, page-cache-immune
+//! notion of storage time, and [`engine`] is the async I/O engine.
+
+pub mod block;
+pub mod builder;
+pub mod device;
+pub mod engine;
+pub mod object_index;
+pub mod store;
+
+pub use block::{FeatureBlockLayout, GraphBlock, ObjectRecord, BLOCK_HEADER_BYTES, OBJ_HEADER_BYTES};
+pub use builder::{build_feature_store, build_graph_store, StorePaths};
+pub use device::{DeviceStats, IoClass, SsdModel, SsdSpec};
+pub use engine::IoEngine;
+pub use object_index::ObjectIndexTable;
+pub use store::{FeatureStore, GraphStore};
+
+/// Identifier of a fixed-size block within one store file.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct BlockId(pub u32);
+
+impl std::fmt::Display for BlockId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "b{}", self.0)
+    }
+}

@@ -1,0 +1,113 @@
+//! Object index table `T_obj^g` (paper §3.2 in-memory layer).
+//!
+//! "To efficiently use main memory, we only store the first and last object
+//! indices for each block in the object index table, sorted in ascending
+//! order by node IDs. The object index table is always pinned in the main
+//! memory" — it occupies 8 bytes per block (<0.01% of the graph), and maps
+//! a node id to the block(s) whose records cover it.
+
+use super::BlockId;
+use crate::util::json::Json;
+
+/// Per-block (first_node, last_node) ranges, ascending and overlapping only
+/// at hub nodes that span blocks.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ObjectIndexTable {
+    /// `ranges[b] = (first_node_id, last_node_id)` for block `b`.
+    pub ranges: Vec<(u32, u32)>,
+}
+
+impl ObjectIndexTable {
+    pub fn num_blocks(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// First block whose range contains `node` (paper Algorithm 1,
+    /// `LoadData` lines 20–24, but with binary instead of linear search).
+    pub fn block_of(&self, node: u32) -> Option<BlockId> {
+        if self.ranges.is_empty() {
+            return None;
+        }
+        // partition_point: first block with last_node >= node
+        let i = self.ranges.partition_point(|&(_, last)| last < node);
+        if i < self.ranges.len() && self.ranges[i].0 <= node && node <= self.ranges[i].1 {
+            Some(BlockId(i as u32))
+        } else {
+            None
+        }
+    }
+
+    /// All blocks containing pieces of `node` (hubs span several).
+    pub fn blocks_of(&self, node: u32) -> Vec<BlockId> {
+        let mut out = Vec::new();
+        let Some(BlockId(first)) = self.block_of(node) else { return out };
+        let mut b = first as usize;
+        while b < self.ranges.len() && self.ranges[b].0 <= node && node <= self.ranges[b].1 {
+            out.push(BlockId(b as u32));
+            b += 1;
+        }
+        out
+    }
+
+    /// In-memory size in bytes (for the paper's <0.01% claim; see tests).
+    pub fn size_bytes(&self) -> usize {
+        self.ranges.len() * 8
+    }
+
+    /// Serialize as a flat [first, last, first, last, ...] JSON array.
+    pub fn to_json(&self) -> Json {
+        Json::arr(self.ranges.iter().flat_map(|&(a, b)| [Json::num(a as f64), Json::num(b as f64)]))
+    }
+
+    /// Parse the flat-array form produced by [`Self::to_json`].
+    pub fn from_json(j: &Json) -> anyhow::Result<ObjectIndexTable> {
+        let a = j.as_arr().ok_or_else(|| anyhow::anyhow!("index must be array"))?;
+        anyhow::ensure!(a.len() % 2 == 0, "index array must have even length");
+        let ranges = a
+            .chunks(2)
+            .map(|c| (c[0].as_u64().unwrap_or(0) as u32, c[1].as_u64().unwrap_or(0) as u32))
+            .collect();
+        Ok(ObjectIndexTable { ranges })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> ObjectIndexTable {
+        // block 0: nodes 0..=4, block 1: 5..=5 (hub spanning 1-2), block 2: 5..=9, block 3: 10..=20
+        ObjectIndexTable { ranges: vec![(0, 4), (5, 5), (5, 9), (10, 20)] }
+    }
+
+    #[test]
+    fn block_of_basic() {
+        let t = table();
+        assert_eq!(t.block_of(0), Some(BlockId(0)));
+        assert_eq!(t.block_of(4), Some(BlockId(0)));
+        assert_eq!(t.block_of(5), Some(BlockId(1)));
+        assert_eq!(t.block_of(9), Some(BlockId(2)));
+        assert_eq!(t.block_of(20), Some(BlockId(3)));
+        assert_eq!(t.block_of(21), None);
+    }
+
+    #[test]
+    fn blocks_of_spanning_hub() {
+        let t = table();
+        assert_eq!(t.blocks_of(5), vec![BlockId(1), BlockId(2)]);
+        assert_eq!(t.blocks_of(7), vec![BlockId(2)]);
+        assert_eq!(t.blocks_of(99), Vec::<BlockId>::new());
+    }
+
+    #[test]
+    fn empty_table() {
+        let t = ObjectIndexTable::default();
+        assert_eq!(t.block_of(0), None);
+        assert_eq!(t.size_bytes(), 0);
+    }
+
+    #[test]
+    fn size_is_8_bytes_per_block() {
+        assert_eq!(table().size_bytes(), 32);
+    }
+}

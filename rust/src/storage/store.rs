@@ -1,0 +1,272 @@
+//! Block-wise store readers. All reads pull real bytes from the backing
+//! file *and* are accounted against the [`SsdModel`](super::device::SsdModel)
+//! so simulated storage time survives the OS page cache.
+
+use super::block::{FeatureBlockLayout, GraphBlock};
+use super::builder::{GraphStoreMeta, StorePaths};
+use super::device::SharedSsd;
+use super::object_index::ObjectIndexTable;
+use super::BlockId;
+use crate::Result;
+use byteorder::{ByteOrder, LittleEndian};
+use anyhow::Context;
+use std::fs::File;
+use std::os::unix::fs::FileExt;
+use std::sync::Arc;
+
+/// Read-only graph block store.
+pub struct GraphStore {
+    file: File,
+    pub meta: GraphStoreMeta,
+    /// CSR offsets (resident, as Ginex keeps `indptr` in memory) — used by
+    /// the baselines' per-node direct reads and by tests as ground truth.
+    pub csr_offsets: Arc<Vec<u64>>,
+    pub ssd: SharedSsd,
+}
+
+impl GraphStore {
+    /// Open a store built by [`super::builder::build_graph_store`].
+    pub fn open(paths: &StorePaths, ssd: SharedSsd) -> Result<GraphStore> {
+        let text = std::fs::read_to_string(&paths.graph_meta).context("reading graph meta")?;
+        let meta = GraphStoreMeta::from_json(&crate::util::json::Json::parse(&text)?)?;
+        let file = File::open(&paths.graph_blocks)?;
+        let raw = std::fs::read(&paths.csr_offsets)?;
+        let mut offsets = vec![0u64; raw.len() / 8];
+        LittleEndian::read_u64_into(&raw, &mut offsets);
+        Ok(GraphStore { file, meta, csr_offsets: Arc::new(offsets), ssd })
+    }
+
+    #[inline]
+    pub fn block_size(&self) -> usize {
+        self.meta.block_size
+    }
+
+    #[inline]
+    pub fn num_blocks(&self) -> u32 {
+        self.meta.num_blocks
+    }
+
+    #[inline]
+    pub fn index(&self) -> &ObjectIndexTable {
+        &self.meta.index
+    }
+
+    /// Read one block (block-wise storage I/O). `concurrency` is the number
+    /// of outstanding requests the caller maintains (drives the device
+    /// model's queue-depth term).
+    pub fn read_block(&self, b: BlockId, concurrency: u32) -> Result<GraphBlock> {
+        Ok(GraphBlock::decode(&self.read_block_raw(b, concurrency)?))
+    }
+
+    /// Read raw block bytes.
+    pub fn read_block_raw(&self, b: BlockId, concurrency: u32) -> Result<Vec<u8>> {
+        let buf = self.read_block_raw_uncharged(b)?;
+        self.ssd.submit_one(self.meta.block_size as u64, concurrency);
+        Ok(buf)
+    }
+
+    /// Read raw block bytes without charging the device model (the async
+    /// [`IoEngine`](super::engine::IoEngine) batch-charges submissions).
+    pub fn read_block_raw_uncharged(&self, b: BlockId) -> Result<Vec<u8>> {
+        let bs = self.meta.block_size;
+        let mut buf = vec![0u8; bs];
+        self.file
+            .read_exact_at(&mut buf, b.0 as u64 * bs as u64)
+            .with_context(|| format!("read graph block {b}"))?;
+        Ok(buf)
+    }
+
+    /// Byte extent `(offset, len)` of node `v`'s adjacency in raw CSR terms
+    /// — what a per-node (baseline) read must fetch, before page alignment.
+    pub fn node_extent(&self, v: u32) -> (u64, u64) {
+        let s = self.csr_offsets[v as usize];
+        let e = self.csr_offsets[v as usize + 1];
+        (s * 4, (e - s) * 4)
+    }
+
+    /// Baseline-style direct read of one node's adjacency: issues a small
+    /// I/O of the node's extent rounded up to `io_unit` (Ginex's minimum is
+    /// a 4 KB page). Returns the neighbor ids. Bytes come from the block
+    /// store (decoding the covering blocks) but the *device model* is
+    /// charged for the small I/O the baseline would issue.
+    pub fn read_node_direct(&self, v: u32, io_unit: u64, concurrency: u32) -> Result<Vec<u32>> {
+        let (_, len) = self.node_extent(v);
+        let charged = (len.max(1)).next_multiple_of(io_unit);
+        self.ssd.submit_one(charged, concurrency);
+        self.read_adjacency_uncharged(v)
+    }
+
+    /// Assemble node `v`'s full adjacency from its block records without
+    /// charging the device model (callers account I/O themselves).
+    pub fn read_adjacency_uncharged(&self, v: u32) -> Result<Vec<u32>> {
+        let blocks = self.meta.index.blocks_of(v);
+        let mut adj: Vec<u32> = Vec::new();
+        for b in blocks {
+            let bs = self.meta.block_size;
+            let mut buf = vec![0u8; bs];
+            self.file.read_exact_at(&mut buf, b.0 as u64 * bs as u64)?;
+            let gb = GraphBlock::decode(&buf);
+            if let Some(r) = gb.find(v) {
+                if adj.is_empty() {
+                    adj = vec![u32::MAX; r.total_degree as usize];
+                }
+                adj[r.adj_offset as usize..r.adj_offset as usize + r.neighbors.len()]
+                    .copy_from_slice(&r.neighbors);
+            }
+        }
+        Ok(adj)
+    }
+}
+
+/// Read-only feature block store.
+pub struct FeatureStore {
+    file: File,
+    pub layout: FeatureBlockLayout,
+    pub num_nodes: usize,
+    pub ssd: SharedSsd,
+}
+
+impl FeatureStore {
+    pub fn open(
+        paths: &StorePaths,
+        layout: FeatureBlockLayout,
+        num_nodes: usize,
+        ssd: SharedSsd,
+    ) -> Result<FeatureStore> {
+        let file = File::open(&paths.feature_blocks).context("open feature store")?;
+        Ok(FeatureStore { file, layout, num_nodes, ssd })
+    }
+
+    #[inline]
+    pub fn num_blocks(&self) -> u32 {
+        self.layout.num_blocks(self.num_nodes)
+    }
+
+    /// Read one feature block (raw bytes), charged as a block I/O.
+    pub fn read_block_raw(&self, b: BlockId, concurrency: u32) -> Result<Vec<u8>> {
+        let buf = self.read_block_raw_uncharged(b)?;
+        self.ssd.submit_one(self.layout.block_size as u64, concurrency);
+        Ok(buf)
+    }
+
+    /// Read raw feature-block bytes without charging the device model.
+    pub fn read_block_raw_uncharged(&self, b: BlockId) -> Result<Vec<u8>> {
+        let bs = self.layout.block_size;
+        let mut buf = vec![0u8; bs];
+        let off = b.0 as u64 * bs as u64;
+        let flen = self.file.metadata()?.len();
+        let want = (bs as u64).min(flen.saturating_sub(off)) as usize;
+        self.file.read_exact_at(&mut buf[..want], off)?;
+        Ok(buf)
+    }
+
+    /// Extract node `v`'s vector from its (already read) block bytes.
+    pub fn feature_from_block(&self, v: u32, block: &[u8]) -> Vec<f32> {
+        let off = self.layout.slot_offset(v);
+        let d = self.layout.feature_dim;
+        let mut out = vec![0f32; d];
+        LittleEndian::read_f32_into(&block[off..off + 4 * d], &mut out);
+        out
+    }
+
+    /// Baseline-style direct read of one node's vector: small I/O of the
+    /// vector extent rounded to `io_unit` (4 KB page for Ginex).
+    pub fn read_feature_direct(&self, v: u32, io_unit: u64, concurrency: u32) -> Result<Vec<f32>> {
+        let d = self.layout.feature_dim;
+        let charged = ((d * 4) as u64).next_multiple_of(io_unit);
+        self.ssd.submit_one(charged, concurrency);
+        self.read_feature_uncharged(v)
+    }
+
+    /// Read node `v`'s vector without charging the device model.
+    pub fn read_feature_uncharged(&self, v: u32) -> Result<Vec<f32>> {
+        let d = self.layout.feature_dim;
+        let off = self.layout.block_of(v) as u64 * self.layout.block_size as u64
+            + self.layout.slot_offset(v) as u64;
+        let mut buf = vec![0u8; 4 * d];
+        self.file.read_exact_at(&mut buf, off)?;
+        let mut out = vec![0f32; d];
+        LittleEndian::read_f32_into(&buf, &mut out);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{chung_lu, synth_feature, PowerLawParams};
+    use crate::storage::builder::{build_feature_store, build_graph_store};
+    use crate::storage::device::{SsdModel, SsdSpec};
+
+    fn setup() -> (crate::util::TempDir, StorePaths, crate::graph::CsrGraph) {
+        let g = chung_lu(&PowerLawParams { num_nodes: 400, num_edges: 4_000, ..Default::default() });
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        build_graph_store(&g, 2048, &paths).unwrap();
+        let layout = FeatureBlockLayout { block_size: 2048, feature_dim: 16 };
+        build_feature_store(400, layout, &paths, 9).unwrap();
+        (dir, paths, g)
+    }
+
+    #[test]
+    fn adjacency_roundtrip_via_blocks() {
+        let (_d, paths, g) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let store = GraphStore::open(&paths, ssd).unwrap();
+        for v in (0..400u32).step_by(17) {
+            let adj = store.read_adjacency_uncharged(v).unwrap();
+            assert_eq!(adj, g.neighbors(v), "node {v}");
+        }
+    }
+
+    #[test]
+    fn block_read_charges_device() {
+        let (_d, paths, _g) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let store = GraphStore::open(&paths, ssd.clone()).unwrap();
+        store.read_block(BlockId(0), 8).unwrap();
+        let s = ssd.stats();
+        assert_eq!(s.num_requests, 1);
+        assert_eq!(s.total_bytes, 2048);
+    }
+
+    #[test]
+    fn direct_node_read_charges_small_io() {
+        let (_d, paths, g) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let store = GraphStore::open(&paths, ssd.clone()).unwrap();
+        let adj = store.read_node_direct(5, 4096, 1).unwrap();
+        assert_eq!(adj, g.neighbors(5));
+        let s = ssd.stats();
+        assert_eq!(s.num_requests, 1);
+        assert_eq!(s.total_bytes, 4096); // page-aligned small I/O
+    }
+
+    #[test]
+    fn feature_roundtrip() {
+        let (_d, paths, _g) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let layout = FeatureBlockLayout { block_size: 2048, feature_dim: 16 };
+        let fs = FeatureStore::open(&paths, layout, 400, ssd.clone()).unwrap();
+        for v in (0..400u32).step_by(31) {
+            let f = fs.read_feature_uncharged(v).unwrap();
+            assert_eq!(f, synth_feature(v, 16, 9), "node {v}");
+        }
+        // block path agrees with direct path
+        let blk = fs.read_block_raw(BlockId(fs.layout.block_of(33)), 4).unwrap();
+        assert_eq!(fs.feature_from_block(33, &blk), fs.read_feature_uncharged(33).unwrap());
+    }
+
+    #[test]
+    fn feature_store_last_partial_block() {
+        let (_d, paths, _g) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let layout = FeatureBlockLayout { block_size: 2048, feature_dim: 16 };
+        let fs = FeatureStore::open(&paths, layout, 400, ssd).unwrap();
+        let last = BlockId(fs.num_blocks() - 1);
+        let blk = fs.read_block_raw(last, 1).unwrap();
+        assert_eq!(blk.len(), 2048);
+        // node 399 decodes correctly from the last block
+        assert_eq!(fs.feature_from_block(399, &blk), synth_feature(399, 16, 9));
+    }
+}

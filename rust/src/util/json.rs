@@ -1,0 +1,356 @@
+//! Minimal JSON value type with parser and writer — enough for the
+//! artifact manifests (`aot.py` ↔ [`crate::runtime`]) and store metadata.
+//! Supports the full JSON grammar except exotic number forms; strings
+//! handle the standard escapes.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// A JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---- constructors -------------------------------------------------
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    pub fn num(n: impl Into<f64>) -> Json {
+        Json::Num(n.into())
+    }
+
+    pub fn str(s: impl Into<String>) -> Json {
+        Json::Str(s.into())
+    }
+
+    // ---- accessors ----------------------------------------------------
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_f64().map(|n| n as usize)
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64().map(|n| n as u64)
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// `get` that errors with the key name (manifest parsing).
+    pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
+        self.get(key).ok_or_else(|| anyhow::anyhow!("missing key {key:?}"))
+    }
+
+    // ---- serialization -------------------------------------------------
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    let _ = write!(out, "{}", *n as i64);
+                } else {
+                    let _ = write!(out, "{n}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                out.push('{');
+                for (i, (k, v)) in map.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    // ---- parsing --------------------------------------------------------
+    pub fn parse(text: &str) -> anyhow::Result<Json> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        anyhow::ensure!(pos == bytes.len(), "trailing garbage at byte {pos}");
+        Ok(v)
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> anyhow::Result<Json> {
+    skip_ws(b, pos);
+    anyhow::ensure!(*pos < b.len(), "unexpected end of input");
+    match b[*pos] {
+        b'{' => {
+            *pos += 1;
+            let mut map = BTreeMap::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b'}' {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = match parse_value(b, pos)? {
+                    Json::Str(s) => s,
+                    other => anyhow::bail!("object key must be string, got {other:?}"),
+                };
+                skip_ws(b, pos);
+                anyhow::ensure!(*pos < b.len() && b[*pos] == b':', "expected ':' at {pos}");
+                *pos += 1;
+                let val = parse_value(b, pos)?;
+                map.insert(key, val);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b'}') => {
+                        *pos += 1;
+                        return Ok(Json::Obj(map));
+                    }
+                    _ => anyhow::bail!("expected ',' or '}}' at {pos}"),
+                }
+            }
+        }
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if *pos < b.len() && b[*pos] == b']' {
+                *pos += 1;
+                return Ok(Json::Arr(items));
+            }
+            loop {
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b',') => *pos += 1,
+                    Some(b']') => {
+                        *pos += 1;
+                        return Ok(Json::Arr(items));
+                    }
+                    _ => anyhow::bail!("expected ',' or ']' at {pos}"),
+                }
+            }
+        }
+        b'"' => {
+            *pos += 1;
+            let mut s = String::new();
+            loop {
+                anyhow::ensure!(*pos < b.len(), "unterminated string");
+                match b[*pos] {
+                    b'"' => {
+                        *pos += 1;
+                        return Ok(Json::Str(s));
+                    }
+                    b'\\' => {
+                        *pos += 1;
+                        anyhow::ensure!(*pos < b.len(), "bad escape");
+                        match b[*pos] {
+                            b'"' => s.push('"'),
+                            b'\\' => s.push('\\'),
+                            b'/' => s.push('/'),
+                            b'n' => s.push('\n'),
+                            b't' => s.push('\t'),
+                            b'r' => s.push('\r'),
+                            b'b' => s.push('\u{8}'),
+                            b'f' => s.push('\u{c}'),
+                            b'u' => {
+                                anyhow::ensure!(*pos + 4 < b.len(), "bad \\u escape");
+                                let hex = std::str::from_utf8(&b[*pos + 1..*pos + 5])?;
+                                let code = u32::from_str_radix(hex, 16)?;
+                                s.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                                *pos += 4;
+                            }
+                            c => anyhow::bail!("bad escape \\{}", c as char),
+                        }
+                        *pos += 1;
+                    }
+                    _ => {
+                        // copy a full UTF-8 scalar
+                        let start = *pos;
+                        let mut end = start + 1;
+                        while end < b.len() && (b[end] & 0xC0) == 0x80 {
+                            end += 1;
+                        }
+                        s.push_str(std::str::from_utf8(&b[start..end])?);
+                        *pos = end;
+                    }
+                }
+            }
+        }
+        b't' => {
+            anyhow::ensure!(b[*pos..].starts_with(b"true"), "bad literal at {pos}");
+            *pos += 4;
+            Ok(Json::Bool(true))
+        }
+        b'f' => {
+            anyhow::ensure!(b[*pos..].starts_with(b"false"), "bad literal at {pos}");
+            *pos += 5;
+            Ok(Json::Bool(false))
+        }
+        b'n' => {
+            anyhow::ensure!(b[*pos..].starts_with(b"null"), "bad literal at {pos}");
+            *pos += 4;
+            Ok(Json::Null)
+        }
+        _ => {
+            let start = *pos;
+            while *pos < b.len()
+                && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+            {
+                *pos += 1;
+            }
+            let text = std::str::from_utf8(&b[start..*pos])?;
+            Ok(Json::Num(text.parse::<f64>().map_err(|e| anyhow::anyhow!("bad number {text:?}: {e}"))?))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_nested() {
+        let j = Json::obj(vec![
+            ("name", Json::str("gcn")),
+            ("batch", Json::num(64)),
+            ("fanouts", Json::arr([Json::num(5), Json::num(5)])),
+            ("lr", Json::num(0.05)),
+            ("ok", Json::Bool(true)),
+            ("none", Json::Null),
+        ]);
+        let text = j.to_string();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back, j);
+        assert_eq!(back.get("batch").unwrap().as_usize(), Some(64));
+        assert_eq!(back.get("fanouts").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn parses_python_json_output() {
+        // what python's json.dumps produces (spaces after : and ,)
+        let text = r#"{"model": "sage", "params": [{"name": "w0", "shape": [32, 16]}], "lr": 1e-2}"#;
+        let j = Json::parse(text).unwrap();
+        assert_eq!(j.get("model").unwrap().as_str(), Some("sage"));
+        let p = &j.get("params").unwrap().as_arr().unwrap()[0];
+        assert_eq!(p.get("shape").unwrap().as_arr().unwrap()[0].as_usize(), Some(32));
+        assert_eq!(j.get("lr").unwrap().as_f64(), Some(0.01));
+    }
+
+    #[test]
+    fn string_escapes() {
+        let j = Json::Str("a\"b\\c\nd\tö".into());
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back, j);
+    }
+
+    #[test]
+    fn negative_and_float_numbers() {
+        let j = Json::parse("[-3, 2.5, -1.25e2]").unwrap();
+        let a = j.as_arr().unwrap();
+        assert_eq!(a[0].as_f64(), Some(-3.0));
+        assert_eq!(a[1].as_f64(), Some(2.5));
+        assert_eq!(a[2].as_f64(), Some(-125.0));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("{} trailing").is_err());
+        assert!(Json::parse("tru").is_err());
+    }
+
+    #[test]
+    fn req_reports_key() {
+        let j = Json::obj(vec![("a", Json::num(1))]);
+        assert!(j.req("a").is_ok());
+        let e = j.req("b").unwrap_err().to_string();
+        assert!(e.contains("b"), "{e}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Small self-contained utilities standing in for crates unavailable in
+//! the offline build environment: a deterministic RNG (`rand`), a minimal
+//! JSON value type (`serde_json`), a flat config-file parser (`toml`), and
+//! a scoped temporary directory (`tempfile`).
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod tempdir;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use tempdir::TempDir;

@@ -1,0 +1,109 @@
+//! Failure injection: corrupted/truncated/missing on-disk state must
+//! surface as errors, never as wrong data or panics.
+
+use agnes::config::AgnesConfig;
+use agnes::runtime::XlaCompute;
+use agnes::storage::builder::StorePaths;
+use agnes::storage::device::{SsdModel, SsdSpec};
+use agnes::storage::store::GraphStore;
+use agnes::storage::BlockId;
+use agnes::util::TempDir;
+use agnes::AgnesRunner;
+use std::fs::OpenOptions;
+
+fn built_dataset() -> (TempDir, StorePaths) {
+    let tmp = TempDir::new().unwrap();
+    let mut c = AgnesConfig::tiny();
+    c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+    let runner = AgnesRunner::open(c).unwrap();
+    let paths = runner.dataset.paths.clone();
+    drop(runner);
+    (tmp, paths)
+}
+
+#[test]
+fn corrupt_meta_json_is_an_error() {
+    let (_tmp, paths) = built_dataset();
+    std::fs::write(&paths.graph_meta, b"{ not json !!").unwrap();
+    let err = GraphStore::open(&paths, SsdModel::new(SsdSpec::default()));
+    assert!(err.is_err(), "corrupt meta must fail to open");
+}
+
+#[test]
+fn truncated_block_file_is_an_error() {
+    let (_tmp, paths) = built_dataset();
+    let store = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
+    let last = BlockId(store.num_blocks() - 1);
+    // chop the file to half a block
+    let keep = (store.num_blocks() as u64 - 1) * store.block_size() as u64
+        + store.block_size() as u64 / 2;
+    OpenOptions::new().write(true).open(&paths.graph_blocks).unwrap().set_len(keep).unwrap();
+    let err = store.read_block(last, 1);
+    assert!(err.is_err(), "truncated block must fail, got {err:?}");
+    // earlier blocks still readable
+    assert!(store.read_block(BlockId(0), 1).is_ok());
+}
+
+#[test]
+fn meta_block_count_mismatch_detected() {
+    let (_tmp, paths) = built_dataset();
+    // claim one more block than the file holds
+    let text = std::fs::read_to_string(&paths.graph_meta).unwrap();
+    let j = agnes::util::Json::parse(&text).unwrap();
+    let n = j.get("num_blocks").unwrap().as_u64().unwrap();
+    let bumped = text.replacen(
+        &format!("\"num_blocks\":{n}"),
+        &format!("\"num_blocks\":{}", n + 1),
+        1,
+    );
+    std::fs::write(&paths.graph_meta, bumped).unwrap();
+    let store = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
+    assert!(store.read_block(BlockId(n as u32), 1).is_err(), "phantom block must error");
+}
+
+#[test]
+fn missing_artifacts_reported_cleanly() {
+    let tmp = TempDir::new().unwrap();
+    let err = match XlaCompute::load(tmp.path(), "sage") {
+        Err(e) => e,
+        Ok(_) => panic!("must fail without artifacts"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("make artifacts"), "actionable message, got: {msg}");
+}
+
+#[test]
+fn params_bin_size_mismatch_is_an_error() {
+    // only runs when real artifacts exist
+    let src = std::path::Path::new("artifacts");
+    if !src.join("sage.manifest.json").exists() {
+        eprintln!("SKIP: no artifacts");
+        return;
+    }
+    let tmp = TempDir::new().unwrap();
+    for f in ["sage.hlo.txt", "sage.manifest.json"] {
+        std::fs::copy(src.join(f), tmp.path().join(f)).unwrap();
+    }
+    std::fs::write(tmp.path().join("sage.params.bin"), vec![0u8; 12]).unwrap();
+    let err = match XlaCompute::load(tmp.path(), "sage") {
+        Err(e) => e,
+        Ok(_) => panic!("must fail on bad params.bin"),
+    };
+    assert!(format!("{err:#}").contains("params.bin"), "{err:#}");
+}
+
+#[test]
+fn unknown_dataset_preset_is_an_error() {
+    let tmp = TempDir::new().unwrap();
+    let mut c = AgnesConfig::tiny();
+    c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+    c.dataset.name = "not-a-dataset".into();
+    assert!(AgnesRunner::open(c).is_err());
+}
+
+#[test]
+fn zero_sized_feature_dim_rejected_at_kernel_boundary() {
+    // config sanity: feature_dim 0 would divide by zero in the layout
+    let layout = agnes::storage::block::FeatureBlockLayout { block_size: 4096, feature_dim: 1 };
+    assert!(layout.per_block() >= 1);
+}

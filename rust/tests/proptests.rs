@@ -1,0 +1,227 @@
+//! Property-based tests over randomized inputs (seeded, shrink-free —
+//! the offline environment has no proptest crate, so properties are
+//! checked over a deterministic fan of generated cases; failures print
+//! the seed for reproduction).
+
+use agnes::graph::generate::{chung_lu, PowerLawParams};
+use agnes::graph::layout::{bfs_order, degree_order, shuffle_order};
+use agnes::graph::CsrGraph;
+use agnes::memory::BufferPool;
+use agnes::op::bucket::Bucket;
+use agnes::storage::block::{FeatureBlockLayout, GraphBlock, ObjectRecord};
+use agnes::storage::builder::{build_feature_store, build_graph_store, StorePaths};
+use agnes::storage::device::{SsdModel, SsdSpec};
+use agnes::storage::store::{FeatureStore, GraphStore};
+use agnes::storage::{BlockId, IoEngine};
+use agnes::util::{Rng, TempDir};
+use std::sync::Arc;
+
+fn random_graph(rng: &mut Rng) -> CsrGraph {
+    let n = 50 + rng.gen_range(400);
+    let e = n * (2 + rng.gen_range(12));
+    chung_lu(&PowerLawParams {
+        num_nodes: n,
+        num_edges: e,
+        exponent: 2.0 + rng.gen_f64(),
+        seed: rng.next_u64(),
+    })
+}
+
+/// Property: any graph round-trips through the block store at any block
+/// size — adjacency read back equals the source CSR for every node.
+#[test]
+fn prop_graph_store_roundtrip() {
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(case);
+        let g = random_graph(&mut rng);
+        let block_size = [512, 1024, 4096, 65536][rng.gen_range(4)];
+        let tmp = TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(tmp.path());
+        build_graph_store(&g, block_size, &paths).unwrap();
+        let store = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
+        for v in (0..g.num_nodes() as u32).step_by(1 + case as usize) {
+            assert_eq!(
+                store.read_adjacency_uncharged(v).unwrap(),
+                g.neighbors(v),
+                "case {case} block_size {block_size} node {v}"
+            );
+        }
+    }
+}
+
+/// Property: the object index covers every node, ranges ascend, and
+/// `block_of` agrees with a linear scan.
+#[test]
+fn prop_object_index_sound() {
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(100 + case);
+        let g = random_graph(&mut rng);
+        let tmp = TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(tmp.path());
+        let meta = build_graph_store(&g, 2048, &paths).unwrap();
+        for w in meta.index.ranges.windows(2) {
+            assert!(w[0].0 <= w[0].1 && w[0].1 <= w[1].0, "case {case}: {w:?}");
+        }
+        for v in 0..g.num_nodes() as u32 {
+            let linear = meta
+                .index
+                .ranges
+                .iter()
+                .position(|&(a, b)| a <= v && v <= b)
+                .map(|i| BlockId(i as u32));
+            assert_eq!(meta.index.block_of(v), linear, "case {case} node {v}");
+        }
+    }
+}
+
+/// Property: every layout is a permutation and relabeling preserves the
+/// degree multiset.
+#[test]
+fn prop_layouts_preserve_structure() {
+    for case in 0..6u64 {
+        let mut rng = Rng::seed_from_u64(200 + case);
+        let g = random_graph(&mut rng);
+        for perm in [degree_order(&g), bfs_order(&g), shuffle_order(g.num_nodes(), case)] {
+            let mut seen = vec![false; perm.len()];
+            for &p in &perm {
+                assert!(!seen[p as usize], "case {case}: not a permutation");
+                seen[p as usize] = true;
+            }
+            let r = g.relabel(&perm);
+            let mut d1: Vec<usize> = (0..g.num_nodes() as u32).map(|v| g.degree(v)).collect();
+            let mut d2: Vec<usize> = (0..r.num_nodes() as u32).map(|v| r.degree(v)).collect();
+            d1.sort_unstable();
+            d2.sort_unstable();
+            assert_eq!(d1, d2, "case {case}: degree multiset changed");
+            assert_eq!(g.num_edges(), r.num_edges());
+        }
+    }
+}
+
+/// Property: graph-block encode/decode round-trips arbitrary record sets.
+#[test]
+fn prop_block_codec_roundtrip() {
+    for case in 0..12u64 {
+        let mut rng = Rng::seed_from_u64(300 + case);
+        let mut records = Vec::new();
+        let mut bytes = 4usize;
+        let mut node = 0u32;
+        loop {
+            let deg = rng.gen_range(40);
+            let need = GraphBlock::record_bytes(deg);
+            if bytes + need > 4096 {
+                break;
+            }
+            bytes += need;
+            records.push(ObjectRecord {
+                node_id: node,
+                total_degree: deg as u32,
+                adj_offset: 0,
+                neighbors: (0..deg as u32).map(|_| rng.next_u64() as u32).collect(),
+            });
+            node += 1 + rng.gen_range(3) as u32;
+        }
+        let b = GraphBlock { records };
+        assert_eq!(GraphBlock::decode(&b.encode(4096)), b, "case {case}");
+    }
+}
+
+/// Property: the bucket matrix partitions exactly the in-index entries —
+/// no node lost, none duplicated, rows ascending.
+#[test]
+fn prop_bucket_partitions_entries() {
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(400 + case);
+        let g = random_graph(&mut rng);
+        let tmp = TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(tmp.path());
+        let meta = build_graph_store(&g, 1024, &paths).unwrap();
+        let frontiers: Vec<Vec<u32>> = (0..3)
+            .map(|_| (0..30).map(|_| rng.gen_range(g.num_nodes()) as u32).collect())
+            .collect();
+        let bucket = Bucket::for_graph(&frontiers, &meta.index);
+        let total: usize = frontiers.iter().map(Vec::len).sum();
+        assert_eq!(bucket.num_entries(), total, "case {case}");
+        let blocks = bucket.blocks();
+        assert!(blocks.windows(2).all(|w| w[0] < w[1]), "case {case}: rows not ascending");
+        // every entry's node is inside its block's range
+        for (block, row) in &bucket.rows {
+            let (lo, hi) = meta.index.ranges[block.0 as usize];
+            for (_, entries) in row {
+                for &(_, v) in entries {
+                    assert!(lo <= v && v <= hi, "case {case}: {v} outside {lo}..={hi}");
+                }
+            }
+        }
+    }
+}
+
+/// Property: LRU pool never exceeds capacity (absent pins), never evicts
+/// a pinned frame, and `get` after `insert` always hits.
+#[test]
+fn prop_buffer_pool_invariants() {
+    for case in 0..10u64 {
+        let mut rng = Rng::seed_from_u64(500 + case);
+        let cap = 2 + rng.gen_range(6);
+        let mut pool: BufferPool<u64> = BufferPool::new(cap);
+        let mut pinned: Vec<BlockId> = Vec::new();
+        for step in 0..400 {
+            let b = BlockId(rng.gen_range(32) as u32);
+            match rng.gen_range(4) {
+                0 => {
+                    pool.insert(b, Arc::new(step));
+                    assert!(pool.get(b).is_some(), "case {case}: insert then get must hit");
+                }
+                1 => {
+                    let _ = pool.get(b);
+                }
+                2 => {
+                    if pool.contains(b) && pinned.len() < cap - 1 {
+                        pool.pin(b);
+                        pinned.push(b);
+                    }
+                }
+                _ => {
+                    if let Some(p) = pinned.pop() {
+                        pool.unpin(p);
+                    }
+                }
+            }
+            for &p in &pinned {
+                assert!(pool.contains(p), "case {case} step {step}: pinned frame evicted");
+            }
+            if pool.stats().pin_stalls == 0 {
+                assert!(pool.len() <= cap, "case {case}: overflow without pin stall");
+            }
+        }
+    }
+}
+
+/// Property: feature reads through blocks equal direct reads for random
+/// node sets, dims, and block sizes.
+#[test]
+fn prop_feature_store_consistent() {
+    for case in 0..6u64 {
+        let mut rng = Rng::seed_from_u64(600 + case);
+        let n = 100 + rng.gen_range(400);
+        let dim = 1 + rng.gen_range(64);
+        let block_size = [512, 2048, 8192][rng.gen_range(3)];
+        let layout = FeatureBlockLayout { block_size, feature_dim: dim };
+        let tmp = TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(tmp.path());
+        build_feature_store(n, layout, &paths, case).unwrap();
+        let fs = FeatureStore::open(&paths, layout, n, SsdModel::new(SsdSpec::default())).unwrap();
+        let engine = IoEngine::new(2, 2);
+        for _ in 0..20 {
+            let v = rng.gen_range(n) as u32;
+            let direct = fs.read_feature_uncharged(v).unwrap();
+            let blocks = engine.read_feature_blocks(&fs, &[BlockId(layout.block_of(v))]).unwrap();
+            assert_eq!(
+                fs.feature_from_block(v, &blocks[0]),
+                direct,
+                "case {case} node {v} dim {dim} bs {block_size}"
+            );
+            assert_eq!(direct, agnes::graph::generate::synth_feature(v, dim, case));
+        }
+    }
+}
