@@ -73,9 +73,38 @@ fn main() -> anyhow::Result<()> {
 
     println!("\n=== Figure 2(c): compute utilization ===\n");
     util.finish();
+
+    // AGNES's answer to 2(a): the staged pipeline executor hides data
+    // preparation behind compute. Same config, same work — only the
+    // schedule changes, so work_s is constant while span_s shrinks.
+    println!("\n=== Pipelined epoch executor: prepare/compute overlap (AGNES, TW) ===\n");
+    let mut t3 = Table::new(
+        "fig2d_pipeline_overlap",
+        &["mode", "depth", "work_s", "span_s", "overlap_pct", "stall_ms", "backpressure_ms"],
+    );
+    for depth in [1usize, 2, 4] {
+        let mut config = bench_config("tw", 0.1);
+        config.train.pipeline_depth = depth;
+        let mut compute = ModeledCompute::new(MODELED_COMPUTE_NS);
+        let r = run_epoch_by_name("agnes", &config, &mut compute)?;
+        let m = &r.metrics;
+        t3.row(vec![
+            (if depth <= 1 { "sequential" } else { "pipelined" }).into(),
+            depth.to_string(),
+            secs(m.total_ns()),
+            secs(m.span_ns()),
+            format!("{:.1}", m.overlap_fraction() * 100.0),
+            format!("{:.1}", m.prep_stall_ns as f64 / 1e6),
+            format!("{:.1}", m.prep_backpressure_ns as f64 / 1e6),
+        ]);
+    }
+    t3.finish();
+
     println!(
-        "\nShape check vs paper: prep dominates (up to ~96%), and the I/O \
-         distribution mass sits in the smallest class."
+        "\nShape check vs paper: prep dominates (up to ~96%), the I/O \
+         distribution mass sits in the smallest class, and with \
+         pipeline_depth >= 2 the epoch span drops below the sequential \
+         prep+compute sum (preparation hidden behind computation)."
     );
     Ok(())
 }

@@ -7,7 +7,7 @@
 
 use agnes::config::AgnesConfig;
 use agnes::coordinator::NullCompute;
-use agnes::memory::{BufferPool, FeatureCache};
+use agnes::memory::{SharedBufferPool, SharedFeatureCache};
 use agnes::op::bucket::Bucket;
 use agnes::op::{gather_hyperbatch, sample_hyperbatch};
 use agnes::storage::block::GraphBlock;
@@ -59,9 +59,9 @@ fn main() -> anyhow::Result<()> {
 
     // 3. hyperbatch sampling sweep
     let engine = IoEngine::new(config.io.num_threads, config.io.async_depth);
-    let mut pool = BufferPool::new(config.graph_buffer_blocks());
+    let pool = SharedBufferPool::new(config.graph_buffer_blocks());
     let (out, dt) = time(|| {
-        sample_hyperbatch(&runner.graph_store, &mut pool, &engine, hb, &[10, 10, 10], 1).unwrap()
+        sample_hyperbatch(&runner.graph_store, &pool, &engine, hb, &[10, 10, 10], 1).unwrap()
     });
     let sampled = out.total_sampled();
     t.row(vec![
@@ -74,10 +74,10 @@ fn main() -> anyhow::Result<()> {
     // 4. hyperbatch gather sweep
     let node_sets: Vec<Vec<u32>> = (0..hb.len()).map(|mb| out.flat_nodes(mb)).collect();
     let gathered: usize = node_sets.iter().map(Vec::len).sum();
-    let mut fpool = BufferPool::new(config.feature_buffer_blocks());
-    let mut cache = FeatureCache::new(config.memory.feature_cache_entries, 2);
+    let fpool = SharedBufferPool::new(config.feature_buffer_blocks());
+    let cache = SharedFeatureCache::new(config.memory.feature_cache_entries, 2);
     let (_, dt) = time(|| {
-        gather_hyperbatch(&runner.feature_store, &mut fpool, &mut cache, &engine, &node_sets)
+        gather_hyperbatch(&runner.feature_store, &fpool, &cache, &engine, &node_sets)
             .unwrap()
     });
     t.row(vec![

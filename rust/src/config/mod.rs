@@ -180,6 +180,11 @@ pub struct TrainConfig {
     /// Fraction of nodes that are labeled training targets.
     pub target_fraction: f64,
     pub seed: u64,
+    /// Staged-pipeline depth of the epoch executor: number of prepared
+    /// hyperbatches allowed in flight. `0`/`1` = strictly sequential
+    /// (prepare, then compute — the no-overlap ablation); `>= 2` overlaps
+    /// hyperbatch *k+1*'s data preparation with hyperbatch *k*'s compute.
+    pub pipeline_depth: usize,
 }
 
 impl Default for TrainConfig {
@@ -192,6 +197,7 @@ impl Default for TrainConfig {
             epochs: 1,
             target_fraction: 0.1,
             seed: 1,
+            pipeline_depth: 2,
         }
     }
 }
@@ -208,10 +214,50 @@ pub struct AgnesConfig {
 
 impl AgnesConfig {
     /// Load from a flat `[section]` / `key = value` file; unknown keys are
-    /// an error (catches typos), missing keys keep their defaults.
+    /// an error naming the offending `section.key` (catches typos),
+    /// missing keys keep their defaults, and the result is validated
+    /// fail-fast with errors naming the field (see [`Self::validate`]).
+    pub fn from_toml(path: impl AsRef<Path>) -> crate::Result<AgnesConfig> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {path:?}: {e}"))?;
+        let c = Self::from_toml_str(&text)
+            .map_err(|e| anyhow::anyhow!("config {path:?}: {e}"))?;
+        c.validate().map_err(|e| anyhow::anyhow!("config {path:?}: {e}"))?;
+        Ok(c)
+    }
+
+    /// Back-compat alias of [`Self::from_toml`].
     pub fn from_toml_file(path: impl AsRef<Path>) -> crate::Result<AgnesConfig> {
-        let text = std::fs::read_to_string(path)?;
-        Self::from_toml_str(&text)
+        Self::from_toml(path)
+    }
+
+    /// Fail fast on out-of-range values, naming the `section.key` that is
+    /// wrong so config errors are actionable.
+    pub fn validate(&self) -> crate::Result<()> {
+        anyhow::ensure!(self.dataset.feature_dim > 0, "dataset.feature_dim must be >= 1");
+        anyhow::ensure!(self.dataset.scale > 0.0, "dataset.scale must be > 0");
+        anyhow::ensure!(!self.dataset.name.is_empty(), "dataset.name is missing");
+        anyhow::ensure!(self.device.bandwidth > 0.0, "device.bandwidth must be > 0");
+        anyhow::ensure!(self.device.num_ssds >= 1, "device.num_ssds must be >= 1");
+        anyhow::ensure!(self.io.block_size >= 64, "io.block_size must be >= 64 bytes");
+        anyhow::ensure!(self.io.num_threads >= 1, "io.num_threads must be >= 1");
+        anyhow::ensure!(self.train.minibatch_size >= 1, "train.minibatch_size must be >= 1");
+        anyhow::ensure!(self.train.hyperbatch_size >= 1, "train.hyperbatch_size must be >= 1");
+        anyhow::ensure!(!self.train.fanouts.is_empty(), "train.fanouts is missing (e.g. [10, 10, 10])");
+        anyhow::ensure!(
+            self.train.fanouts.iter().all(|&f| f >= 1),
+            "train.fanouts entries must be >= 1"
+        );
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.train.target_fraction),
+            "train.target_fraction must be in [0, 1]"
+        );
+        anyhow::ensure!(
+            self.train.pipeline_depth <= 64,
+            "train.pipeline_depth must be <= 64 (each unit buffers a prepared hyperbatch)"
+        );
+        Ok(())
     }
 
     pub fn from_toml_str(text: &str) -> crate::Result<AgnesConfig> {
@@ -276,6 +322,7 @@ impl AgnesConfig {
             ("train", "epochs") => self.train.epochs = p(value)?,
             ("train", "target_fraction") => self.train.target_fraction = p(value)?,
             ("train", "seed") => self.train.seed = p(value)?,
+            ("train", "pipeline_depth") => self.train.pipeline_depth = p(value)?,
             _ => return Err(format!("unknown key {section}.{key}")),
         }
         Ok(())
@@ -317,6 +364,7 @@ impl AgnesConfig {
         w(&format!("epochs = {}", self.train.epochs));
         w(&format!("target_fraction = {}", self.train.target_fraction));
         w(&format!("seed = {}", self.train.seed));
+        w(&format!("pipeline_depth = {}", self.train.pipeline_depth));
         out
     }
 
@@ -392,6 +440,7 @@ mod tests {
         let mut c = AgnesConfig::tiny();
         c.train.fanouts = vec![7, 3, 2];
         c.device.num_ssds = 4;
+        c.train.pipeline_depth = 5;
         let text = c.to_toml();
         let back = AgnesConfig::from_toml_str(&text).unwrap();
         assert_eq!(back.train.fanouts, vec![7, 3, 2]);
@@ -399,6 +448,39 @@ mod tests {
         assert_eq!(back.dataset.name, "tiny");
         assert_eq!(back.io.block_size, 16 << 10);
         assert_eq!(back.dataset.layout, Layout::Degree);
+        assert_eq!(back.train.pipeline_depth, 5);
+    }
+
+    #[test]
+    fn example_config_parses_and_validates() {
+        // the committed example file must stay loadable
+        let text = include_str!("../../../agnes.example.toml");
+        let c = AgnesConfig::from_toml_str(text).unwrap();
+        c.validate().unwrap();
+        assert_eq!(c.train.pipeline_depth, 2);
+        assert_eq!(c.io.block_size, 1 << 20);
+        assert_eq!(c.train.fanouts, vec![10, 10, 10]);
+    }
+
+    #[test]
+    fn from_toml_names_missing_file() {
+        let err = AgnesConfig::from_toml("/definitely/not/here.toml").unwrap_err();
+        assert!(err.to_string().contains("not/here.toml"), "{err}");
+    }
+
+    #[test]
+    fn validate_names_bad_field() {
+        let mut c = AgnesConfig::default();
+        c.train.fanouts.clear();
+        let err = c.validate().unwrap_err();
+        assert!(err.to_string().contains("train.fanouts"), "{err}");
+        let mut c = AgnesConfig::default();
+        c.io.num_threads = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("io.num_threads"));
+        let mut c = AgnesConfig::default();
+        c.train.pipeline_depth = 1000;
+        assert!(c.validate().unwrap_err().to_string().contains("train.pipeline_depth"));
+        assert!(AgnesConfig::default().validate().is_ok());
     }
 
     #[test]

@@ -50,6 +50,13 @@ pub trait ComputeBackend {
     fn name(&self) -> &'static str {
         "compute"
     }
+
+    /// Cumulative *simulated* compute nanoseconds (0 for real backends).
+    /// The epoch executor samples this around each hyperbatch so modeled
+    /// compute participates in the pipeline span accounting.
+    fn simulated_ns(&self) -> u64 {
+        0
+    }
 }
 
 /// No computation (prep-only benches).
@@ -90,6 +97,10 @@ impl ComputeBackend for ModeledCompute {
 
     fn name(&self) -> &'static str {
         "modeled"
+    }
+
+    fn simulated_ns(&self) -> u64 {
+        self.simulated_ns
     }
 }
 

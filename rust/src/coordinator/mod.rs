@@ -3,8 +3,23 @@
 //! run the hyperbatch sampling sweep, the hyperbatch gathering sweep, and
 //! hand each minibatch to the computation backend.
 //!
+//! ## Pipelined epoch executor
+//!
+//! With `train.pipeline_depth >= 2` the epoch runs as a **staged
+//! pipeline**: a preparation stage (sampling sweep + gathering sweep for
+//! hyperbatch *k+1*) runs on a worker thread and feeds prepared
+//! [`MinibatchData`] through a bounded channel to the compute stage
+//! consuming hyperbatch *k* — data preparation hides behind computation
+//! (paper §3.4 (4): threads never idle on I/O), while the bounded depth
+//! caps how many prepared hyperbatches sit in memory. Preparation order,
+//! sampling RNG, and cache behavior are identical to the sequential
+//! schedule, so loss/accuracy and device request counts match the
+//! `pipeline_depth <= 1` run bit-for-bit.
+//!
 //! Setting `hyperbatch_size = 1` degenerates to per-minibatch processing —
-//! that is exactly the paper's **AGNES-No** ablation arm (Figure 8).
+//! that is exactly the paper's **AGNES-No** ablation arm (Figure 8); and
+//! `pipeline_depth <= 1` degenerates to the strictly sequential epoch
+//! (the no-overlap ablation).
 
 pub mod compute;
 pub mod data;
@@ -14,8 +29,8 @@ pub use data::{prepare_dataset, PreparedDataset};
 
 use crate::config::AgnesConfig;
 use crate::graph::generate::synth_label;
-use crate::memory::{BufferPool, FeatureCache};
-use crate::metrics::{RunMetrics, StageTimer};
+use crate::memory::{SharedBufferPool, SharedFeatureCache};
+use crate::metrics::{RunMetrics, SpanModel, StageTimer};
 use crate::op::{
     gather_hyperbatch, make_hyperbatches, make_minibatches, sample_hyperbatch, select_targets,
 };
@@ -24,6 +39,9 @@ use crate::storage::device::{SharedSsd, SsdModel};
 use crate::storage::store::{FeatureStore, GraphStore};
 use crate::storage::IoEngine;
 use crate::Result;
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
 
 /// Per-epoch summary returned alongside metrics.
 #[derive(Debug, Clone, Default)]
@@ -33,16 +51,58 @@ pub struct EpochResult {
     pub accuracy: f32,
 }
 
+/// One prepared hyperbatch flowing from the preparation stage to the
+/// compute stage.
+struct PreparedHyperbatch {
+    minibatches: Vec<MinibatchData>,
+    /// This hyperbatch's preparation metrics (wall + simulated I/O).
+    metrics: RunMetrics,
+    /// Total preparation work of this hyperbatch for span accounting.
+    prep_work_ns: u64,
+}
+
+/// Running loss/accuracy tally across an epoch's train steps.
+#[derive(Default)]
+struct EpochTally {
+    loss_sum: f64,
+    correct: u64,
+    total: u64,
+    steps: u64,
+}
+
+impl EpochTally {
+    fn add(&mut self, r: StepResult) {
+        self.loss_sum += r.loss as f64;
+        self.correct += r.correct as u64;
+        self.total += r.total as u64;
+        self.steps += 1;
+    }
+
+    fn result(self, metrics: RunMetrics) -> EpochResult {
+        EpochResult {
+            metrics,
+            mean_loss: if self.steps == 0 {
+                0.0
+            } else {
+                (self.loss_sum / self.steps as f64) as f32
+            },
+            accuracy: if self.total == 0 { 0.0 } else { self.correct as f32 / self.total as f32 },
+        }
+    }
+}
+
 /// The assembled AGNES system (stores + buffers + engine), ready to train.
+/// Stores are `Arc`-shared and the in-memory layer uses shared handles so
+/// the preparation stage can run on a worker thread.
 pub struct AgnesRunner {
     pub config: AgnesConfig,
     pub dataset: PreparedDataset,
     pub ssd: SharedSsd,
-    pub graph_store: GraphStore,
-    pub feature_store: FeatureStore,
-    pub graph_pool: BufferPool<GraphBlock>,
-    pub feature_pool: BufferPool<Vec<u8>>,
-    pub feature_cache: FeatureCache,
+    pub graph_store: Arc<GraphStore>,
+    pub feature_store: Arc<FeatureStore>,
+    pub graph_pool: SharedBufferPool<GraphBlock>,
+    pub feature_pool: SharedBufferPool<Vec<u8>>,
+    pub feature_cache: SharedFeatureCache,
     pub engine: IoEngine,
 }
 
@@ -51,16 +111,20 @@ impl AgnesRunner {
     pub fn open(config: AgnesConfig) -> Result<AgnesRunner> {
         let dataset = prepare_dataset(&config)?;
         let ssd = SsdModel::new(config.device.spec());
-        let graph_store = GraphStore::open(&dataset.paths, ssd.clone())?;
+        let graph_store = Arc::new(GraphStore::open(&dataset.paths, ssd.clone())?);
         let layout = FeatureBlockLayout {
             block_size: config.io.block_size,
             feature_dim: dataset.spec.feature_dim,
         };
-        let feature_store =
-            FeatureStore::open(&dataset.paths, layout, dataset.spec.num_nodes, ssd.clone())?;
-        let graph_pool = BufferPool::new(config.graph_buffer_blocks());
-        let feature_pool = BufferPool::new(config.feature_buffer_blocks());
-        let feature_cache = FeatureCache::new(
+        let feature_store = Arc::new(FeatureStore::open(
+            &dataset.paths,
+            layout,
+            dataset.spec.num_nodes,
+            ssd.clone(),
+        )?);
+        let graph_pool = SharedBufferPool::new(config.graph_buffer_blocks());
+        let feature_pool = SharedBufferPool::new(config.feature_buffer_blocks());
+        let feature_cache = SharedFeatureCache::new(
             config.memory.feature_cache_entries,
             config.memory.feature_cache_threshold,
         );
@@ -91,9 +155,10 @@ impl AgnesRunner {
     }
 
     /// Data preparation for one hyperbatch: sampling sweep + gathering
-    /// sweep. Returns the per-minibatch compute inputs.
+    /// sweep. Returns the per-minibatch compute inputs. Takes `&self` so
+    /// the pipelined executor can run it on a preparation worker thread.
     pub fn prepare_hyperbatch(
-        &mut self,
+        &self,
         targets: &[Vec<u32>],
         metrics: &mut RunMetrics,
     ) -> Result<Vec<MinibatchData>> {
@@ -109,7 +174,7 @@ impl AgnesRunner {
             let _t = StageTimer::new(&mut metrics.sample_wall_ns);
             samples = sample_hyperbatch(
                 &self.graph_store,
-                &mut self.graph_pool,
+                &self.graph_pool,
                 &self.engine,
                 targets,
                 &fanouts,
@@ -128,8 +193,8 @@ impl AgnesRunner {
             let _t = StageTimer::new(&mut metrics.gather_wall_ns);
             gathered = gather_hyperbatch(
                 &self.feature_store,
-                &mut self.feature_pool,
-                &mut self.feature_cache,
+                &self.feature_pool,
+                &self.feature_cache,
                 &self.engine,
                 &node_sets,
             )?;
@@ -156,44 +221,169 @@ impl AgnesRunner {
         Ok(out)
     }
 
+    /// Run all of one hyperbatch's minibatches through the compute
+    /// backend. Returns the compute work (wall + simulated) for span
+    /// accounting.
+    fn run_compute(
+        compute: &mut dyn ComputeBackend,
+        minibatches: &[MinibatchData],
+        metrics: &mut RunMetrics,
+        tally: &mut EpochTally,
+    ) -> Result<u64> {
+        let sim_before = compute.simulated_ns();
+        let wall_before = metrics.compute_wall_ns;
+        for mb in minibatches {
+            let _t = StageTimer::new(&mut metrics.compute_wall_ns);
+            tally.add(compute.train_step(mb)?);
+        }
+        // wall measured through the same stage timer that feeds
+        // `compute_wall_ns`, so the sequential span is exactly the total
+        let wall = metrics.compute_wall_ns - wall_before;
+        let sim = compute.simulated_ns() - sim_before;
+        metrics.compute_sim_ns += sim;
+        Ok(wall + sim)
+    }
+
+    /// End-of-epoch snapshots shared by both executors.
+    fn finish_metrics(&self, metrics: &mut RunMetrics) {
+        metrics.graph_hit_ratio = self.graph_pool.stats().hit_ratio();
+        metrics.feature_hit_ratio = self.feature_cache.stats().hit_ratio();
+        metrics.device = self.ssd.stats();
+    }
+
     /// Run one full epoch: every hyperbatch through preparation and the
-    /// compute backend. Returns metrics and the epoch's loss/accuracy.
+    /// compute backend. With `train.pipeline_depth >= 2` preparation of
+    /// hyperbatch *k+1* overlaps computation of hyperbatch *k*; otherwise
+    /// the stages run strictly in sequence. Returns metrics and the
+    /// epoch's loss/accuracy — identical in both modes for a fixed seed.
     pub fn run_epoch(
         &mut self,
         epoch: usize,
         compute: &mut dyn ComputeBackend,
     ) -> Result<EpochResult> {
-        let mut metrics = RunMetrics::default();
-        let mut loss_sum = 0f64;
-        let mut correct = 0u64;
-        let mut total = 0u64;
-        let mut steps = 0u64;
-        for hyperbatch in self.epoch_hyperbatches(epoch) {
-            let minibatches = self.prepare_hyperbatch(&hyperbatch, &mut metrics)?;
-            for mb in &minibatches {
-                let _t = StageTimer::new(&mut metrics.compute_wall_ns);
-                let r = compute.train_step(mb)?;
-                loss_sum += r.loss as f64;
-                correct += r.correct as u64;
-                total += r.total as u64;
-                steps += 1;
-            }
+        let depth = self.config.train.pipeline_depth;
+        if depth >= 2 {
+            self.run_epoch_pipelined(epoch, compute, depth)
+        } else {
+            self.run_epoch_sequential(epoch, compute)
         }
-        metrics.graph_hit_ratio = self.graph_pool.stats().hit_ratio();
-        metrics.feature_hit_ratio = self.feature_cache.stats().hit_ratio();
-        metrics.device = self.ssd.stats();
-        Ok(EpochResult {
-            metrics,
-            mean_loss: if steps == 0 { 0.0 } else { (loss_sum / steps as f64) as f32 },
-            accuracy: if total == 0 { 0.0 } else { correct as f32 / total as f32 },
-        })
+    }
+
+    /// The strictly sequential schedule (`pipeline_depth <= 1`): finish
+    /// preparing hyperbatch *k* before computing on it, compute before
+    /// preparing *k+1* — the paper's original Algorithm 1 loop.
+    fn run_epoch_sequential(
+        &self,
+        epoch: usize,
+        compute: &mut dyn ComputeBackend,
+    ) -> Result<EpochResult> {
+        let mut metrics = RunMetrics { pipeline_depth: 1, ..Default::default() };
+        let mut tally = EpochTally::default();
+        let mut span = SpanModel::new(1);
+        let epoch_t0 = Instant::now();
+        for hyperbatch in self.epoch_hyperbatches(epoch) {
+            let prep_before = metrics.prep_ns();
+            let minibatches = self.prepare_hyperbatch(&hyperbatch, &mut metrics)?;
+            let prep_work = metrics.prep_ns() - prep_before;
+            let comp_work = Self::run_compute(compute, &minibatches, &mut metrics, &mut tally)?;
+            span.advance(prep_work, comp_work);
+        }
+        metrics.epoch_span_ns = span.span();
+        metrics.epoch_wall_ns = epoch_t0.elapsed().as_nanos() as u64;
+        self.finish_metrics(&mut metrics);
+        Ok(tally.result(metrics))
+    }
+
+    /// The staged pipeline schedule (`pipeline_depth >= 2`): a preparation
+    /// worker prepares hyperbatches in order and sends them through a
+    /// bounded channel; the calling thread consumes them in order and runs
+    /// the compute backend. In-flight accounting: one prepared hyperbatch
+    /// held by the producer (blocked in `send`), `depth - 2` buffered in
+    /// the channel, one held by the consumer (being computed) = `depth`
+    /// prepared hyperbatches resident at peak — the same bound the
+    /// [`SpanModel`] gate uses, so the reported span matches the real
+    /// schedule. Stall (compute starved) and backpressure (prepare
+    /// blocked) wall times are attributed to the metrics.
+    fn run_epoch_pipelined(
+        &self,
+        epoch: usize,
+        compute: &mut dyn ComputeBackend,
+        depth: usize,
+    ) -> Result<EpochResult> {
+        let hyperbatches = self.epoch_hyperbatches(epoch);
+        let n = hyperbatches.len();
+        let mut metrics = RunMetrics { pipeline_depth: depth as u32, ..Default::default() };
+        let mut tally = EpochTally::default();
+        let mut span = SpanModel::new(depth);
+        let epoch_t0 = Instant::now();
+        // depth 2 => rendezvous channel: the producer holds one prepared
+        // hyperbatch while the consumer computes on the other
+        let (tx, rx) = mpsc::sync_channel::<Result<PreparedHyperbatch>>(depth - 2);
+        let this: &AgnesRunner = self;
+
+        let (consumer_result, producer_join) = std::thread::scope(|s| {
+            let producer = s.spawn(move || -> u64 {
+                let mut backpressure_ns = 0u64;
+                for hb in &hyperbatches {
+                    let mut m = RunMetrics::default();
+                    let msg = this.prepare_hyperbatch(hb, &mut m).map(|minibatches| {
+                        PreparedHyperbatch { minibatches, prep_work_ns: m.prep_ns(), metrics: m }
+                    });
+                    let failed = msg.is_err();
+                    let send_t0 = Instant::now();
+                    if tx.send(msg).is_err() {
+                        break; // compute stage ended early: stop preparing
+                    }
+                    backpressure_ns += send_t0.elapsed().as_nanos() as u64;
+                    if failed {
+                        break;
+                    }
+                }
+                backpressure_ns
+            });
+
+            let consumer_result = (|| -> Result<()> {
+                for _ in 0..n {
+                    let recv_t0 = Instant::now();
+                    let msg = match rx.recv() {
+                        Ok(m) => m,
+                        // the producer only drops the channel early after a
+                        // panic (errors arrive as messages first)
+                        Err(_) => anyhow::bail!("prepare stage terminated unexpectedly"),
+                    };
+                    metrics.prep_stall_ns += recv_t0.elapsed().as_nanos() as u64;
+                    let prepared = msg?;
+                    metrics.merge(&prepared.metrics);
+                    let comp_work = Self::run_compute(
+                        compute,
+                        &prepared.minibatches,
+                        &mut metrics,
+                        &mut tally,
+                    )?;
+                    span.advance(prepared.prep_work_ns, comp_work);
+                }
+                Ok(())
+            })();
+
+            // unblock a producer stuck in `send` before joining it
+            drop(rx);
+            (consumer_result, producer.join())
+        });
+
+        metrics.prep_backpressure_ns =
+            producer_join.map_err(|_| anyhow::anyhow!("prepare stage panicked"))?;
+        consumer_result?;
+        metrics.epoch_span_ns = span.span();
+        metrics.epoch_wall_ns = epoch_t0.elapsed().as_nanos() as u64;
+        self.finish_metrics(&mut metrics);
+        Ok(tally.result(metrics))
     }
 
     /// Reset device counters and buffer statistics (between bench phases).
     pub fn reset_counters(&mut self) {
         self.ssd.reset();
         self.graph_pool.reset_stats();
-        self.feature_cache = FeatureCache::new(
+        self.feature_cache.reset(
             self.config.memory.feature_cache_entries,
             self.config.memory.feature_cache_threshold,
         );
@@ -204,18 +394,19 @@ impl AgnesRunner {
 mod tests {
     use super::*;
 
-    fn runner() -> AgnesRunner {
+    /// Test fixture: the `TempDir` guard is returned alongside the runner
+    /// and must be kept alive by the test (dropping it deletes the
+    /// dataset directory).
+    fn runner() -> (AgnesRunner, crate::util::TempDir) {
         let tmp = crate::util::TempDir::new().unwrap();
         let mut c = AgnesConfig::tiny();
         c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
-        // keep tempdir alive for the process (tests only)
-        std::mem::forget(tmp);
-        AgnesRunner::open(c).unwrap()
+        (AgnesRunner::open(c).unwrap(), tmp)
     }
 
     #[test]
     fn epoch_runs_and_counts() {
-        let mut r = runner();
+        let (mut r, _tmp) = runner();
         let res = r.run_epoch(0, &mut NullCompute).unwrap();
         let m = &res.metrics;
         let expected_targets = (r.dataset.spec.num_nodes as f64 * 0.2).round() as u64;
@@ -226,11 +417,13 @@ mod tests {
         assert!(m.sample_io_ns > 0, "sampling must touch storage");
         assert!(m.gather_io_ns > 0, "gathering must touch storage");
         assert!(m.prep_fraction() > 0.5, "prep dominates with NullCompute");
+        assert!(m.epoch_span_ns > 0, "executor must record a span");
+        assert!(m.span_ns() <= m.total_ns(), "span can never exceed total work");
     }
 
     #[test]
     fn hyperbatch_shapes_consistent() {
-        let mut r = runner();
+        let (r, _tmp) = runner();
         let hbs = r.epoch_hyperbatches(0);
         assert!(!hbs.is_empty());
         let mut metrics = RunMetrics::default();
@@ -249,7 +442,7 @@ mod tests {
 
     #[test]
     fn gathered_features_match_oracle() {
-        let mut r = runner();
+        let (r, _tmp) = runner();
         let hbs = r.epoch_hyperbatches(0);
         let mut metrics = RunMetrics::default();
         let mbs = r.prepare_hyperbatch(&hbs[0], &mut metrics).unwrap();
@@ -265,7 +458,7 @@ mod tests {
 
     #[test]
     fn epochs_shuffle_targets() {
-        let r = runner();
+        let (r, _tmp) = runner();
         let a = r.epoch_hyperbatches(0);
         let b = r.epoch_hyperbatches(1);
         assert_ne!(a[0][0], b[0][0]);
@@ -276,7 +469,9 @@ mod tests {
         // The Figure 8 effect, miniature: same work, hyperbatch on vs off.
         // Shrink the buffers below the working set so eviction pressure
         // exists (with everything resident, block reloads never happen).
-        let mut cfg = runner().config.clone();
+        let (r0, _tmp) = runner();
+        let mut cfg = r0.config.clone();
+        drop(r0);
         cfg.memory.graph_buffer_bytes = 32 << 10; // 2 blocks
         cfg.memory.feature_buffer_bytes = 32 << 10;
         cfg.memory.feature_cache_entries = 32;
@@ -293,5 +488,77 @@ mod tests {
             io_no > io_hb,
             "per-minibatch processing must issue more block I/Os ({io_no} vs {io_hb})"
         );
+    }
+
+    #[test]
+    fn pipelined_epoch_matches_sequential() {
+        // same dataset dir for both runners: identical on-disk stores
+        let (r0, _tmp) = runner();
+        let cfg = r0.config.clone();
+        drop(r0);
+        let mut cfg_seq = cfg.clone();
+        cfg_seq.train.pipeline_depth = 1;
+        let mut cfg_pipe = cfg;
+        cfg_pipe.train.pipeline_depth = 3;
+        let mut seq = AgnesRunner::open(cfg_seq).unwrap();
+        let mut pipe = AgnesRunner::open(cfg_pipe).unwrap();
+        let a = seq.run_epoch(0, &mut NullCompute).unwrap();
+        let b = pipe.run_epoch(0, &mut NullCompute).unwrap();
+        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits());
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.metrics.minibatches, b.metrics.minibatches);
+        assert_eq!(a.metrics.sampled_nodes, b.metrics.sampled_nodes);
+        assert_eq!(a.metrics.gathered_features, b.metrics.gathered_features);
+        assert_eq!(
+            a.metrics.device.num_requests, b.metrics.device.num_requests,
+            "pipelining must not change the storage access pattern"
+        );
+        assert_eq!(b.metrics.pipeline_depth, 3);
+        assert!(b.metrics.span_ns() <= b.metrics.total_ns());
+    }
+
+    #[test]
+    fn pipelined_epoch_overlaps_modeled_compute() {
+        // several hyperbatches + a modeled compute stage: the pipeline
+        // span must come in under the sequential sum of stage works
+        let (r0, _tmp) = runner();
+        let mut cfg = r0.config.clone();
+        drop(r0);
+        cfg.train.hyperbatch_size = 2; // more hyperbatches per epoch
+        cfg.train.pipeline_depth = 4;
+        let mut r = AgnesRunner::open(cfg).unwrap();
+        let mut compute = ModeledCompute::new(2_000_000);
+        let res = r.run_epoch(0, &mut compute).unwrap();
+        let m = &res.metrics;
+        assert!(m.pipeline_depth == 4);
+        assert_eq!(m.compute_sim_ns, compute.simulated_ns);
+        assert!(
+            m.span_ns() < m.total_ns(),
+            "pipeline must hide work: span {} vs total {}",
+            m.span_ns(),
+            m.total_ns()
+        );
+        assert!(m.overlap_ns() > 0);
+    }
+
+    #[test]
+    fn prepare_error_surfaces_through_pipeline() {
+        // unknown dataset never gets this far; instead force an error by
+        // truncating the feature store after open
+        let (r0, _tmp) = runner();
+        let mut cfg = r0.config.clone();
+        cfg.train.pipeline_depth = 3;
+        drop(r0);
+        let mut r = AgnesRunner::open(cfg).unwrap();
+        // chop the graph block file so the sampling sweep fails in the
+        // preparation worker; the error must cross the channel boundary
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&r.dataset.paths.graph_blocks)
+            .unwrap()
+            .set_len(1)
+            .unwrap();
+        let err = r.run_epoch(0, &mut NullCompute);
+        assert!(err.is_err(), "truncated store must fail the epoch, got {err:?}");
     }
 }

@@ -15,6 +15,7 @@
 //!   --block-size <bytes>   storage block size
 //!   --hyperbatch <n>       minibatches per hyperbatch
 //!   --minibatch <n>        targets per minibatch
+//!   --pipeline-depth <n>   prepared hyperbatches in flight (0/1 = sequential)
 //!   --threads <n>          CPU I/O threads
 //!   --ssds <n>             RAID0 array size
 //!   --model <m>            gcn | sage | gat
@@ -129,6 +130,9 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(m) = args.get::<usize>("minibatch")? {
         c.train.minibatch_size = m;
     }
+    if let Some(d) = args.get::<usize>("pipeline-depth")? {
+        c.train.pipeline_depth = d;
+    }
     if let Some(t) = args.get::<usize>("threads")? {
         c.io.num_threads = t;
     }
@@ -138,6 +142,9 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(m) = args.flags.get("model") {
         c.train.model = m.parse::<GnnModel>().map_err(|e| anyhow::anyhow!(e))?;
     }
+    // fail fast on out-of-range values whether they came from the config
+    // file or from CLI overrides
+    c.validate()?;
     Ok(c)
 }
 
@@ -164,9 +171,11 @@ fn run_system(
         let r = sys.run_training_epoch(epoch, compute)?;
         let m = &r.metrics;
         println!(
-            "epoch {epoch}: total={} prep={:.1}% sample_io={} gather_io={} \
+            "epoch {epoch}: work={} span={} overlap={:.1}% prep={:.1}% sample_io={} gather_io={} \
              loss={:.4} acc={:.3} | io: {} reqs, {}, achieved_bw={}/s",
             fmt_ns(m.total_ns()),
+            fmt_ns(m.span_ns()),
+            m.overlap_fraction() * 100.0,
             m.prep_fraction() * 100.0,
             fmt_ns(m.sample_io_ns),
             fmt_ns(m.gather_io_ns),

@@ -5,6 +5,8 @@
 
 pub mod buffer_pool;
 pub mod feature_cache;
+pub mod shared;
 
 pub use buffer_pool::{BufferPool, PoolStats};
 pub use feature_cache::{FeatureCache, FeatureCacheStats};
+pub use shared::{SharedBufferPool, SharedFeatureCache};

@@ -1,0 +1,171 @@
+//! Shared (`Send + Sync`) handles over the in-memory layer.
+//!
+//! The pipelined epoch executor runs the data-preparation stage on a
+//! worker thread while the compute stage consumes the previous
+//! hyperbatch, so the graph/feature buffers and the feature cache must be
+//! usable through shared handles instead of `&mut` borrows. These
+//! wrappers give the op layer interior mutability with the exact same
+//! semantics as the underlying [`BufferPool`] / [`FeatureCache`]:
+//! a single prepare stage drives them at a time (the executor never runs
+//! two preparation stages concurrently), so the mutex is for memory
+//! safety across the stage boundary, not for concurrency control.
+
+use super::buffer_pool::{BufferPool, PoolStats};
+use super::feature_cache::{FeatureCache, FeatureCacheStats};
+use crate::storage::BlockId;
+use std::sync::{Arc, Mutex, MutexGuard};
+
+/// A cloneable, thread-safe handle to a [`BufferPool`].
+pub struct SharedBufferPool<V> {
+    inner: Arc<Mutex<BufferPool<V>>>,
+}
+
+impl<V> Clone for SharedBufferPool<V> {
+    fn clone(&self) -> Self {
+        SharedBufferPool { inner: self.inner.clone() }
+    }
+}
+
+impl<V> SharedBufferPool<V> {
+    pub fn new(capacity: usize) -> SharedBufferPool<V> {
+        SharedBufferPool { inner: Arc::new(Mutex::new(BufferPool::new(capacity))) }
+    }
+
+    /// Lock for a compound operation (e.g. one sweep run). Never hold the
+    /// guard across a call that re-enters the pool.
+    pub fn lock(&self) -> MutexGuard<'_, BufferPool<V>> {
+        self.inner.lock().expect("buffer pool poisoned")
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.lock().capacity()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        self.lock().stats()
+    }
+
+    pub fn reset_stats(&self) {
+        self.lock().reset_stats()
+    }
+
+    pub fn get(&self, b: BlockId) -> Option<Arc<V>> {
+        self.lock().get(b)
+    }
+
+    pub fn peek(&self, b: BlockId) -> Option<Arc<V>> {
+        self.lock().peek(b)
+    }
+
+    pub fn contains(&self, b: BlockId) -> bool {
+        self.lock().contains(b)
+    }
+
+    pub fn insert(&self, b: BlockId, value: Arc<V>) -> Option<BlockId> {
+        self.lock().insert(b, value)
+    }
+
+    pub fn pin(&self, b: BlockId) {
+        self.lock().pin(b)
+    }
+
+    pub fn unpin(&self, b: BlockId) {
+        self.lock().unpin(b)
+    }
+
+    pub fn pinned(&self) -> usize {
+        self.lock().pinned()
+    }
+}
+
+/// A cloneable, thread-safe handle to a [`FeatureCache`].
+#[derive(Clone)]
+pub struct SharedFeatureCache {
+    inner: Arc<Mutex<FeatureCache>>,
+}
+
+impl SharedFeatureCache {
+    pub fn new(capacity: usize, threshold: u32) -> SharedFeatureCache {
+        SharedFeatureCache { inner: Arc::new(Mutex::new(FeatureCache::new(capacity, threshold))) }
+    }
+
+    /// Lock for a compound operation (the gather sweep holds the guard for
+    /// a pass instead of re-locking per node).
+    pub fn lock(&self) -> MutexGuard<'_, FeatureCache> {
+        self.inner.lock().expect("feature cache poisoned")
+    }
+
+    pub fn stats(&self) -> FeatureCacheStats {
+        self.lock().stats()
+    }
+
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lock().is_empty()
+    }
+
+    /// Swap in a fresh cache (epoch/bench counter resets).
+    pub fn reset(&self, capacity: usize, threshold: u32) {
+        *self.lock() = FeatureCache::new(capacity, threshold);
+    }
+
+    /// Drop residents, keep access counts (epoch boundary).
+    pub fn clear_resident(&self) {
+        self.lock().clear_resident()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_pool_same_semantics() {
+        let p: SharedBufferPool<u32> = SharedBufferPool::new(2);
+        assert!(p.get(BlockId(1)).is_none());
+        p.insert(BlockId(1), Arc::new(10));
+        assert_eq!(*p.get(BlockId(1)).unwrap(), 10);
+        let s = p.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+        let clone = p.clone();
+        clone.insert(BlockId(2), Arc::new(20));
+        assert_eq!(p.len(), 2);
+    }
+
+    #[test]
+    fn shared_pool_usable_across_threads() {
+        let p: SharedBufferPool<u64> = SharedBufferPool::new(4);
+        std::thread::scope(|s| {
+            let h = s.spawn(|| {
+                p.insert(BlockId(7), Arc::new(77));
+            });
+            h.join().unwrap();
+        });
+        assert_eq!(*p.get(BlockId(7)).unwrap(), 77);
+    }
+
+    #[test]
+    fn shared_cache_reset() {
+        let c = SharedFeatureCache::new(4, 0);
+        {
+            let mut g = c.lock();
+            g.get(1);
+            g.fill(1, vec![1.0]);
+        }
+        assert_eq!(c.len(), 1);
+        c.reset(4, 0);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats().hits + c.stats().misses, 0);
+    }
+}

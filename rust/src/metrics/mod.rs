@@ -1,8 +1,10 @@
 //! Metrics: stage timers (data preparation vs computation — the paper's
-//! Figure 2(a) breakdown), I/O accounting snapshots, and report formatting
-//! shared by the benches.
+//! Figure 2(a) breakdown), I/O accounting snapshots, pipeline
+//! overlap/stall attribution for the staged epoch executor, and report
+//! formatting shared by the benches.
 
 use crate::storage::device::DeviceStats;
+use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
 /// The stages of storage-based GNN training (Figure 1).
@@ -19,9 +21,12 @@ pub enum Stage {
 }
 
 /// Per-run metrics. Times are split into *wall* nanoseconds (CPU work
-/// actually done here) and *simulated device* nanoseconds (the SSD model's
-/// clock) — total time = wall work + simulated storage time, which is how
-/// every figure reports "execution time".
+/// actually done here) and *simulated* nanoseconds (the SSD model's clock
+/// and the modeled compute backend) — total work = wall + simulated, which
+/// is how every figure reports "execution time". When the pipelined epoch
+/// executor is active, [`RunMetrics::epoch_span_ns`] carries the
+/// pipeline-aware elapsed time (prepare hidden behind compute), and
+/// `total - span` is the overlap won.
 #[derive(Debug, Default, Clone)]
 pub struct RunMetrics {
     pub sample_wall_ns: u64,
@@ -32,6 +37,22 @@ pub struct RunMetrics {
     pub sample_io_ns: u64,
     /// Simulated storage nanoseconds attributed to gathering.
     pub gather_io_ns: u64,
+    /// Simulated compute nanoseconds (modeled backend; 0 for real/null).
+    pub compute_sim_ns: u64,
+    /// Pipeline-aware elapsed nanoseconds of the epoch (work combined
+    /// through the staged-executor schedule; equals [`Self::total_ns`]
+    /// for sequential runs).
+    pub epoch_span_ns: u64,
+    /// Real wall-clock nanoseconds of the epoch driver.
+    pub epoch_wall_ns: u64,
+    /// Wall time the compute stage spent waiting for prepared data
+    /// (pipeline starved — prepare is the bottleneck).
+    pub prep_stall_ns: u64,
+    /// Wall time the prepare stage spent blocked on the bounded channel
+    /// (pipeline backpressure — compute is the bottleneck).
+    pub prep_backpressure_ns: u64,
+    /// Executor depth this epoch ran with (1 = sequential).
+    pub pipeline_depth: u32,
     /// Device snapshot at end of run.
     pub device: DeviceStats,
     /// Graph-buffer cache hit ratio.
@@ -53,9 +74,40 @@ impl RunMetrics {
             + self.gather_io_ns
     }
 
-    /// Total execution nanoseconds.
+    /// Computation nanoseconds (wall + simulated).
+    pub fn compute_ns(&self) -> u64 {
+        self.compute_wall_ns + self.compute_sim_ns
+    }
+
+    /// Total execution *work* nanoseconds — what a fully sequential run
+    /// would take.
     pub fn total_ns(&self) -> u64 {
-        self.prep_ns() + self.compute_wall_ns
+        self.prep_ns() + self.compute_ns()
+    }
+
+    /// Elapsed nanoseconds of the run: the pipeline-aware span when the
+    /// staged executor recorded one, the sequential sum otherwise.
+    pub fn span_ns(&self) -> u64 {
+        if self.epoch_span_ns > 0 {
+            self.epoch_span_ns
+        } else {
+            self.total_ns()
+        }
+    }
+
+    /// Preparation time hidden behind compute by the pipeline executor.
+    pub fn overlap_ns(&self) -> u64 {
+        self.total_ns().saturating_sub(self.span_ns())
+    }
+
+    /// Fraction of total work the pipeline hid, in [0, 1).
+    pub fn overlap_fraction(&self) -> f64 {
+        let t = self.total_ns();
+        if t == 0 {
+            0.0
+        } else {
+            self.overlap_ns() as f64 / t as f64
+        }
     }
 
     /// Fraction of the run spent in data preparation (Figure 2(a)).
@@ -80,6 +132,12 @@ impl RunMetrics {
         self.compute_wall_ns += o.compute_wall_ns;
         self.sample_io_ns += o.sample_io_ns;
         self.gather_io_ns += o.gather_io_ns;
+        self.compute_sim_ns += o.compute_sim_ns;
+        self.epoch_span_ns += o.epoch_span_ns;
+        self.epoch_wall_ns += o.epoch_wall_ns;
+        self.prep_stall_ns += o.prep_stall_ns;
+        self.prep_backpressure_ns += o.prep_backpressure_ns;
+        self.pipeline_depth = self.pipeline_depth.max(o.pipeline_depth);
         self.device.merge(&o.device);
         self.minibatches += o.minibatches;
         self.sampled_nodes += o.sampled_nodes;
@@ -87,6 +145,52 @@ impl RunMetrics {
         // ratios: keep the last run's (benches report per-config runs)
         self.graph_hit_ratio = o.graph_hit_ratio;
         self.feature_hit_ratio = o.feature_hit_ratio;
+    }
+}
+
+/// Analytic schedule of a two-stage pipeline with a bounded buffer of
+/// `depth` prepared hyperbatches in flight: feed each hyperbatch's
+/// prepare-work and compute-work (wall + simulated) in order and read the
+/// resulting elapsed span. `depth = 1` reproduces the sequential schedule
+/// (`span == Σ(prep + compute)`); `depth ≥ 2` lets hyperbatch *k+1*'s
+/// preparation hide behind hyperbatch *k*'s computation:
+///
+/// ```text
+/// prep_done[k] = max(prep_done[k-1], comp_done[k-depth]) + prep[k]
+/// comp_done[k] = max(prep_done[k],  comp_done[k-1])      + comp[k]
+/// ```
+#[derive(Debug)]
+pub struct SpanModel {
+    depth: usize,
+    prep_done: u64,
+    comp_done: VecDeque<u64>,
+}
+
+impl SpanModel {
+    pub fn new(depth: usize) -> SpanModel {
+        SpanModel { depth: depth.max(1), prep_done: 0, comp_done: VecDeque::new() }
+    }
+
+    /// Record the next hyperbatch's stage costs.
+    pub fn advance(&mut self, prep_ns: u64, comp_ns: u64) {
+        let gate = if self.comp_done.len() >= self.depth {
+            // the buffer slot frees when hyperbatch k-depth finishes compute
+            self.comp_done[self.comp_done.len() - self.depth]
+        } else {
+            0
+        };
+        self.prep_done = self.prep_done.max(gate) + prep_ns;
+        let last_comp = self.comp_done.back().copied().unwrap_or(0);
+        let done = self.prep_done.max(last_comp) + comp_ns;
+        self.comp_done.push_back(done);
+        if self.comp_done.len() > self.depth {
+            self.comp_done.pop_front();
+        }
+    }
+
+    /// Elapsed span so far.
+    pub fn span(&self) -> u64 {
+        self.comp_done.back().copied().unwrap_or(self.prep_done)
     }
 }
 
@@ -159,6 +263,77 @@ mod tests {
     }
 
     #[test]
+    fn span_and_overlap_accessors() {
+        let mut m = RunMetrics {
+            sample_wall_ns: 40,
+            compute_wall_ns: 30,
+            compute_sim_ns: 30,
+            ..Default::default()
+        };
+        // no recorded span: sequential semantics
+        assert_eq!(m.span_ns(), 100);
+        assert_eq!(m.overlap_ns(), 0);
+        // pipelined: 100 of work done in a 70 span => 30 hidden
+        m.epoch_span_ns = 70;
+        assert_eq!(m.span_ns(), 70);
+        assert_eq!(m.overlap_ns(), 30);
+        assert!((m.overlap_fraction() - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn span_model_sequential_is_sum() {
+        let mut s = SpanModel::new(1);
+        for _ in 0..5 {
+            s.advance(10, 7);
+        }
+        assert_eq!(s.span(), 5 * 17);
+    }
+
+    #[test]
+    fn span_model_pipelined_hides_prepare() {
+        // equal stage costs: steady state hides all but the first prepare
+        let mut s = SpanModel::new(2);
+        for _ in 0..10 {
+            s.advance(10, 10);
+        }
+        assert_eq!(s.span(), 10 + 10 * 10);
+        // compute-dominated: prepare fully hidden after the first
+        let mut s = SpanModel::new(2);
+        for _ in 0..4 {
+            s.advance(5, 100);
+        }
+        assert_eq!(s.span(), 5 + 4 * 100);
+        // prepare-dominated: compute hides behind prepare instead
+        let mut s = SpanModel::new(2);
+        for _ in 0..4 {
+            s.advance(100, 5);
+        }
+        assert_eq!(s.span(), 4 * 100 + 5);
+    }
+
+    #[test]
+    fn span_model_depth_bounds_inflight() {
+        // depth 2, compute far slower than prepare: prepare k+2 must wait
+        // for compute k to drain the buffer, so the span still tracks the
+        // compute chain, not unbounded prefetch
+        let mut s2 = SpanModel::new(2);
+        let mut s4 = SpanModel::new(4);
+        for _ in 0..6 {
+            s2.advance(50, 10);
+            s4.advance(50, 10);
+        }
+        // prepare-bound either way; deeper buffer cannot beat the prepare chain
+        assert_eq!(s2.span(), 6 * 50 + 10);
+        assert_eq!(s4.span(), 6 * 50 + 10);
+        // pipelined beats sequential
+        let mut seq = SpanModel::new(1);
+        for _ in 0..6 {
+            seq.advance(50, 10);
+        }
+        assert!(s2.span() < seq.span());
+    }
+
+    #[test]
     fn stage_timer_accumulates() {
         let mut sink = 0u64;
         {
@@ -176,11 +351,20 @@ mod tests {
     #[test]
     fn merge_accumulates() {
         let mut a = RunMetrics { sample_wall_ns: 1, minibatches: 2, ..Default::default() };
-        let b = RunMetrics { sample_wall_ns: 3, minibatches: 4, graph_hit_ratio: 0.5, ..Default::default() };
+        let b = RunMetrics {
+            sample_wall_ns: 3,
+            minibatches: 4,
+            graph_hit_ratio: 0.5,
+            prep_stall_ns: 9,
+            pipeline_depth: 4,
+            ..Default::default()
+        };
         a.merge(&b);
         assert_eq!(a.sample_wall_ns, 4);
         assert_eq!(a.minibatches, 6);
         assert_eq!(a.graph_hit_ratio, 0.5);
+        assert_eq!(a.prep_stall_ns, 9);
+        assert_eq!(a.pipeline_depth, 4);
     }
 
     #[test]

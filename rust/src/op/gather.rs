@@ -10,10 +10,13 @@
 //! 2. the misses of **all** minibatches of the hyperbatch are grouped by
 //!    feature block in a [`Bucket`] and served with one ascending
 //!    block-wise sweep — each feature block is read once per hyperbatch
-//!    regardless of how many minibatches need it.
+//!    regardless of how many minibatches need it. The next run of blocks
+//!    is prefetched through the I/O engine's submit/poll path so feature
+//!    reads stay outstanding while the current run is decoded.
 
 use super::bucket::Bucket;
-use crate::memory::{BufferPool, FeatureCache};
+use crate::memory::{SharedBufferPool, SharedFeatureCache};
+use crate::storage::engine::PendingIo;
 use crate::storage::store::FeatureStore;
 use crate::storage::{BlockId, IoEngine};
 use crate::Result;
@@ -49,10 +52,12 @@ pub struct GatherOutput {
 
 /// Gather features for a hyperbatch. `node_sets[mb]` is minibatch `mb`'s
 /// full sampled-node list (see [`super::sampler::SampleOutput::flat_nodes`]).
+/// Pool and cache are shared handles so the pipelined epoch executor can
+/// run the sweep on a preparation worker thread.
 pub fn gather_hyperbatch(
-    store: &FeatureStore,
-    pool: &mut BufferPool<Vec<u8>>,
-    cache: &mut FeatureCache,
+    store: &Arc<FeatureStore>,
+    pool: &SharedBufferPool<Vec<u8>>,
+    cache: &SharedFeatureCache,
     engine: &IoEngine,
     node_sets: &[Vec<u32>],
 ) -> Result<GatherOutput> {
@@ -62,39 +67,72 @@ pub fn gather_hyperbatch(
     let mut cache_hits = 0u64;
     let mut block_fills = 0u64;
 
-    // pass 1: feature-cache lookups (C_f / T_ch^f)
-    let bucket = Bucket::for_features(node_sets, &store.layout, |mb, slot, v| {
-        if let Some(f) = cache.get(v) {
-            let dst = &mut out[mb as usize][slot as usize * dim..(slot as usize + 1) * dim];
-            dst.copy_from_slice(f);
-            cache_hits += 1;
-            true
-        } else {
-            false
-        }
-    });
+    // pass 1: feature-cache lookups (C_f / T_ch^f) under one guard
+    let bucket = {
+        let mut cache = cache.lock();
+        Bucket::for_features(node_sets, &store.layout, |mb, slot, v| {
+            if let Some(f) = cache.get(v) {
+                let dst = &mut out[mb as usize][slot as usize * dim..(slot as usize + 1) * dim];
+                dst.copy_from_slice(f);
+                cache_hits += 1;
+                true
+            } else {
+                false
+            }
+        })
+    };
 
-    // pass 2: block sweep over the misses, bounded by buffer capacity
+    // pass 2: block sweep over the misses, bounded by buffer capacity,
+    // next run prefetched on the engine's worker pool
     let blocks = bucket.blocks();
     let run_len = pool.capacity().max(1);
-    for run in blocks.chunks(run_len) {
+    let runs: Vec<&[BlockId]> = blocks.chunks(run_len).collect();
+    let mut prefetched: Option<(Vec<BlockId>, PendingIo<Vec<Vec<u8>>>)> = None;
+    for (i, run) in runs.iter().enumerate() {
+        if let Some((ids, pending)) = prefetched.take() {
+            let loaded = pending.wait()?;
+            let mut guard = pool.lock();
+            for (b, bytes) in ids.into_iter().zip(loaded) {
+                if !guard.contains(b) {
+                    guard.insert(b, Arc::new(bytes));
+                }
+            }
+        }
         let mut missing: Vec<BlockId> = Vec::new();
-        for &b in run {
-            if pool.get(b).is_none() {
-                missing.push(b);
+        {
+            let mut guard = pool.lock();
+            for &b in run.iter() {
+                if guard.get(b).is_none() {
+                    missing.push(b);
+                }
+            }
+        }
+        if let Some(next) = runs.get(i + 1) {
+            let next_missing: Vec<BlockId> = {
+                let guard = pool.lock();
+                next.iter().copied().filter(|&b| !guard.contains(b)).collect()
+            };
+            if !next_missing.is_empty() {
+                let pending = engine.submit_feature_blocks(store, next_missing.clone());
+                prefetched = Some((next_missing, pending));
             }
         }
         if !missing.is_empty() {
             let loaded = engine.read_feature_blocks(store, &missing)?;
+            let mut guard = pool.lock();
             for (b, bytes) in missing.iter().zip(loaded) {
-                pool.insert(*b, Arc::new(bytes));
+                guard.insert(*b, Arc::new(bytes));
             }
         }
-        for &b in run {
-            pool.pin(b);
+        {
+            let mut guard = pool.lock();
+            for &b in run.iter() {
+                guard.pin(b);
+            }
         }
-        for &b in run {
+        for &b in run.iter() {
             let bytes = pool.peek(b).expect("run block resident");
+            let mut cache = cache.lock();
             for (mb, entries) in &bucket.rows[&b] {
                 for &(slot, v) in entries {
                     // hot loop: decode straight into the output slice — no
@@ -110,8 +148,12 @@ pub fn gather_hyperbatch(
                     }
                 }
             }
+            drop(cache);
             pool.unpin(b);
         }
+    }
+    if let Some((_, pending)) = prefetched.take() {
+        let _ = pending.wait();
     }
     Ok(GatherOutput { features: out, cache_hits, block_fills })
 }
@@ -127,7 +169,7 @@ mod tests {
     const DIM: usize = 16;
     const SEED: u64 = 5;
 
-    fn setup(num_nodes: usize) -> (crate::util::TempDir, FeatureStore) {
+    fn setup(num_nodes: usize) -> (crate::util::TempDir, Arc<FeatureStore>) {
         let dir = crate::util::TempDir::new().unwrap();
         let paths = StorePaths::in_dir(dir.path());
         let layout = FeatureBlockLayout { block_size: 1024, feature_dim: DIM }; // 16/block
@@ -135,7 +177,7 @@ mod tests {
         let store =
             FeatureStore::open(&paths, layout, num_nodes, SsdModel::new(SsdSpec::default()))
                 .unwrap();
-        (dir, store)
+        (dir, Arc::new(store))
     }
 
     fn expect(v: u32) -> Vec<f32> {
@@ -145,11 +187,11 @@ mod tests {
     #[test]
     fn gathered_features_correct_and_contiguous() {
         let (_d, store) = setup(300);
-        let mut pool = BufferPool::new(4);
-        let mut cache = FeatureCache::new(64, 1);
+        let pool = SharedBufferPool::new(4);
+        let cache = SharedFeatureCache::new(64, 1);
         let engine = IoEngine::new(2, 2);
         let sets = vec![vec![5, 250, 5, 17], vec![100, 0]];
-        let out = gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        let out = gather_hyperbatch(&store, &pool, &cache, &engine, &sets).unwrap();
         assert_eq!(out.features[0].len(), 4 * DIM);
         for (mb, nodes) in sets.iter().enumerate() {
             for (slot, &v) in nodes.iter().enumerate() {
@@ -166,27 +208,27 @@ mod tests {
     #[test]
     fn block_read_once_per_hyperbatch() {
         let (_d, store) = setup(320);
-        let mut pool = BufferPool::new(32);
-        let mut cache = FeatureCache::new(0, u32::MAX); // cache disabled
+        let pool = SharedBufferPool::new(32);
+        let cache = SharedFeatureCache::new(0, u32::MAX); // cache disabled
         let engine = IoEngine::new(1, 1);
         // 4 minibatches all hitting the same two blocks (nodes 0..32)
         let sets: Vec<Vec<u32>> = (0..4).map(|_| (0..32u32).collect()).collect();
         store.ssd.reset();
-        gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        gather_hyperbatch(&store, &pool, &cache, &engine, &sets).unwrap();
         assert_eq!(store.ssd.stats().num_requests, 2, "two blocks, one read each");
     }
 
     #[test]
     fn cache_serves_repeats() {
         let (_d, store) = setup(100);
-        let mut pool = BufferPool::new(2);
-        let mut cache = FeatureCache::new(16, 1);
+        let pool = SharedBufferPool::new(2);
+        let cache = SharedFeatureCache::new(16, 1);
         let engine = IoEngine::new(1, 1);
         let sets = vec![vec![3, 3, 3, 3]];
         // first access: miss (count 1), fill admitted at threshold 1? count(3)=1 >= 1 yes
-        let out1 = gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        let out1 = gather_hyperbatch(&store, &pool, &cache, &engine, &sets).unwrap();
         assert_eq!(out1.block_fills, 4);
-        let out2 = gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        let out2 = gather_hyperbatch(&store, &pool, &cache, &engine, &sets).unwrap();
         assert_eq!(out2.cache_hits, 4, "second hyperbatch served by C_f");
         assert_eq!(out2.features, out1.features);
     }
@@ -194,24 +236,41 @@ mod tests {
     #[test]
     fn empty_sets_ok() {
         let (_d, store) = setup(50);
-        let mut pool = BufferPool::new(2);
-        let mut cache = FeatureCache::new(4, 1);
+        let pool = SharedBufferPool::new(2);
+        let cache = SharedFeatureCache::new(4, 1);
         let engine = IoEngine::default();
         let out =
-            gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &[vec![], vec![]]).unwrap();
+            gather_hyperbatch(&store, &pool, &cache, &engine, &[vec![], vec![]]).unwrap();
         assert!(out.features.iter().all(Vec::is_empty));
     }
 
     #[test]
     fn tiny_pool_still_correct() {
         let (_d, store) = setup(400);
-        let mut pool = BufferPool::new(1); // pathological budget
-        let mut cache = FeatureCache::new(0, u32::MAX);
+        let pool = SharedBufferPool::new(1); // pathological budget
+        let cache = SharedFeatureCache::new(0, u32::MAX);
         let engine = IoEngine::new(2, 2);
         let sets = vec![(0..400u32).step_by(7).collect::<Vec<_>>()];
-        let out = gather_hyperbatch(&store, &mut pool, &mut cache, &engine, &sets).unwrap();
+        let out = gather_hyperbatch(&store, &pool, &cache, &engine, &sets).unwrap();
         for (slot, &v) in sets[0].iter().enumerate() {
             assert_eq!(&out.features[0][slot * DIM..(slot + 1) * DIM], &expect(v)[..]);
         }
+    }
+
+    #[test]
+    fn prefetched_runs_match_unprefetched_results() {
+        // many runs (pool of 2 blocks over ~25 blocks) exercises the
+        // submit/poll prefetch path; results must equal the big-pool sweep
+        let (_d, store) = setup(400);
+        let engine = IoEngine::new(2, 2);
+        let sets = vec![(0..400u32).collect::<Vec<_>>()];
+        let small = SharedBufferPool::new(2);
+        let cache_a = SharedFeatureCache::new(0, u32::MAX);
+        let a = gather_hyperbatch(&store, &small, &cache_a, &engine, &sets).unwrap();
+        let big = SharedBufferPool::new(64);
+        let cache_b = SharedFeatureCache::new(0, u32::MAX);
+        let b = gather_hyperbatch(&store, &big, &cache_b, &engine, &sets).unwrap();
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.block_fills, b.block_fills);
     }
 }

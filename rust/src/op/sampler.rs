@@ -16,12 +16,20 @@
 //! slots within the block are served before moving on — one block-wise
 //! I/O per block per layer instead of one small I/O per node.
 //!
+//! The next run is prefetched through the I/O engine's submit/poll path
+//! ([`crate::storage::engine::PendingIo`]), so its reads stay outstanding
+//! on the engine's worker pool while the current run is processed —
+//! and, under the pipelined epoch executor, while the compute stage is
+//! consuming the previous hyperbatch (paper §3.4 (4): threads do not idle
+//! on I/O completion).
+//!
 //! Zero-degree nodes sample themselves (self-loop fallback, standard in
 //! GraphSAGE implementations).
 
 use super::bucket::Bucket;
-use crate::memory::BufferPool;
+use crate::memory::SharedBufferPool;
 use crate::storage::block::GraphBlock;
+use crate::storage::engine::PendingIo;
 use crate::storage::store::GraphStore;
 use crate::storage::{BlockId, IoEngine};
 use crate::Result;
@@ -107,10 +115,11 @@ fn sample_children(
 /// minibatches (paper: up to 1024 of them); returns all levels.
 ///
 /// `pool` is the graph buffer with its index table; `engine` performs the
-/// batched block-wise I/O.
+/// batched block-wise I/O. Both are shared handles so the pipelined epoch
+/// executor can run the whole sweep on a preparation worker thread.
 pub fn sample_hyperbatch(
-    store: &GraphStore,
-    pool: &mut BufferPool<GraphBlock>,
+    store: &Arc<GraphStore>,
+    pool: &SharedBufferPool<GraphBlock>,
     engine: &IoEngine,
     targets: &[Vec<u32>],
     fanouts: &[usize],
@@ -146,15 +155,18 @@ pub fn sample_hyperbatch(
 
 /// Sweep the bucket's blocks in ascending order in runs bounded by the
 /// buffer capacity: batch-load the run's missing blocks, pin the run,
-/// process every cell, unpin. The closure receives the pool so hub
-/// continuation reads can go through the buffer too.
+/// process every cell, unpin. The *next* run is submitted to the I/O
+/// engine's worker pool before the current run is processed, so its reads
+/// stay outstanding underneath the processing (and, in pipelined epochs,
+/// underneath the compute stage). The closure receives the pool handle so
+/// hub continuation reads can go through the buffer too.
 pub fn sweep_blocks(
-    store: &GraphStore,
-    pool: &mut BufferPool<GraphBlock>,
+    store: &Arc<GraphStore>,
+    pool: &SharedBufferPool<GraphBlock>,
     engine: &IoEngine,
     bucket: &Bucket,
     mut process: impl FnMut(
-        &mut BufferPool<GraphBlock>,
+        &SharedBufferPool<GraphBlock>,
         BlockId,
         &GraphBlock,
         u32,
@@ -166,59 +178,71 @@ pub fn sweep_blocks(
     // buffer is the processing run, the prefetched next run uses the rest
     let run_len = (pool.capacity() / 2).saturating_sub(1).max(1);
     let runs: Vec<&[BlockId]> = blocks.chunks(run_len).collect();
-    // prefetched (block, decoded) pairs for the *next* run
-    let mut prefetched: Vec<(BlockId, GraphBlock)> = Vec::new();
+    // the in-flight prefetch of the next run: (block ids, pending read)
+    let mut prefetched: Option<(Vec<BlockId>, PendingIo<Vec<GraphBlock>>)> = None;
     for (i, run) in runs.iter().enumerate() {
-        for (b, gb) in prefetched.drain(..) {
-            if !pool.contains(b) {
-                pool.insert(b, Arc::new(gb));
+        // land the previous iteration's prefetch
+        if let Some((ids, pending)) = prefetched.take() {
+            let loaded = pending.wait()?;
+            let mut guard = pool.lock();
+            for (b, gb) in ids.into_iter().zip(loaded) {
+                if !guard.contains(b) {
+                    guard.insert(b, Arc::new(gb));
+                }
             }
         }
         // (1) which of the run's blocks still miss the buffer? (the `get`
         // also counts the hit/miss stats, i.e. it is the T_buf lookup)
         let mut missing: Vec<BlockId> = Vec::new();
-        for &b in run.iter() {
-            if pool.get(b).is_none() {
-                missing.push(b);
+        {
+            let mut guard = pool.lock();
+            for &b in run.iter() {
+                if guard.get(b).is_none() {
+                    missing.push(b);
+                }
             }
         }
-        // (2) one batched block-wise storage I/O for the run's misses,
-        // overlapped with prefetching the next run (paper §3.4 (4):
-        // threads do not idle on I/O completion)
-        let next_missing: Vec<BlockId> = runs
-            .get(i + 1)
-            .map(|next| next.iter().copied().filter(|b| !pool.contains(*b)).collect())
-            .unwrap_or_default();
-        let mut next_loaded: Vec<GraphBlock> = Vec::new();
-        std::thread::scope(|s| -> Result<()> {
-            let prefetcher = (!next_missing.is_empty()).then(|| {
-                s.spawn(|| engine.read_graph_blocks(store, &next_missing))
-            });
-            if !missing.is_empty() {
-                let loaded = engine.read_graph_blocks(store, &missing)?;
-                for (b, gb) in missing.iter().zip(loaded) {
-                    pool.insert(*b, Arc::new(gb));
-                }
+        // (2) submit the next run's misses to the worker pool *before*
+        // loading and processing this run (paper §3.4 (4): threads do not
+        // idle on I/O completion)
+        if let Some(next) = runs.get(i + 1) {
+            let next_missing: Vec<BlockId> = {
+                let guard = pool.lock();
+                next.iter().copied().filter(|&b| !guard.contains(b)).collect()
+            };
+            if !next_missing.is_empty() {
+                let pending = engine.submit_graph_blocks(store, next_missing.clone());
+                prefetched = Some((next_missing, pending));
             }
-            // (3) pin the run (paper §3.4 (1)), process, unpin — while the
-            // prefetcher streams the next run in the background
+        }
+        // (3) one batched block-wise storage I/O for this run's misses
+        if !missing.is_empty() {
+            let loaded = engine.read_graph_blocks(store, &missing)?;
+            let mut guard = pool.lock();
+            for (b, gb) in missing.iter().zip(loaded) {
+                guard.insert(*b, Arc::new(gb));
+            }
+        }
+        // (4) pin the run (paper §3.4 (1)), process, unpin
+        {
+            let mut guard = pool.lock();
             for &b in run.iter() {
-                pool.pin(b);
+                guard.pin(b);
             }
-            for &b in run.iter() {
-                // peek: the residency check above already counted the access
-                let gb = pool.peek(b).expect("run block resident");
-                for (mb, entries) in &bucket.rows[&b] {
-                    process(pool, b, &gb, *mb, entries)?;
-                }
-                pool.unpin(b);
+        }
+        for &b in run.iter() {
+            // peek: the residency check above already counted the access
+            let gb = pool.peek(b).expect("run block resident");
+            for (mb, entries) in &bucket.rows[&b] {
+                process(pool, b, &gb, *mb, entries)?;
             }
-            if let Some(h) = prefetcher {
-                next_loaded = h.join().expect("prefetcher panicked")?;
-            }
-            Ok(())
-        })?;
-        prefetched = next_missing.into_iter().zip(next_loaded).collect();
+            pool.unpin(b);
+        }
+    }
+    // a trailing prefetch only exists if a later run was skipped, which
+    // cannot happen — but drain defensively so no read is left dangling
+    if let Some((_, pending)) = prefetched.take() {
+        let _ = pending.wait();
     }
     Ok(())
 }
@@ -227,7 +251,7 @@ pub fn sweep_blocks(
 /// continuation blocks are consecutive, so these loads stay sequential).
 fn full_adjacency(
     store: &GraphStore,
-    pool: &mut BufferPool<GraphBlock>,
+    pool: &SharedBufferPool<GraphBlock>,
     engine: &IoEngine,
     v: u32,
 ) -> Result<Arc<Vec<u32>>> {
@@ -266,12 +290,12 @@ mod tests {
     use crate::storage::device::{SsdModel, SsdSpec};
     use std::collections::HashSet;
 
-    fn setup(g: &CsrGraph, block_size: usize) -> (crate::util::TempDir, GraphStore) {
+    fn setup(g: &CsrGraph, block_size: usize) -> (crate::util::TempDir, Arc<GraphStore>) {
         let dir = crate::util::TempDir::new().unwrap();
         let paths = StorePaths::in_dir(dir.path());
         build_graph_store(g, block_size, &paths).unwrap();
         let store = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
-        (dir, store)
+        (dir, Arc::new(store))
     }
 
     fn graph() -> CsrGraph {
@@ -282,11 +306,11 @@ mod tests {
     fn level_sizes_fixed() {
         let g = graph();
         let (_d, store) = setup(&g, 2048);
-        let mut pool = BufferPool::new(8);
+        let pool = SharedBufferPool::new(8);
         let engine = IoEngine::new(2, 4);
         let targets = vec![vec![1, 2, 3], vec![10, 20]];
         let out =
-            sample_hyperbatch(&store, &mut pool, &engine, &targets, &[3, 2], 42).unwrap();
+            sample_hyperbatch(&store, &pool, &engine, &targets, &[3, 2], 42).unwrap();
         assert_eq!(out.levels.len(), 2);
         assert_eq!(out.levels[0][0].len(), 3);
         assert_eq!(out.levels[0][1].len(), 9);
@@ -300,10 +324,10 @@ mod tests {
     fn sampled_children_are_real_neighbors() {
         let g = graph();
         let (_d, store) = setup(&g, 2048);
-        let mut pool = BufferPool::new(8);
+        let pool = SharedBufferPool::new(8);
         let engine = IoEngine::new(1, 1);
         let targets = vec![(0..50u32).collect::<Vec<_>>()];
-        let out = sample_hyperbatch(&store, &mut pool, &engine, &targets, &[4], 7).unwrap();
+        let out = sample_hyperbatch(&store, &pool, &engine, &targets, &[4], 7).unwrap();
         for (slot, &v) in targets[0].iter().enumerate() {
             let kids = &out.levels[0][1][slot * 4..(slot + 1) * 4];
             let nbrs: HashSet<u32> = g.neighbors(v).iter().copied().collect();
@@ -323,13 +347,13 @@ mod tests {
         let (_d, store) = setup(&g, 1024);
         let engine = IoEngine::new(2, 2);
         let targets = vec![(0..30u32).collect::<Vec<_>>(), (30..60u32).collect::<Vec<_>>()];
-        let mut p1 = BufferPool::new(64);
-        let a = sample_hyperbatch(&store, &mut p1, &engine, &targets, &[3, 3], 9).unwrap();
+        let p1 = SharedBufferPool::new(64);
+        let a = sample_hyperbatch(&store, &p1, &engine, &targets, &[3, 3], 9).unwrap();
         // tiny pool forces evictions + reloads — same samples must come out
-        let mut p2 = BufferPool::new(2);
-        let b = sample_hyperbatch(&store, &mut p2, &engine, &targets, &[3, 3], 9).unwrap();
+        let p2 = SharedBufferPool::new(2);
+        let b = sample_hyperbatch(&store, &p2, &engine, &targets, &[3, 3], 9).unwrap();
         assert_eq!(a, b);
-        let c = sample_hyperbatch(&store, &mut p2, &engine, &targets, &[3, 3], 10).unwrap();
+        let c = sample_hyperbatch(&store, &p2, &engine, &targets, &[3, 3], 10).unwrap();
         assert_ne!(a, c, "different seed should differ");
     }
 
@@ -339,9 +363,9 @@ mod tests {
         let edges: Vec<(u32, u32)> = (0..3000u32).map(|i| (0, i % 200 + 1)).collect();
         let g = CsrGraph::from_edges(201, &edges);
         let (_d, store) = setup(&g, 4096);
-        let mut pool = BufferPool::new(8);
+        let pool = SharedBufferPool::new(8);
         let engine = IoEngine::new(1, 1);
-        let out = sample_hyperbatch(&store, &mut pool, &engine, &[vec![0]], &[16], 3).unwrap();
+        let out = sample_hyperbatch(&store, &pool, &engine, &[vec![0]], &[16], 3).unwrap();
         let nbrs: HashSet<u32> = g.neighbors(0).iter().copied().collect();
         for &k in &out.levels[0][1] {
             assert!(nbrs.contains(&k));
@@ -354,11 +378,11 @@ mod tests {
         let g = graph();
         let (_d, store) = setup(&g, 2048);
         let total_blocks = store.num_blocks() as u64;
-        let mut pool = BufferPool::new(total_blocks as usize + 4);
+        let pool = SharedBufferPool::new(total_blocks as usize + 4);
         let engine = IoEngine::new(2, 4);
         let targets: Vec<Vec<u32>> = (0..10).map(|m| (m * 40..m * 40 + 40).collect()).collect();
         store.ssd.reset();
-        sample_hyperbatch(&store, &mut pool, &engine, &targets, &[5, 5], 1).unwrap();
+        sample_hyperbatch(&store, &pool, &engine, &targets, &[5, 5], 1).unwrap();
         let reqs = store.ssd.stats().num_requests;
         assert!(
             reqs <= 2 * total_blocks,

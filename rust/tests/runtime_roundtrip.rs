@@ -54,7 +54,7 @@ fn xla_train_step_runs_and_learns() {
 #[test]
 fn all_three_models_execute() {
     let Some(dir) = artifacts_dir() else { return };
-    let (mut runner, _tmp) = tiny_runner();
+    let (runner, _tmp) = tiny_runner();
     let hb = runner.epoch_hyperbatches(0).remove(0);
     let mut metrics = agnes::metrics::RunMetrics::default();
     let mbs = runner.prepare_hyperbatch(&hb, &mut metrics).unwrap();
@@ -70,7 +70,7 @@ fn all_three_models_execute() {
 #[test]
 fn short_final_minibatch_is_padded_and_masked() {
     let Some(dir) = artifacts_dir() else { return };
-    let (mut runner, _tmp) = tiny_runner();
+    let (runner, _tmp) = tiny_runner();
     let mut compute = XlaCompute::load(dir, "sage").unwrap();
     // fabricate a short minibatch (last batch of an epoch)
     let hb = vec![vec![1u32, 2, 3]];

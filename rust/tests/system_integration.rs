@@ -68,7 +68,7 @@ fn identical_sample_trees_across_systems() {
     // minibatch): the comparison isolates I/O handling, like the paper.
     let tmp = TempDir::new().unwrap();
     let c = cfg(&tmp);
-    let mut agnes = AgnesRunner::open(c.clone()).unwrap();
+    let agnes = AgnesRunner::open(c.clone()).unwrap();
     let hb = agnes.epoch_hyperbatches(0);
     let mut metrics = agnes::metrics::RunMetrics::default();
     let mbs = agnes.prepare_hyperbatch(&hb[0], &mut metrics).unwrap();

@@ -1,0 +1,165 @@
+//! Offline stand-in for the `byteorder` crate: the [`ByteOrder`] trait
+//! with the methods this workspace uses, implemented for [`LittleEndian`]
+//! (and [`BigEndian`] for completeness of the trait contract).
+
+/// Byte-order-parameterized reads/writes over byte slices. All methods
+/// panic on short slices, matching the real crate's contract.
+pub trait ByteOrder {
+    fn read_u32(buf: &[u8]) -> u32;
+    fn read_u64(buf: &[u8]) -> u64;
+    fn read_f32(buf: &[u8]) -> f32;
+    fn write_u32(buf: &mut [u8], n: u32);
+    fn write_u64(buf: &mut [u8], n: u64);
+    fn write_f32(buf: &mut [u8], n: f32);
+
+    fn read_u32_into(src: &[u8], dst: &mut [u32]) {
+        assert_eq!(src.len(), dst.len() * 4, "read_u32_into length mismatch");
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = Self::read_u32(&src[i * 4..i * 4 + 4]);
+        }
+    }
+
+    fn read_u64_into(src: &[u8], dst: &mut [u64]) {
+        assert_eq!(src.len(), dst.len() * 8, "read_u64_into length mismatch");
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = Self::read_u64(&src[i * 8..i * 8 + 8]);
+        }
+    }
+
+    fn read_f32_into(src: &[u8], dst: &mut [f32]) {
+        assert_eq!(src.len(), dst.len() * 4, "read_f32_into length mismatch");
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = Self::read_f32(&src[i * 4..i * 4 + 4]);
+        }
+    }
+
+    fn write_u32_into(src: &[u32], dst: &mut [u8]) {
+        assert_eq!(dst.len(), src.len() * 4, "write_u32_into length mismatch");
+        for (i, &s) in src.iter().enumerate() {
+            Self::write_u32(&mut dst[i * 4..i * 4 + 4], s);
+        }
+    }
+
+    fn write_u64_into(src: &[u64], dst: &mut [u8]) {
+        assert_eq!(dst.len(), src.len() * 8, "write_u64_into length mismatch");
+        for (i, &s) in src.iter().enumerate() {
+            Self::write_u64(&mut dst[i * 8..i * 8 + 8], s);
+        }
+    }
+
+    fn write_f32_into(src: &[f32], dst: &mut [u8]) {
+        assert_eq!(dst.len(), src.len() * 4, "write_f32_into length mismatch");
+        for (i, &s) in src.iter().enumerate() {
+            Self::write_f32(&mut dst[i * 4..i * 4 + 4], s);
+        }
+    }
+}
+
+/// Little-endian byte order.
+pub enum LittleEndian {}
+
+impl ByteOrder for LittleEndian {
+    #[inline]
+    fn read_u32(buf: &[u8]) -> u32 {
+        u32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+
+    #[inline]
+    fn read_u64(buf: &[u8]) -> u64 {
+        u64::from_le_bytes(buf[..8].try_into().unwrap())
+    }
+
+    #[inline]
+    fn read_f32(buf: &[u8]) -> f32 {
+        f32::from_le_bytes(buf[..4].try_into().unwrap())
+    }
+
+    #[inline]
+    fn write_u32(buf: &mut [u8], n: u32) {
+        buf[..4].copy_from_slice(&n.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_u64(buf: &mut [u8], n: u64) {
+        buf[..8].copy_from_slice(&n.to_le_bytes());
+    }
+
+    #[inline]
+    fn write_f32(buf: &mut [u8], n: f32) {
+        buf[..4].copy_from_slice(&n.to_le_bytes());
+    }
+}
+
+/// Big-endian byte order.
+pub enum BigEndian {}
+
+impl ByteOrder for BigEndian {
+    #[inline]
+    fn read_u32(buf: &[u8]) -> u32 {
+        u32::from_be_bytes(buf[..4].try_into().unwrap())
+    }
+
+    #[inline]
+    fn read_u64(buf: &[u8]) -> u64 {
+        u64::from_be_bytes(buf[..8].try_into().unwrap())
+    }
+
+    #[inline]
+    fn read_f32(buf: &[u8]) -> f32 {
+        f32::from_be_bytes(buf[..4].try_into().unwrap())
+    }
+
+    #[inline]
+    fn write_u32(buf: &mut [u8], n: u32) {
+        buf[..4].copy_from_slice(&n.to_be_bytes());
+    }
+
+    #[inline]
+    fn write_u64(buf: &mut [u8], n: u64) {
+        buf[..8].copy_from_slice(&n.to_be_bytes());
+    }
+
+    #[inline]
+    fn write_f32(buf: &mut [u8], n: f32) {
+        buf[..4].copy_from_slice(&n.to_be_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u32_roundtrip() {
+        let mut buf = [0u8; 8];
+        LittleEndian::write_u32_into(&[1, 0xDEADBEEF], &mut buf);
+        assert_eq!(LittleEndian::read_u32(&buf[0..4]), 1);
+        let mut out = [0u32; 2];
+        LittleEndian::read_u32_into(&buf, &mut out);
+        assert_eq!(out, [1, 0xDEADBEEF]);
+    }
+
+    #[test]
+    fn f32_and_u64_roundtrip() {
+        let mut buf = [0u8; 8];
+        LittleEndian::write_f32_into(&[1.5, -2.25], &mut buf);
+        let mut out = [0f32; 2];
+        LittleEndian::read_f32_into(&buf, &mut out);
+        assert_eq!(out, [1.5, -2.25]);
+        let mut b8 = [0u8; 8];
+        LittleEndian::write_u64(&mut b8, u64::MAX - 5);
+        let mut o = [0u64; 1];
+        LittleEndian::read_u64_into(&b8, &mut o);
+        assert_eq!(o[0], u64::MAX - 5);
+    }
+
+    #[test]
+    fn endianness_differs() {
+        let mut le = [0u8; 4];
+        let mut be = [0u8; 4];
+        LittleEndian::write_u32(&mut le, 0x01020304);
+        BigEndian::write_u32(&mut be, 0x01020304);
+        assert_eq!(le, [4, 3, 2, 1]);
+        assert_eq!(be, [1, 2, 3, 4]);
+    }
+}

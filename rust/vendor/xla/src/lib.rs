@@ -1,0 +1,231 @@
+//! API stub for the `xla` PJRT bindings used by `agnes::runtime`.
+//!
+//! The build environment has no native `xla_extension` library, so this
+//! crate provides the exact type/method surface the runtime compiles
+//! against. Host-side [`Literal`] operations (construction, reshape,
+//! readback) are fully functional; device entry points
+//! ([`PjRtClient::cpu`]) report an actionable error so callers fall back
+//! to the modeled compute backend. Swapping in the real bindings is a
+//! one-line Cargo change — no source edits.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error: a message.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const STUB_MSG: &str = "PJRT runtime unavailable: built against the vendored `xla` API stub \
+     (no native xla_extension in this environment); run with --modeled-compute \
+     or point Cargo at the real xla bindings";
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy {
+    fn from_f32s(v: &[f32]) -> Option<Vec<Self>>;
+    fn from_i32s(v: &[i32]) -> Option<Vec<Self>>;
+    fn into_repr(v: Vec<Self>, dims: Vec<i64>) -> Repr;
+}
+
+impl NativeType for f32 {
+    fn from_f32s(v: &[f32]) -> Option<Vec<f32>> {
+        Some(v.to_vec())
+    }
+
+    fn from_i32s(_: &[i32]) -> Option<Vec<f32>> {
+        None
+    }
+
+    fn into_repr(v: Vec<f32>, dims: Vec<i64>) -> Repr {
+        Repr::F32(v, dims)
+    }
+}
+
+impl NativeType for i32 {
+    fn from_f32s(_: &[f32]) -> Option<Vec<i32>> {
+        None
+    }
+
+    fn from_i32s(v: &[i32]) -> Option<Vec<i32>> {
+        Some(v.to_vec())
+    }
+
+    fn into_repr(v: Vec<i32>, dims: Vec<i64>) -> Repr {
+        Repr::I32(v, dims)
+    }
+}
+
+/// Internal literal storage (public only so `NativeType` can build it).
+#[derive(Debug, Clone)]
+pub enum Repr {
+    F32(Vec<f32>, Vec<i64>),
+    I32(Vec<i32>, Vec<i64>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host literal: a typed dense array or a tuple of literals.
+#[derive(Debug, Clone)]
+pub struct Literal(Repr);
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        let dims = vec![v.len() as i64];
+        Literal(T::into_repr(v.to_vec(), dims))
+    }
+
+    fn len(&self) -> usize {
+        match &self.0 {
+            Repr::F32(v, _) => v.len(),
+            Repr::I32(v, _) => v.len(),
+            Repr::Tuple(t) => t.len(),
+        }
+    }
+
+    /// Reshape to `dims`; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if self.len() as i64 != n {
+            return Err(Error(format!(
+                "reshape: {} elements into shape {dims:?} ({n})",
+                self.len()
+            )));
+        }
+        let d = dims.to_vec();
+        Ok(Literal(match &self.0 {
+            Repr::F32(v, _) => Repr::F32(v.clone(), d),
+            Repr::I32(v, _) => Repr::I32(v.clone(), d),
+            Repr::Tuple(_) => return Err(Error("reshape on tuple literal".into())),
+        }))
+    }
+
+    /// Read the elements back as `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        match &self.0 {
+            Repr::F32(v, _) => T::from_f32s(v),
+            Repr::I32(v, _) => T::from_i32s(v),
+            Repr::Tuple(_) => None,
+        }
+        .ok_or_else(|| Error("to_vec: element type mismatch".into()))
+    }
+
+    /// First element as `T`.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        self.to_vec::<T>()?
+            .first()
+            .copied()
+            .ok_or_else(|| Error("get_first_element: empty literal".into()))
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.0 {
+            Repr::Tuple(t) => Ok(t),
+            _ => Err(Error("to_tuple: not a tuple literal".into())),
+        }
+    }
+
+    /// Destructure a 1-tuple literal.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        let mut t = self.to_tuple()?;
+        if t.len() != 1 {
+            return Err(Error(format!("to_tuple1: arity {}", t.len())));
+        }
+        Ok(t.remove(0))
+    }
+}
+
+/// Parsed HLO module (stub: retains nothing).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+/// An XLA computation (stub).
+#[derive(Debug, Clone)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client (stub: construction fails with an actionable message).
+#[derive(Debug, Clone)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+/// Compiled executable handle (stub — unreachable without a client).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T: Borrow<Literal>>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+/// Device buffer handle (stub).
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error(STUB_MSG.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(r.get_first_element::<f32>().unwrap(), 1.0);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+        let i = Literal::vec1(&[7i32]);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn tuples() {
+        let t = Literal(Repr::Tuple(vec![Literal::vec1(&[1.0f32])]));
+        let inner = t.clone().to_tuple1().unwrap();
+        assert_eq!(inner.to_vec::<f32>().unwrap(), vec![1.0]);
+        assert_eq!(t.to_tuple().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn device_paths_report_stub() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("modeled-compute"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
