@@ -180,11 +180,17 @@ pub struct TrainConfig {
     /// Fraction of nodes that are labeled training targets.
     pub target_fraction: f64,
     pub seed: u64,
-    /// Staged-pipeline depth of the epoch executor: number of prepared
-    /// hyperbatches allowed in flight. `0`/`1` = strictly sequential
-    /// (prepare, then compute — the no-overlap ablation); `>= 2` overlaps
-    /// hyperbatch *k+1*'s data preparation with hyperbatch *k*'s compute.
+    /// Staged-pipeline depth of the epoch executor: number of in-flight
+    /// hyperbatches allowed. `0`/`1` = strictly sequential (prepare, then
+    /// compute — the no-overlap ablation); `>= 2` overlaps hyperbatch
+    /// *k+1*'s data preparation with hyperbatch *k*'s compute.
     pub pipeline_depth: usize,
+    /// How many workers data preparation is split across: `1` = fused
+    /// sample+gather on one worker (the two-stage schedule), `2` = a
+    /// sample worker feeding a gather worker (the three-stage schedule;
+    /// needs `pipeline_depth >= 3` to engage, otherwise falls back to the
+    /// fused schedule).
+    pub prepare_stages: usize,
 }
 
 impl Default for TrainConfig {
@@ -198,6 +204,7 @@ impl Default for TrainConfig {
             target_fraction: 0.1,
             seed: 1,
             pipeline_depth: 2,
+            prepare_stages: 2,
         }
     }
 }
@@ -256,6 +263,10 @@ impl AgnesConfig {
         anyhow::ensure!(
             self.train.pipeline_depth <= 64,
             "train.pipeline_depth must be <= 64 (each unit buffers a prepared hyperbatch)"
+        );
+        anyhow::ensure!(
+            (1..=2).contains(&self.train.prepare_stages),
+            "train.prepare_stages must be 1 (fused prepare) or 2 (split sample/gather)"
         );
         Ok(())
     }
@@ -323,6 +334,7 @@ impl AgnesConfig {
             ("train", "target_fraction") => self.train.target_fraction = p(value)?,
             ("train", "seed") => self.train.seed = p(value)?,
             ("train", "pipeline_depth") => self.train.pipeline_depth = p(value)?,
+            ("train", "prepare_stages") => self.train.prepare_stages = p(value)?,
             _ => return Err(format!("unknown key {section}.{key}")),
         }
         Ok(())
@@ -365,12 +377,39 @@ impl AgnesConfig {
         w(&format!("target_fraction = {}", self.train.target_fraction));
         w(&format!("seed = {}", self.train.seed));
         w(&format!("pipeline_depth = {}", self.train.pipeline_depth));
+        w(&format!("prepare_stages = {}", self.train.prepare_stages));
         out
     }
 
-    /// A small config for tests and the quickstart example.
+    /// Environment overrides for the epoch-executor schedule:
+    /// `AGNES_PIPELINE_DEPTH` and `AGNES_PREPARE_STAGES` reschedule a run
+    /// without code changes. CI uses this to run the integration suite
+    /// once with depth 4 so the staged executor is exercised beyond the
+    /// defaults (all schedules are bit-for-bit equivalent, so every test
+    /// must pass under any override).
+    pub fn apply_env_overrides(&mut self) {
+        // overrides land after validate() may have run, so they must stay
+        // inside the validated ranges themselves; a malformed value is a
+        // loud no-op rather than a silently defaulted schedule (a CI typo
+        // must not report depth-4 coverage while testing the default)
+        if let Ok(v) = std::env::var("AGNES_PIPELINE_DEPTH") {
+            match v.trim().parse::<usize>() {
+                Ok(d) if d <= 64 => self.train.pipeline_depth = d,
+                _ => eprintln!("ignoring out-of-range AGNES_PIPELINE_DEPTH={v:?}"),
+            }
+        }
+        if let Ok(v) = std::env::var("AGNES_PREPARE_STAGES") {
+            match v.trim().parse::<usize>() {
+                Ok(s) if (1..=2).contains(&s) => self.train.prepare_stages = s,
+                _ => eprintln!("ignoring out-of-range AGNES_PREPARE_STAGES={v:?}"),
+            }
+        }
+    }
+
+    /// A small config for tests and the quickstart example. Honors the
+    /// [`Self::apply_env_overrides`] schedule overrides.
     pub fn tiny() -> AgnesConfig {
-        AgnesConfig {
+        let mut c = AgnesConfig {
             dataset: DatasetConfig {
                 name: "tiny".into(),
                 scale: 1.0,
@@ -393,7 +432,9 @@ impl AgnesConfig {
                 ..Default::default()
             },
             ..Default::default()
-        }
+        };
+        c.apply_env_overrides();
+        c
     }
 
     /// Graph-buffer capacity in blocks.
@@ -441,6 +482,7 @@ mod tests {
         c.train.fanouts = vec![7, 3, 2];
         c.device.num_ssds = 4;
         c.train.pipeline_depth = 5;
+        c.train.prepare_stages = 1;
         let text = c.to_toml();
         let back = AgnesConfig::from_toml_str(&text).unwrap();
         assert_eq!(back.train.fanouts, vec![7, 3, 2]);
@@ -449,6 +491,7 @@ mod tests {
         assert_eq!(back.io.block_size, 16 << 10);
         assert_eq!(back.dataset.layout, Layout::Degree);
         assert_eq!(back.train.pipeline_depth, 5);
+        assert_eq!(back.train.prepare_stages, 1);
     }
 
     #[test]
@@ -457,7 +500,8 @@ mod tests {
         let text = include_str!("../../../agnes.example.toml");
         let c = AgnesConfig::from_toml_str(text).unwrap();
         c.validate().unwrap();
-        assert_eq!(c.train.pipeline_depth, 2);
+        assert_eq!(c.train.pipeline_depth, 4);
+        assert_eq!(c.train.prepare_stages, 2);
         assert_eq!(c.io.block_size, 1 << 20);
         assert_eq!(c.train.fanouts, vec![10, 10, 10]);
     }
@@ -480,6 +524,12 @@ mod tests {
         let mut c = AgnesConfig::default();
         c.train.pipeline_depth = 1000;
         assert!(c.validate().unwrap_err().to_string().contains("train.pipeline_depth"));
+        let mut c = AgnesConfig::default();
+        c.train.prepare_stages = 3;
+        assert!(c.validate().unwrap_err().to_string().contains("train.prepare_stages"));
+        let mut c = AgnesConfig::default();
+        c.train.prepare_stages = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("train.prepare_stages"));
         assert!(AgnesConfig::default().validate().is_ok());
     }
 

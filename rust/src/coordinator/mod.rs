@@ -3,23 +3,37 @@
 //! run the hyperbatch sampling sweep, the hyperbatch gathering sweep, and
 //! hand each minibatch to the computation backend.
 //!
-//! ## Pipelined epoch executor
+//! ## Staged pipeline executor
 //!
 //! With `train.pipeline_depth >= 2` the epoch runs as a **staged
-//! pipeline**: a preparation stage (sampling sweep + gathering sweep for
-//! hyperbatch *k+1*) runs on a worker thread and feeds prepared
-//! [`MinibatchData`] through a bounded channel to the compute stage
-//! consuming hyperbatch *k* — data preparation hides behind computation
-//! (paper §3.4 (4): threads never idle on I/O), while the bounded depth
-//! caps how many prepared hyperbatches sit in memory. Preparation order,
-//! sampling RNG, and cache behavior are identical to the sequential
-//! schedule, so loss/accuracy and device request counts match the
-//! `pipeline_depth <= 1` run bit-for-bit.
+//! pipeline**; `train.prepare_stages` picks how finely data preparation
+//! is split across workers:
+//!
+//! * `prepare_stages = 1` — two-stage schedule: one preparation worker
+//!   runs the sampling sweep + gathering sweep for hyperbatch *k+1* and
+//!   feeds prepared [`MinibatchData`] through a bounded channel to the
+//!   compute stage consuming hyperbatch *k*.
+//! * `prepare_stages = 2` (and `pipeline_depth >= 3`) — three-stage
+//!   schedule: a **sample worker** produces [`SampleOutput`]s for
+//!   hyperbatch *k+2*, a **gather worker** consumes them and materializes
+//!   minibatches for *k+1*, and the main thread computes on *k*. The two
+//!   preparation sweeps touch disjoint state (sampling reads the graph
+//!   store through the graph buffer; gathering reads the feature store
+//!   through the feature buffer + cache), so they pipeline against each
+//!   other without changing either sweep's access pattern.
+//!
+//! Either way data preparation hides behind computation (paper §3.4 (4):
+//! threads never idle on I/O) and `pipeline_depth` caps how many
+//! in-flight hyperbatches are resident. Preparation order, sampling RNG,
+//! and cache behavior are identical to the sequential schedule, so
+//! loss/accuracy and device request counts match the `pipeline_depth <= 1`
+//! run bit-for-bit under every schedule.
 //!
 //! Setting `hyperbatch_size = 1` degenerates to per-minibatch processing —
-//! that is exactly the paper's **AGNES-No** ablation arm (Figure 8); and
+//! that is exactly the paper's **AGNES-No** ablation arm (Figure 8);
 //! `pipeline_depth <= 1` degenerates to the strictly sequential epoch
-//! (the no-overlap ablation).
+//! (the no-overlap ablation); and `prepare_stages = 1` preserves the
+//! fused-preparation schedule as a second ablation arm.
 
 pub mod compute;
 pub mod data;
@@ -33,6 +47,7 @@ use crate::memory::{SharedBufferPool, SharedFeatureCache};
 use crate::metrics::{RunMetrics, SpanModel, StageTimer};
 use crate::op::{
     gather_hyperbatch, make_hyperbatches, make_minibatches, sample_hyperbatch, select_targets,
+    SampleOutput,
 };
 use crate::storage::block::{FeatureBlockLayout, GraphBlock};
 use crate::storage::device::{SharedSsd, SsdModel};
@@ -51,14 +66,47 @@ pub struct EpochResult {
     pub accuracy: f32,
 }
 
-/// One prepared hyperbatch flowing from the preparation stage to the
+/// One prepared hyperbatch flowing from the preparation stage(s) to the
 /// compute stage.
 struct PreparedHyperbatch {
     minibatches: Vec<MinibatchData>,
     /// This hyperbatch's preparation metrics (wall + simulated I/O).
     metrics: RunMetrics,
-    /// Total preparation work of this hyperbatch for span accounting.
-    prep_work_ns: u64,
+    /// Sampling-stage work of this hyperbatch for span accounting.
+    sample_work_ns: u64,
+    /// Gathering-stage work of this hyperbatch for span accounting.
+    gather_work_ns: u64,
+}
+
+/// One sampled hyperbatch flowing from the sample worker to the gather
+/// worker under the three-stage schedule.
+struct SampledHyperbatch {
+    /// Index into the epoch's hyperbatch list (the gather worker looks up
+    /// the targets itself instead of shipping them through the channel).
+    index: usize,
+    samples: SampleOutput,
+    /// Sampling metrics so far (the gather worker keeps accumulating into
+    /// the same record).
+    metrics: RunMetrics,
+    /// Sampling-stage work for span accounting.
+    sample_work_ns: u64,
+}
+
+/// Send on a bounded stage channel, accruing wall time into
+/// `backpressure_ns` only when the channel is actually full — an
+/// unblocked send is not backpressure. Returns `false` when the receiving
+/// stage is gone (the epoch is shutting down).
+fn send_backpressured<T>(tx: &mpsc::SyncSender<T>, msg: T, backpressure_ns: &mut u64) -> bool {
+    match tx.try_send(msg) {
+        Ok(()) => true,
+        Err(mpsc::TrySendError::Full(msg)) => {
+            let t0 = Instant::now();
+            let ok = tx.send(msg).is_ok();
+            *backpressure_ns += t0.elapsed().as_nanos() as u64;
+            ok
+        }
+        Err(mpsc::TrySendError::Disconnected(_)) => false,
+    }
 }
 
 /// Running loss/accuracy tally across an epoch's train steps.
@@ -162,13 +210,22 @@ impl AgnesRunner {
         targets: &[Vec<u32>],
         metrics: &mut RunMetrics,
     ) -> Result<Vec<MinibatchData>> {
-        let fanouts = self.config.train.fanouts.clone();
-        let dim = self.dataset.spec.feature_dim;
-        let classes = self.dataset.spec.num_classes;
-        let seed = self.config.train.seed;
+        let samples = self.sample_stage(targets, metrics)?;
+        self.gather_stage(targets, &samples, metrics)
+    }
 
-        // ---- sampling process (S-1..S-3)
-        let io_before = self.ssd.busy_ns();
+    /// The sampling process (S-1..S-3) for one hyperbatch, independently
+    /// callable so the three-stage executor can run it on its own worker.
+    /// Touches only the graph store / graph buffer; simulated I/O is
+    /// attributed through the graph store's per-store charge counter, so
+    /// a concurrently running gather stage (feature store) cannot pollute
+    /// `sample_io_ns`.
+    pub fn sample_stage(
+        &self,
+        targets: &[Vec<u32>],
+        metrics: &mut RunMetrics,
+    ) -> Result<SampleOutput> {
+        let io_before = self.graph_store.charged_ns();
         let samples;
         {
             let _t = StageTimer::new(&mut metrics.sample_wall_ns);
@@ -177,17 +234,32 @@ impl AgnesRunner {
                 &self.graph_pool,
                 &self.engine,
                 targets,
-                &fanouts,
-                seed,
+                &self.config.train.fanouts,
+                self.config.train.seed,
             )?;
         }
-        let io_mid = self.ssd.busy_ns();
-        metrics.sample_io_ns += io_mid - io_before;
+        metrics.sample_io_ns += self.graph_store.charged_ns() - io_before;
         metrics.sampled_nodes += samples.total_sampled();
+        Ok(samples)
+    }
 
-        // ---- gathering process (G-1..G-3)
+    /// The gathering process (G-1..G-3) + minibatch assembly for one
+    /// sampled hyperbatch, independently callable so the three-stage
+    /// executor can run it on its own worker. Touches only the feature
+    /// store / feature buffer / feature cache (see [`Self::sample_stage`]
+    /// for the attribution rationale).
+    pub fn gather_stage(
+        &self,
+        targets: &[Vec<u32>],
+        samples: &SampleOutput,
+        metrics: &mut RunMetrics,
+    ) -> Result<Vec<MinibatchData>> {
+        let fanouts = self.config.train.fanouts.clone();
+        let dim = self.dataset.spec.feature_dim;
+        let classes = self.dataset.spec.num_classes;
         let node_sets: Vec<Vec<u32>> =
             (0..targets.len()).map(|mb| samples.flat_nodes(mb)).collect();
+        let io_before = self.feature_store.charged_ns();
         let gathered;
         {
             let _t = StageTimer::new(&mut metrics.gather_wall_ns);
@@ -199,7 +271,7 @@ impl AgnesRunner {
                 &node_sets,
             )?;
         }
-        metrics.gather_io_ns += self.ssd.busy_ns() - io_mid;
+        metrics.gather_io_ns += self.feature_store.charged_ns() - io_before;
         metrics.gathered_features += gathered.cache_hits + gathered.block_fills;
 
         // ---- assemble per-minibatch compute inputs (the transfer step
@@ -253,16 +325,23 @@ impl AgnesRunner {
 
     /// Run one full epoch: every hyperbatch through preparation and the
     /// compute backend. With `train.pipeline_depth >= 2` preparation of
-    /// hyperbatch *k+1* overlaps computation of hyperbatch *k*; otherwise
-    /// the stages run strictly in sequence. Returns metrics and the
-    /// epoch's loss/accuracy — identical in both modes for a fixed seed.
+    /// hyperbatch *k+1* overlaps computation of hyperbatch *k* — and with
+    /// `train.prepare_stages = 2` (and depth >= 3) sampling of *k+2*
+    /// additionally overlaps gathering of *k+1*. Otherwise the stages run
+    /// strictly in sequence. Returns metrics and the epoch's
+    /// loss/accuracy — identical under every schedule for a fixed seed.
     pub fn run_epoch(
         &mut self,
         epoch: usize,
         compute: &mut dyn ComputeBackend,
     ) -> Result<EpochResult> {
         let depth = self.config.train.pipeline_depth;
-        if depth >= 2 {
+        let split = self.config.train.prepare_stages >= 2;
+        if depth >= 3 && split {
+            // three stages each hold one in-flight hyperbatch, so the
+            // split schedule needs depth >= 3 to admit the pipeline at all
+            self.run_epoch_three_stage(epoch, compute, depth)
+        } else if depth >= 2 {
             self.run_epoch_pipelined(epoch, compute, depth)
         } else {
             self.run_epoch_sequential(epoch, compute)
@@ -277,7 +356,8 @@ impl AgnesRunner {
         epoch: usize,
         compute: &mut dyn ComputeBackend,
     ) -> Result<EpochResult> {
-        let mut metrics = RunMetrics { pipeline_depth: 1, ..Default::default() };
+        let mut metrics =
+            RunMetrics { pipeline_depth: 1, prepare_stages: 1, ..Default::default() };
         let mut tally = EpochTally::default();
         let mut span = SpanModel::new(1);
         let epoch_t0 = Instant::now();
@@ -312,7 +392,8 @@ impl AgnesRunner {
     ) -> Result<EpochResult> {
         let hyperbatches = self.epoch_hyperbatches(epoch);
         let n = hyperbatches.len();
-        let mut metrics = RunMetrics { pipeline_depth: depth as u32, ..Default::default() };
+        let mut metrics =
+            RunMetrics { pipeline_depth: depth as u32, prepare_stages: 1, ..Default::default() };
         let mut tally = EpochTally::default();
         let mut span = SpanModel::new(depth);
         let epoch_t0 = Instant::now();
@@ -327,16 +408,16 @@ impl AgnesRunner {
                 for hb in &hyperbatches {
                     let mut m = RunMetrics::default();
                     let msg = this.prepare_hyperbatch(hb, &mut m).map(|minibatches| {
-                        PreparedHyperbatch { minibatches, prep_work_ns: m.prep_ns(), metrics: m }
+                        PreparedHyperbatch {
+                            minibatches,
+                            sample_work_ns: m.sample_stage_ns(),
+                            gather_work_ns: m.gather_stage_ns(),
+                            metrics: m,
+                        }
                     });
                     let failed = msg.is_err();
-                    let send_t0 = Instant::now();
-                    if tx.send(msg).is_err() {
-                        break; // compute stage ended early: stop preparing
-                    }
-                    backpressure_ns += send_t0.elapsed().as_nanos() as u64;
-                    if failed {
-                        break;
+                    if !send_backpressured(&tx, msg, &mut backpressure_ns) || failed {
+                        break; // compute ended early, or our own error sent
                     }
                 }
                 backpressure_ns
@@ -360,7 +441,7 @@ impl AgnesRunner {
                         &mut metrics,
                         &mut tally,
                     )?;
-                    span.advance(prepared.prep_work_ns, comp_work);
+                    span.advance(prepared.sample_work_ns + prepared.gather_work_ns, comp_work);
                 }
                 Ok(())
             })();
@@ -373,6 +454,137 @@ impl AgnesRunner {
         metrics.prep_backpressure_ns =
             producer_join.map_err(|_| anyhow::anyhow!("prepare stage panicked"))?;
         consumer_result?;
+        metrics.stage_stall_ns = vec![0, metrics.prep_stall_ns];
+        metrics.stage_backpressure_ns = vec![metrics.prep_backpressure_ns, 0];
+        metrics.epoch_span_ns = span.span();
+        metrics.epoch_wall_ns = epoch_t0.elapsed().as_nanos() as u64;
+        self.finish_metrics(&mut metrics);
+        Ok(tally.result(metrics))
+    }
+
+    /// The three-stage schedule (`prepare_stages = 2`, `depth >= 3`): a
+    /// sample worker produces [`SampleOutput`]s in hyperbatch order, a
+    /// gather worker turns them into prepared minibatches, and the calling
+    /// thread computes — sampling of *k+2* overlaps gathering of *k+1*
+    /// overlaps compute of *k*. In-flight accounting: each stage holds one
+    /// hyperbatch (3) and the two bounded channels buffer the remaining
+    /// `depth - 3` between them, so at peak `depth` hyperbatches are
+    /// resident — the same bound the [`SpanModel`] gate uses. Errors flow
+    /// downstream as messages; when any stage stops, the channels
+    /// disconnect and the upstream workers wind down (no hang, no leaked
+    /// threads — `std::thread::scope` joins both workers).
+    fn run_epoch_three_stage(
+        &self,
+        epoch: usize,
+        compute: &mut dyn ComputeBackend,
+        depth: usize,
+    ) -> Result<EpochResult> {
+        let hyperbatches = self.epoch_hyperbatches(epoch);
+        let n = hyperbatches.len();
+        let mut metrics =
+            RunMetrics { pipeline_depth: depth as u32, prepare_stages: 2, ..Default::default() };
+        let mut tally = EpochTally::default();
+        let mut span = SpanModel::staged(3, depth);
+        let epoch_t0 = Instant::now();
+        let slack = depth - 3;
+        let (tx_s, rx_s) = mpsc::sync_channel::<Result<SampledHyperbatch>>(slack / 2);
+        let (tx_g, rx_g) = mpsc::sync_channel::<Result<PreparedHyperbatch>>(slack - slack / 2);
+        let this: &AgnesRunner = self;
+        let hbs: &[Vec<Vec<u32>>] = &hyperbatches;
+
+        let (consumer_result, sample_join, gather_join) = std::thread::scope(|s| {
+            let sampler = s.spawn(move || -> u64 {
+                let mut backpressure_ns = 0u64;
+                for (index, hb) in hbs.iter().enumerate() {
+                    let mut m = RunMetrics::default();
+                    let msg = this.sample_stage(hb, &mut m).map(|samples| SampledHyperbatch {
+                        index,
+                        sample_work_ns: m.sample_stage_ns(),
+                        samples,
+                        metrics: m,
+                    });
+                    let failed = msg.is_err();
+                    if !send_backpressured(&tx_s, msg, &mut backpressure_ns) || failed {
+                        break; // downstream ended early, or our error sent
+                    }
+                }
+                backpressure_ns
+            });
+
+            let gatherer = s.spawn(move || -> (u64, u64) {
+                let mut stall_ns = 0u64;
+                let mut backpressure_ns = 0u64;
+                loop {
+                    let recv_t0 = Instant::now();
+                    let recv = rx_s.recv();
+                    let waited = recv_t0.elapsed().as_nanos() as u64;
+                    let msg = match recv {
+                        Ok(m) => {
+                            stall_ns += waited;
+                            m
+                        }
+                        // sample worker done (or gone): no more input
+                        Err(_) => break,
+                    };
+                    let out = msg.and_then(|sampled| {
+                        let mut m = sampled.metrics;
+                        let minibatches =
+                            this.gather_stage(&hbs[sampled.index], &sampled.samples, &mut m)?;
+                        Ok(PreparedHyperbatch {
+                            minibatches,
+                            sample_work_ns: sampled.sample_work_ns,
+                            gather_work_ns: m.gather_stage_ns(),
+                            metrics: m,
+                        })
+                    });
+                    let failed = out.is_err();
+                    if !send_backpressured(&tx_g, out, &mut backpressure_ns) || failed {
+                        break; // compute ended early, or our error sent
+                    }
+                }
+                (stall_ns, backpressure_ns)
+            });
+
+            let consumer_result = (|| -> Result<()> {
+                for _ in 0..n {
+                    let recv_t0 = Instant::now();
+                    let msg = match rx_g.recv() {
+                        Ok(m) => m,
+                        // workers only drop the channel early after a panic
+                        // (errors arrive as messages first)
+                        Err(_) => anyhow::bail!("prepare stages terminated unexpectedly"),
+                    };
+                    metrics.prep_stall_ns += recv_t0.elapsed().as_nanos() as u64;
+                    let prepared = msg?;
+                    metrics.merge(&prepared.metrics);
+                    let comp_work = Self::run_compute(
+                        compute,
+                        &prepared.minibatches,
+                        &mut metrics,
+                        &mut tally,
+                    )?;
+                    span.advance_stages(&[
+                        prepared.sample_work_ns,
+                        prepared.gather_work_ns,
+                        comp_work,
+                    ]);
+                }
+                Ok(())
+            })();
+
+            // unblock a gatherer stuck in `send` before joining; the
+            // gatherer in turn drops its receiver and unblocks the sampler
+            drop(rx_g);
+            (consumer_result, sampler.join(), gatherer.join())
+        });
+
+        let sample_bp = sample_join.map_err(|_| anyhow::anyhow!("sample stage panicked"))?;
+        let (gather_stall, gather_bp) =
+            gather_join.map_err(|_| anyhow::anyhow!("gather stage panicked"))?;
+        consumer_result?;
+        metrics.prep_backpressure_ns = sample_bp + gather_bp;
+        metrics.stage_stall_ns = vec![0, gather_stall, metrics.prep_stall_ns];
+        metrics.stage_backpressure_ns = vec![sample_bp, gather_bp, 0];
         metrics.epoch_span_ns = span.span();
         metrics.epoch_wall_ns = epoch_t0.elapsed().as_nanos() as u64;
         self.finish_metrics(&mut metrics);
@@ -542,23 +754,74 @@ mod tests {
     }
 
     #[test]
-    fn prepare_error_surfaces_through_pipeline() {
-        // unknown dataset never gets this far; instead force an error by
-        // truncating the feature store after open
+    fn three_stage_epoch_matches_sequential() {
+        let (r0, _tmp) = runner();
+        let cfg = r0.config.clone();
+        drop(r0);
+        let mut cfg_seq = cfg.clone();
+        cfg_seq.train.pipeline_depth = 1;
+        cfg_seq.train.prepare_stages = 1;
+        let mut cfg_three = cfg;
+        cfg_three.train.pipeline_depth = 4;
+        cfg_three.train.prepare_stages = 2;
+        let mut seq = AgnesRunner::open(cfg_seq).unwrap();
+        let mut three = AgnesRunner::open(cfg_three).unwrap();
+        let a = seq.run_epoch(0, &mut NullCompute).unwrap();
+        let b = three.run_epoch(0, &mut NullCompute).unwrap();
+        assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits());
+        assert_eq!(a.accuracy.to_bits(), b.accuracy.to_bits());
+        assert_eq!(a.metrics.sampled_nodes, b.metrics.sampled_nodes);
+        assert_eq!(a.metrics.gathered_features, b.metrics.gathered_features);
+        assert_eq!(
+            a.metrics.device.num_requests, b.metrics.device.num_requests,
+            "splitting preparation must not change the storage access pattern"
+        );
+        assert_eq!(b.metrics.prepare_stages, 2);
+        assert_eq!(b.metrics.stage_stall_ns.len(), 3);
+        assert_eq!(b.metrics.stage_backpressure_ns.len(), 3);
+        assert!(b.metrics.span_ns() <= b.metrics.total_ns());
+    }
+
+    #[test]
+    fn split_prepare_needs_depth_three() {
+        // depth 2 cannot admit three in-flight stage holders: the executor
+        // falls back to the fused two-stage schedule
         let (r0, _tmp) = runner();
         let mut cfg = r0.config.clone();
-        cfg.train.pipeline_depth = 3;
         drop(r0);
+        cfg.train.pipeline_depth = 2;
+        cfg.train.prepare_stages = 2;
         let mut r = AgnesRunner::open(cfg).unwrap();
-        // chop the graph block file so the sampling sweep fails in the
-        // preparation worker; the error must cross the channel boundary
-        std::fs::OpenOptions::new()
-            .write(true)
-            .open(&r.dataset.paths.graph_blocks)
-            .unwrap()
-            .set_len(1)
-            .unwrap();
-        let err = r.run_epoch(0, &mut NullCompute);
-        assert!(err.is_err(), "truncated store must fail the epoch, got {err:?}");
+        let res = r.run_epoch(0, &mut NullCompute).unwrap();
+        assert_eq!(res.metrics.prepare_stages, 1);
+        assert_eq!(res.metrics.pipeline_depth, 2);
+    }
+
+    #[test]
+    fn prepare_error_surfaces_through_pipeline() {
+        // unknown dataset never gets this far; instead force an error by
+        // truncating the graph store after open — the error must cross
+        // every stage boundary of both pipelined schedules
+        for prepare_stages in [1usize, 2] {
+            let (r0, _tmp) = runner();
+            let mut cfg = r0.config.clone();
+            cfg.train.pipeline_depth = 3;
+            cfg.train.prepare_stages = prepare_stages;
+            drop(r0);
+            let mut r = AgnesRunner::open(cfg).unwrap();
+            // chop the graph block file so the sampling sweep fails in the
+            // preparation worker
+            std::fs::OpenOptions::new()
+                .write(true)
+                .open(&r.dataset.paths.graph_blocks)
+                .unwrap()
+                .set_len(1)
+                .unwrap();
+            let err = r.run_epoch(0, &mut NullCompute);
+            assert!(
+                err.is_err(),
+                "truncated store must fail the {prepare_stages}-stage-prepare epoch, got {err:?}"
+            );
+        }
     }
 }

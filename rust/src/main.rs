@@ -15,7 +15,9 @@
 //!   --block-size <bytes>   storage block size
 //!   --hyperbatch <n>       minibatches per hyperbatch
 //!   --minibatch <n>        targets per minibatch
-//!   --pipeline-depth <n>   prepared hyperbatches in flight (0/1 = sequential)
+//!   --pipeline-depth <n>   in-flight hyperbatches (0/1 = sequential)
+//!   --prepare-stages <n>   preparation workers: 1 = fused sample+gather,
+//!                          2 = split sample/gather (three-stage pipeline)
 //!   --threads <n>          CPU I/O threads
 //!   --ssds <n>             RAID0 array size
 //!   --model <m>            gcn | sage | gat
@@ -132,6 +134,9 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     }
     if let Some(d) = args.get::<usize>("pipeline-depth")? {
         c.train.pipeline_depth = d;
+    }
+    if let Some(s) = args.get::<usize>("prepare-stages")? {
+        c.train.prepare_stages = s;
     }
     if let Some(t) = args.get::<usize>("threads")? {
         c.io.num_threads = t;

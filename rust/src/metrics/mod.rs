@@ -46,13 +46,24 @@ pub struct RunMetrics {
     /// Real wall-clock nanoseconds of the epoch driver.
     pub epoch_wall_ns: u64,
     /// Wall time the compute stage spent waiting for prepared data
-    /// (pipeline starved — prepare is the bottleneck).
+    /// (pipeline starved — preparation is the bottleneck).
     pub prep_stall_ns: u64,
-    /// Wall time the prepare stage spent blocked on the bounded channel
-    /// (pipeline backpressure — compute is the bottleneck).
+    /// Wall time the preparation stages spent blocked on their bounded
+    /// output channels (pipeline backpressure — a downstream stage is the
+    /// bottleneck). Only accrues when a channel is actually full.
     pub prep_backpressure_ns: u64,
+    /// Per-stage input-wait wall time, indexed by schedule position (e.g.
+    /// three-stage: `[sample, gather, compute]`; the first stage has no
+    /// input and stays 0). Empty for sequential runs.
+    pub stage_stall_ns: Vec<u64>,
+    /// Per-stage output-blocked wall time, same indexing (the last stage
+    /// has no output and stays 0). Empty for sequential runs.
+    pub stage_backpressure_ns: Vec<u64>,
     /// Executor depth this epoch ran with (1 = sequential).
     pub pipeline_depth: u32,
+    /// Preparation stages in the schedule: 1 = fused prepare (sample +
+    /// gather on one worker), 2 = split sample/gather workers.
+    pub prepare_stages: u32,
     /// Device snapshot at end of run.
     pub device: DeviceStats,
     /// Graph-buffer cache hit ratio.
@@ -67,11 +78,19 @@ pub struct RunMetrics {
 impl RunMetrics {
     /// Data-preparation nanoseconds (sample + gather + transfer + storage).
     pub fn prep_ns(&self) -> u64 {
-        self.sample_wall_ns
-            + self.gather_wall_ns
-            + self.transfer_wall_ns
-            + self.sample_io_ns
-            + self.gather_io_ns
+        self.sample_stage_ns() + self.gather_stage_ns()
+    }
+
+    /// Sampling-stage nanoseconds (wall + simulated storage) — the first
+    /// stage of the split-preparation schedule.
+    pub fn sample_stage_ns(&self) -> u64 {
+        self.sample_wall_ns + self.sample_io_ns
+    }
+
+    /// Gathering-stage nanoseconds (wall + simulated storage + transfer)
+    /// — the second stage of the split-preparation schedule.
+    pub fn gather_stage_ns(&self) -> u64 {
+        self.gather_wall_ns + self.gather_io_ns + self.transfer_wall_ns
     }
 
     /// Computation nanoseconds (wall + simulated).
@@ -137,7 +156,10 @@ impl RunMetrics {
         self.epoch_wall_ns += o.epoch_wall_ns;
         self.prep_stall_ns += o.prep_stall_ns;
         self.prep_backpressure_ns += o.prep_backpressure_ns;
+        merge_stage_vec(&mut self.stage_stall_ns, &o.stage_stall_ns);
+        merge_stage_vec(&mut self.stage_backpressure_ns, &o.stage_backpressure_ns);
         self.pipeline_depth = self.pipeline_depth.max(o.pipeline_depth);
+        self.prepare_stages = self.prepare_stages.max(o.prepare_stages);
         self.device.merge(&o.device);
         self.minibatches += o.minibatches;
         self.sampled_nodes += o.sampled_nodes;
@@ -148,49 +170,86 @@ impl RunMetrics {
     }
 }
 
-/// Analytic schedule of a two-stage pipeline with a bounded buffer of
-/// `depth` prepared hyperbatches in flight: feed each hyperbatch's
-/// prepare-work and compute-work (wall + simulated) in order and read the
-/// resulting elapsed span. `depth = 1` reproduces the sequential schedule
-/// (`span == Σ(prep + compute)`); `depth ≥ 2` lets hyperbatch *k+1*'s
-/// preparation hide behind hyperbatch *k*'s computation:
+/// Element-wise add of per-stage counters, growing `dst` as needed.
+fn merge_stage_vec(dst: &mut Vec<u64>, src: &[u64]) {
+    if dst.len() < src.len() {
+        dst.resize(src.len(), 0);
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Analytic schedule of an N-stage pipeline with at most `depth` items in
+/// flight: feed each hyperbatch's per-stage work (wall + simulated) in
+/// order and read the resulting elapsed span. For each item `k` with
+/// stage works `w[s]`:
 ///
 /// ```text
-/// prep_done[k] = max(prep_done[k-1], comp_done[k-depth]) + prep[k]
-/// comp_done[k] = max(prep_done[k],  comp_done[k-1])      + comp[k]
+/// done[0][k] = max(done[0][k-1], done[S-1][k-depth]) + w[0]
+/// done[s][k] = max(done[s][k-1], done[s-1][k])       + w[s]   (s >= 1)
 /// ```
+///
+/// i.e. a stage is busy with one item at a time, an item cannot enter a
+/// stage before the previous stage finished it, and item `k` cannot enter
+/// the pipeline until item `k-depth` has fully retired (the bounded
+/// resident-hyperbatch budget). `depth = 1` reproduces the sequential
+/// schedule (`span == Σ Σ w[s]`); splitting preparation into more stages
+/// can only shrink the span because the sub-stages pipeline against each
+/// other.
 #[derive(Debug)]
 pub struct SpanModel {
     depth: usize,
-    prep_done: u64,
-    comp_done: VecDeque<u64>,
+    /// Completion time of the most recent item per stage.
+    stage_done: Vec<u64>,
+    /// Final-stage completion times of the last `depth` items.
+    retired: VecDeque<u64>,
 }
 
 impl SpanModel {
+    /// The classic two-stage (prepare → compute) model.
     pub fn new(depth: usize) -> SpanModel {
-        SpanModel { depth: depth.max(1), prep_done: 0, comp_done: VecDeque::new() }
+        SpanModel::staged(2, depth)
     }
 
-    /// Record the next hyperbatch's stage costs.
+    /// An `stages`-stage pipeline admitting at most `depth` items.
+    pub fn staged(stages: usize, depth: usize) -> SpanModel {
+        SpanModel {
+            depth: depth.max(1),
+            stage_done: vec![0; stages.max(1)],
+            retired: VecDeque::new(),
+        }
+    }
+
+    /// Record the next hyperbatch's two-stage costs.
     pub fn advance(&mut self, prep_ns: u64, comp_ns: u64) {
-        let gate = if self.comp_done.len() >= self.depth {
-            // the buffer slot frees when hyperbatch k-depth finishes compute
-            self.comp_done[self.comp_done.len() - self.depth]
+        self.advance_stages(&[prep_ns, comp_ns]);
+    }
+
+    /// Record the next hyperbatch's per-stage costs (`works.len()` must
+    /// match the model's stage count).
+    pub fn advance_stages(&mut self, works: &[u64]) {
+        debug_assert_eq!(works.len(), self.stage_done.len(), "stage count mismatch");
+        let gate = if self.retired.len() >= self.depth {
+            // the resident slot frees when item k-depth leaves the last stage
+            self.retired[self.retired.len() - self.depth]
         } else {
             0
         };
-        self.prep_done = self.prep_done.max(gate) + prep_ns;
-        let last_comp = self.comp_done.back().copied().unwrap_or(0);
-        let done = self.prep_done.max(last_comp) + comp_ns;
-        self.comp_done.push_back(done);
-        if self.comp_done.len() > self.depth {
-            self.comp_done.pop_front();
+        let mut t = gate;
+        for (done, &w) in self.stage_done.iter_mut().zip(works) {
+            t = t.max(*done) + w;
+            *done = t;
+        }
+        self.retired.push_back(t);
+        if self.retired.len() > self.depth {
+            self.retired.pop_front();
         }
     }
 
     /// Elapsed span so far.
     pub fn span(&self) -> u64 {
-        self.comp_done.back().copied().unwrap_or(self.prep_done)
+        self.retired.back().copied().unwrap_or(0)
     }
 }
 
@@ -334,6 +393,48 @@ mod tests {
     }
 
     #[test]
+    fn staged_span_model_three_stages() {
+        // depth 1: strictly sequential, span is the sum of all stage works
+        let mut s = SpanModel::staged(3, 1);
+        for _ in 0..4 {
+            s.advance_stages(&[5, 7, 3]);
+        }
+        assert_eq!(s.span(), 4 * 15);
+        // pipelined: the slowest stage dominates the steady state
+        let mut s = SpanModel::staged(3, 4);
+        for _ in 0..10 {
+            s.advance_stages(&[10, 20, 10]);
+        }
+        assert_eq!(s.span(), 10 + 10 * 20 + 10);
+    }
+
+    #[test]
+    fn splitting_prepare_shrinks_the_span() {
+        // same total work per item: fused prepare (30) vs split (10 + 20);
+        // the split schedule pipelines sample against gather and wins
+        let mut two = SpanModel::new(4);
+        let mut three = SpanModel::staged(3, 4);
+        for _ in 0..6 {
+            two.advance(30, 10);
+            three.advance_stages(&[10, 20, 10]);
+        }
+        assert_eq!(two.span(), 6 * 30 + 10);
+        assert_eq!(three.span(), 10 + 10 + 6 * 20);
+        assert!(three.span() < two.span());
+    }
+
+    #[test]
+    fn staged_two_equals_classic_advance() {
+        let mut a = SpanModel::new(3);
+        let mut b = SpanModel::staged(2, 3);
+        for (p, c) in [(10, 4), (3, 9), (7, 7), (20, 1)] {
+            a.advance(p, c);
+            b.advance_stages(&[p, c]);
+            assert_eq!(a.span(), b.span());
+        }
+    }
+
+    #[test]
     fn stage_timer_accumulates() {
         let mut sink = 0u64;
         {
@@ -357,6 +458,8 @@ mod tests {
             graph_hit_ratio: 0.5,
             prep_stall_ns: 9,
             pipeline_depth: 4,
+            prepare_stages: 2,
+            stage_stall_ns: vec![0, 5, 11],
             ..Default::default()
         };
         a.merge(&b);
@@ -365,6 +468,10 @@ mod tests {
         assert_eq!(a.graph_hit_ratio, 0.5);
         assert_eq!(a.prep_stall_ns, 9);
         assert_eq!(a.pipeline_depth, 4);
+        assert_eq!(a.prepare_stages, 2);
+        assert_eq!(a.stage_stall_ns, vec![0, 5, 11]);
+        a.merge(&RunMetrics { stage_stall_ns: vec![1, 1], ..Default::default() });
+        assert_eq!(a.stage_stall_ns, vec![1, 6, 11], "shorter vectors merge element-wise");
     }
 
     #[test]

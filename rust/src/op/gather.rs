@@ -84,10 +84,47 @@ pub fn gather_hyperbatch(
 
     // pass 2: block sweep over the misses, bounded by buffer capacity,
     // next run prefetched on the engine's worker pool
+    let mut prefetched: FeaturePrefetch = None;
+    let result = gather_sweep(
+        store,
+        pool,
+        cache,
+        engine,
+        &bucket,
+        &mut out,
+        &mut block_fills,
+        &mut prefetched,
+    );
+    // failed mid-sweep with the next run's prefetch in flight: cancel +
+    // drain so the abandoned read cannot keep charging the device model
+    if let Some((_, pending)) = prefetched.take() {
+        pending.abort();
+    }
+    result?;
+    Ok(GatherOutput { features: out, cache_hits, block_fills })
+}
+
+/// An in-flight prefetch of a run's feature blocks: (block ids, pending read).
+type FeaturePrefetch = Option<(Vec<BlockId>, PendingIo<Vec<Vec<u8>>>)>;
+
+/// The bounded block sweep of [`gather_hyperbatch`] (pass 2). The
+/// in-flight prefetch lives in `prefetched` so the caller can dispose of
+/// it when the sweep errors out.
+#[allow(clippy::too_many_arguments)]
+fn gather_sweep(
+    store: &Arc<FeatureStore>,
+    pool: &SharedBufferPool<Vec<u8>>,
+    cache: &SharedFeatureCache,
+    engine: &IoEngine,
+    bucket: &Bucket,
+    out: &mut [Vec<f32>],
+    block_fills: &mut u64,
+    prefetched: &mut FeaturePrefetch,
+) -> Result<()> {
+    let dim = store.layout.feature_dim;
     let blocks = bucket.blocks();
     let run_len = pool.capacity().max(1);
     let runs: Vec<&[BlockId]> = blocks.chunks(run_len).collect();
-    let mut prefetched: Option<(Vec<BlockId>, PendingIo<Vec<Vec<u8>>>)> = None;
     for (i, run) in runs.iter().enumerate() {
         if let Some((ids, pending)) = prefetched.take() {
             let loaded = pending.wait()?;
@@ -114,7 +151,7 @@ pub fn gather_hyperbatch(
             };
             if !next_missing.is_empty() {
                 let pending = engine.submit_feature_blocks(store, next_missing.clone());
-                prefetched = Some((next_missing, pending));
+                *prefetched = Some((next_missing, pending));
             }
         }
         if !missing.is_empty() {
@@ -141,7 +178,7 @@ pub fn gather_hyperbatch(
                     let dst = &mut out[*mb as usize]
                         [slot as usize * dim..(slot as usize + 1) * dim];
                     copy_f32_le(&bytes[off..off + 4 * dim], dst);
-                    block_fills += 1;
+                    *block_fills += 1;
                     // materialize a copy only if the cache will admit it
                     if cache.wants(v) {
                         cache.fill(v, dst.to_vec());
@@ -152,10 +189,7 @@ pub fn gather_hyperbatch(
             pool.unpin(b);
         }
     }
-    if let Some((_, pending)) = prefetched.take() {
-        let _ = pending.wait();
-    }
-    Ok(GatherOutput { features: out, cache_hits, block_fills })
+    Ok(())
 }
 
 #[cfg(test)]
@@ -255,6 +289,37 @@ mod tests {
         for (slot, &v) in sets[0].iter().enumerate() {
             assert_eq!(&out.features[0][slot * DIM..(slot + 1) * DIM], &expect(v)[..]);
         }
+    }
+
+    #[test]
+    fn failed_sweep_drains_inflight_prefetch() {
+        // chop the store down to block 0, then gather nodes whose blocks
+        // are all beyond the truncation: the first run's synchronous read
+        // fails while the next run's prefetch is in flight, and the sweep
+        // must cancel + drain it — the device request count is final the
+        // moment the error returns
+        let (dir, store) = setup(400);
+        let paths = StorePaths::in_dir(dir.path());
+        std::fs::OpenOptions::new()
+            .write(true)
+            .open(&paths.feature_blocks)
+            .unwrap()
+            .set_len(1024) // 16 nodes/block: keep only nodes 0..16
+            .unwrap();
+        let pool = SharedBufferPool::new(1); // run_len 1 → every run prefetches the next
+        let cache = SharedFeatureCache::new(0, u32::MAX);
+        let engine = IoEngine::new(2, 2);
+        let sets = vec![(32..200u32).collect::<Vec<_>>()]; // blocks 2.. — all phantom now
+        store.ssd.reset();
+        let err = gather_hyperbatch(&store, &pool, &cache, &engine, &sets);
+        assert!(err.is_err(), "reads beyond the truncated store must fail, got {err:?}");
+        let after = store.ssd.stats().num_requests;
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert_eq!(
+            store.ssd.stats().num_requests,
+            after,
+            "abandoned prefetch must not charge the device after the sweep failed"
+        );
     }
 
     #[test]

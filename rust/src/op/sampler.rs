@@ -173,13 +173,40 @@ pub fn sweep_blocks(
         &[super::bucket::Entry],
     ) -> Result<()>,
 ) -> Result<()> {
+    let mut prefetched: GraphPrefetch = None;
+    let result = sweep_runs(store, pool, engine, bucket, &mut process, &mut prefetched);
+    // A failure mid-sweep (sync read, hub continuation, or the processing
+    // closure) leaves the next run's prefetch in flight. Cancel + drain it
+    // so the abandoned read cannot keep running — and charging the device
+    // model — after the sweep has already failed.
+    if let Some((_, pending)) = prefetched.take() {
+        pending.abort();
+    }
+    result
+}
+
+/// An in-flight prefetch of a run's graph blocks: (block ids, pending read).
+type GraphPrefetch = Option<(Vec<BlockId>, PendingIo<Vec<GraphBlock>>)>;
+
+fn sweep_runs(
+    store: &Arc<GraphStore>,
+    pool: &SharedBufferPool<GraphBlock>,
+    engine: &IoEngine,
+    bucket: &Bucket,
+    process: &mut impl FnMut(
+        &SharedBufferPool<GraphBlock>,
+        BlockId,
+        &GraphBlock,
+        u32,
+        &[super::bucket::Entry],
+    ) -> Result<()>,
+    prefetched: &mut GraphPrefetch,
+) -> Result<()> {
     let blocks = bucket.blocks();
     // leave headroom for hub-continuation loads within a run; half the
     // buffer is the processing run, the prefetched next run uses the rest
     let run_len = (pool.capacity() / 2).saturating_sub(1).max(1);
     let runs: Vec<&[BlockId]> = blocks.chunks(run_len).collect();
-    // the in-flight prefetch of the next run: (block ids, pending read)
-    let mut prefetched: Option<(Vec<BlockId>, PendingIo<Vec<GraphBlock>>)> = None;
     for (i, run) in runs.iter().enumerate() {
         // land the previous iteration's prefetch
         if let Some((ids, pending)) = prefetched.take() {
@@ -212,7 +239,7 @@ pub fn sweep_blocks(
             };
             if !next_missing.is_empty() {
                 let pending = engine.submit_graph_blocks(store, next_missing.clone());
-                prefetched = Some((next_missing, pending));
+                *prefetched = Some((next_missing, pending));
             }
         }
         // (3) one batched block-wise storage I/O for this run's misses
@@ -239,11 +266,8 @@ pub fn sweep_blocks(
             pool.unpin(b);
         }
     }
-    // a trailing prefetch only exists if a later run was skipped, which
-    // cannot happen — but drain defensively so no read is left dangling
-    if let Some((_, pending)) = prefetched.take() {
-        let _ = pending.wait();
-    }
+    // on success every prefetch was landed by the following iteration, so
+    // nothing is left in flight here (the caller aborts any leftover)
     Ok(())
 }
 
@@ -370,6 +394,33 @@ mod tests {
         for &k in &out.levels[0][1] {
             assert!(nbrs.contains(&k));
         }
+    }
+
+    #[test]
+    fn failed_sweep_drains_inflight_prefetch() {
+        // processing run 0 fails while run 1's prefetch is in flight: the
+        // sweep must cancel + drain it, so the device model's request
+        // count is final the moment the error returns — no zombie worker
+        // keeps charging after the sweep failed
+        let g = graph();
+        let (_d, store) = setup(&g, 1024);
+        let pool = SharedBufferPool::new(2); // run_len 1 → every run prefetches the next
+        let engine = IoEngine::new(2, 2);
+        let targets = vec![(0..200u32).collect::<Vec<_>>()];
+        let bucket = Bucket::for_graph(&targets, store.index());
+        assert!(bucket.blocks().len() >= 2, "need at least two runs");
+        store.ssd.reset();
+        let err = sweep_blocks(&store, &pool, &engine, &bucket, |_, _, _, _, _| {
+            anyhow::bail!("injected processing failure")
+        });
+        assert!(err.is_err(), "injected failure must surface");
+        let after = store.ssd.stats().num_requests;
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        assert_eq!(
+            store.ssd.stats().num_requests,
+            after,
+            "abandoned prefetch must not charge the device after the sweep failed"
+        );
     }
 
     #[test]

@@ -25,6 +25,7 @@ use super::block::GraphBlock;
 use super::store::{FeatureStore, GraphStore};
 use super::BlockId;
 use crate::Result;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -87,18 +88,21 @@ impl Drop for WorkerPool {
     }
 }
 
-/// Handle to a submitted asynchronous read: poll without blocking, or
-/// wait for the result.
+/// Handle to a submitted asynchronous read: poll without blocking, wait
+/// for the result, or cancel + drain on an error path so an abandoned
+/// prefetch cannot keep running (and charging the device model) behind
+/// the caller's back.
 pub struct PendingIo<T> {
     rx: mpsc::Receiver<Result<T>>,
     done: Option<Result<T>>,
+    cancel: Option<Arc<AtomicBool>>,
 }
 
 impl<T> PendingIo<T> {
     /// An already-completed submission (empty request shortcut).
     pub fn ready(value: T) -> PendingIo<T> {
         let (_tx, rx) = mpsc::channel();
-        PendingIo { rx, done: Some(Ok(value)) }
+        PendingIo { rx, done: Some(Ok(value)), cancel: None }
     }
 
     /// Non-blocking readiness check. A dead worker (panicked job or
@@ -131,6 +135,33 @@ impl<T> PendingIo<T> {
             Err(_) => anyhow::bail!("I/O worker dropped a pending read"),
         }
     }
+
+    /// Request cancellation without blocking. A job that has not started
+    /// yet is skipped entirely (the device model is never charged); a job
+    /// already running completes normally. Follow with [`Self::drain`] (or
+    /// use [`Self::abort`]) to synchronize with the worker.
+    pub fn cancel(&self) {
+        if let Some(flag) = &self.cancel {
+            flag.store(true, Ordering::Release);
+        }
+    }
+
+    /// Block until the worker has either skipped or finished the job, then
+    /// discard the result. After this returns, the submission will issue
+    /// no further device charges.
+    pub fn drain(mut self) {
+        if self.done.take().is_some() {
+            return;
+        }
+        let _ = self.rx.recv();
+    }
+
+    /// Cancel and drain: the error-path disposal for an in-flight prefetch
+    /// whose result is no longer wanted.
+    pub fn abort(self) {
+        self.cancel();
+        self.drain();
+    }
 }
 
 /// Async block I/O engine.
@@ -158,18 +189,29 @@ impl Default for IoEngine {
     }
 }
 
+/// Worst-case number of concurrently outstanding `submit_*` batches: the
+/// sample-stage prefetch, the gather-stage prefetch, and one more
+/// in-flight submission (e.g. an aborted prefetch still draining). The
+/// dispatch pool is sized to this so no submitter ever queues behind
+/// another — parallelism *within* a batch comes from `read_parallel`'s
+/// scoped workers, not from dispatch threads.
+const MAX_CONCURRENT_SUBMITTERS: usize = 3;
+
 impl IoEngine {
     pub fn new(num_threads: usize, async_depth: u32) -> IoEngine {
         let num_threads = num_threads.max(1);
-        // The persistent pool only *dispatches* submitted batches (each job
-        // is one blocking batched read that fans out over scoped workers
-        // itself), so a couple of dispatch threads suffice — sizing it at
-        // num_threads would leave workers permanently idle and oversubscribe
-        // the CPU ~2x whenever a prefetch overlaps a synchronous read.
+        // The persistent pool *dispatches* submitted batches (each job is
+        // one blocking batched read that fans out over scoped workers
+        // itself). It used to be clamped to 2 threads on the theory that
+        // dispatch is cheap — but a dispatch thread is *occupied* for the
+        // whole duration of its batched read, so once the sampler
+        // prefetch, the gather prefetch, and a pipeline stage each had a
+        // batch in flight, the third submission silently queued and the
+        // "async" path degraded to sequential.
         IoEngine {
             num_threads,
             async_depth: async_depth.max(1),
-            pool: WorkerPool::new(num_threads.clamp(1, 2)),
+            pool: WorkerPool::new(MAX_CONCURRENT_SUBMITTERS),
         }
     }
 
@@ -187,7 +229,7 @@ impl IoEngine {
     ) -> Result<Vec<super::block::GraphBlock>> {
         let raw = self.read_parallel(blocks, |b| store.read_block_raw_uncharged(b))?;
         let sizes = vec![store.block_size() as u64; blocks.len()];
-        store.ssd.submit_batch(&sizes, self.effective_concurrency());
+        store.charge_batch(&sizes, self.effective_concurrency());
         Ok(raw.into_iter().map(|buf| super::block::GraphBlock::decode(&buf)).collect())
     }
 
@@ -200,7 +242,7 @@ impl IoEngine {
     ) -> Result<Vec<Vec<u8>>> {
         let raw = self.read_parallel(blocks, |b| store.read_block_raw_uncharged(b))?;
         let sizes = vec![store.layout.block_size as u64; blocks.len()];
-        store.ssd.submit_batch(&sizes, self.effective_concurrency());
+        store.charge_batch(&sizes, self.effective_concurrency());
         Ok(raw)
     }
 
@@ -211,10 +253,19 @@ impl IoEngine {
         F: FnOnce() -> Result<T> + Send + 'static,
     {
         let (tx, rx) = mpsc::channel();
+        let cancel = Arc::new(AtomicBool::new(false));
+        let flag = cancel.clone();
         self.pool.exec(Box::new(move || {
+            // cancelled before we were scheduled: skip the work entirely
+            // (in particular, never charge the device model), but still
+            // send so a draining caller unblocks
+            if flag.load(Ordering::Acquire) {
+                let _ = tx.send(Err(anyhow::anyhow!("I/O submission cancelled")));
+                return;
+            }
             let _ = tx.send(job());
         }));
-        PendingIo { rx, done: None }
+        PendingIo { rx, done: None, cancel: Some(cancel) }
     }
 
     /// Submit a batched graph-block read; it proceeds on the worker pool
@@ -399,5 +450,99 @@ mod tests {
         let mut p = PendingIo::ready(42u32);
         assert!(p.is_ready());
         assert_eq!(p.wait().unwrap(), 42);
+    }
+
+    /// Regression for the dispatch-pool starvation bug: the pool used to
+    /// be clamped to 2 threads, so a third concurrent submission queued
+    /// behind the first two instead of making progress. The pool now has
+    /// `MAX_CONCURRENT_SUBMITTERS` dispatch threads, so even a 1-thread
+    /// engine serves three concurrent submitters.
+    #[test]
+    fn three_concurrent_submissions_all_progress() {
+        let (_d, paths) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let store = Arc::new(GraphStore::open(&paths, ssd).unwrap());
+        let eng = IoEngine::new(1, 2);
+        // occupy two dispatch threads for the whole test (what the sampler
+        // and gather prefetches look like mid-batch)
+        let (g1_tx, g1_rx) = mpsc::channel::<()>();
+        let (g2_tx, g2_rx) = mpsc::channel::<()>();
+        let held1 = eng.submit(move || {
+            let _ = g1_rx.recv();
+            Ok(1u8)
+        });
+        let held2 = eng.submit(move || {
+            let _ = g2_rx.recv();
+            Ok(2u8)
+        });
+        // a third batched read must complete while both are still held
+        let blocks: Vec<BlockId> = (0..store.num_blocks()).map(BlockId).collect();
+        let mut pending = eng.submit_graph_blocks(&store, blocks.clone());
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !pending.is_ready() {
+            assert!(
+                std::time::Instant::now() < deadline,
+                "third submission starved behind two in-flight dispatches"
+            );
+            std::thread::yield_now();
+        }
+        let got = pending.wait().unwrap();
+        assert_eq!(got.len(), blocks.len());
+        // release the held dispatchers and let them finish
+        g1_tx.send(()).unwrap();
+        g2_tx.send(()).unwrap();
+        assert_eq!(held1.wait().unwrap(), 1);
+        assert_eq!(held2.wait().unwrap(), 2);
+    }
+
+    /// A submission cancelled before its job is scheduled is skipped and
+    /// never charges the device model.
+    #[test]
+    fn cancelled_submission_is_skipped_and_never_charges() {
+        let (_d, paths) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let store = Arc::new(GraphStore::open(&paths, ssd.clone()).unwrap());
+        // occupy every dispatch thread so the read stays queued; jobs are
+        // dispatched FIFO, so the read cannot start before all gates are
+        // held
+        let eng = IoEngine::new(1, 1);
+        let gates: Vec<_> = (0..MAX_CONCURRENT_SUBMITTERS)
+            .map(|_| {
+                let (tx, rx) = mpsc::channel::<()>();
+                let held = eng.submit(move || {
+                    let _ = rx.recv();
+                    Ok(())
+                });
+                (tx, held)
+            })
+            .collect();
+        let pending = eng.submit_graph_blocks(&store, vec![BlockId(0)]);
+        pending.cancel(); // flagged while still queued: must be skipped
+        for (tx, _) in &gates {
+            tx.send(()).unwrap();
+        }
+        pending.drain(); // synchronize with the worker
+        for (_, held) in gates {
+            held.wait().unwrap();
+        }
+        assert_eq!(ssd.stats().num_requests, 0, "skipped job must not charge the device");
+    }
+
+    /// Aborting a submission that already ran drains it: exactly one
+    /// charge, and nothing trickles in afterwards.
+    #[test]
+    fn abort_after_completion_drains_cleanly() {
+        let (_d, paths) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let store = Arc::new(GraphStore::open(&paths, ssd.clone()).unwrap());
+        let eng = IoEngine::new(2, 2);
+        let mut pending = eng.submit_graph_blocks(&store, vec![BlockId(0)]);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while !pending.is_ready() {
+            assert!(std::time::Instant::now() < deadline, "read never completed");
+            std::thread::yield_now();
+        }
+        pending.abort();
+        assert_eq!(ssd.stats().num_requests, 1, "completed read charges exactly once");
     }
 }

@@ -12,6 +12,7 @@ use byteorder::{ByteOrder, LittleEndian};
 use anyhow::Context;
 use std::fs::File;
 use std::os::unix::fs::FileExt;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Read-only graph block store.
@@ -22,6 +23,12 @@ pub struct GraphStore {
     /// the baselines' per-node direct reads and by tests as ground truth.
     pub csr_offsets: Arc<Vec<u64>>,
     pub ssd: SharedSsd,
+    /// Simulated device ns charged through *this* store (the shared
+    /// [`SsdModel`](super::device::SsdModel) clock is global; staged
+    /// executors attribute I/O per stage via per-store deltas because the
+    /// sampling stage only reads the graph store and the gathering stage
+    /// only reads the feature store).
+    charged_ns: AtomicU64,
 }
 
 impl GraphStore {
@@ -33,7 +40,27 @@ impl GraphStore {
         let raw = std::fs::read(&paths.csr_offsets)?;
         let mut offsets = vec![0u64; raw.len() / 8];
         LittleEndian::read_u64_into(&raw, &mut offsets);
-        Ok(GraphStore { file, meta, csr_offsets: Arc::new(offsets), ssd })
+        Ok(GraphStore {
+            file,
+            meta,
+            csr_offsets: Arc::new(offsets),
+            ssd,
+            charged_ns: AtomicU64::new(0),
+        })
+    }
+
+    /// Charge a batch of reads to the device model, attributing the
+    /// simulated elapsed time to this store (see `charged_ns`). Returns
+    /// the batch's simulated nanoseconds.
+    pub fn charge_batch(&self, sizes: &[u64], concurrency: u32) -> u64 {
+        let ns = self.ssd.submit_batch(sizes, concurrency);
+        self.charged_ns.fetch_add(ns, Ordering::Relaxed);
+        ns
+    }
+
+    /// Simulated device nanoseconds charged through this store so far.
+    pub fn charged_ns(&self) -> u64 {
+        self.charged_ns.load(Ordering::Relaxed)
     }
 
     #[inline]
@@ -61,7 +88,7 @@ impl GraphStore {
     /// Read raw block bytes.
     pub fn read_block_raw(&self, b: BlockId, concurrency: u32) -> Result<Vec<u8>> {
         let buf = self.read_block_raw_uncharged(b)?;
-        self.ssd.submit_one(self.meta.block_size as u64, concurrency);
+        self.charge_batch(&[self.meta.block_size as u64], concurrency);
         Ok(buf)
     }
 
@@ -92,7 +119,7 @@ impl GraphStore {
     pub fn read_node_direct(&self, v: u32, io_unit: u64, concurrency: u32) -> Result<Vec<u32>> {
         let (_, len) = self.node_extent(v);
         let charged = (len.max(1)).next_multiple_of(io_unit);
-        self.ssd.submit_one(charged, concurrency);
+        self.charge_batch(&[charged], concurrency);
         self.read_adjacency_uncharged(v)
     }
 
@@ -124,6 +151,9 @@ pub struct FeatureStore {
     pub layout: FeatureBlockLayout,
     pub num_nodes: usize,
     pub ssd: SharedSsd,
+    /// Simulated device ns charged through this store (see
+    /// [`GraphStore::charged_ns`]).
+    charged_ns: AtomicU64,
 }
 
 impl FeatureStore {
@@ -134,7 +164,20 @@ impl FeatureStore {
         ssd: SharedSsd,
     ) -> Result<FeatureStore> {
         let file = File::open(&paths.feature_blocks).context("open feature store")?;
-        Ok(FeatureStore { file, layout, num_nodes, ssd })
+        Ok(FeatureStore { file, layout, num_nodes, ssd, charged_ns: AtomicU64::new(0) })
+    }
+
+    /// Charge a batch of reads to the device model, attributed to this
+    /// store (see [`GraphStore::charge_batch`]).
+    pub fn charge_batch(&self, sizes: &[u64], concurrency: u32) -> u64 {
+        let ns = self.ssd.submit_batch(sizes, concurrency);
+        self.charged_ns.fetch_add(ns, Ordering::Relaxed);
+        ns
+    }
+
+    /// Simulated device nanoseconds charged through this store so far.
+    pub fn charged_ns(&self) -> u64 {
+        self.charged_ns.load(Ordering::Relaxed)
     }
 
     #[inline]
@@ -145,17 +188,21 @@ impl FeatureStore {
     /// Read one feature block (raw bytes), charged as a block I/O.
     pub fn read_block_raw(&self, b: BlockId, concurrency: u32) -> Result<Vec<u8>> {
         let buf = self.read_block_raw_uncharged(b)?;
-        self.ssd.submit_one(self.layout.block_size as u64, concurrency);
+        self.charge_batch(&[self.layout.block_size as u64], concurrency);
         Ok(buf)
     }
 
     /// Read raw feature-block bytes without charging the device model.
+    /// The store's last block may be partially present on disk (the tail
+    /// is zero-padded), but a block starting beyond EOF is a phantom read
+    /// and an error.
     pub fn read_block_raw_uncharged(&self, b: BlockId) -> Result<Vec<u8>> {
         let bs = self.layout.block_size;
         let mut buf = vec![0u8; bs];
         let off = b.0 as u64 * bs as u64;
         let flen = self.file.metadata()?.len();
-        let want = (bs as u64).min(flen.saturating_sub(off)) as usize;
+        anyhow::ensure!(off < flen, "feature block {b} beyond EOF (offset {off}, len {flen})");
+        let want = (bs as u64).min(flen - off) as usize;
         self.file.read_exact_at(&mut buf[..want], off)?;
         Ok(buf)
     }
@@ -174,7 +221,7 @@ impl FeatureStore {
     pub fn read_feature_direct(&self, v: u32, io_unit: u64, concurrency: u32) -> Result<Vec<f32>> {
         let d = self.layout.feature_dim;
         let charged = ((d * 4) as u64).next_multiple_of(io_unit);
-        self.ssd.submit_one(charged, concurrency);
+        self.charge_batch(&[charged], concurrency);
         self.read_feature_uncharged(v)
     }
 
@@ -255,6 +302,23 @@ mod tests {
         // block path agrees with direct path
         let blk = fs.read_block_raw(BlockId(fs.layout.block_of(33)), 4).unwrap();
         assert_eq!(fs.feature_from_block(33, &blk), fs.read_feature_uncharged(33).unwrap());
+    }
+
+    #[test]
+    fn per_store_charges_split_the_shared_clock() {
+        // one SSD model behind both stores: the global busy clock is the
+        // sum, each store's counter holds only its own share
+        let (_d, paths, _g) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let gs = GraphStore::open(&paths, ssd.clone()).unwrap();
+        let layout = FeatureBlockLayout { block_size: 2048, feature_dim: 16 };
+        let fs = FeatureStore::open(&paths, layout, 400, ssd.clone()).unwrap();
+        gs.read_block_raw(BlockId(0), 4).unwrap();
+        gs.read_block_raw(BlockId(1), 4).unwrap();
+        fs.read_block_raw(BlockId(0), 4).unwrap();
+        assert!(gs.charged_ns() > 0);
+        assert!(fs.charged_ns() > 0);
+        assert_eq!(gs.charged_ns() + fs.charged_ns(), ssd.busy_ns());
     }
 
     #[test]

@@ -1,11 +1,14 @@
-//! Pipeline equivalence: for a fixed seed, the staged pipeline executor
-//! (`pipeline_depth >= 2`) and the sequential schedule
+//! Pipeline equivalence: for a fixed seed, every staged schedule of the
+//! epoch executor (two-stage fused prepare, three-stage split
+//! sample/gather, any depth) and the sequential schedule
 //! (`pipeline_depth <= 1`) must produce identical loss/accuracy and
 //! minibatch counts, and drive the storage device identically — the
 //! overlap is a pure scheduling win, never a semantic change.
 
 use agnes::config::AgnesConfig;
-use agnes::coordinator::{ComputeBackend, EpochResult, MinibatchData, ModeledCompute, StepResult};
+use agnes::coordinator::{
+    ComputeBackend, EpochResult, MinibatchData, ModeledCompute, NullCompute, StepResult,
+};
 use agnes::util::TempDir;
 use agnes::AgnesRunner;
 
@@ -44,8 +47,13 @@ fn shared_config(tmp: &TempDir) -> AgnesConfig {
 }
 
 fn run_with_depth(cfg: &AgnesConfig, depth: usize) -> EpochResult {
+    run_with_schedule(cfg, depth, cfg.train.prepare_stages)
+}
+
+fn run_with_schedule(cfg: &AgnesConfig, depth: usize, stages: usize) -> EpochResult {
     let mut cfg = cfg.clone();
     cfg.train.pipeline_depth = depth;
+    cfg.train.prepare_stages = stages;
     let mut runner = AgnesRunner::open(cfg).unwrap();
     runner.run_epoch(0, &mut ChecksumCompute).unwrap()
 }
@@ -104,6 +112,118 @@ fn every_depth_agrees() {
         );
         assert_eq!(reference.metrics.device.num_requests, r.metrics.device.num_requests);
         assert_eq!(r.metrics.pipeline_depth, depth as u32);
+    }
+}
+
+#[test]
+fn schedule_matrix_is_bit_for_bit_equivalent() {
+    // depth × prepare_stages × hyperbatch_size: every schedule must agree
+    // with the sequential reference on loss, accuracy, work counts, and
+    // device requests/bytes
+    for hyperbatch_size in [1usize, 2] {
+        let tmp = TempDir::new().unwrap();
+        let mut cfg = shared_config(&tmp);
+        cfg.train.hyperbatch_size = hyperbatch_size;
+        let reference = run_with_schedule(&cfg, 0, 1);
+        for depth in [0usize, 1, 2, 4] {
+            for stages in [1usize, 2] {
+                let r = run_with_schedule(&cfg, depth, stages);
+                let tag = format!("depth {depth} stages {stages} hb {hyperbatch_size}");
+                assert_eq!(
+                    reference.mean_loss.to_bits(),
+                    r.mean_loss.to_bits(),
+                    "{tag}: loss diverged"
+                );
+                assert_eq!(reference.accuracy.to_bits(), r.accuracy.to_bits(), "{tag}");
+                assert_eq!(reference.metrics.minibatches, r.metrics.minibatches, "{tag}");
+                assert_eq!(reference.metrics.sampled_nodes, r.metrics.sampled_nodes, "{tag}");
+                assert_eq!(
+                    reference.metrics.gathered_features, r.metrics.gathered_features,
+                    "{tag}"
+                );
+                assert_eq!(
+                    reference.metrics.device.num_requests, r.metrics.device.num_requests,
+                    "{tag}: device request counts diverged"
+                );
+                assert_eq!(
+                    reference.metrics.device.total_bytes, r.metrics.device.total_bytes,
+                    "{tag}: device bytes diverged"
+                );
+            }
+        }
+    }
+}
+
+/// Compute backend that fails after a fixed number of train steps —
+/// exercises mid-epoch shutdown of the preparation workers.
+struct FailAfter {
+    fail_at: u32,
+    steps: u32,
+}
+
+impl ComputeBackend for FailAfter {
+    fn train_step(&mut self, mb: &MinibatchData) -> agnes::Result<StepResult> {
+        self.steps += 1;
+        if self.steps >= self.fail_at {
+            anyhow::bail!("injected compute failure at step {}", self.steps);
+        }
+        Ok(StepResult { loss: 0.0, correct: 0, total: mb.labels.len() as u32 })
+    }
+
+    fn name(&self) -> &'static str {
+        "fail-after"
+    }
+}
+
+#[test]
+fn mid_epoch_compute_failure_shuts_down_cleanly() {
+    // a compute error mid-epoch must surface while later hyperbatches are
+    // still being prepared: the workers wind down (no hang — run_epoch
+    // returns, which means std::thread::scope joined every worker) and
+    // the runner stays usable for the next epoch
+    for (depth, stages) in [(3usize, 1usize), (4, 2)] {
+        let tmp = TempDir::new().unwrap();
+        let mut cfg = shared_config(&tmp);
+        cfg.train.pipeline_depth = depth;
+        cfg.train.prepare_stages = stages;
+        let mut runner = AgnesRunner::open(cfg).unwrap();
+        let mut failing = FailAfter { fail_at: 3, steps: 0 };
+        let err = runner.run_epoch(0, &mut failing);
+        let err = match err {
+            Err(e) => format!("{e:#}"),
+            Ok(_) => panic!("depth {depth} stages {stages}: injected failure must surface"),
+        };
+        assert!(err.contains("injected compute failure"), "depth {depth} stages {stages}: {err}");
+        let ok = runner.run_epoch(1, &mut ChecksumCompute);
+        assert!(ok.is_ok(), "runner must stay usable after a failed epoch: {ok:?}");
+    }
+}
+
+#[test]
+fn no_backpressure_when_prepare_is_the_bottleneck() {
+    // NullCompute consumes instantly, so the stage channels (almost)
+    // never fill: with backpressure accounted via try_send + timed
+    // fallback, only genuinely blocked sends accrue — a fast consumer
+    // must see ~0 even though every send used to be timed. Buffered
+    // channels only (depth >= 3): a depth-2 rendezvous channel can
+    // legitimately record a brief wait if the consumer is preempted
+    // between recvs, which would make this bound flaky.
+    for (depth, stages) in [(3usize, 1usize), (4, 1)] {
+        let tmp = TempDir::new().unwrap();
+        let mut cfg = shared_config(&tmp);
+        cfg.train.pipeline_depth = depth;
+        cfg.train.prepare_stages = stages;
+        let mut runner = AgnesRunner::open(cfg).unwrap();
+        let r = runner.run_epoch(0, &mut NullCompute).unwrap();
+        assert!(
+            r.metrics.prep_stall_ns > 0,
+            "depth {depth}: a prepare-bound pipeline must starve compute"
+        );
+        assert!(
+            r.metrics.prep_backpressure_ns < 5_000_000,
+            "depth {depth}: backpressure must be ~0 with an instant consumer, got {}ns",
+            r.metrics.prep_backpressure_ns
+        );
     }
 }
 
