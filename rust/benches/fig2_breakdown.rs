@@ -1,21 +1,86 @@
 //! Figure 2 — the motivating observation: (a) data preparation dominates
 //! the execution time of the state-of-the-art storage-based methods
-//! (Ginex, GNNDrive); (b) their storage I/Os are overwhelmingly small;
+//! (Ginex, GNNDrive); (b) their storage I/Os are overwhelmingly small,
+//! while AGNES's run-coalescing planner merges contiguous block runs into
+//! large sequential requests that land in the `<=1MB`/`>1MB` classes;
 //! (c) small I/Os leave the compute device idle (utilization proxy:
 //! compute fraction of total time).
 //!
 //! `cargo bench --bench fig2_breakdown`
+//!
+//! Set `AGNES_FIG2_TINY=1` for the CI smoke configuration (tiny dataset,
+//! 4 KiB blocks, seconds instead of minutes). Either way the bench emits
+//! `target/bench_results/BENCH_fig2.json` with the per-system I/O-size
+//! distribution and the coalescing-on/off preparation times, so the perf
+//! trajectory accumulates across builds.
 
 use agnes::config::{AgnesConfig, GnnModel};
-use agnes::coordinator::{ModeledCompute, NullCompute};
+use agnes::coordinator::{EpochResult, ModeledCompute, NullCompute};
+use agnes::metrics::RunMetrics;
 use agnes::storage::device::IoClass;
 use agnes::util::bench::{bench_config, run_epoch_by_name, secs, Table, MODELED_COMPUTE_NS};
+use agnes::util::json::Json;
 
-const DATASETS: &[(&str, f64)] = &[("tw", 0.1), ("pa", 0.1), ("fr", 0.05)];
-const SYSTEMS: &[&str] = &["ginex", "gnndrive"];
-const MODELS: &[GnnModel] = &[GnnModel::Gcn, GnnModel::Sage];
+fn tiny_mode() -> bool {
+    std::env::var("AGNES_FIG2_TINY").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The workload configuration: paper-shaped at bench scale, or the CI
+/// smoke shape (tiny dataset, 4 KiB blocks so coalescing has many blocks
+/// to merge) under `AGNES_FIG2_TINY=1`.
+fn base_config(tiny: bool, ds: &str, scale: f64) -> AgnesConfig {
+    if !tiny {
+        return bench_config(ds, scale);
+    }
+    let mut c = bench_config("tiny", 1.0);
+    c.dataset.feature_dim = 64;
+    c.io.block_size = 4 << 10;
+    c.memory.graph_buffer_bytes = 1 << 20;
+    c.memory.feature_buffer_bytes = 1 << 20;
+    c.memory.feature_cache_entries = 1024;
+    c.train.minibatch_size = 32;
+    c.train.hyperbatch_size = 4;
+    c.train.target_fraction = 0.2;
+    c
+}
+
+fn hist_row(label: String, h: [u64; 5], total: u64) -> Vec<String> {
+    let pct = |i: usize| format!("{:.1}%", 100.0 * h[i] as f64 / total.max(1) as f64);
+    vec![label, pct(0), pct(1), pct(2), pct(3), pct(4), total.to_string()]
+}
+
+fn system_json(system: &str, ds: &str, model: &str, m: &RunMetrics, compute_ns: u64) -> Json {
+    let hist = Json::obj(
+        IoClass::all()
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (c.label(), Json::num(m.device.size_hist[i] as f64)))
+            .collect(),
+    );
+    Json::obj(vec![
+        ("system", Json::str(system)),
+        ("dataset", Json::str(ds)),
+        ("model", Json::str(model)),
+        ("prep_s", Json::num(m.prep_ns() as f64 * 1e-9)),
+        ("compute_s", Json::num(compute_ns as f64 * 1e-9)),
+        ("span_s", Json::num(m.span_ns() as f64 * 1e-9)),
+        ("requests", Json::num(m.device.num_requests as f64)),
+        ("total_bytes", Json::num(m.device.total_bytes as f64)),
+        ("mean_request_bytes", Json::num(m.mean_request_bytes())),
+        ("io_runs", Json::num(m.io_runs as f64)),
+        ("mean_blocks_per_run", Json::num(m.mean_blocks_per_run())),
+        ("size_hist", hist),
+    ])
+}
 
 fn main() -> anyhow::Result<()> {
+    let tiny = tiny_mode();
+    let datasets: &[(&str, f64)] =
+        if tiny { &[("tiny", 1.0)] } else { &[("tw", 0.1), ("pa", 0.1), ("fr", 0.05)] };
+    let systems: &[&str] = &["ginex", "gnndrive", "agnes"];
+    let models: &[GnnModel] =
+        if tiny { &[GnnModel::Sage] } else { &[GnnModel::Gcn, GnnModel::Sage] };
+
     println!("=== Figure 2(a): execution-time breakdown (prep vs compute) ===\n");
     let mut t = Table::new(
         "fig2a_breakdown",
@@ -26,10 +91,11 @@ fn main() -> anyhow::Result<()> {
         &["system", "model", "dataset", "compute_util_pct"],
     );
     let mut hist: Vec<(String, [u64; 5], u64)> = Vec::new();
-    for &(ds, scale) in DATASETS {
-        for &system in SYSTEMS {
-            for &model in MODELS {
-                let mut config = bench_config(ds, scale);
+    let mut json_systems: Vec<Json> = Vec::new();
+    for &(ds, scale) in datasets {
+        for &system in systems {
+            for &model in models {
+                let mut config = base_config(tiny, ds, scale);
                 config.train.model = model;
                 let mut compute = ModeledCompute::new(MODELED_COMPUTE_NS);
                 let r = run_epoch_by_name(system, &config, &mut compute)?;
@@ -52,7 +118,12 @@ fn main() -> anyhow::Result<()> {
                     format!("{:.1}", 100.0 * comp as f64 / total.max(1) as f64),
                 ]);
                 if model == GnnModel::Sage {
-                    hist.push((format!("{system}/{ds}"), m.device.size_hist, m.device.num_requests));
+                    hist.push((
+                        format!("{system}/{ds}"),
+                        m.device.size_hist,
+                        m.device.num_requests,
+                    ));
+                    json_systems.push(system_json(system, ds, model.name(), m, comp));
                 }
             }
         }
@@ -65,14 +136,70 @@ fn main() -> anyhow::Result<()> {
         &["system/dataset", "<=4KB", "<=64KB", "<=256KB", "<=1MB", ">1MB", "total"],
     );
     for (label, h, total) in hist {
-        let pct = |i: usize| format!("{:.1}%", 100.0 * h[i] as f64 / total.max(1) as f64);
-        t2.row(vec![label, pct(0), pct(1), pct(2), pct(3), pct(4), total.to_string()]);
+        t2.row(hist_row(label, h, total));
     }
     t2.finish();
-    let _ = IoClass::all();
 
     println!("\n=== Figure 2(c): compute utilization ===\n");
     util.finish();
+
+    // The tentpole mechanism, isolated: the same AGNES epoch with the
+    // run-coalescing planner on (default 1 MiB requests) vs off
+    // (max_request_bytes = block_size, i.e. the per-block pre-coalescing
+    // build). Same blocks, same outputs — only the request shape changes,
+    // so the simulated preparation time difference is pure coalescing win.
+    println!("\n=== Run coalescing: request shape and preparation time (AGNES, SAGE) ===\n");
+    let mut t4 = Table::new(
+        "fig2e_coalescing",
+        &[
+            "dataset",
+            "planner",
+            "requests",
+            "mean_req_bytes",
+            "blocks_per_run",
+            "prep_s",
+        ],
+    );
+    let (co_ds, co_scale) = datasets[0];
+    let mut coalescing_json: Vec<(&str, Json)> = Vec::new();
+    let mut run_coalescing = |on: bool| -> anyhow::Result<EpochResult> {
+        let mut config = base_config(tiny, co_ds, co_scale);
+        if !on {
+            config.io.max_request_bytes = config.io.block_size;
+        }
+        let r = run_epoch_by_name("agnes", &config, &mut NullCompute)?;
+        let m = &r.metrics;
+        t4.row(vec![
+            co_ds.to_uppercase(),
+            if on { "coalescing".into() } else { "per-block".into() },
+            m.device.num_requests.to_string(),
+            format!("{:.0}", m.mean_request_bytes()),
+            format!("{:.1}", m.mean_blocks_per_run()),
+            secs(m.prep_ns()),
+        ]);
+        Ok(r)
+    };
+    let on = run_coalescing(true)?;
+    let off = run_coalescing(false)?;
+    t4.finish();
+    let (on_m, off_m) = (&on.metrics, &off.metrics);
+    coalescing_json.push(("dataset", Json::str(co_ds)));
+    coalescing_json.push(("on_prep_s", Json::num(on_m.prep_ns() as f64 * 1e-9)));
+    coalescing_json.push(("off_prep_s", Json::num(off_m.prep_ns() as f64 * 1e-9)));
+    coalescing_json.push(("on_requests", Json::num(on_m.device.num_requests as f64)));
+    coalescing_json.push(("off_requests", Json::num(off_m.device.num_requests as f64)));
+    coalescing_json.push(("on_mean_request_bytes", Json::num(on_m.mean_request_bytes())));
+    coalescing_json.push(("off_mean_request_bytes", Json::num(off_m.mean_request_bytes())));
+    coalescing_json.push(("on_mean_blocks_per_run", Json::num(on_m.mean_blocks_per_run())));
+    println!(
+        "\nCoalescing: {} -> {} requests, mean {} -> {} bytes/request, prep {} -> {}",
+        off_m.device.num_requests,
+        on_m.device.num_requests,
+        off_m.mean_request_bytes() as u64,
+        on_m.mean_request_bytes() as u64,
+        secs(off_m.prep_ns()),
+        secs(on_m.prep_ns()),
+    );
 
     // AGNES's answer to 2(a): the staged pipeline executor hides data
     // preparation behind compute. Same config, same work — only the
@@ -82,7 +209,7 @@ fn main() -> anyhow::Result<()> {
     // stall/backpressure name the bottleneck stage. The slash-separated
     // values follow each row's own schedule: two-stage rows are
     // prepare/compute, three-stage rows are sample/gather/compute.
-    println!("\n=== Staged pipeline executor: per-stage overlap (AGNES, TW) ===\n");
+    println!("\n=== Staged pipeline executor: per-stage overlap (AGNES) ===\n");
     let mut t3 = Table::new(
         "fig2d_pipeline_overlap",
         &[
@@ -107,7 +234,7 @@ fn main() -> anyhow::Result<()> {
     };
     // stream several hyperbatches so the pipeline actually fills
     let pipeline_config = || -> AgnesConfig {
-        let mut c = bench_config("tw", 0.1);
+        let mut c = base_config(tiny, co_ds, co_scale);
         c.train.target_fraction = 0.5;
         c.train.hyperbatch_size = 4;
         c
@@ -157,9 +284,22 @@ fn main() -> anyhow::Result<()> {
             .join("  ")
     );
 
+    // machine-readable perf record for the trajectory
+    let report = Json::obj(vec![
+        ("bench", Json::str("fig2_breakdown")),
+        ("mode", Json::str(if tiny { "tiny" } else { "bench" })),
+        ("systems", Json::arr(json_systems)),
+        ("coalescing", Json::obj(coalescing_json)),
+    ]);
+    std::fs::create_dir_all("target/bench_results")?;
+    std::fs::write("target/bench_results/BENCH_fig2.json", report.to_string())?;
+    println!("\n[json] target/bench_results/BENCH_fig2.json");
+
     println!(
-        "\nShape check vs paper: prep dominates (up to ~96%), the I/O \
-         distribution mass sits in the smallest class, with \
+        "\nShape check vs paper: prep dominates for the baselines (up to \
+         ~96%), their I/O distribution mass sits in the smallest class \
+         while AGNES's coalesced runs land in the large classes with a \
+         lower preparation time than the per-block ablation, with \
          pipeline_depth >= 2 the epoch span drops below the sequential \
          prep+compute sum (preparation hidden behind computation), and \
          the three-stage schedule overlaps strictly more than the \

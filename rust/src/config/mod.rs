@@ -116,11 +116,26 @@ pub struct IoConfig {
     pub num_threads: usize,
     /// Outstanding async requests per thread.
     pub async_depth: u32,
+    /// Upper bound on one coalesced run request, in bytes (default 1 MiB).
+    /// The planner merges contiguous block runs into single sequential
+    /// device requests up to this size; setting it at or below
+    /// `block_size` disables coalescing (the per-block ablation).
+    pub max_request_bytes: usize,
+    /// Bridge holes of up to this many absent blocks when coalescing
+    /// (default 0): reading a few wasted blocks can be cheaper than
+    /// splitting one sequential request in two.
+    pub gap_blocks: u32,
 }
 
 impl Default for IoConfig {
     fn default() -> Self {
-        IoConfig { block_size: 1 << 20, num_threads: 16, async_depth: 8 }
+        IoConfig {
+            block_size: 1 << 20,
+            num_threads: 16,
+            async_depth: 8,
+            max_request_bytes: 1 << 20,
+            gap_blocks: 0,
+        }
     }
 }
 
@@ -249,6 +264,11 @@ impl AgnesConfig {
         anyhow::ensure!(self.device.num_ssds >= 1, "device.num_ssds must be >= 1");
         anyhow::ensure!(self.io.block_size >= 64, "io.block_size must be >= 64 bytes");
         anyhow::ensure!(self.io.num_threads >= 1, "io.num_threads must be >= 1");
+        anyhow::ensure!(self.io.max_request_bytes >= 1, "io.max_request_bytes must be >= 1");
+        anyhow::ensure!(
+            self.io.gap_blocks <= 1024,
+            "io.gap_blocks must be <= 1024 (bridging larger holes reads more waste than it saves)"
+        );
         anyhow::ensure!(self.train.minibatch_size >= 1, "train.minibatch_size must be >= 1");
         anyhow::ensure!(self.train.hyperbatch_size >= 1, "train.hyperbatch_size must be >= 1");
         anyhow::ensure!(!self.train.fanouts.is_empty(), "train.fanouts is missing (e.g. [10, 10, 10])");
@@ -314,6 +334,8 @@ impl AgnesConfig {
             ("io", "block_size") => self.io.block_size = p(value)?,
             ("io", "num_threads") => self.io.num_threads = p(value)?,
             ("io", "async_depth") => self.io.async_depth = p(value)?,
+            ("io", "max_request_bytes") => self.io.max_request_bytes = p(value)?,
+            ("io", "gap_blocks") => self.io.gap_blocks = p(value)?,
             ("memory", "graph_buffer_bytes") => self.memory.graph_buffer_bytes = p(value)?,
             ("memory", "feature_buffer_bytes") => self.memory.feature_buffer_bytes = p(value)?,
             ("memory", "feature_cache_entries") => self.memory.feature_cache_entries = p(value)?,
@@ -362,6 +384,8 @@ impl AgnesConfig {
         w(&format!("block_size = {}", self.io.block_size));
         w(&format!("num_threads = {}", self.io.num_threads));
         w(&format!("async_depth = {}", self.io.async_depth));
+        w(&format!("max_request_bytes = {}", self.io.max_request_bytes));
+        w(&format!("gap_blocks = {}", self.io.gap_blocks));
         w("\n[memory]");
         w(&format!("graph_buffer_bytes = {}", self.memory.graph_buffer_bytes));
         w(&format!("feature_buffer_bytes = {}", self.memory.feature_buffer_bytes));
@@ -417,7 +441,12 @@ impl AgnesConfig {
                 layout: Layout::Degree,
                 data_dir: "data/tiny".into(),
             },
-            io: IoConfig { block_size: 16 << 10, num_threads: 4, async_depth: 4 },
+            io: IoConfig {
+                block_size: 16 << 10,
+                num_threads: 4,
+                async_depth: 4,
+                ..Default::default()
+            },
             memory: MemoryConfig {
                 graph_buffer_bytes: 256 << 10,
                 feature_buffer_bytes: 256 << 10,
@@ -483,12 +512,16 @@ mod tests {
         c.device.num_ssds = 4;
         c.train.pipeline_depth = 5;
         c.train.prepare_stages = 1;
+        c.io.max_request_bytes = 2 << 20;
+        c.io.gap_blocks = 2;
         let text = c.to_toml();
         let back = AgnesConfig::from_toml_str(&text).unwrap();
         assert_eq!(back.train.fanouts, vec![7, 3, 2]);
         assert_eq!(back.device.num_ssds, 4);
         assert_eq!(back.dataset.name, "tiny");
         assert_eq!(back.io.block_size, 16 << 10);
+        assert_eq!(back.io.max_request_bytes, 2 << 20);
+        assert_eq!(back.io.gap_blocks, 2);
         assert_eq!(back.dataset.layout, Layout::Degree);
         assert_eq!(back.train.pipeline_depth, 5);
         assert_eq!(back.train.prepare_stages, 1);
@@ -503,6 +536,8 @@ mod tests {
         assert_eq!(c.train.pipeline_depth, 4);
         assert_eq!(c.train.prepare_stages, 2);
         assert_eq!(c.io.block_size, 1 << 20);
+        assert_eq!(c.io.max_request_bytes, 1 << 20);
+        assert_eq!(c.io.gap_blocks, 0);
         assert_eq!(c.train.fanouts, vec![10, 10, 10]);
     }
 
@@ -530,6 +565,12 @@ mod tests {
         let mut c = AgnesConfig::default();
         c.train.prepare_stages = 0;
         assert!(c.validate().unwrap_err().to_string().contains("train.prepare_stages"));
+        let mut c = AgnesConfig::default();
+        c.io.max_request_bytes = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("io.max_request_bytes"));
+        let mut c = AgnesConfig::default();
+        c.io.gap_blocks = 4096;
+        assert!(c.validate().unwrap_err().to_string().contains("io.gap_blocks"));
         assert!(AgnesConfig::default().validate().is_ok());
     }
 

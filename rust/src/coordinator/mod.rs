@@ -51,6 +51,7 @@ use crate::op::{
 };
 use crate::storage::block::{FeatureBlockLayout, GraphBlock};
 use crate::storage::device::{SharedSsd, SsdModel};
+use crate::storage::plan::{BlockBytes, IoPlanner};
 use crate::storage::store::{FeatureStore, GraphStore};
 use crate::storage::IoEngine;
 use crate::Result;
@@ -149,7 +150,7 @@ pub struct AgnesRunner {
     pub graph_store: Arc<GraphStore>,
     pub feature_store: Arc<FeatureStore>,
     pub graph_pool: SharedBufferPool<GraphBlock>,
-    pub feature_pool: SharedBufferPool<Vec<u8>>,
+    pub feature_pool: SharedBufferPool<BlockBytes>,
     pub feature_cache: SharedFeatureCache,
     pub engine: IoEngine,
 }
@@ -176,7 +177,8 @@ impl AgnesRunner {
             config.memory.feature_cache_entries,
             config.memory.feature_cache_threshold,
         );
-        let engine = IoEngine::new(config.io.num_threads, config.io.async_depth);
+        let engine = IoEngine::new(config.io.num_threads, config.io.async_depth)
+            .with_planner(IoPlanner::new(config.io.max_request_bytes, config.io.gap_blocks));
         Ok(AgnesRunner {
             config,
             dataset,
@@ -321,6 +323,9 @@ impl AgnesRunner {
         metrics.graph_hit_ratio = self.graph_pool.stats().hit_ratio();
         metrics.feature_hit_ratio = self.feature_cache.stats().hit_ratio();
         metrics.device = self.ssd.stats();
+        metrics.io_runs = self.graph_store.runs_issued() + self.feature_store.runs_issued();
+        metrics.io_run_blocks =
+            self.graph_store.run_blocks_read() + self.feature_store.run_blocks_read();
     }
 
     /// Run one full epoch: every hyperbatch through preparation and the
@@ -594,6 +599,8 @@ impl AgnesRunner {
     /// Reset device counters and buffer statistics (between bench phases).
     pub fn reset_counters(&mut self) {
         self.ssd.reset();
+        self.graph_store.reset_io_stats();
+        self.feature_store.reset_io_stats();
         self.graph_pool.reset_stats();
         self.feature_cache.reset(
             self.config.memory.feature_cache_entries,
@@ -699,6 +706,77 @@ mod tests {
         assert!(
             io_no > io_hb,
             "per-minibatch processing must issue more block I/Os ({io_no} vs {io_hb})"
+        );
+    }
+
+    /// The tentpole acceptance shape: on a dense feature sweep with the
+    /// default planner knobs, the mean device request reaches >= 64x the
+    /// block size, the byte mass of the I/O-size histogram sits in the
+    /// `<=1MB`/`>1MB` classes, preparation's simulated storage time drops
+    /// vs. the per-block ablation, and the epoch outcome is bit-for-bit
+    /// identical either way.
+    #[test]
+    fn dense_epoch_coalesces_into_large_requests() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+        // 2000 nodes x 256-dim f32 = 2 MiB of features in 4 KiB blocks
+        // (512 blocks, 4 vectors each); one hyperbatch targets every node
+        // so the gather sweep is dense over the whole store
+        c.dataset.feature_dim = 256;
+        c.io.block_size = 4 << 10;
+        c.memory.graph_buffer_bytes = 512 << 10;
+        c.memory.feature_buffer_bytes = 4 << 20;
+        c.train.target_fraction = 1.0;
+        c.train.minibatch_size = 64;
+        c.train.hyperbatch_size = 32;
+        let run = |max_request_bytes: usize| {
+            let mut cfg = c.clone();
+            cfg.io.max_request_bytes = max_request_bytes;
+            let mut r = AgnesRunner::open(cfg).unwrap();
+            let res = r.run_epoch(0, &mut NullCompute).unwrap();
+            let feature_mean_blocks = r.feature_store.run_blocks_read() as f64
+                / r.feature_store.runs_issued().max(1) as f64;
+            (res, feature_mean_blocks)
+        };
+        let (coal, feature_mean_blocks) = run(1 << 20); // default knob
+        let (per_block, _) = run(1); // pre-coalescing ablation
+
+        // bit-for-bit identical training outcome
+        assert_eq!(coal.mean_loss.to_bits(), per_block.mean_loss.to_bits());
+        assert_eq!(coal.accuracy.to_bits(), per_block.accuracy.to_bits());
+        assert_eq!(coal.metrics.sampled_nodes, per_block.metrics.sampled_nodes);
+        assert_eq!(coal.metrics.gathered_features, per_block.metrics.gathered_features);
+        assert_eq!(coal.metrics.device.total_bytes, per_block.metrics.device.total_bytes);
+
+        // the dense feature sweep coalesces into >= 64-block requests
+        assert!(
+            feature_mean_blocks >= 64.0,
+            "feature-store mean blocks/run {feature_mean_blocks:.1} must reach 64"
+        );
+        assert!(coal.metrics.mean_blocks_per_run() > 1.0);
+        // byte mass sits in the <=1MB / >1MB classes (Figure 2(b) for AGNES)
+        let bh = &coal.metrics.device.bytes_hist;
+        let large = (bh[3] + bh[4]) as f64;
+        let total = coal.metrics.device.total_bytes as f64;
+        assert!(
+            large / total >= 0.9,
+            "large-request byte share {:.2} (hist {bh:?})",
+            large / total
+        );
+        // far fewer device requests, and simulated preparation time drops
+        assert!(
+            coal.metrics.device.num_requests * 8 <= per_block.metrics.device.num_requests,
+            "coalescing must slash request counts: {} vs {}",
+            coal.metrics.device.num_requests,
+            per_block.metrics.device.num_requests
+        );
+        let io = |m: &RunMetrics| m.sample_io_ns + m.gather_io_ns;
+        assert!(
+            io(&coal.metrics) < io(&per_block.metrics),
+            "coalesced storage time {} must beat per-block {}",
+            io(&coal.metrics),
+            io(&per_block.metrics)
         );
     }
 

@@ -13,6 +13,9 @@
 //!   --scale <f>            dataset scale factor
 //!   --feature-dim <n>      |F|
 //!   --block-size <bytes>   storage block size
+//!   --max-request-bytes <b> coalesced-run request cap (<= block size
+//!                          disables coalescing — the per-block ablation)
+//!   --gap-blocks <n>       bridge holes of up to n blocks when coalescing
 //!   --hyperbatch <n>       minibatches per hyperbatch
 //!   --minibatch <n>        targets per minibatch
 //!   --pipeline-depth <n>   in-flight hyperbatches (0/1 = sequential)
@@ -126,6 +129,12 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(b) = args.get::<usize>("block-size")? {
         c.io.block_size = b;
     }
+    if let Some(b) = args.get::<usize>("max-request-bytes")? {
+        c.io.max_request_bytes = b;
+    }
+    if let Some(g) = args.get::<u32>("gap-blocks")? {
+        c.io.gap_blocks = g;
+    }
     if let Some(h) = args.get::<usize>("hyperbatch")? {
         c.train.hyperbatch_size = h;
     }
@@ -177,7 +186,8 @@ fn run_system(
         let m = &r.metrics;
         println!(
             "epoch {epoch}: work={} span={} overlap={:.1}% prep={:.1}% sample_io={} gather_io={} \
-             loss={:.4} acc={:.3} | io: {} reqs, {}, achieved_bw={}/s",
+             loss={:.4} acc={:.3} | io: {} reqs, {}, mean_req={}, {:.1} blocks/run, \
+             achieved_bw={}/s",
             fmt_ns(m.total_ns()),
             fmt_ns(m.span_ns()),
             m.overlap_fraction() * 100.0,
@@ -188,6 +198,8 @@ fn run_system(
             r.accuracy,
             m.device.num_requests,
             fmt_bytes(m.device.total_bytes),
+            fmt_bytes(m.mean_request_bytes() as u64),
+            m.mean_blocks_per_run(),
             fmt_bytes(m.device.achieved_bandwidth() as u64),
         );
     }

@@ -73,6 +73,26 @@ impl<V> SharedBufferPool<V> {
         self.lock().insert(b, value)
     }
 
+    /// Land a coalesced run read under one guard: `loaded` is the `(id,
+    /// value)` pairs a run-shaped read delivered, `requested` the sorted
+    /// block list that was asked for. Bridged-gap padding blocks (covered
+    /// but not requested) are inserted *first* so that in a tight pool
+    /// they — not the requested run about to be pinned and processed —
+    /// become the LRU eviction victims. Already-resident blocks are left
+    /// untouched (the "each block read once" invariant: a concurrent
+    /// prefetch must not clobber a block another path just installed).
+    pub fn insert_loaded(&self, requested: &[BlockId], loaded: Vec<(BlockId, V)>) {
+        debug_assert!(requested.windows(2).all(|w| w[0] < w[1]), "requested must be sorted");
+        let (req, pad): (Vec<_>, Vec<_>) =
+            loaded.into_iter().partition(|(b, _)| requested.binary_search(b).is_ok());
+        let mut guard = self.lock();
+        for (b, v) in pad.into_iter().chain(req) {
+            if !guard.contains(b) {
+                guard.insert(b, Arc::new(v));
+            }
+        }
+    }
+
     pub fn pin(&self, b: BlockId) {
         self.lock().pin(b)
     }
@@ -153,6 +173,23 @@ mod tests {
             h.join().unwrap();
         });
         assert_eq!(*p.get(BlockId(7)).unwrap(), 77);
+    }
+
+    #[test]
+    fn insert_loaded_prefers_evicting_padding() {
+        // capacity 2, a coalesced load of [5(pad), 6(req), 7(req)]: the
+        // padding block must be the one that misses out, not the run
+        let p: SharedBufferPool<u32> = SharedBufferPool::new(2);
+        p.insert_loaded(&[BlockId(6), BlockId(7)], vec![
+            (BlockId(5), 50),
+            (BlockId(6), 60),
+            (BlockId(7), 70),
+        ]);
+        assert!(p.contains(BlockId(6)) && p.contains(BlockId(7)));
+        assert!(!p.contains(BlockId(5)), "padding should be the eviction victim");
+        // already-resident blocks are not clobbered
+        p.insert_loaded(&[BlockId(6)], vec![(BlockId(6), 99)]);
+        assert_eq!(*p.get(BlockId(6)).unwrap(), 60);
     }
 
     #[test]

@@ -64,6 +64,12 @@ pub struct RunMetrics {
     /// Preparation stages in the schedule: 1 = fused prepare (sample +
     /// gather on one worker), 2 = split sample/gather workers.
     pub prepare_stages: u32,
+    /// Coalesced run requests the I/O planner issued (one device request
+    /// per run; see `storage::plan`).
+    pub io_runs: u64,
+    /// Blocks delivered through those runs (>= distinct blocks requested
+    /// when gap padding bridged holes).
+    pub io_run_blocks: u64,
     /// Device snapshot at end of run.
     pub device: DeviceStats,
     /// Graph-buffer cache hit ratio.
@@ -144,6 +150,26 @@ impl RunMetrics {
         self.total_ns() as f64 * 1e-9
     }
 
+    /// Mean blocks per coalesced run request — the headline coalescing
+    /// figure (1.0 means no coalescing happened).
+    pub fn mean_blocks_per_run(&self) -> f64 {
+        if self.io_runs == 0 {
+            0.0
+        } else {
+            self.io_run_blocks as f64 / self.io_runs as f64
+        }
+    }
+
+    /// Mean bytes per device request over the whole run (the quantity the
+    /// paper's Figure 2(b) histogram summarizes).
+    pub fn mean_request_bytes(&self) -> f64 {
+        if self.device.num_requests == 0 {
+            0.0
+        } else {
+            self.device.total_bytes as f64 / self.device.num_requests as f64
+        }
+    }
+
     pub fn merge(&mut self, o: &RunMetrics) {
         self.sample_wall_ns += o.sample_wall_ns;
         self.gather_wall_ns += o.gather_wall_ns;
@@ -160,6 +186,8 @@ impl RunMetrics {
         merge_stage_vec(&mut self.stage_backpressure_ns, &o.stage_backpressure_ns);
         self.pipeline_depth = self.pipeline_depth.max(o.pipeline_depth);
         self.prepare_stages = self.prepare_stages.max(o.prepare_stages);
+        self.io_runs += o.io_runs;
+        self.io_run_blocks += o.io_run_blocks;
         self.device.merge(&o.device);
         self.minibatches += o.minibatches;
         self.sampled_nodes += o.sampled_nodes;
@@ -472,6 +500,21 @@ mod tests {
         assert_eq!(a.stage_stall_ns, vec![0, 5, 11]);
         a.merge(&RunMetrics { stage_stall_ns: vec![1, 1], ..Default::default() });
         assert_eq!(a.stage_stall_ns, vec![1, 6, 11], "shorter vectors merge element-wise");
+    }
+
+    #[test]
+    fn coalescing_means() {
+        assert_eq!(RunMetrics::default().mean_blocks_per_run(), 0.0);
+        assert_eq!(RunMetrics::default().mean_request_bytes(), 0.0);
+        let mut m = RunMetrics { io_runs: 4, io_run_blocks: 256, ..Default::default() };
+        m.device.num_requests = 4;
+        m.device.total_bytes = 4 << 20;
+        assert_eq!(m.mean_blocks_per_run(), 64.0);
+        assert_eq!(m.mean_request_bytes(), (1 << 20) as f64);
+        let mut a = RunMetrics::default();
+        a.merge(&m);
+        assert_eq!(a.io_runs, 4);
+        assert_eq!(a.io_run_blocks, 256);
     }
 
     #[test]

@@ -10,16 +10,27 @@
 //! 2. the misses of **all** minibatches of the hyperbatch are grouped by
 //!    feature block in a [`Bucket`] and served with one ascending
 //!    block-wise sweep — each feature block is read once per hyperbatch
-//!    regardless of how many minibatches need it. The next run of blocks
-//!    is prefetched through the I/O engine's submit/poll path so feature
-//!    reads stay outstanding while the current run is decoded.
+//!    regardless of how many minibatches need it. The sweep's miss lists
+//!    are coalesced by the engine's
+//!    [`IoPlanner`](crate::storage::IoPlanner) into large sequential run
+//!    requests (one device request per contiguous run of blocks), and
+//!    each block is a zero-copy [`BlockBytes`] view into its run's
+//!    buffer. The next run of blocks is prefetched through the I/O
+//!    engine's submit/poll path so feature reads stay outstanding while
+//!    the current run is decoded.
+//!
+//! Feature vectors larger than a block (`feature_bytes > block_size`)
+//! span consecutive blocks; `gather_spanning` assembles them across
+//! their covering blocks (whose misses again coalesce into one run).
 
 use super::bucket::Bucket;
 use crate::memory::{SharedBufferPool, SharedFeatureCache};
 use crate::storage::engine::PendingIo;
+use crate::storage::plan::BlockBytes;
 use crate::storage::store::FeatureStore;
 use crate::storage::{BlockId, IoEngine};
 use crate::Result;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Decode little-endian f32 bytes into `dst`. On little-endian hosts the
@@ -56,7 +67,7 @@ pub struct GatherOutput {
 /// run the sweep on a preparation worker thread.
 pub fn gather_hyperbatch(
     store: &Arc<FeatureStore>,
-    pool: &SharedBufferPool<Vec<u8>>,
+    pool: &SharedBufferPool<BlockBytes>,
     cache: &SharedFeatureCache,
     engine: &IoEngine,
     node_sets: &[Vec<u32>],
@@ -104,8 +115,9 @@ pub fn gather_hyperbatch(
     Ok(GatherOutput { features: out, cache_hits, block_fills })
 }
 
-/// An in-flight prefetch of a run's feature blocks: (block ids, pending read).
-type FeaturePrefetch = Option<(Vec<BlockId>, PendingIo<Vec<Vec<u8>>>)>;
+/// An in-flight prefetch of a run's feature blocks: (requested block ids,
+/// pending coalesced read delivering `(id, bytes)` pairs).
+type FeaturePrefetch = Option<(Vec<BlockId>, PendingIo<Vec<(BlockId, BlockBytes)>>)>;
 
 /// The bounded block sweep of [`gather_hyperbatch`] (pass 2). The
 /// in-flight prefetch lives in `prefetched` so the caller can dispose of
@@ -113,7 +125,7 @@ type FeaturePrefetch = Option<(Vec<BlockId>, PendingIo<Vec<Vec<u8>>>)>;
 #[allow(clippy::too_many_arguments)]
 fn gather_sweep(
     store: &Arc<FeatureStore>,
-    pool: &SharedBufferPool<Vec<u8>>,
+    pool: &SharedBufferPool<BlockBytes>,
     cache: &SharedFeatureCache,
     engine: &IoEngine,
     bucket: &Bucket,
@@ -126,14 +138,10 @@ fn gather_sweep(
     let run_len = pool.capacity().max(1);
     let runs: Vec<&[BlockId]> = blocks.chunks(run_len).collect();
     for (i, run) in runs.iter().enumerate() {
+        // land the previous iteration's prefetch (padding-first insert so
+        // a tight pool evicts bridged-gap blocks, never the run itself)
         if let Some((ids, pending)) = prefetched.take() {
-            let loaded = pending.wait()?;
-            let mut guard = pool.lock();
-            for (b, bytes) in ids.into_iter().zip(loaded) {
-                if !guard.contains(b) {
-                    guard.insert(b, Arc::new(bytes));
-                }
-            }
+            pool.insert_loaded(&ids, pending.wait()?);
         }
         let mut missing: Vec<BlockId> = Vec::new();
         {
@@ -155,11 +163,8 @@ fn gather_sweep(
             }
         }
         if !missing.is_empty() {
-            let loaded = engine.read_feature_blocks(store, &missing)?;
-            let mut guard = pool.lock();
-            for (b, bytes) in missing.iter().zip(loaded) {
-                guard.insert(*b, Arc::new(bytes));
-            }
+            let loaded = engine.read_feature_blocks_coalesced(store, &missing)?;
+            pool.insert_loaded(&missing, loaded);
         }
         {
             let mut guard = pool.lock();
@@ -168,7 +173,8 @@ fn gather_sweep(
             }
         }
         for &b in run.iter() {
-            let bytes = pool.peek(b).expect("run block resident");
+            let block = pool.peek(b).expect("run block resident");
+            let bytes = block.as_slice();
             let mut cache = cache.lock();
             for (mb, entries) in &bucket.rows[&b] {
                 for &(slot, v) in entries {
@@ -177,7 +183,13 @@ fn gather_sweep(
                     let off = store.layout.slot_offset(v);
                     let dst = &mut out[*mb as usize]
                         [slot as usize * dim..(slot as usize + 1) * dim];
-                    copy_f32_le(&bytes[off..off + 4 * dim], dst);
+                    if off + 4 * dim <= bytes.len() {
+                        copy_f32_le(&bytes[off..off + 4 * dim], dst);
+                    } else {
+                        // oversized vector (feature_bytes > block_size):
+                        // assemble across its covering blocks
+                        gather_spanning(store, pool, engine, v, dst)?;
+                    }
                     *block_fills += 1;
                     // materialize a copy only if the cache will admit it
                     if cache.wants(v) {
@@ -189,6 +201,55 @@ fn gather_sweep(
             pool.unpin(b);
         }
     }
+    Ok(())
+}
+
+/// Assemble a feature vector that spans multiple blocks
+/// (`feature_bytes > block_size`): copy each covering block's piece into
+/// place. The covering blocks are consecutive, so their misses coalesce
+/// into one sequential run request — before run reads existed this
+/// geometry sliced out of bounds (latent panic); now it is a first-class
+/// path.
+fn gather_spanning(
+    store: &Arc<FeatureStore>,
+    pool: &SharedBufferPool<BlockBytes>,
+    engine: &IoEngine,
+    v: u32,
+    dst: &mut [f32],
+) -> Result<()> {
+    let bs = store.layout.block_size as u64;
+    let fb = store.layout.feature_bytes() as u64;
+    let start = v as u64 * fb;
+    let first = (start / bs) as u32;
+    let last = ((start + fb - 1) / bs) as u32;
+    let covering: Vec<BlockId> = (first..=last).map(BlockId).collect();
+    // hold the Arcs directly (pool insert is best-effort caching), so even
+    // a pool smaller than the vector's block span reads each block once
+    let mut have: HashMap<BlockId, Arc<BlockBytes>> = HashMap::new();
+    for &b in &covering {
+        if let Some(x) = pool.get(b) {
+            have.insert(b, x);
+        }
+    }
+    let missing: Vec<BlockId> =
+        covering.iter().copied().filter(|b| !have.contains_key(b)).collect();
+    if !missing.is_empty() {
+        for (b, bytes) in engine.read_feature_blocks_coalesced(store, &missing)? {
+            let arc = Arc::new(bytes);
+            pool.insert(b, arc.clone());
+            have.insert(b, arc);
+        }
+    }
+    let mut raw = vec![0u8; fb as usize];
+    for &b in &covering {
+        let block = &have[&b];
+        let block_start = b.0 as u64 * bs;
+        let lo = start.max(block_start);
+        let hi = (start + fb).min(block_start + bs);
+        let piece = &block.as_slice()[(lo - block_start) as usize..(hi - block_start) as usize];
+        raw[(lo - start) as usize..(hi - start) as usize].copy_from_slice(piece);
+    }
+    copy_f32_le(&raw, dst);
     Ok(())
 }
 
@@ -245,11 +306,82 @@ mod tests {
         let pool = SharedBufferPool::new(32);
         let cache = SharedFeatureCache::new(0, u32::MAX); // cache disabled
         let engine = IoEngine::new(1, 1);
-        // 4 minibatches all hitting the same two blocks (nodes 0..32)
+        // 4 minibatches all hitting the same two blocks (nodes 0..32):
+        // both blocks are contiguous, so the sweep issues ONE coalesced
+        // run request covering them — and never re-reads either block
         let sets: Vec<Vec<u32>> = (0..4).map(|_| (0..32u32).collect()).collect();
         store.ssd.reset();
         gather_hyperbatch(&store, &pool, &cache, &engine, &sets).unwrap();
-        assert_eq!(store.ssd.stats().num_requests, 2, "two blocks, one read each");
+        let s = store.ssd.stats();
+        assert_eq!(s.num_requests, 1, "two contiguous blocks coalesce into one run");
+        assert_eq!(s.total_bytes, 2 * 1024, "each block still read exactly once");
+        assert_eq!(store.run_blocks_read(), 2);
+    }
+
+    #[test]
+    fn coalesced_gather_is_bit_identical_to_per_block_gather() {
+        // same sweep with coalescing on (default 1 MiB runs) vs forced off
+        // (max_request_bytes below block_size => per-block requests): the
+        // gathered features must match bit for bit, and the coalesced run
+        // must issue far fewer, larger device requests
+        let (_d, store) = setup(400);
+        let sets = vec![(0..400u32).collect::<Vec<_>>()];
+        let cache_a = SharedFeatureCache::new(0, u32::MAX);
+        let pool_a = SharedBufferPool::new(64);
+        let eng_a = IoEngine::new(2, 2); // default planner: coalescing on
+        store.ssd.reset();
+        store.reset_io_stats();
+        let a = gather_hyperbatch(&store, &pool_a, &cache_a, &eng_a, &sets).unwrap();
+        let coalesced_reqs = store.ssd.stats().num_requests;
+
+        let cache_b = SharedFeatureCache::new(0, u32::MAX);
+        let pool_b = SharedBufferPool::new(64);
+        let eng_b = IoEngine::new(2, 2)
+            .with_planner(crate::storage::IoPlanner::new(1, 0)); // per-block ablation
+        store.ssd.reset();
+        store.reset_io_stats();
+        let b = gather_hyperbatch(&store, &pool_b, &cache_b, &eng_b, &sets).unwrap();
+        let per_block_reqs = store.ssd.stats().num_requests;
+
+        assert_eq!(a.features, b.features, "coalescing must not change gather output");
+        assert_eq!(a.block_fills, b.block_fills);
+        assert!(
+            coalesced_reqs < per_block_reqs,
+            "coalescing must merge requests: {coalesced_reqs} vs {per_block_reqs}"
+        );
+    }
+
+    #[test]
+    fn oversized_feature_vectors_span_blocks() {
+        // 128-dim f32 = 512-byte vectors in 256-byte blocks: every vector
+        // spans two blocks. This used to slice out of bounds in the sweep
+        // hot loop; it must now assemble across the covering blocks.
+        let dim = 128usize;
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        let layout = FeatureBlockLayout { block_size: 256, feature_dim: dim };
+        build_feature_store(60, layout, &paths, SEED).unwrap();
+        let store = Arc::new(
+            FeatureStore::open(&paths, layout, 60, SsdModel::new(SsdSpec::default())).unwrap(),
+        );
+        let pool = SharedBufferPool::new(8);
+        let cache = SharedFeatureCache::new(16, 1);
+        let engine = IoEngine::new(2, 2);
+        let sets = vec![vec![0, 7, 59, 7], vec![33]];
+        let out = gather_hyperbatch(&store, &pool, &cache, &engine, &sets).unwrap();
+        for (mb, nodes) in sets.iter().enumerate() {
+            for (slot, &v) in nodes.iter().enumerate() {
+                assert_eq!(
+                    &out.features[mb][slot * dim..(slot + 1) * dim],
+                    &synth_feature(v, dim, SEED)[..],
+                    "mb {mb} slot {slot} node {v}"
+                );
+            }
+        }
+        // repeats are served by the cache on a second pass too
+        let out2 = gather_hyperbatch(&store, &pool, &cache, &engine, &sets).unwrap();
+        assert_eq!(out2.features, out.features);
+        assert!(out2.cache_hits > 0);
     }
 
     #[test]

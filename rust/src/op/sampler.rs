@@ -11,10 +11,13 @@
 //! The hyperbatch block sweep: per layer, a [`Bucket`] groups every
 //! (minibatch, slot, node) by the block holding the node's object; blocks
 //! are processed in ascending order in bounded *runs* (at most the graph
-//! buffer capacity), each run loaded with one batched async I/O, pinned
-//! for the duration of its processing (§3.4 (1)), and every minibatch's
-//! slots within the block are served before moving on — one block-wise
-//! I/O per block per layer instead of one small I/O per node.
+//! buffer capacity), each run's misses compiled by the engine's
+//! [`IoPlanner`](crate::storage::IoPlanner) into coalesced contiguous-run
+//! requests and loaded with one batched async I/O (one device request per
+//! coalesced run, not per block), pinned for the duration of its
+//! processing (§3.4 (1)), and every minibatch's slots within the block
+//! are served before moving on — one large sequential I/O per run of
+//! blocks per layer instead of one small I/O per node.
 //!
 //! The next run is prefetched through the I/O engine's submit/poll path
 //! ([`crate::storage::engine::PendingIo`]), so its reads stay outstanding
@@ -33,6 +36,7 @@ use crate::storage::engine::PendingIo;
 use crate::storage::store::GraphStore;
 use crate::storage::{BlockId, IoEngine};
 use crate::Result;
+use std::collections::HashMap;
 use std::sync::Arc;
 
 /// Sampling result for one hyperbatch.
@@ -185,8 +189,9 @@ pub fn sweep_blocks(
     result
 }
 
-/// An in-flight prefetch of a run's graph blocks: (block ids, pending read).
-type GraphPrefetch = Option<(Vec<BlockId>, PendingIo<Vec<GraphBlock>>)>;
+/// An in-flight prefetch of a run's graph blocks: (requested block ids,
+/// pending coalesced read delivering `(id, block)` pairs).
+type GraphPrefetch = Option<(Vec<BlockId>, PendingIo<Vec<(BlockId, GraphBlock)>>)>;
 
 fn sweep_runs(
     store: &Arc<GraphStore>,
@@ -208,15 +213,10 @@ fn sweep_runs(
     let run_len = (pool.capacity() / 2).saturating_sub(1).max(1);
     let runs: Vec<&[BlockId]> = blocks.chunks(run_len).collect();
     for (i, run) in runs.iter().enumerate() {
-        // land the previous iteration's prefetch
+        // land the previous iteration's prefetch (padding-first insert so
+        // a tight pool evicts bridged-gap blocks, never the run itself)
         if let Some((ids, pending)) = prefetched.take() {
-            let loaded = pending.wait()?;
-            let mut guard = pool.lock();
-            for (b, gb) in ids.into_iter().zip(loaded) {
-                if !guard.contains(b) {
-                    guard.insert(b, Arc::new(gb));
-                }
-            }
+            pool.insert_loaded(&ids, pending.wait()?);
         }
         // (1) which of the run's blocks still miss the buffer? (the `get`
         // also counts the hit/miss stats, i.e. it is the T_buf lookup)
@@ -242,13 +242,12 @@ fn sweep_runs(
                 *prefetched = Some((next_missing, pending));
             }
         }
-        // (3) one batched block-wise storage I/O for this run's misses
+        // (3) one batched block-wise storage I/O for this run's misses —
+        // the engine coalesces the (ascending, mostly contiguous) miss
+        // list into large sequential run requests
         if !missing.is_empty() {
-            let loaded = engine.read_graph_blocks(store, &missing)?;
-            let mut guard = pool.lock();
-            for (b, gb) in missing.iter().zip(loaded) {
-                guard.insert(*b, Arc::new(gb));
-            }
+            let loaded = engine.read_graph_blocks_coalesced(store, &missing)?;
+            pool.insert_loaded(&missing, loaded);
         }
         // (4) pin the run (paper §3.4 (1)), process, unpin
         {
@@ -271,8 +270,12 @@ fn sweep_runs(
     Ok(())
 }
 
-/// Assemble a hub node's full adjacency through the buffer pool (its
-/// continuation blocks are consecutive, so these loads stay sequential).
+/// Assemble a hub node's full adjacency through the buffer pool. The
+/// continuation blocks are consecutive, so the misses coalesce into a
+/// single sequential run request instead of one small read per block.
+/// The loaded `Arc`s are held directly (the pool insert is best-effort
+/// caching only), so even a pool smaller than the hub's block span reads
+/// every block exactly once — no eviction-driven re-reads.
 fn full_adjacency(
     store: &GraphStore,
     pool: &SharedBufferPool<GraphBlock>,
@@ -280,20 +283,25 @@ fn full_adjacency(
     v: u32,
 ) -> Result<Arc<Vec<u32>>> {
     let blocks = store.index().blocks_of(v);
-    let mut adj: Vec<u32> = Vec::new();
-    // hold each block's Arc directly while its piece is copied, so a
-    // pathologically small buffer evicting an earlier continuation block
-    // cannot invalidate the assembly
+    // resident blocks first (pool.get counts the T_buf hit/miss stats)
+    let mut have: HashMap<BlockId, Arc<GraphBlock>> = HashMap::new();
     for &b in &blocks {
-        let gb: Arc<GraphBlock> = match pool.get(b) {
-            Some(g) => g,
-            None => {
-                let loaded = engine.read_graph_blocks(store, std::slice::from_ref(&b))?;
-                let arc = Arc::new(loaded.into_iter().next().expect("one block"));
-                pool.insert(b, arc.clone());
-                arc
-            }
-        };
+        if let Some(g) = pool.get(b) {
+            have.insert(b, g);
+        }
+    }
+    let missing: Vec<BlockId> =
+        blocks.iter().copied().filter(|b| !have.contains_key(b)).collect();
+    if !missing.is_empty() {
+        for (b, gb) in engine.read_graph_blocks_coalesced(store, &missing)? {
+            let arc = Arc::new(gb);
+            pool.insert(b, arc.clone());
+            have.insert(b, arc);
+        }
+    }
+    let mut adj: Vec<u32> = Vec::new();
+    for &b in &blocks {
+        let gb = &have[&b];
         if let Some(r) = gb.find(v) {
             if adj.is_empty() {
                 adj = vec![u32::MAX; r.total_degree as usize];

@@ -149,25 +149,29 @@ impl SsdModel {
 
     /// Account a batch of `sizes` read requests issued with `concurrency`
     /// outstanding requests. Returns the simulated elapsed nanoseconds for
-    /// the batch.
+    /// the batch. Zero-sized entries are degenerate — no device request is
+    /// issued for them, so they charge no latency and never land in the
+    /// size histogram (where [`IoClass::of`]`(0)` would misfile them as a
+    /// real `<=4KB` I/O).
     pub fn submit_batch(&self, sizes: &[u64], concurrency: u32) -> u64 {
-        if sizes.is_empty() {
+        let num_real = sizes.iter().filter(|&&sz| sz > 0).count();
+        if num_real == 0 {
             return 0;
         }
         let total: u64 = sizes.iter().sum();
         let t_bw = total as f64 / self.spec.array_bandwidth();
         // outstanding requests can never exceed the batch itself
         let effective_qd = concurrency
-            .min(sizes.len() as u32)
+            .min(num_real as u32)
             .clamp(1, self.spec.queue_depth * self.spec.num_ssds) as f64;
-        let t_lat = sizes.len() as f64 * self.spec.request_overhead / effective_qd;
+        let t_lat = num_real as f64 * self.spec.request_overhead / effective_qd;
         let elapsed_ns = (t_bw.max(t_lat) * 1e9) as u64;
         self.busy_ns.fetch_add(elapsed_ns, Ordering::Relaxed);
         let mut s = self.stats.lock().unwrap();
-        s.num_requests += sizes.len() as u64;
+        s.num_requests += num_real as u64;
         s.total_bytes += total;
         s.busy_ns += elapsed_ns;
-        for &sz in sizes {
+        for &sz in sizes.iter().filter(|&&sz| sz > 0) {
             let c = IoClass::of(sz) as usize;
             s.size_hist[c] += 1;
             s.bytes_hist[c] += sz;
@@ -265,6 +269,27 @@ mod tests {
     }
 
     #[test]
+    fn zero_sized_requests_never_charge_or_skew_the_histogram() {
+        let m = model(1);
+        // all-zero batch: free, invisible
+        assert_eq!(m.submit_batch(&[0, 0, 0], 8), 0);
+        assert_eq!(m.stats().num_requests, 0);
+        assert_eq!(m.busy_ns(), 0);
+        // mixed batch: only the real requests count toward latency and
+        // the histogram
+        let ns = m.submit_batch(&[0, 4096, 0, 4096], 1);
+        let expect_lat = (2.0 * 80e-6 / 1.0 * 1e9) as u64;
+        assert_eq!(ns, expect_lat);
+        let s = m.stats();
+        assert_eq!(s.num_requests, 2);
+        assert_eq!(s.size_hist, [2, 0, 0, 0, 0]);
+        assert_eq!(s.total_bytes, 8192);
+        // submit_one(0) is likewise free
+        assert_eq!(m.submit_one(0, 1), 0);
+        assert_eq!(m.stats().num_requests, 2);
+    }
+
+    #[test]
     fn reset_clears() {
         let m = model(1);
         m.submit_one(4096, 1);
@@ -277,9 +302,9 @@ mod tests {
     #[test]
     fn concurrency_clamped_to_queue_depth() {
         let m = model(1);
-        let a = m.submit_batch(&vec![4096; 1000], 128);
+        let a = m.submit_batch(&[4096; 1000], 128);
         m.reset();
-        let b = m.submit_batch(&vec![4096; 1000], 100_000);
+        let b = m.submit_batch(&[4096; 1000], 100_000);
         assert_eq!(a, b);
     }
 }

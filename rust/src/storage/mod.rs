@@ -7,13 +7,16 @@
 //! [`store`] reads them block-wise, [`object_index`] is the pinned
 //! `T_obj^g` table mapping node ids to blocks, [`device`] is the NVMe SSD
 //! cost model (+ RAID0) that gives benches a faithful, page-cache-immune
-//! notion of storage time, and [`engine`] is the async I/O engine.
+//! notion of storage time, [`plan`] is the run-coalescing I/O planner
+//! merging contiguous block runs into large sequential requests, and
+//! [`engine`] is the async I/O engine issuing them.
 
 pub mod block;
 pub mod builder;
 pub mod device;
 pub mod engine;
 pub mod object_index;
+pub mod plan;
 pub mod store;
 
 pub use block::{FeatureBlockLayout, GraphBlock, ObjectRecord, BLOCK_HEADER_BYTES, OBJ_HEADER_BYTES};
@@ -21,6 +24,7 @@ pub use builder::{build_feature_store, build_graph_store, StorePaths};
 pub use device::{DeviceStats, IoClass, SsdModel, SsdSpec};
 pub use engine::IoEngine;
 pub use object_index::ObjectIndexTable;
+pub use plan::{BlockBytes, IoPlanner, RunRequest};
 pub use store::{FeatureStore, GraphStore};
 
 /// Identifier of a fixed-size block within one store file.

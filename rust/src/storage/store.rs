@@ -29,6 +29,12 @@ pub struct GraphStore {
     /// sampling stage only reads the graph store and the gathering stage
     /// only reads the feature store).
     charged_ns: AtomicU64,
+    /// Coalesced run requests issued against this store (see
+    /// [`Self::charge_runs`]).
+    runs_issued: AtomicU64,
+    /// Blocks delivered through those runs (>= requested blocks when the
+    /// planner bridged gaps).
+    run_blocks: AtomicU64,
 }
 
 impl GraphStore {
@@ -46,6 +52,8 @@ impl GraphStore {
             csr_offsets: Arc::new(offsets),
             ssd,
             charged_ns: AtomicU64::new(0),
+            runs_issued: AtomicU64::new(0),
+            run_blocks: AtomicU64::new(0),
         })
     }
 
@@ -61,6 +69,33 @@ impl GraphStore {
     /// Simulated device nanoseconds charged through this store so far.
     pub fn charged_ns(&self) -> u64 {
         self.charged_ns.load(Ordering::Relaxed)
+    }
+
+    /// Charge a batch of *coalesced run* reads delivering `blocks` blocks
+    /// total — one device request per run, which is the whole point of the
+    /// planner (the per-block path charges one request per block).
+    pub fn charge_runs(&self, run_sizes: &[u64], blocks: u64, concurrency: u32) -> u64 {
+        self.runs_issued.fetch_add(run_sizes.len() as u64, Ordering::Relaxed);
+        self.run_blocks.fetch_add(blocks, Ordering::Relaxed);
+        self.charge_batch(run_sizes, concurrency)
+    }
+
+    /// Coalesced run requests issued against this store so far.
+    pub fn runs_issued(&self) -> u64 {
+        self.runs_issued.load(Ordering::Relaxed)
+    }
+
+    /// Blocks delivered through coalesced runs so far.
+    pub fn run_blocks_read(&self) -> u64 {
+        self.run_blocks.load(Ordering::Relaxed)
+    }
+
+    /// Reset per-store I/O attribution counters (between bench phases —
+    /// pairs with [`super::device::SsdModel::reset`]).
+    pub fn reset_io_stats(&self) {
+        self.charged_ns.store(0, Ordering::Relaxed);
+        self.runs_issued.store(0, Ordering::Relaxed);
+        self.run_blocks.store(0, Ordering::Relaxed);
     }
 
     #[inline]
@@ -100,6 +135,18 @@ impl GraphStore {
         self.file
             .read_exact_at(&mut buf, b.0 as u64 * bs as u64)
             .with_context(|| format!("read graph block {b}"))?;
+        Ok(buf)
+    }
+
+    /// Read a coalesced run of `len` consecutive blocks starting at
+    /// `start` with **one** `pread`, without charging the device model
+    /// (the engine charges one request per run via [`Self::charge_runs`]).
+    pub fn read_run_raw_uncharged(&self, start: BlockId, len: u32) -> Result<Vec<u8>> {
+        let bs = self.meta.block_size;
+        let mut buf = vec![0u8; bs * len as usize];
+        self.file
+            .read_exact_at(&mut buf, start.0 as u64 * bs as u64)
+            .with_context(|| format!("read graph run {start}+{len}"))?;
         Ok(buf)
     }
 
@@ -154,6 +201,10 @@ pub struct FeatureStore {
     /// Simulated device ns charged through this store (see
     /// [`GraphStore::charged_ns`]).
     charged_ns: AtomicU64,
+    /// Coalesced run requests issued (see [`GraphStore::charge_runs`]).
+    runs_issued: AtomicU64,
+    /// Blocks delivered through those runs.
+    run_blocks: AtomicU64,
 }
 
 impl FeatureStore {
@@ -164,7 +215,15 @@ impl FeatureStore {
         ssd: SharedSsd,
     ) -> Result<FeatureStore> {
         let file = File::open(&paths.feature_blocks).context("open feature store")?;
-        Ok(FeatureStore { file, layout, num_nodes, ssd, charged_ns: AtomicU64::new(0) })
+        Ok(FeatureStore {
+            file,
+            layout,
+            num_nodes,
+            ssd,
+            charged_ns: AtomicU64::new(0),
+            runs_issued: AtomicU64::new(0),
+            run_blocks: AtomicU64::new(0),
+        })
     }
 
     /// Charge a batch of reads to the device model, attributed to this
@@ -178,6 +237,31 @@ impl FeatureStore {
     /// Simulated device nanoseconds charged through this store so far.
     pub fn charged_ns(&self) -> u64 {
         self.charged_ns.load(Ordering::Relaxed)
+    }
+
+    /// Charge a batch of coalesced run reads (one device request per run —
+    /// see [`GraphStore::charge_runs`]).
+    pub fn charge_runs(&self, run_sizes: &[u64], blocks: u64, concurrency: u32) -> u64 {
+        self.runs_issued.fetch_add(run_sizes.len() as u64, Ordering::Relaxed);
+        self.run_blocks.fetch_add(blocks, Ordering::Relaxed);
+        self.charge_batch(run_sizes, concurrency)
+    }
+
+    /// Coalesced run requests issued against this store so far.
+    pub fn runs_issued(&self) -> u64 {
+        self.runs_issued.load(Ordering::Relaxed)
+    }
+
+    /// Blocks delivered through coalesced runs so far.
+    pub fn run_blocks_read(&self) -> u64 {
+        self.run_blocks.load(Ordering::Relaxed)
+    }
+
+    /// Reset per-store I/O attribution counters (between bench phases).
+    pub fn reset_io_stats(&self) {
+        self.charged_ns.store(0, Ordering::Relaxed);
+        self.runs_issued.store(0, Ordering::Relaxed);
+        self.run_blocks.store(0, Ordering::Relaxed);
     }
 
     #[inline]
@@ -197,12 +281,25 @@ impl FeatureStore {
     /// is zero-padded), but a block starting beyond EOF is a phantom read
     /// and an error.
     pub fn read_block_raw_uncharged(&self, b: BlockId) -> Result<Vec<u8>> {
+        self.read_run_raw_uncharged(b, 1)
+    }
+
+    /// Read a coalesced run of `len` consecutive feature blocks with one
+    /// `pread` (uncharged — the engine charges one request per run via
+    /// [`Self::charge_runs`]). Per-block EOF semantics are preserved: a
+    /// run whose *last block* starts beyond EOF is a phantom read and an
+    /// error, while a trailing partial block is zero-padded.
+    pub fn read_run_raw_uncharged(&self, start: BlockId, len: u32) -> Result<Vec<u8>> {
         let bs = self.layout.block_size;
-        let mut buf = vec![0u8; bs];
-        let off = b.0 as u64 * bs as u64;
+        let mut buf = vec![0u8; bs * len as usize];
+        let off = start.0 as u64 * bs as u64;
         let flen = self.file.metadata()?.len();
-        anyhow::ensure!(off < flen, "feature block {b} beyond EOF (offset {off}, len {flen})");
-        let want = (bs as u64).min(flen - off) as usize;
+        let last_off = off + (len.saturating_sub(1)) as u64 * bs as u64;
+        anyhow::ensure!(
+            len >= 1 && last_off < flen,
+            "feature run {start}+{len} beyond EOF (offset {off}, len {flen})"
+        );
+        let want = (buf.len() as u64).min(flen - off) as usize;
         self.file.read_exact_at(&mut buf[..want], off)?;
         Ok(buf)
     }

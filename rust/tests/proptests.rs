@@ -10,10 +10,12 @@ use agnes::memory::BufferPool;
 use agnes::op::bucket::Bucket;
 use agnes::storage::block::{FeatureBlockLayout, GraphBlock, ObjectRecord};
 use agnes::storage::builder::{build_feature_store, build_graph_store, StorePaths};
-use agnes::storage::device::{SsdModel, SsdSpec};
+use agnes::storage::device::{IoClass, SsdModel, SsdSpec};
+use agnes::storage::plan::IoPlanner;
 use agnes::storage::store::{FeatureStore, GraphStore};
 use agnes::storage::{BlockId, IoEngine};
 use agnes::util::{Rng, TempDir};
+use std::collections::BTreeSet;
 use std::sync::Arc;
 
 fn random_graph(rng: &mut Rng) -> CsrGraph {
@@ -195,6 +197,136 @@ fn prop_buffer_pool_invariants() {
             }
         }
     }
+}
+
+/// Property: for random block sets and planner knobs, the planned runs
+/// are ascending, pairwise disjoint, cover every requested block exactly
+/// once, respect the request-size cap, and cover non-requested blocks
+/// only as bridged holes (within `gap_blocks` of a requested block on
+/// both sides, inside one run — never leading or trailing padding).
+#[test]
+fn prop_planner_runs_sound() {
+    for case in 0..16u64 {
+        let mut rng = Rng::seed_from_u64(700 + case);
+        let block_size = [512usize, 2048, 4096][rng.gen_range(3)];
+        let max_request = [block_size / 2, block_size, 4 * block_size, 1 << 20][rng.gen_range(4)];
+        let gap = rng.gen_range(4) as u32;
+        let planner = IoPlanner::new(max_request, gap);
+        let universe = 1 + rng.gen_range(200);
+        let requested: BTreeSet<u32> =
+            (0..rng.gen_range(120)).map(|_| rng.gen_range(universe) as u32).collect();
+        let blocks: Vec<BlockId> = requested.iter().copied().map(BlockId).collect();
+        let runs = planner.plan(&blocks, block_size);
+        let tag = format!("case {case} bs {block_size} cap {max_request} gap {gap}");
+        if blocks.is_empty() {
+            assert!(runs.is_empty(), "{tag}");
+            continue;
+        }
+        // ascending + disjoint + capped
+        for w in runs.windows(2) {
+            assert!(w[0].end() <= w[1].start.0, "{tag}: overlapping/unsorted runs {w:?}");
+        }
+        let cap_blocks = planner.max_run_blocks(block_size);
+        for r in &runs {
+            assert!(r.len >= 1 && r.len <= cap_blocks, "{tag}: run {r:?} breaks cap");
+            assert!(r.bytes(block_size) <= max_request.max(block_size) as u64, "{tag}");
+            // runs start and end on requested blocks (padding is interior)
+            assert!(requested.contains(&r.start.0), "{tag}: leading padding {r:?}");
+            assert!(requested.contains(&(r.end() - 1)), "{tag}: trailing padding {r:?}");
+        }
+        // exact coverage of the requested set, padding only in gaps
+        let covered: Vec<u32> = runs.iter().flat_map(|r| r.start.0..r.end()).collect();
+        let covered_set: BTreeSet<u32> = covered.iter().copied().collect();
+        assert_eq!(covered.len(), covered_set.len(), "{tag}: block covered twice");
+        for &b in &requested {
+            assert!(covered_set.contains(&b), "{tag}: requested {b} not covered");
+        }
+        for &b in &covered_set {
+            if !requested.contains(&b) {
+                // a bridged hole: the nearest requested blocks on both
+                // sides are within gap_blocks
+                let below = requested.range(..b).next_back();
+                let above = requested.range(b + 1..).next();
+                let ok = matches!((below, above), (Some(&lo), Some(&hi))
+                    if b - lo <= gap && hi - b <= gap);
+                assert!(ok, "{tag}: padding {b} not inside a bridgeable hole");
+            }
+        }
+        // with no gap budget, coverage is exactly the request
+        if gap == 0 {
+            assert_eq!(covered_set, requested, "{tag}");
+        }
+    }
+}
+
+/// Property: coalesced run reads are byte-identical to per-block reads —
+/// for random block subsets, planner knobs, and both stores.
+#[test]
+fn prop_coalesced_reads_match_per_block_reads() {
+    for case in 0..6u64 {
+        let mut rng = Rng::seed_from_u64(800 + case);
+        let g = random_graph(&mut rng);
+        let block_size = [1024usize, 4096][rng.gen_range(2)];
+        let tmp = TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(tmp.path());
+        build_graph_store(&g, block_size, &paths).unwrap();
+        let dim = 1 + rng.gen_range(48);
+        let layout = FeatureBlockLayout { block_size, feature_dim: dim };
+        build_feature_store(g.num_nodes(), layout, &paths, case).unwrap();
+        let gs = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let fs = FeatureStore::open(&paths, layout, g.num_nodes(), ssd).unwrap();
+        let cap = [block_size, 4 * block_size, 1 << 20][rng.gen_range(3)];
+        let gap = rng.gen_range(2) as u32;
+        let engine = IoEngine::new(2, 2).with_planner(IoPlanner::new(cap, gap));
+        let pick = |rng: &mut Rng, n: u32| -> Vec<BlockId> {
+            let count = 1 + rng.gen_range(n as usize);
+            let set: BTreeSet<u32> =
+                (0..count).map(|_| rng.gen_range(n as usize) as u32).collect();
+            set.into_iter().map(BlockId).collect()
+        };
+        let gb_ids = pick(&mut rng, gs.num_blocks());
+        let got = engine.read_graph_blocks(&gs, &gb_ids).unwrap();
+        for (b, gb) in gb_ids.iter().zip(&got) {
+            let want = GraphBlock::decode(&gs.read_block_raw_uncharged(*b).unwrap());
+            assert_eq!(gb, &want, "case {case} graph block {b}");
+        }
+        let fb_ids = pick(&mut rng, fs.num_blocks());
+        let fgot = engine.read_feature_blocks(&fs, &fb_ids).unwrap();
+        for (b, bytes) in fb_ids.iter().zip(&fgot) {
+            let want = fs.read_block_raw_uncharged(*b).unwrap();
+            assert_eq!(bytes.as_slice(), &want[..], "case {case} feature block {b}");
+        }
+    }
+}
+
+/// A dense sweep over a contiguous block range must land its requests in
+/// the `<=1MB` / `>1MB` histogram classes — the paper's Figure 2(b) shape
+/// for AGNES (the baselines stay in `<=4KB` by construction).
+#[test]
+fn dense_sweep_requests_land_in_large_io_classes() {
+    // 512 blocks x 4 KiB = 2 MiB of features; default 1 MiB planner
+    let block_size = 4096usize;
+    let dim = 256usize; // 1 KiB vectors, 4 per block
+    let nodes = 2048usize; // exactly 512 blocks
+    let tmp = TempDir::new().unwrap();
+    let paths = StorePaths::in_dir(tmp.path());
+    let layout = FeatureBlockLayout { block_size, feature_dim: dim };
+    build_feature_store(nodes, layout, &paths, 1).unwrap();
+    let ssd = SsdModel::new(SsdSpec::default());
+    let fs = FeatureStore::open(&paths, layout, nodes, ssd.clone()).unwrap();
+    let engine = IoEngine::new(4, 4);
+    let all: Vec<BlockId> = (0..fs.num_blocks()).map(BlockId).collect();
+    let got = engine.read_feature_blocks_coalesced(&fs, &all).unwrap();
+    assert_eq!(got.len(), all.len());
+    let s = ssd.stats();
+    assert_eq!(s.num_requests, 2, "512 blocks at a 256-block cap = two 1 MiB runs");
+    assert_eq!(s.size_hist, [0, 0, 0, 2, 0], "both requests in the <=1MB class");
+    assert_eq!(IoClass::of(1 << 20), IoClass::Le1M);
+    assert_eq!(fs.runs_issued(), 2);
+    assert_eq!(fs.run_blocks_read(), 512);
+    // mean request size is 256x the block size — far past the 64x bar
+    assert_eq!(s.total_bytes / s.num_requests, 256 * block_size as u64);
 }
 
 /// Property: feature reads through blocks equal direct reads for random
