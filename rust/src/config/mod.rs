@@ -107,6 +107,51 @@ impl DeviceConfig {
     }
 }
 
+/// The `io.gap_blocks` knob: how many absent blocks the coalescing
+/// planner may bridge instead of splitting a sequential request in two.
+///
+/// `Auto` (the default, spelled `"auto"` in TOML/CLI) derives the budget
+/// from the device spec — bridge while the wasted read is cheaper than an
+/// extra request, i.e. while `gap_bytes / bandwidth < request_overhead`
+/// (see [`SsdSpec::adaptive_gap_blocks`]). A fixed number overrides the
+/// derivation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GapBlocks {
+    Auto,
+    Fixed(u32),
+}
+
+impl GapBlocks {
+    /// The effective bridge budget for a device/block-size pair.
+    pub fn resolve(self, spec: &SsdSpec, block_size: usize) -> u32 {
+        match self {
+            GapBlocks::Fixed(v) => v,
+            GapBlocks::Auto => spec.adaptive_gap_blocks(block_size),
+        }
+    }
+}
+
+impl std::str::FromStr for GapBlocks {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        if s.eq_ignore_ascii_case("auto") {
+            return Ok(GapBlocks::Auto);
+        }
+        s.parse::<u32>()
+            .map(GapBlocks::Fixed)
+            .map_err(|e| format!("expected \"auto\" or a block count, got {s:?}: {e}"))
+    }
+}
+
+impl std::fmt::Display for GapBlocks {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GapBlocks::Auto => write!(f, "\"auto\""),
+            GapBlocks::Fixed(v) => write!(f, "{v}"),
+        }
+    }
+}
+
 /// I/O processing parameters.
 #[derive(Debug, Clone)]
 pub struct IoConfig {
@@ -121,10 +166,19 @@ pub struct IoConfig {
     /// device requests up to this size; setting it at or below
     /// `block_size` disables coalescing (the per-block ablation).
     pub max_request_bytes: usize,
-    /// Bridge holes of up to this many absent blocks when coalescing
-    /// (default 0): reading a few wasted blocks can be cheaper than
-    /// splitting one sequential request in two.
-    pub gap_blocks: u32,
+    /// Bridge holes of up to this many absent blocks when coalescing.
+    /// Defaults to [`GapBlocks::Auto`]: derived from the device spec so
+    /// bridging only happens while the wasted read is cheaper than an
+    /// extra request (with 1 MiB blocks the derived budget is 0, the
+    /// pre-adaptive behaviour).
+    pub gap_blocks: GapBlocks,
+    /// RAID0 stripe width in blocks for the sharded device backend
+    /// (`device.num_ssds > 1`): consecutive groups of this many blocks
+    /// rotate across the SSDs. `0` (the default) derives the width so one
+    /// full-size coalesced request (`max_request_bytes`) exactly fills a
+    /// stripe — runs then never split below the request cap, and
+    /// consecutive max-size runs land on distinct devices.
+    pub stripe_blocks: u32,
 }
 
 impl Default for IoConfig {
@@ -134,7 +188,22 @@ impl Default for IoConfig {
             num_threads: 16,
             async_depth: 8,
             max_request_bytes: 1 << 20,
-            gap_blocks: 0,
+            gap_blocks: GapBlocks::Auto,
+            stripe_blocks: 0,
+        }
+    }
+}
+
+impl IoConfig {
+    /// The effective stripe width in blocks: the configured value, or —
+    /// when `stripe_blocks = 0` (auto) — just enough blocks to hold one
+    /// full-size coalesced request.
+    pub fn effective_stripe_blocks(&self) -> u32 {
+        if self.stripe_blocks != 0 {
+            self.stripe_blocks
+        } else {
+            (self.max_request_bytes.div_ceil(self.block_size.max(1)).max(1) as u64)
+                .min(u32::MAX as u64) as u32
         }
     }
 }
@@ -265,10 +334,9 @@ impl AgnesConfig {
         anyhow::ensure!(self.io.block_size >= 64, "io.block_size must be >= 64 bytes");
         anyhow::ensure!(self.io.num_threads >= 1, "io.num_threads must be >= 1");
         anyhow::ensure!(self.io.max_request_bytes >= 1, "io.max_request_bytes must be >= 1");
-        anyhow::ensure!(
-            self.io.gap_blocks <= 1024,
-            "io.gap_blocks must be <= 1024 (bridging larger holes reads more waste than it saves)"
-        );
+        check_gap_blocks(self.io.gap_blocks).map_err(anyhow::Error::msg)?;
+        check_stripe_blocks(self.io.stripe_blocks, self.io.block_size, self.io.max_request_bytes)
+            .map_err(anyhow::Error::msg)?;
         anyhow::ensure!(self.train.minibatch_size >= 1, "train.minibatch_size must be >= 1");
         anyhow::ensure!(self.train.hyperbatch_size >= 1, "train.hyperbatch_size must be >= 1");
         anyhow::ensure!(!self.train.fanouts.is_empty(), "train.fanouts is missing (e.g. [10, 10, 10])");
@@ -335,7 +403,8 @@ impl AgnesConfig {
             ("io", "num_threads") => self.io.num_threads = p(value)?,
             ("io", "async_depth") => self.io.async_depth = p(value)?,
             ("io", "max_request_bytes") => self.io.max_request_bytes = p(value)?,
-            ("io", "gap_blocks") => self.io.gap_blocks = p(value)?,
+            ("io", "gap_blocks") => self.io.gap_blocks = value.parse()?,
+            ("io", "stripe_blocks") => self.io.stripe_blocks = p(value)?,
             ("memory", "graph_buffer_bytes") => self.memory.graph_buffer_bytes = p(value)?,
             ("memory", "feature_buffer_bytes") => self.memory.feature_buffer_bytes = p(value)?,
             ("memory", "feature_cache_entries") => self.memory.feature_cache_entries = p(value)?,
@@ -386,6 +455,7 @@ impl AgnesConfig {
         w(&format!("async_depth = {}", self.io.async_depth));
         w(&format!("max_request_bytes = {}", self.io.max_request_bytes));
         w(&format!("gap_blocks = {}", self.io.gap_blocks));
+        w(&format!("stripe_blocks = {}", self.io.stripe_blocks));
         w("\n[memory]");
         w(&format!("graph_buffer_bytes = {}", self.memory.graph_buffer_bytes));
         w(&format!("feature_buffer_bytes = {}", self.memory.feature_buffer_bytes));
@@ -405,27 +475,62 @@ impl AgnesConfig {
         out
     }
 
-    /// Environment overrides for the epoch-executor schedule:
-    /// `AGNES_PIPELINE_DEPTH` and `AGNES_PREPARE_STAGES` reschedule a run
-    /// without code changes. CI uses this to run the integration suite
-    /// once with depth 4 so the staged executor is exercised beyond the
-    /// defaults (all schedules are bit-for-bit equivalent, so every test
-    /// must pass under any override).
+    /// Environment overrides: `AGNES_PIPELINE_DEPTH` and
+    /// `AGNES_PREPARE_STAGES` reschedule a run without code changes (CI
+    /// runs the integration suite once with depth 4 so the staged
+    /// executor is exercised beyond the defaults); `AGNES_NUM_SSDS`,
+    /// `AGNES_STRIPE_BLOCKS` and `AGNES_GAP_BLOCKS` re-shard the storage
+    /// backend the same way. Applied by [`Self::tiny`] (tests) and
+    /// [`crate::util::bench::bench_config`] (fig benches); the CLI takes
+    /// the equivalent flags instead.
     pub fn apply_env_overrides(&mut self) {
-        // overrides land after validate() may have run, so they must stay
-        // inside the validated ranges themselves; a malformed value is a
-        // loud no-op rather than a silently defaulted schedule (a CI typo
-        // must not report depth-4 coverage while testing the default)
-        if let Ok(v) = std::env::var("AGNES_PIPELINE_DEPTH") {
+        self.apply_overrides_from(|name| std::env::var(name).ok());
+    }
+
+    /// [`Self::apply_env_overrides`] with an injectable variable lookup
+    /// (tests pass a map instead of mutating the racy process
+    /// environment).
+    ///
+    /// Overrides land after validate() may have run, so every knob goes
+    /// through the SAME range check validate() uses — an override can
+    /// never smuggle in a configuration validate() would reject. A
+    /// malformed value is a loud no-op rather than a silently defaulted
+    /// run (a CI typo must not report depth-4 coverage while testing the
+    /// default).
+    pub fn apply_overrides_from(&mut self, var: impl Fn(&str) -> Option<String>) {
+        if let Some(v) = var("AGNES_PIPELINE_DEPTH") {
             match v.trim().parse::<usize>() {
                 Ok(d) if d <= 64 => self.train.pipeline_depth = d,
                 _ => eprintln!("ignoring out-of-range AGNES_PIPELINE_DEPTH={v:?}"),
             }
         }
-        if let Ok(v) = std::env::var("AGNES_PREPARE_STAGES") {
+        if let Some(v) = var("AGNES_PREPARE_STAGES") {
             match v.trim().parse::<usize>() {
                 Ok(s) if (1..=2).contains(&s) => self.train.prepare_stages = s,
                 _ => eprintln!("ignoring out-of-range AGNES_PREPARE_STAGES={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_NUM_SSDS") {
+            match v.trim().parse::<u32>() {
+                Ok(n) if n >= 1 => self.device.num_ssds = n,
+                _ => eprintln!("ignoring out-of-range AGNES_NUM_SSDS={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_STRIPE_BLOCKS") {
+            match v.trim().parse::<u32>() {
+                Ok(s)
+                    if check_stripe_blocks(s, self.io.block_size, self.io.max_request_bytes)
+                        .is_ok() =>
+                {
+                    self.io.stripe_blocks = s
+                }
+                _ => eprintln!("ignoring invalid AGNES_STRIPE_BLOCKS={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_GAP_BLOCKS") {
+            match v.trim().parse::<GapBlocks>() {
+                Ok(g) if check_gap_blocks(g).is_ok() => self.io.gap_blocks = g,
+                _ => eprintln!("ignoring invalid AGNES_GAP_BLOCKS={v:?}"),
             }
         }
     }
@@ -445,6 +550,10 @@ impl AgnesConfig {
                 block_size: 16 << 10,
                 num_threads: 4,
                 async_depth: 4,
+                // fixed 0 (not auto): unit tests compare request streams
+                // bit-for-bit across schedules and shard counts, so the
+                // tiny workload keeps the exact pre-adaptive plan
+                gap_blocks: GapBlocks::Fixed(0),
                 ..Default::default()
             },
             memory: MemoryConfig {
@@ -492,6 +601,43 @@ impl AgnesConfig {
     }
 }
 
+/// Range check for `io.gap_blocks`, shared by [`AgnesConfig::validate`]
+/// and [`AgnesConfig::apply_env_overrides`] so an env override can never
+/// bypass validation.
+fn check_gap_blocks(gap: GapBlocks) -> Result<(), String> {
+    match gap {
+        GapBlocks::Auto => Ok(()),
+        GapBlocks::Fixed(v) if v <= 1024 => Ok(()),
+        GapBlocks::Fixed(v) => Err(format!(
+            "io.gap_blocks = {v} must be <= 1024 (bridging larger holes reads more waste than it \
+             saves)"
+        )),
+    }
+}
+
+/// Range check for `io.stripe_blocks` (shared with env overrides, see
+/// [`check_gap_blocks`]). `0` is auto; an explicit width must hold at
+/// least one full-size coalesced request, otherwise every run is split
+/// degenerately at stripe boundaries instead of at the request cap.
+fn check_stripe_blocks(
+    stripe: u32,
+    block_size: usize,
+    max_request_bytes: usize,
+) -> Result<(), String> {
+    if stripe == 0 {
+        return Ok(()); // auto: derived from max_request_bytes / block_size
+    }
+    if (stripe as u64) * (block_size as u64) < max_request_bytes as u64 {
+        return Err(format!(
+            "io.stripe_blocks = {stripe} is too narrow: one full coalesced request \
+             (io.max_request_bytes = {max_request_bytes}) must fit in a stripe of {stripe} x \
+             {block_size}-byte blocks, or every run is split degenerately at stripe boundaries \
+             (raise io.stripe_blocks or lower io.max_request_bytes)"
+        ));
+    }
+    Ok(())
+}
+
 fn layout_name(l: Layout) -> &'static str {
     match l {
         Layout::Natural => "natural",
@@ -513,7 +659,8 @@ mod tests {
         c.train.pipeline_depth = 5;
         c.train.prepare_stages = 1;
         c.io.max_request_bytes = 2 << 20;
-        c.io.gap_blocks = 2;
+        c.io.gap_blocks = GapBlocks::Fixed(2);
+        c.io.stripe_blocks = 256;
         let text = c.to_toml();
         let back = AgnesConfig::from_toml_str(&text).unwrap();
         assert_eq!(back.train.fanouts, vec![7, 3, 2]);
@@ -521,10 +668,15 @@ mod tests {
         assert_eq!(back.dataset.name, "tiny");
         assert_eq!(back.io.block_size, 16 << 10);
         assert_eq!(back.io.max_request_bytes, 2 << 20);
-        assert_eq!(back.io.gap_blocks, 2);
+        assert_eq!(back.io.gap_blocks, GapBlocks::Fixed(2));
+        assert_eq!(back.io.stripe_blocks, 256);
         assert_eq!(back.dataset.layout, Layout::Degree);
         assert_eq!(back.train.pipeline_depth, 5);
         assert_eq!(back.train.prepare_stages, 1);
+        // auto gap round-trips too (serialized as the "auto" sentinel)
+        c.io.gap_blocks = GapBlocks::Auto;
+        let back = AgnesConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.io.gap_blocks, GapBlocks::Auto);
     }
 
     #[test]
@@ -537,7 +689,9 @@ mod tests {
         assert_eq!(c.train.prepare_stages, 2);
         assert_eq!(c.io.block_size, 1 << 20);
         assert_eq!(c.io.max_request_bytes, 1 << 20);
-        assert_eq!(c.io.gap_blocks, 0);
+        assert_eq!(c.io.gap_blocks, GapBlocks::Auto);
+        assert_eq!(c.io.stripe_blocks, 0);
+        assert_eq!(c.io.effective_stripe_blocks(), 1, "1 MiB request in 1 MiB blocks");
         assert_eq!(c.train.fanouts, vec![10, 10, 10]);
     }
 
@@ -569,9 +723,81 @@ mod tests {
         c.io.max_request_bytes = 0;
         assert!(c.validate().unwrap_err().to_string().contains("io.max_request_bytes"));
         let mut c = AgnesConfig::default();
-        c.io.gap_blocks = 4096;
+        c.io.gap_blocks = GapBlocks::Fixed(4096);
         assert!(c.validate().unwrap_err().to_string().contains("io.gap_blocks"));
         assert!(AgnesConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn stripe_blocks_validation() {
+        // auto (0) is always fine
+        assert!(AgnesConfig::default().validate().is_ok());
+        // a stripe must hold one full-size request
+        let mut c = AgnesConfig::default(); // 1 MiB blocks, 1 MiB requests
+        c.io.stripe_blocks = 1;
+        assert!(c.validate().is_ok(), "one 1 MiB block holds a 1 MiB request");
+        c.io.block_size = 4 << 10;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("io.stripe_blocks"), "{err}");
+        c.io.stripe_blocks = 256; // 256 x 4 KiB = 1 MiB: exactly fits
+        assert!(c.validate().is_ok());
+        // effective stripe derivation
+        assert_eq!(c.io.effective_stripe_blocks(), 256);
+        c.io.stripe_blocks = 0;
+        assert_eq!(c.io.effective_stripe_blocks(), 256, "auto = max_request / block_size");
+    }
+
+    #[test]
+    fn gap_blocks_parse_and_resolve() {
+        assert_eq!("auto".parse::<GapBlocks>().unwrap(), GapBlocks::Auto);
+        assert_eq!("AUTO".parse::<GapBlocks>().unwrap(), GapBlocks::Auto);
+        assert_eq!("3".parse::<GapBlocks>().unwrap(), GapBlocks::Fixed(3));
+        assert!("many".parse::<GapBlocks>().is_err());
+        let spec = SsdSpec::default();
+        assert_eq!(GapBlocks::Fixed(7).resolve(&spec, 4096), 7);
+        assert_eq!(GapBlocks::Auto.resolve(&spec, 1 << 20), 0);
+        assert_eq!(GapBlocks::Auto.resolve(&spec, 4096), spec.adaptive_gap_blocks(4096));
+        // TOML spelling parses back
+        let c = AgnesConfig::from_toml_str("[io]\ngap_blocks = \"auto\"\n").unwrap();
+        assert_eq!(c.io.gap_blocks, GapBlocks::Auto);
+        let c = AgnesConfig::from_toml_str("[io]\ngap_blocks = 5\n").unwrap();
+        assert_eq!(c.io.gap_blocks, GapBlocks::Fixed(5));
+    }
+
+    #[test]
+    fn env_overrides_agree_with_validate() {
+        // the new knobs go through the same checks validate() uses: an
+        // override value validate() would reject must be ignored, a
+        // valid one must land — and either way the post-override config
+        // still validates
+        let vars = |pairs: &[(&str, &str)]| {
+            let m: std::collections::HashMap<String, String> =
+                pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+            move |name: &str| m.get(name).cloned()
+        };
+        let mut c = AgnesConfig::default();
+        c.io.block_size = 4 << 10; // 1 MiB requests need >= 256-block stripes
+        c.apply_overrides_from(vars(&[
+            ("AGNES_STRIPE_BLOCKS", "1"), // too narrow for a 1 MiB request
+            ("AGNES_GAP_BLOCKS", "9999"), // > 1024
+            ("AGNES_NUM_SSDS", "0"),      // < 1
+        ]));
+        assert_eq!(c.io.stripe_blocks, 0, "invalid stripe override must be ignored");
+        assert_eq!(c.io.gap_blocks, GapBlocks::Auto, "invalid gap override must be ignored");
+        assert_eq!(c.device.num_ssds, 1, "invalid ssd override must be ignored");
+        c.validate().unwrap();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_STRIPE_BLOCKS", "512"),
+            ("AGNES_GAP_BLOCKS", "4"),
+            ("AGNES_NUM_SSDS", "2"),
+        ]));
+        assert_eq!(c.io.stripe_blocks, 512);
+        assert_eq!(c.io.gap_blocks, GapBlocks::Fixed(4));
+        assert_eq!(c.device.num_ssds, 2);
+        c.validate().unwrap();
+        // "auto" is a valid override spelling for the gap knob
+        c.apply_overrides_from(vars(&[("AGNES_GAP_BLOCKS", "auto")]));
+        assert_eq!(c.io.gap_blocks, GapBlocks::Auto);
     }
 
     #[test]

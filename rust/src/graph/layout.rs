@@ -80,6 +80,62 @@ pub fn shuffle_order(num_nodes: usize, seed: u64) -> Vec<u32> {
     perm
 }
 
+/// RAID0-style stripe mapping of the on-disk block space across an SSD
+/// array: blocks are grouped into *stripes* of `stripe_blocks` consecutive
+/// blocks, and stripe `s` lives on shard `s % num_shards`. Each shard
+/// therefore owns every `num_shards`-th stripe region of the backing file
+/// — the logical block address space stays linear (exactly how a RAID0
+/// array presents one address space over interleaved physical extents),
+/// so the data path never changes, only which device queue a read is
+/// charged to.
+///
+/// This lives next to the node-ordering layouts because it is the second
+/// half of the same question: [`Layout`] decides *which block* a node
+/// lands in, `StripeMap` decides *which device* that block lands on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StripeMap {
+    /// Consecutive blocks per stripe (>= 1).
+    pub stripe_blocks: u32,
+    /// Shards (devices) in the array (>= 1).
+    pub num_shards: u32,
+}
+
+impl StripeMap {
+    pub fn new(stripe_blocks: u32, num_shards: u32) -> StripeMap {
+        StripeMap { stripe_blocks: stripe_blocks.max(1), num_shards: num_shards.max(1) }
+    }
+
+    /// The degenerate single-device map (every block on shard 0).
+    pub fn single() -> StripeMap {
+        StripeMap::new(1, 1)
+    }
+
+    /// Which shard owns `block`.
+    #[inline]
+    pub fn shard_of(&self, block: u32) -> u32 {
+        (block / self.stripe_blocks) % self.num_shards
+    }
+
+    /// First block of the stripe containing `block`.
+    #[inline]
+    pub fn stripe_start(&self, block: u32) -> u32 {
+        block - block % self.stripe_blocks
+    }
+
+    /// First block past the stripe containing `block` (i.e. the next
+    /// shard-boundary a contiguous run must be split at).
+    #[inline]
+    pub fn stripe_end(&self, block: u32) -> u32 {
+        self.stripe_start(block).saturating_add(self.stripe_blocks)
+    }
+
+    /// Whether the map actually spreads blocks over more than one shard.
+    #[inline]
+    pub fn is_sharded(&self) -> bool {
+        self.num_shards > 1
+    }
+}
+
 /// Which layout to apply when building the on-disk stores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Layout {
@@ -177,5 +233,41 @@ mod tests {
     fn layout_fromstr() {
         assert_eq!("degree".parse::<Layout>().unwrap(), Layout::Degree);
         assert!("bogus".parse::<Layout>().is_err());
+    }
+
+    #[test]
+    fn stripe_map_round_robins_stripes() {
+        let m = StripeMap::new(4, 3);
+        // blocks 0..4 on shard 0, 4..8 on shard 1, 8..12 on shard 2, wrap
+        assert_eq!(m.shard_of(0), 0);
+        assert_eq!(m.shard_of(3), 0);
+        assert_eq!(m.shard_of(4), 1);
+        assert_eq!(m.shard_of(11), 2);
+        assert_eq!(m.shard_of(12), 0);
+        assert_eq!(m.stripe_start(6), 4);
+        assert_eq!(m.stripe_end(6), 8);
+        assert!(m.is_sharded());
+    }
+
+    #[test]
+    fn stripe_map_single_is_degenerate() {
+        let m = StripeMap::single();
+        for b in [0u32, 1, 100, u32::MAX - 1] {
+            assert_eq!(m.shard_of(b), 0);
+        }
+        assert!(!m.is_sharded());
+        // zero inputs are clamped to the valid minimum
+        let z = StripeMap::new(0, 0);
+        assert_eq!((z.stripe_blocks, z.num_shards), (1, 1));
+    }
+
+    #[test]
+    fn stripe_map_every_shard_owns_equal_share() {
+        let m = StripeMap::new(8, 4);
+        let mut counts = [0u32; 4];
+        for b in 0..8 * 4 * 10 {
+            counts[m.shard_of(b) as usize] += 1;
+        }
+        assert_eq!(counts, [80, 80, 80, 80]);
     }
 }

@@ -15,7 +15,10 @@
 //!   --block-size <bytes>   storage block size
 //!   --max-request-bytes <b> coalesced-run request cap (<= block size
 //!                          disables coalescing — the per-block ablation)
-//!   --gap-blocks <n>       bridge holes of up to n blocks when coalescing
+//!   --gap-blocks <n|auto>  bridge holes of up to n blocks when coalescing
+//!                          (auto derives the budget from the device spec)
+//!   --stripe-blocks <n>    RAID0 stripe width in blocks for the sharded
+//!                          backend (0 = auto: one full request per stripe)
 //!   --hyperbatch <n>       minibatches per hyperbatch
 //!   --minibatch <n>        targets per minibatch
 //!   --pipeline-depth <n>   in-flight hyperbatches (0/1 = sequential)
@@ -31,7 +34,7 @@
 //! ```
 
 use agnes::baselines::{GinexRunner, GnnDriveRunner, MariusRunner, OutreRunner, TrainingSystem};
-use agnes::config::{AgnesConfig, GnnModel};
+use agnes::config::{AgnesConfig, GapBlocks, GnnModel};
 use agnes::coordinator::{prepare_dataset, ModeledCompute, NullCompute};
 use agnes::graph::datasets::DatasetSpec;
 use agnes::metrics::{fmt_bytes, fmt_ns};
@@ -132,8 +135,11 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(b) = args.get::<usize>("max-request-bytes")? {
         c.io.max_request_bytes = b;
     }
-    if let Some(g) = args.get::<u32>("gap-blocks")? {
+    if let Some(g) = args.get::<GapBlocks>("gap-blocks")? {
         c.io.gap_blocks = g;
+    }
+    if let Some(s) = args.get::<u32>("stripe-blocks")? {
+        c.io.stripe_blocks = s;
     }
     if let Some(h) = args.get::<usize>("hyperbatch")? {
         c.train.hyperbatch_size = h;
@@ -186,7 +192,7 @@ fn run_system(
         let m = &r.metrics;
         println!(
             "epoch {epoch}: work={} span={} overlap={:.1}% prep={:.1}% sample_io={} gather_io={} \
-             loss={:.4} acc={:.3} | io: {} reqs, {}, mean_req={}, {:.1} blocks/run, \
+             loss={:.4} acc={:.3} | io: {} reqs, {}, mean_req={}, {:.1} blocks/run, gap={}, \
              achieved_bw={}/s",
             fmt_ns(m.total_ns()),
             fmt_ns(m.span_ns()),
@@ -200,8 +206,21 @@ fn run_system(
             fmt_bytes(m.device.total_bytes),
             fmt_bytes(m.mean_request_bytes() as u64),
             m.mean_blocks_per_run(),
+            m.effective_gap_blocks,
             fmt_bytes(m.device.achieved_bandwidth() as u64),
         );
+        if m.num_shards() > 1 {
+            println!(
+                "         shards: {} queues, imbalance={:.2} (busy {})",
+                m.num_shards(),
+                m.shard_imbalance(),
+                m.shard_busy_ns
+                    .iter()
+                    .map(|&ns| fmt_ns(ns))
+                    .collect::<Vec<_>>()
+                    .join(" / "),
+            );
+        }
     }
     Ok(())
 }

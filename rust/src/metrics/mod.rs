@@ -70,8 +70,21 @@ pub struct RunMetrics {
     /// Blocks delivered through those runs (>= distinct blocks requested
     /// when gap padding bridged holes).
     pub io_run_blocks: u64,
-    /// Device snapshot at end of run.
+    /// The hole-bridging budget the planner actually ran with — the
+    /// static `io.gap_blocks` value, or the device-derived budget when
+    /// the knob was left on auto.
+    pub effective_gap_blocks: u32,
+    /// Device snapshot at end of run. Under a sharded array the counters
+    /// sum across shards and `busy_ns` is the array elapsed (max shard
+    /// clock).
     pub device: DeviceStats,
+    /// Per-shard busy nanoseconds (index = shard; empty or length 1 for
+    /// single-queue runs).
+    pub shard_busy_ns: Vec<u64>,
+    /// Per-shard device request counts.
+    pub shard_requests: Vec<u64>,
+    /// Per-shard bytes read.
+    pub shard_bytes: Vec<u64>,
     /// Graph-buffer cache hit ratio.
     pub graph_hit_ratio: f64,
     /// Feature-cache hit ratio.
@@ -170,6 +183,19 @@ impl RunMetrics {
         }
     }
 
+    /// Number of device shards this run charged (1 for single-queue runs).
+    pub fn num_shards(&self) -> usize {
+        self.shard_busy_ns.len().max(1)
+    }
+
+    /// Queue-imbalance ratio of the sharded backend: busiest shard clock
+    /// over mean shard clock, in `[1, num_shards]` (1.0 = balanced, also
+    /// the value for single-queue runs). Shares its definition with
+    /// [`crate::storage::device::SsdArray::imbalance_ratio`].
+    pub fn shard_imbalance(&self) -> f64 {
+        crate::storage::device::shard_imbalance(&self.shard_busy_ns)
+    }
+
     pub fn merge(&mut self, o: &RunMetrics) {
         self.sample_wall_ns += o.sample_wall_ns;
         self.gather_wall_ns += o.gather_wall_ns;
@@ -188,7 +214,11 @@ impl RunMetrics {
         self.prepare_stages = self.prepare_stages.max(o.prepare_stages);
         self.io_runs += o.io_runs;
         self.io_run_blocks += o.io_run_blocks;
+        self.effective_gap_blocks = self.effective_gap_blocks.max(o.effective_gap_blocks);
         self.device.merge(&o.device);
+        merge_stage_vec(&mut self.shard_busy_ns, &o.shard_busy_ns);
+        merge_stage_vec(&mut self.shard_requests, &o.shard_requests);
+        merge_stage_vec(&mut self.shard_bytes, &o.shard_bytes);
         self.minibatches += o.minibatches;
         self.sampled_nodes += o.sampled_nodes;
         self.gathered_features += o.gathered_features;
@@ -500,6 +530,29 @@ mod tests {
         assert_eq!(a.stage_stall_ns, vec![0, 5, 11]);
         a.merge(&RunMetrics { stage_stall_ns: vec![1, 1], ..Default::default() });
         assert_eq!(a.stage_stall_ns, vec![1, 6, 11], "shorter vectors merge element-wise");
+    }
+
+    #[test]
+    fn shard_metrics_merge_and_imbalance() {
+        let mut a = RunMetrics::default();
+        assert_eq!(a.num_shards(), 1);
+        assert_eq!(a.shard_imbalance(), 1.0, "single-queue runs are balanced by definition");
+        let b = RunMetrics {
+            shard_busy_ns: vec![30, 10],
+            shard_requests: vec![3, 1],
+            shard_bytes: vec![300, 100],
+            effective_gap_blocks: 4,
+            ..Default::default()
+        };
+        assert!((b.shard_imbalance() - 1.5).abs() < 1e-12);
+        assert_eq!(b.num_shards(), 2);
+        a.merge(&b);
+        assert_eq!(a.shard_busy_ns, vec![30, 10]);
+        assert_eq!(a.shard_requests, vec![3, 1]);
+        assert_eq!(a.effective_gap_blocks, 4);
+        a.merge(&RunMetrics { shard_busy_ns: vec![0, 20], ..Default::default() });
+        assert_eq!(a.shard_busy_ns, vec![30, 30]);
+        assert_eq!(a.shard_imbalance(), 1.0);
     }
 
     #[test]

@@ -8,10 +8,19 @@
 //!
 //! Every batched read is first compiled by the [`IoPlanner`] into
 //! coalesced [`RunRequest`]s — maximal contiguous block runs, split at
-//! `io.max_request_bytes` — and the device model is charged **one request
-//! per run**, not per block. That is the paper's central mechanism: many
-//! small reads become few large sequential ones, and the device rides its
-//! bandwidth term instead of its latency term (see [`super::plan`]).
+//! `io.max_request_bytes` **and at the stripe boundaries of the store's
+//! device array** so no request straddles two shards — and the device
+//! model is charged **one request per run**, not per block. That is the
+//! paper's central mechanism: many small reads become few large
+//! sequential ones, and the device rides its bandwidth term instead of
+//! its latency term (see [`super::plan`]).
+//!
+//! Under a sharded array (`device.num_ssds > 1` with real per-SSD
+//! queues), both the sync and submit/poll paths dispatch every shard's
+//! runs concurrently: the scoped workers interleave runs of all shards,
+//! and the charge lands each run on its owning shard's queue with the
+//! batch elapsed = max over the shards (see
+//! [`super::device::SsdArray`]).
 //!
 //! Two entry points:
 //!
@@ -247,10 +256,25 @@ impl IoEngine {
         self.planner.plan(blocks, block_size)
     }
 
+    /// Compile a sorted block list into shard-aware run requests: the
+    /// coalesced plan, split at the stripe boundaries of `map` so no
+    /// request straddles two devices (verbatim for single-shard maps).
+    pub fn plan_striped(
+        &self,
+        blocks: &[BlockId],
+        block_size: usize,
+        map: crate::graph::layout::StripeMap,
+    ) -> Vec<RunRequest> {
+        self.planner.plan_striped(blocks, block_size, map)
+    }
+
     /// Read pre-planned graph runs concurrently: one `pread` and one
     /// device request per run. Returns every covered block (bridged-gap
     /// padding included) as `(id, decoded block)` pairs, ascending when
-    /// the runs are.
+    /// the runs are. The scoped workers fan out over the whole
+    /// (shard-interleaved) run list, so every shard's runs proceed
+    /// concurrently; the device charge groups each run onto its owning
+    /// shard's queue and costs the max over the shards.
     pub fn read_graph_runs(
         &self,
         store: &GraphStore,
@@ -268,9 +292,7 @@ impl IoEngine {
                 .map(|(i, b)| (b, GraphBlock::decode(&raw[i * bs..(i + 1) * bs])))
                 .collect::<Vec<_>>())
         })?;
-        let sizes: Vec<u64> = runs.iter().map(|r| r.bytes(bs)).collect();
-        let blocks: u64 = runs.iter().map(|r| r.len as u64).sum();
-        store.charge_runs(&sizes, blocks, self.effective_concurrency());
+        store.charge_runs(runs, self.effective_concurrency());
         Ok(per_run.into_iter().flatten().collect())
     }
 
@@ -294,20 +316,19 @@ impl IoEngine {
                 .map(|(i, b)| (b, BlockBytes::slice_of(raw.clone(), i * bs, bs)))
                 .collect::<Vec<_>>())
         })?;
-        let sizes: Vec<u64> = runs.iter().map(|r| r.bytes(bs)).collect();
-        let blocks: u64 = runs.iter().map(|r| r.len as u64).sum();
-        store.charge_runs(&sizes, blocks, self.effective_concurrency());
+        store.charge_runs(runs, self.effective_concurrency());
         Ok(per_run.into_iter().flatten().collect())
     }
 
     /// Plan + read graph blocks as `(id, block)` pairs — the sweeps' hot
-    /// path (one device request per coalesced run).
+    /// path (one device request per coalesced run, split at the store's
+    /// stripe boundaries so every request stays on one shard).
     pub fn read_graph_blocks_coalesced(
         &self,
         store: &GraphStore,
         blocks: &[BlockId],
     ) -> Result<Vec<(BlockId, GraphBlock)>> {
-        let runs = self.plan(blocks, store.block_size());
+        let runs = self.plan_striped(blocks, store.block_size(), store.stripe_map());
         self.read_graph_runs(store, &runs)
     }
 
@@ -318,7 +339,7 @@ impl IoEngine {
         store: &FeatureStore,
         blocks: &[BlockId],
     ) -> Result<Vec<(BlockId, BlockBytes)>> {
-        let runs = self.plan(blocks, store.layout.block_size);
+        let runs = self.plan_striped(blocks, store.layout.block_size, store.stripe_map());
         self.read_feature_runs(store, &runs)
     }
 
@@ -552,6 +573,56 @@ mod tests {
         // padded bytes are real block contents
         for (b, bytes) in &pairs {
             assert_eq!(bytes.as_slice(), &fs.read_block_raw_uncharged(*b).unwrap()[..]);
+        }
+    }
+
+    #[test]
+    fn sharded_read_returns_identical_blocks_and_splits_charges() {
+        use crate::storage::device::SsdArray;
+        let (_d, paths) = setup();
+        // single-queue reference
+        let ssd1 = SsdModel::new(SsdSpec::default());
+        let ref_store = GraphStore::open(&paths, ssd1.clone()).unwrap();
+        // 2 real shards, 4-block stripes
+        let arr = SsdArray::sharded(SsdSpec::default().with_ssds(2), 4);
+        let store = GraphStore::open(&paths, arr.clone()).unwrap();
+        let blocks: Vec<BlockId> = (0..store.num_blocks()).map(BlockId).collect();
+        let eng = IoEngine::new(4, 8);
+        let want = eng.read_graph_blocks(&ref_store, &blocks).unwrap();
+        let got = eng.read_graph_blocks(&store, &blocks).unwrap();
+        assert_eq!(got, want, "sharding must never change the data");
+        // both shards served requests; together they saw every byte
+        let per = arr.per_shard_stats();
+        assert!(per[0].num_requests > 0 && per[1].num_requests > 0, "{per:?}");
+        assert_eq!(
+            per[0].total_bytes + per[1].total_bytes,
+            blocks.len() as u64 * 2048,
+        );
+        // the contiguous store splits at each 4-block stripe boundary:
+        // one request per stripe, alternating shards
+        let stripes = (blocks.len() as u64).div_ceil(4);
+        assert_eq!(per[0].num_requests + per[1].num_requests, stripes);
+        // the attributed storage time is the array elapsed (max over the
+        // two shard clocks), not their sum
+        assert_eq!(store.charged_ns(), per[0].busy_ns.max(per[1].busy_ns));
+        assert_eq!(store.charged_ns(), arr.busy_ns());
+    }
+
+    #[test]
+    fn sharded_submit_poll_charges_like_sync() {
+        use crate::storage::device::SsdArray;
+        let (_d, paths) = setup();
+        let arr = SsdArray::sharded(SsdSpec::default().with_ssds(2), 2);
+        let store = Arc::new(GraphStore::open(&paths, arr.clone()).unwrap());
+        let blocks: Vec<BlockId> = (0..store.num_blocks()).map(BlockId).collect();
+        let eng = IoEngine::new(2, 4);
+        let sync = eng.read_graph_blocks_coalesced(&store, &blocks).unwrap();
+        let after_sync = arr.per_shard_stats();
+        let via_pool = eng.submit_graph_blocks(&store, blocks).wait().unwrap();
+        assert_eq!(via_pool, sync);
+        let after_async = arr.per_shard_stats();
+        for (s, a) in after_sync.iter().zip(&after_async) {
+            assert_eq!(2 * s.num_requests, a.num_requests, "async path charges per shard too");
         }
     }
 

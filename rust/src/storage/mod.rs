@@ -6,10 +6,14 @@
 //! feature blocks hold packed f32 vectors). [`builder`] writes the stores,
 //! [`store`] reads them block-wise, [`object_index`] is the pinned
 //! `T_obj^g` table mapping node ids to blocks, [`device`] is the NVMe SSD
-//! cost model (+ RAID0) that gives benches a faithful, page-cache-immune
-//! notion of storage time, [`plan`] is the run-coalescing I/O planner
-//! merging contiguous block runs into large sequential requests, and
-//! [`engine`] is the async I/O engine issuing them.
+//! cost model — a single [`device::SsdModel`] queue, or an
+//! [`device::SsdArray`] of real per-device shards with RAID0 stripe
+//! mapping ([`crate::graph::layout::StripeMap`]) — that gives benches a
+//! faithful, page-cache-immune notion of storage time, [`plan`] is the
+//! run-coalescing I/O planner merging contiguous block runs into large
+//! sequential requests (split at stripe boundaries so no request
+//! straddles two devices), and [`engine`] is the async I/O engine issuing
+//! them, charging each shard's runs on that shard's own queue.
 
 pub mod block;
 pub mod builder;
@@ -21,7 +25,7 @@ pub mod store;
 
 pub use block::{FeatureBlockLayout, GraphBlock, ObjectRecord, BLOCK_HEADER_BYTES, OBJ_HEADER_BYTES};
 pub use builder::{build_feature_store, build_graph_store, StorePaths};
-pub use device::{DeviceStats, IoClass, SsdModel, SsdSpec};
+pub use device::{shard_imbalance, DeviceStats, IoClass, SharedArray, SsdArray, SsdModel, SsdSpec};
 pub use engine::IoEngine;
 pub use object_index::ObjectIndexTable;
 pub use plan::{BlockBytes, IoPlanner, RunRequest};

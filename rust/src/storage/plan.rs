@@ -14,6 +14,7 @@
 //! I/O-size histogram from the `<=4KB` class into `<=1MB` / `>1MB`.
 
 use super::BlockId;
+use crate::graph::layout::StripeMap;
 use std::sync::Arc;
 
 /// One coalesced read request: `len` consecutive blocks starting at
@@ -94,16 +95,8 @@ impl IoPlanner {
         if blocks.is_empty() {
             return Vec::new();
         }
-        let sorted_unique;
-        let blocks = if blocks.windows(2).all(|w| w[0] < w[1]) {
-            blocks
-        } else {
-            let mut v = blocks.to_vec();
-            v.sort_unstable();
-            v.dedup();
-            sorted_unique = v;
-            sorted_unique.as_slice()
-        };
+        let mut buf = Vec::new();
+        let blocks = normalized(blocks, &mut buf);
         let cap = self.max_run_blocks(block_size);
         let mut runs = Vec::new();
         let mut start = blocks[0].0;
@@ -122,6 +115,68 @@ impl IoPlanner {
         }
         runs.push(RunRequest { start: BlockId(start), len: end - start });
         runs
+    }
+
+    /// Shard-aware planning for a striped device array: the requested
+    /// blocks are planned **per stripe**, so no request straddles two
+    /// shards — each run lies entirely inside one stripe and therefore on
+    /// one device, which is what lets the engine charge every shard's
+    /// runs on that shard's own queue.
+    ///
+    /// Planning per stripe (rather than splitting a flat plan after the
+    /// fact) also scopes gap bridging to one stripe: a hole crossing a
+    /// stripe boundary is never bridged, because the merged run would
+    /// immediately be split back apart at the boundary — the padding
+    /// reads would buy no request saving. This matters under the auto
+    /// gap budget, which can exceed the stripe width on small blocks.
+    ///
+    /// With a single shard the unsharded [`Self::plan`] is returned
+    /// verbatim, so the `num_ssds = 1` request stream is bit-for-bit the
+    /// pre-sharding one. [`Self::plan`]'s guarantees hold per stripe:
+    /// runs are ascending, disjoint, capped, cover every requested block
+    /// exactly once, and padding appears only inside bridgeable holes
+    /// between two requested blocks of the same stripe.
+    pub fn plan_striped(
+        &self,
+        blocks: &[BlockId],
+        block_size: usize,
+        map: StripeMap,
+    ) -> Vec<RunRequest> {
+        if !map.is_sharded() {
+            return self.plan(blocks, block_size);
+        }
+        if blocks.is_empty() {
+            return Vec::new();
+        }
+        let mut buf = Vec::new();
+        let blocks = normalized(blocks, &mut buf);
+        let mut out = Vec::new();
+        let mut group_start = 0usize;
+        for i in 1..=blocks.len() {
+            let boundary = i == blocks.len()
+                || blocks[i].0 / map.stripe_blocks != blocks[group_start].0 / map.stripe_blocks;
+            if boundary {
+                out.extend(self.plan(&blocks[group_start..i], block_size));
+                group_start = i;
+            }
+        }
+        out
+    }
+}
+
+/// The planner's input contract is a sorted, unique block list (bucket
+/// rows and sweep miss-lists are); anything else is normalized
+/// defensively into `buf` — shared by [`IoPlanner::plan`] and
+/// [`IoPlanner::plan_striped`] so the two paths can never diverge on
+/// what "sorted and unique" means.
+fn normalized<'a>(blocks: &'a [BlockId], buf: &'a mut Vec<BlockId>) -> &'a [BlockId] {
+    if blocks.windows(2).all(|w| w[0] < w[1]) {
+        blocks
+    } else {
+        *buf = blocks.to_vec();
+        buf.sort_unstable();
+        buf.dedup();
+        buf
     }
 }
 
@@ -279,6 +334,88 @@ mod tests {
     #[test]
     fn empty_plan() {
         assert!(IoPlanner::default().plan(&[], 4096).is_empty());
+        assert!(IoPlanner::default().plan_striped(&[], 4096, StripeMap::new(4, 2)).is_empty());
+    }
+
+    #[test]
+    fn striped_plan_with_one_shard_is_the_unsharded_plan() {
+        let p = IoPlanner::new(1 << 20, 1);
+        let blocks = ids(&[0, 1, 2, 5, 6, 9, 40, 41]);
+        // stripe width is irrelevant with one shard: zero splits
+        for stripe in [1u32, 3, 64] {
+            assert_eq!(
+                p.plan_striped(&blocks, 4096, StripeMap::new(stripe, 1)),
+                p.plan(&blocks, 4096)
+            );
+        }
+    }
+
+    #[test]
+    fn striped_plan_splits_runs_at_stripe_boundaries() {
+        let p = IoPlanner::default();
+        // blocks 0..10 contiguous, stripes of 4 over 2 shards:
+        // [0,4) shard0, [4,8) shard1, [8,10) shard0
+        let blocks: Vec<BlockId> = (0..10).map(BlockId).collect();
+        let runs = p.plan_striped(&blocks, 4096, StripeMap::new(4, 2));
+        assert_eq!(
+            runs,
+            vec![
+                RunRequest { start: BlockId(0), len: 4 },
+                RunRequest { start: BlockId(4), len: 4 },
+                RunRequest { start: BlockId(8), len: 2 },
+            ]
+        );
+        // no run straddles a stripe boundary
+        let map = StripeMap::new(4, 2);
+        for r in &runs {
+            assert!(r.end() <= map.stripe_end(r.start.0), "run {r:?} straddles a stripe");
+        }
+        // exact same coverage as the unsharded plan
+        let flat: Vec<u32> = runs.iter().flat_map(|r| r.start.0..r.end()).collect();
+        let unsharded: Vec<u32> =
+            p.plan(&blocks, 4096).iter().flat_map(|r| r.start.0..r.end()).collect();
+        assert_eq!(flat, unsharded);
+    }
+
+    #[test]
+    fn striped_plan_only_splits_straddling_runs() {
+        let p = IoPlanner::default();
+        // two short runs each inside one stripe: untouched
+        let blocks = ids(&[1, 2, 9, 10]);
+        let runs = p.plan_striped(&blocks, 4096, StripeMap::new(8, 2));
+        assert_eq!(
+            runs,
+            vec![
+                RunRequest { start: BlockId(1), len: 2 },
+                RunRequest { start: BlockId(9), len: 2 },
+            ]
+        );
+    }
+
+    #[test]
+    fn striped_plan_never_bridges_across_a_stripe_boundary() {
+        // hole {3, 4} crosses the stripe boundary at 4: bridging it would
+        // only split back apart at the boundary, reading padding for no
+        // request saving — the hole must stay unbridged. The same-width
+        // hole {5, 6} inside stripe 1 IS bridged.
+        let p = IoPlanner::new(1 << 20, 2);
+        let map = StripeMap::new(4, 2);
+        let runs = p.plan_striped(&ids(&[2, 5, 7]), 4096, map);
+        assert_eq!(
+            runs,
+            vec![
+                RunRequest { start: BlockId(2), len: 1 },
+                RunRequest { start: BlockId(5), len: 3 }, // bridges {6}
+            ]
+        );
+        // unsharded, the same planner would have bridged everything
+        assert_eq!(
+            p.plan(&ids(&[2, 5, 7]), 4096),
+            vec![RunRequest { start: BlockId(2), len: 6 }]
+        );
+        // unsorted input is handled defensively, like plan()
+        let runs2 = p.plan_striped(&ids(&[7, 2, 5, 5]), 4096, map);
+        assert_eq!(runs2, runs);
     }
 
     #[test]

@@ -4,9 +4,11 @@
 
 use super::block::{FeatureBlockLayout, GraphBlock};
 use super::builder::{GraphStoreMeta, StorePaths};
-use super::device::SharedSsd;
+use super::device::SharedArray;
 use super::object_index::ObjectIndexTable;
+use super::plan::RunRequest;
 use super::BlockId;
+use crate::graph::layout::StripeMap;
 use crate::Result;
 use byteorder::{ByteOrder, LittleEndian};
 use anyhow::Context;
@@ -22,7 +24,11 @@ pub struct GraphStore {
     /// CSR offsets (resident, as Ginex keeps `indptr` in memory) — used by
     /// the baselines' per-node direct reads and by tests as ground truth.
     pub csr_offsets: Arc<Vec<u64>>,
-    pub ssd: SharedSsd,
+    /// The device array behind this store: a single-queue aggregate for
+    /// the baselines (a bare [`SsdModel`](super::device::SsdModel) handle
+    /// converts into one), or real per-device shards with stripe-mapped
+    /// block ownership for AGNES.
+    pub ssd: SharedArray,
     /// Simulated device ns charged through *this* store (the shared
     /// [`SsdModel`](super::device::SsdModel) clock is global; staged
     /// executors attribute I/O per stage via per-store deltas because the
@@ -39,7 +45,11 @@ pub struct GraphStore {
 
 impl GraphStore {
     /// Open a store built by [`super::builder::build_graph_store`].
-    pub fn open(paths: &StorePaths, ssd: SharedSsd) -> Result<GraphStore> {
+    /// Accepts either a bare [`SharedSsd`](super::device::SharedSsd)
+    /// (wrapped into a legacy single-queue aggregate array — the
+    /// baselines' charging model) or a [`SharedArray`] of real shards.
+    pub fn open(paths: &StorePaths, ssd: impl Into<SharedArray>) -> Result<GraphStore> {
+        let ssd = ssd.into();
         let text = std::fs::read_to_string(&paths.graph_meta).context("reading graph meta")?;
         let meta = GraphStoreMeta::from_json(&crate::util::json::Json::parse(&text)?)?;
         let file = File::open(&paths.graph_blocks)?;
@@ -57,27 +67,53 @@ impl GraphStore {
         })
     }
 
-    /// Charge a batch of reads to the device model, attributing the
-    /// simulated elapsed time to this store (see `charged_ns`). Returns
-    /// the batch's simulated nanoseconds.
+    /// Charge a batch of reads to the device's single-queue (legacy)
+    /// path, attributing the simulated elapsed time to this store (see
+    /// `charged_ns`). Returns the batch's simulated nanoseconds. The
+    /// baselines' per-node reads stay on this path by design.
     pub fn charge_batch(&self, sizes: &[u64], concurrency: u32) -> u64 {
         let ns = self.ssd.submit_batch(sizes, concurrency);
         self.charged_ns.fetch_add(ns, Ordering::Relaxed);
         ns
     }
 
+    /// Charge a single block-addressed read to the shard owning `b`
+    /// (shard 0 on aggregate arrays — identical to
+    /// [`Self::charge_batch`] there).
+    pub fn charge_block(&self, b: BlockId, size: u64, concurrency: u32) -> u64 {
+        let ns = self.ssd.submit_for_block(b, size, concurrency);
+        self.charged_ns.fetch_add(ns, Ordering::Relaxed);
+        ns
+    }
+
     /// Simulated device nanoseconds charged through this store so far.
+    /// Under a sharded array each batch contributes its **array elapsed**
+    /// time (max over the shards it touched), so this is the storage time
+    /// a caller actually waited for.
     pub fn charged_ns(&self) -> u64 {
         self.charged_ns.load(Ordering::Relaxed)
     }
 
-    /// Charge a batch of *coalesced run* reads delivering `blocks` blocks
-    /// total — one device request per run, which is the whole point of the
-    /// planner (the per-block path charges one request per block).
-    pub fn charge_runs(&self, run_sizes: &[u64], blocks: u64, concurrency: u32) -> u64 {
-        self.runs_issued.fetch_add(run_sizes.len() as u64, Ordering::Relaxed);
+    /// The block-to-shard stripe mapping of this store's device array.
+    #[inline]
+    pub fn stripe_map(&self) -> StripeMap {
+        self.ssd.stripe_map()
+    }
+
+    /// Charge a batch of *coalesced run* reads — one device request per
+    /// run, which is the whole point of the planner (the per-block path
+    /// charges one request per block). Runs are grouped by the shard that
+    /// owns them (the planner's stripe-split guarantees a run never
+    /// straddles shards) and each shard's group is charged on that
+    /// shard's own queue concurrently: the returned — and attributed —
+    /// elapsed time is the max over the shards, not the sum.
+    pub fn charge_runs(&self, runs: &[RunRequest], concurrency: u32) -> u64 {
+        let ns = charge_runs_sharded(&self.ssd, runs, self.meta.block_size, concurrency);
+        self.runs_issued.fetch_add(runs.len() as u64, Ordering::Relaxed);
+        let blocks: u64 = runs.iter().map(|r| r.len as u64).sum();
         self.run_blocks.fetch_add(blocks, Ordering::Relaxed);
-        self.charge_batch(run_sizes, concurrency)
+        self.charged_ns.fetch_add(ns, Ordering::Relaxed);
+        ns
     }
 
     /// Coalesced run requests issued against this store so far.
@@ -120,10 +156,10 @@ impl GraphStore {
         Ok(GraphBlock::decode(&self.read_block_raw(b, concurrency)?))
     }
 
-    /// Read raw block bytes.
+    /// Read raw block bytes, charged to the shard owning the block.
     pub fn read_block_raw(&self, b: BlockId, concurrency: u32) -> Result<Vec<u8>> {
         let buf = self.read_block_raw_uncharged(b)?;
-        self.charge_batch(&[self.meta.block_size as u64], concurrency);
+        self.charge_block(b, self.meta.block_size as u64, concurrency);
         Ok(buf)
     }
 
@@ -195,9 +231,14 @@ impl GraphStore {
 /// Read-only feature block store.
 pub struct FeatureStore {
     file: File,
+    /// Backing-file length, captured at open (run reads need it for EOF
+    /// semantics on the zero-padded tail; re-statting per read would put
+    /// a syscall on the hot path).
+    file_len: u64,
     pub layout: FeatureBlockLayout,
     pub num_nodes: usize,
-    pub ssd: SharedSsd,
+    /// Device array (see [`GraphStore::ssd`]).
+    pub ssd: SharedArray,
     /// Simulated device ns charged through this store (see
     /// [`GraphStore::charged_ns`]).
     charged_ns: AtomicU64,
@@ -212,11 +253,14 @@ impl FeatureStore {
         paths: &StorePaths,
         layout: FeatureBlockLayout,
         num_nodes: usize,
-        ssd: SharedSsd,
+        ssd: impl Into<SharedArray>,
     ) -> Result<FeatureStore> {
+        let ssd = ssd.into();
         let file = File::open(&paths.feature_blocks).context("open feature store")?;
+        let file_len = file.metadata().context("stat feature store")?.len();
         Ok(FeatureStore {
             file,
+            file_len,
             layout,
             num_nodes,
             ssd,
@@ -226,25 +270,44 @@ impl FeatureStore {
         })
     }
 
-    /// Charge a batch of reads to the device model, attributed to this
-    /// store (see [`GraphStore::charge_batch`]).
+    /// Charge a batch of reads to the device's single-queue (legacy)
+    /// path, attributed to this store (see [`GraphStore::charge_batch`]).
     pub fn charge_batch(&self, sizes: &[u64], concurrency: u32) -> u64 {
         let ns = self.ssd.submit_batch(sizes, concurrency);
         self.charged_ns.fetch_add(ns, Ordering::Relaxed);
         ns
     }
 
-    /// Simulated device nanoseconds charged through this store so far.
+    /// Charge a single block-addressed read to the shard owning `b` (see
+    /// [`GraphStore::charge_block`]).
+    pub fn charge_block(&self, b: BlockId, size: u64, concurrency: u32) -> u64 {
+        let ns = self.ssd.submit_for_block(b, size, concurrency);
+        self.charged_ns.fetch_add(ns, Ordering::Relaxed);
+        ns
+    }
+
+    /// Simulated device nanoseconds charged through this store so far
+    /// (array elapsed per batch — see [`GraphStore::charged_ns`]).
     pub fn charged_ns(&self) -> u64 {
         self.charged_ns.load(Ordering::Relaxed)
     }
 
-    /// Charge a batch of coalesced run reads (one device request per run —
-    /// see [`GraphStore::charge_runs`]).
-    pub fn charge_runs(&self, run_sizes: &[u64], blocks: u64, concurrency: u32) -> u64 {
-        self.runs_issued.fetch_add(run_sizes.len() as u64, Ordering::Relaxed);
+    /// The block-to-shard stripe mapping of this store's device array.
+    #[inline]
+    pub fn stripe_map(&self) -> StripeMap {
+        self.ssd.stripe_map()
+    }
+
+    /// Charge a batch of coalesced run reads, each run on its owning
+    /// shard's queue (one device request per run — see
+    /// [`GraphStore::charge_runs`]).
+    pub fn charge_runs(&self, runs: &[RunRequest], concurrency: u32) -> u64 {
+        let ns = charge_runs_sharded(&self.ssd, runs, self.layout.block_size, concurrency);
+        self.runs_issued.fetch_add(runs.len() as u64, Ordering::Relaxed);
+        let blocks: u64 = runs.iter().map(|r| r.len as u64).sum();
         self.run_blocks.fetch_add(blocks, Ordering::Relaxed);
-        self.charge_batch(run_sizes, concurrency)
+        self.charged_ns.fetch_add(ns, Ordering::Relaxed);
+        ns
     }
 
     /// Coalesced run requests issued against this store so far.
@@ -269,10 +332,11 @@ impl FeatureStore {
         self.layout.num_blocks(self.num_nodes)
     }
 
-    /// Read one feature block (raw bytes), charged as a block I/O.
+    /// Read one feature block (raw bytes), charged as a block I/O on the
+    /// shard owning it.
     pub fn read_block_raw(&self, b: BlockId, concurrency: u32) -> Result<Vec<u8>> {
         let buf = self.read_block_raw_uncharged(b)?;
-        self.charge_batch(&[self.layout.block_size as u64], concurrency);
+        self.charge_block(b, self.layout.block_size as u64, concurrency);
         Ok(buf)
     }
 
@@ -293,7 +357,7 @@ impl FeatureStore {
         let bs = self.layout.block_size;
         let mut buf = vec![0u8; bs * len as usize];
         let off = start.0 as u64 * bs as u64;
-        let flen = self.file.metadata()?.len();
+        let flen = self.file_len;
         let last_off = off + (len.saturating_sub(1)) as u64 * bs as u64;
         anyhow::ensure!(
             len >= 1 && last_off < flen,
@@ -333,6 +397,37 @@ impl FeatureStore {
         LittleEndian::read_f32_into(&buf, &mut out);
         Ok(out)
     }
+}
+
+/// Group coalesced runs by owning shard and charge each shard's group on
+/// its own queue (elapsed = max over shards). Planner-striped runs never
+/// straddle a stripe boundary, so the common case is one charge per run
+/// on the shard owning its start block; a straddling run from a caller
+/// that planned without [`IoPlanner::plan_striped`](super::plan::IoPlanner::plan_striped)
+/// is split at the boundaries *for charging* — each shard is billed for
+/// exactly the stripe regions it owns (on real RAID0 a straddling
+/// request fans out to one request per device), never silently charged
+/// to the first shard alone. With a single shard all of this degrades to
+/// exactly the legacy one-queue batch in run order.
+fn charge_runs_sharded(
+    ssd: &SharedArray,
+    runs: &[RunRequest],
+    block_size: usize,
+    concurrency: u32,
+) -> u64 {
+    let map = ssd.stripe_map();
+    let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); ssd.num_shards()];
+    for r in runs {
+        let mut start = r.start.0;
+        let end = r.end();
+        while start < end {
+            let cut = if ssd.num_shards() == 1 { end } else { map.stripe_end(start).min(end) };
+            let bytes = (cut - start) as u64 * block_size as u64;
+            per_shard[map.shard_of(start) as usize].push(bytes);
+            start = cut;
+        }
+    }
+    ssd.submit_sharded(&per_shard, concurrency)
 }
 
 #[cfg(test)]
@@ -416,6 +511,57 @@ mod tests {
         assert!(gs.charged_ns() > 0);
         assert!(fs.charged_ns() > 0);
         assert_eq!(gs.charged_ns() + fs.charged_ns(), ssd.busy_ns());
+    }
+
+    #[test]
+    fn sharded_run_charges_land_on_owning_shards() {
+        use crate::storage::device::SsdArray;
+        use crate::storage::plan::RunRequest;
+        let (_d, paths, _g) = setup();
+        // 2 shards, 2-block stripes: blocks {0,1} shard0, {2,3} shard1, ...
+        let arr = SsdArray::sharded(SsdSpec::default().with_ssds(2), 2);
+        let store = GraphStore::open(&paths, arr.clone()).unwrap();
+        let runs = [
+            RunRequest { start: BlockId(0), len: 2 }, // shard 0
+            RunRequest { start: BlockId(2), len: 2 }, // shard 1
+            RunRequest { start: BlockId(4), len: 1 }, // shard 0
+        ];
+        let ns = store.charge_runs(&runs, 8);
+        let per = arr.per_shard_stats();
+        assert_eq!(per[0].num_requests, 2);
+        assert_eq!(per[1].num_requests, 1);
+        assert_eq!(per[0].total_bytes, 3 * 2048);
+        assert_eq!(per[1].total_bytes, 2 * 2048);
+        // attributed time is the array elapsed (max), not the sum
+        assert_eq!(ns, per[0].busy_ns.max(per[1].busy_ns));
+        assert_eq!(store.charged_ns(), ns);
+        assert_eq!(store.runs_issued(), 3);
+        assert_eq!(store.run_blocks_read(), 5);
+        // block-addressed single reads charge the owning shard too
+        store.read_block_raw(BlockId(2), 1).unwrap();
+        assert_eq!(arr.per_shard_stats()[1].num_requests, 2);
+    }
+
+    #[test]
+    fn straddling_run_is_charged_per_owning_shard() {
+        use crate::storage::device::SsdArray;
+        use crate::storage::plan::RunRequest;
+        let (_d, paths, _g) = setup();
+        let arr = SsdArray::sharded(SsdSpec::default().with_ssds(2), 2);
+        let store = GraphStore::open(&paths, arr.clone()).unwrap();
+        // a caller that planned WITHOUT the striped planner: blocks {1,2}
+        // straddle the stripe boundary at 2. The charge must fan out like
+        // a real RAID0 straddling request — one per device region — not
+        // land wholly on the start shard.
+        store.charge_runs(&[RunRequest { start: BlockId(1), len: 2 }], 4);
+        let per = arr.per_shard_stats();
+        assert_eq!(per[0].num_requests, 1);
+        assert_eq!(per[1].num_requests, 1);
+        assert_eq!(per[0].total_bytes, 2048);
+        assert_eq!(per[1].total_bytes, 2048);
+        // caller-level accounting still counts one run of two blocks
+        assert_eq!(store.runs_issued(), 1);
+        assert_eq!(store.run_blocks_read(), 2);
     }
 
     #[test]

@@ -14,7 +14,12 @@ use std::path::PathBuf;
 
 /// Bench-scale defaults: the paper's §4.1 knobs divided by the dataset
 /// scale factor (1/1000), so ratios are preserved while a full bench run
-/// stays in CPU-minutes.
+/// stays in CPU-minutes. Honors the `AGNES_*` environment overrides
+/// (schedule and storage-backend knobs — see
+/// [`AgnesConfig::apply_env_overrides`]), like [`AgnesConfig::tiny`]
+/// does, so a bench can be re-sharded or re-scheduled without code
+/// changes; note sweeps that vary a knob themselves (e.g. fig10/fig11
+/// over `num_ssds`) set it after this call and win.
 pub fn bench_config(dataset: &str, scale: f64) -> AgnesConfig {
     let mut c = AgnesConfig::default();
     c.dataset.name = dataset.to_string();
@@ -38,6 +43,7 @@ pub fn bench_config(dataset: &str, scale: f64) -> AgnesConfig {
     c.train.hyperbatch_size = 64; // scaled from 1024 with the epoch size
     c.train.fanouts = vec![10, 10, 10];
     c.train.target_fraction = 0.05;
+    c.apply_env_overrides();
     c
 }
 

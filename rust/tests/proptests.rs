@@ -4,7 +4,7 @@
 //! the seed for reproduction).
 
 use agnes::graph::generate::{chung_lu, PowerLawParams};
-use agnes::graph::layout::{bfs_order, degree_order, shuffle_order};
+use agnes::graph::layout::{bfs_order, degree_order, shuffle_order, StripeMap};
 use agnes::graph::CsrGraph;
 use agnes::memory::BufferPool;
 use agnes::op::bucket::Bucket;
@@ -256,6 +256,124 @@ fn prop_planner_runs_sound() {
         if gap == 0 {
             assert_eq!(covered_set, requested, "{tag}");
         }
+    }
+}
+
+/// Property: for random block sets, planner knobs, stripe widths, and
+/// shard counts, the shard-striped plan covers every requested block
+/// exactly once with no run straddling a stripe boundary, covers
+/// non-requested blocks only as bridged holes *within one stripe*
+/// (bridging never crosses a boundary — the merged run would only split
+/// back apart there), keeps runs ascending/disjoint/capped and starting
+/// and ending on requested blocks, and with a single shard yields the
+/// unsharded plan verbatim (the `num_ssds = 1` bit-identity gate).
+#[test]
+fn prop_striped_plan_covers_requested_blocks_without_straddling() {
+    for case in 0..24u64 {
+        let mut rng = Rng::seed_from_u64(900 + case);
+        let block_size = [512usize, 2048, 4096][rng.gen_range(3)];
+        let max_request = [block_size, 4 * block_size, 1 << 20][rng.gen_range(3)];
+        let gap = rng.gen_range(4) as u32;
+        let planner = IoPlanner::new(max_request, gap);
+        let stripe = [1u32, 2, 4, 8, 64][rng.gen_range(5)];
+        let shards = [1u32, 2, 3, 4][rng.gen_range(4)];
+        let map = StripeMap::new(stripe, shards);
+        let universe = 1 + rng.gen_range(300);
+        let requested: BTreeSet<u32> =
+            (0..rng.gen_range(150)).map(|_| rng.gen_range(universe) as u32).collect();
+        let blocks: Vec<BlockId> = requested.iter().copied().map(BlockId).collect();
+        let tag = format!(
+            "case {case} bs {block_size} cap {max_request} gap {gap} stripe {stripe} \
+             shards {shards}"
+        );
+
+        let flat = planner.plan(&blocks, block_size);
+        let striped = planner.plan_striped(&blocks, block_size, map);
+        if shards == 1 {
+            assert_eq!(striped, flat, "{tag}: single shard must equal the unsharded plan");
+            continue;
+        }
+        // runs ascend and stay disjoint
+        for w in striped.windows(2) {
+            assert!(w[0].end() <= w[1].start.0, "{tag}: overlapping runs {w:?}");
+        }
+        let cap_blocks = planner.max_run_blocks(block_size);
+        let covered: Vec<u32> = striped.iter().flat_map(|r| r.start.0..r.end()).collect();
+        let covered_set: BTreeSet<u32> = covered.iter().copied().collect();
+        assert_eq!(covered.len(), covered_set.len(), "{tag}: block covered twice");
+        for &b in &requested {
+            assert!(covered_set.contains(&b), "{tag}: requested {b} not covered");
+        }
+        let mut per_shard_blocks = vec![0u64; shards as usize];
+        for r in &striped {
+            assert!(r.len >= 1 && r.len <= cap_blocks, "{tag}: run {r:?} breaks cap");
+            // no straddling: the whole run lives inside one stripe, so
+            // every block of it is on the run's shard — and bridged
+            // padding never crosses a boundary either
+            assert!(r.end() <= map.stripe_end(r.start.0), "{tag}: run {r:?} straddles");
+            // runs start and end on requested blocks (padding is interior
+            // to a single stripe's run)
+            assert!(requested.contains(&r.start.0), "{tag}: leading padding {r:?}");
+            assert!(requested.contains(&(r.end() - 1)), "{tag}: trailing padding {r:?}");
+            per_shard_blocks[map.shard_of(r.start.0) as usize] += r.len as u64;
+        }
+        // padding only inside bridgeable holes
+        for &b in &covered_set {
+            if !requested.contains(&b) {
+                let below = requested.range(..b).next_back();
+                let above = requested.range(b + 1..).next();
+                let ok = matches!((below, above), (Some(&lo), Some(&hi))
+                    if b - lo <= gap && hi - b <= gap);
+                assert!(ok, "{tag}: padding {b} not inside a bridgeable hole");
+            }
+        }
+        assert_eq!(
+            per_shard_blocks.iter().sum::<u64>(),
+            covered_set.len() as u64,
+            "{tag}: per-shard blocks must partition the coverage"
+        );
+        // no bridging budget: coverage is exactly the request, and the
+        // striped coverage then equals the unsharded plan's coverage
+        if gap == 0 {
+            assert_eq!(covered_set, requested, "{tag}");
+            let flat_cover: BTreeSet<u32> =
+                flat.iter().flat_map(|r| r.start.0..r.end()).collect();
+            assert_eq!(covered_set, flat_cover, "{tag}");
+        }
+    }
+}
+
+/// Property (the `num_ssds = 1` charge-equivalence gate): replaying a
+/// recorded trace of coalesced-run batches through a one-shard sharded
+/// array produces bit-for-bit the charges of the pre-refactor
+/// single-device model — same elapsed per batch, same cumulative busy
+/// clock, same histogram.
+#[test]
+fn prop_single_shard_charges_match_prerefactor_model() {
+    use agnes::storage::device::SsdArray;
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(1000 + case);
+        let spec = SsdSpec::default();
+        let legacy = SsdModel::new(spec);
+        let sharded = SsdArray::sharded(spec, 1 + rng.gen_range(64) as u32);
+        assert_eq!(sharded.num_shards(), 1);
+        // a recorded trace: random batches of run sizes at random
+        // concurrency — exactly what the engine charges per batched read
+        for _ in 0..20 {
+            let n = 1 + rng.gen_range(12);
+            let sizes: Vec<u64> =
+                (0..n).map(|_| [4096u64, 65536, 262144, 1 << 20][rng.gen_range(4)]).collect();
+            let conc = 1 + rng.gen_range(256) as u32;
+            let a = legacy.submit_batch(&sizes, conc);
+            let b = sharded.submit_sharded(&[sizes.clone()], conc);
+            assert_eq!(a, b, "case {case}: per-batch elapsed diverged");
+        }
+        let (l, s) = (legacy.stats(), sharded.stats());
+        assert_eq!(l.busy_ns, s.busy_ns, "case {case}");
+        assert_eq!(l.num_requests, s.num_requests, "case {case}");
+        assert_eq!(l.total_bytes, s.total_bytes, "case {case}");
+        assert_eq!(l.size_hist, s.size_hist, "case {case}");
+        assert_eq!(l.bytes_hist, s.bytes_hist, "case {case}");
     }
 }
 
