@@ -1,0 +1,589 @@
+//! Benchmark regression gate.
+//!
+//! CI runs the bench smokes (`fig2_breakdown`, `fig11_bandwidth`,
+//! `ablation_layout` in their tiny modes), which emit machine-readable
+//! `BENCH_*.json` records under `rust/target/bench_results/`. This binary
+//! compares those records against the **committed baselines** in
+//! `bench_baselines/*.json` and exits nonzero on regression, so a perf
+//! regression in the hot path cannot merge silently.
+//!
+//! Every gated metric is *simulated* (device-model nanoseconds, request
+//! counts, bytes, loss bit patterns) — deterministic across machines —
+//! so the tolerances absorb intentional drift between versions, not
+//! runner noise. Wall-clock metrics are never gated.
+//!
+//! ```text
+//! bench_gate [--results DIR] [--baselines DIR]   run the gate (default
+//!                                                dirs: rust/target/bench_results,
+//!                                                bench_baselines)
+//! bench_gate --rebaseline [...]                  pin the baselines to the
+//!                                                current bench results
+//! bench_gate --self-test                         prove the gate fails on a
+//!                                                synthetic regressed record
+//! ```
+//!
+//! ## Baseline format
+//!
+//! One JSON file per gated record:
+//!
+//! ```json
+//! {
+//!   "source": "BENCH_layout.json",
+//!   "checks": [
+//!     {"path": "dense[0].prep_storage_s", "value": 0.41, "rel_tol": 0.15},
+//!     {"path": "dense[0].loss_bits", "value": "0x3f0a1b2c", "exact": true}
+//!   ]
+//! }
+//! ```
+//!
+//! `checks: null` marks an **unseeded** baseline: the gate verifies the
+//! record exists and parses, prints the values a re-baseline would pin,
+//! and passes. To (re-)pin after an intentional perf change: run the
+//! bench smokes, then `cargo run --bin bench_gate -- --rebaseline`, and
+//! commit the updated `bench_baselines/*.json` with a sentence in the PR
+//! explaining the shift.
+
+use agnes::util::json::Json;
+use std::path::{Path, PathBuf};
+
+/// Numeric leaf keys worth gating, all simulated/deterministic. A
+/// rebaseline pins every occurrence of these anywhere in the record.
+const NUMERIC_KEYS: &[&str] = &[
+    "prep_storage_s",
+    "requests",
+    "total_bytes",
+    "mean_request_bytes",
+    "mean_blocks_per_run",
+    "io_runs",
+    "shard_imbalance",
+    "achieved_bw_gbps",
+    "achieved_bw_gbps_4ssd",
+    "effective_gap_blocks",
+    "storage_s",
+];
+/// String leaf keys gated exactly (f32 bit patterns).
+const EXACT_KEYS: &[&str] = &["loss_bits"];
+/// Default relative tolerance for numeric checks (the issue's
+/// "prepare-storage-time within 15%").
+const DEFAULT_REL_TOL: f64 = 0.15;
+
+#[derive(Debug, Clone, PartialEq)]
+struct Check {
+    path: String,
+    value: Json,
+    rel_tol: f64,
+    exact: bool,
+}
+
+#[derive(Debug, Clone)]
+struct Baseline {
+    source: String,
+    /// `None` = unseeded (structure-only gate).
+    checks: Option<Vec<Check>>,
+}
+
+impl Baseline {
+    fn from_json(j: &Json) -> anyhow::Result<Baseline> {
+        let source = j
+            .req("source")?
+            .as_str()
+            .ok_or_else(|| anyhow::anyhow!("baseline source must be a string"))?
+            .to_string();
+        let checks = match j.get("checks") {
+            // only an EXPLICIT null marks an unseeded baseline; a missing
+            // key (typo, merge-conflict fallout) must fail loudly instead
+            // of silently disabling the gate
+            None => anyhow::bail!(
+                "baseline has no \"checks\" key (use \"checks\": null for an unseeded baseline)"
+            ),
+            Some(Json::Null) => None,
+            Some(Json::Arr(items)) => {
+                let mut out = Vec::new();
+                for item in items {
+                    let path = item
+                        .req("path")?
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("check path must be a string"))?
+                        .to_string();
+                    out.push(Check {
+                        path,
+                        value: item.req("value")?.clone(),
+                        rel_tol: item
+                            .get("rel_tol")
+                            .and_then(Json::as_f64)
+                            .unwrap_or(DEFAULT_REL_TOL),
+                        exact: item.get("exact").and_then(Json::as_bool).unwrap_or(false),
+                    });
+                }
+                Some(out)
+            }
+            Some(other) => anyhow::bail!("baseline checks must be an array or null, got {other:?}"),
+        };
+        Ok(Baseline { source, checks })
+    }
+
+    fn to_json(&self) -> Json {
+        let checks = match &self.checks {
+            None => Json::Null,
+            Some(cs) => Json::arr(cs.iter().map(|c| {
+                let mut fields = vec![
+                    ("path", Json::str(c.path.clone())),
+                    ("value", c.value.clone()),
+                ];
+                if c.exact {
+                    fields.push(("exact", Json::Bool(true)));
+                } else {
+                    fields.push(("rel_tol", Json::num(c.rel_tol)));
+                }
+                Json::obj(fields)
+            })),
+        };
+        Json::obj(vec![("source", Json::str(self.source.clone())), ("checks", checks)])
+    }
+}
+
+/// Resolve a dotted path with `[i]` indexing (`dense[0].loss_bits`)
+/// against a JSON tree.
+fn resolve<'a>(root: &'a Json, path: &str) -> Option<&'a Json> {
+    let mut cur = root;
+    for seg in path.split('.') {
+        let key_end = seg.find('[').unwrap_or(seg.len());
+        let key = &seg[..key_end];
+        if !key.is_empty() {
+            cur = cur.get(key)?;
+        }
+        let mut rest = &seg[key_end..];
+        while let Some(stripped) = rest.strip_prefix('[') {
+            let close = stripped.find(']')?;
+            let idx: usize = stripped[..close].parse().ok()?;
+            cur = cur.as_arr()?.get(idx)?;
+            rest = &stripped[close + 1..];
+        }
+    }
+    Some(cur)
+}
+
+/// One check against one record: `Ok(())` or a human-readable failure.
+fn evaluate(check: &Check, record: &Json) -> Result<(), String> {
+    let Some(got) = resolve(record, &check.path) else {
+        return Err(format!("{}: path missing from record", check.path));
+    };
+    if check.exact {
+        if got == &check.value {
+            return Ok(());
+        }
+        return Err(format!(
+            "{}: expected exactly {}, got {}",
+            check.path,
+            check.value.to_string(),
+            got.to_string()
+        ));
+    }
+    let (Some(want), Some(got_n)) = (check.value.as_f64(), got.as_f64()) else {
+        return Err(format!(
+            "{}: expected a number baseline/value pair, got {} vs {}",
+            check.path,
+            check.value.to_string(),
+            got.to_string()
+        ));
+    };
+    let tol = check.rel_tol * want.abs().max(1e-12);
+    if (got_n - want).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!(
+            "{}: {got_n} outside {want} ± {:.0}% (drift {:+.1}%)",
+            check.path,
+            check.rel_tol * 100.0,
+            100.0 * (got_n - want) / want.abs().max(1e-12),
+        ))
+    }
+}
+
+/// Walk a record and pin a baseline for every whitelisted leaf.
+fn pin_checks(record: &Json) -> Vec<Check> {
+    let mut out = Vec::new();
+    walk(record, String::new(), &mut out);
+    out
+}
+
+fn walk(node: &Json, path: String, out: &mut Vec<Check>) {
+    match node {
+        Json::Obj(map) => {
+            for (k, v) in map {
+                let child = if path.is_empty() { k.clone() } else { format!("{path}.{k}") };
+                match v {
+                    Json::Num(_) if NUMERIC_KEYS.contains(&k.as_str()) => out.push(Check {
+                        path: child,
+                        value: v.clone(),
+                        rel_tol: DEFAULT_REL_TOL,
+                        exact: false,
+                    }),
+                    Json::Str(_) if EXACT_KEYS.contains(&k.as_str()) => out.push(Check {
+                        path: child,
+                        value: v.clone(),
+                        rel_tol: 0.0,
+                        exact: true,
+                    }),
+                    _ => walk(v, child, out),
+                }
+            }
+        }
+        Json::Arr(items) => {
+            for (i, v) in items.iter().enumerate() {
+                walk(v, format!("{path}[{i}]"), out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// Gate one baseline against the results directory. Returns the failure
+/// messages (empty = pass).
+fn gate_one(baseline: &Baseline, results_dir: &Path) -> Vec<String> {
+    let record_path = results_dir.join(&baseline.source);
+    let text = match std::fs::read_to_string(&record_path) {
+        Ok(t) => t,
+        Err(e) => return vec![format!("{}: missing bench record ({e})", baseline.source)],
+    };
+    let record = match Json::parse(&text) {
+        Ok(r) => r,
+        Err(e) => return vec![format!("{}: unparseable bench record ({e})", baseline.source)],
+    };
+    match &baseline.checks {
+        None => {
+            let pins = pin_checks(&record);
+            println!(
+                "  {}: UNSEEDED baseline — record present with {} pinnable metrics \
+                 (run `cargo run --bin bench_gate -- --rebaseline` to pin)",
+                baseline.source,
+                pins.len()
+            );
+            Vec::new()
+        }
+        Some(checks) => checks
+            .iter()
+            .filter_map(|c| evaluate(c, &record).err())
+            .map(|e| format!("{}: {e}", baseline.source))
+            .collect(),
+    }
+}
+
+fn run_gate(results_dir: &Path, baselines_dir: &Path) -> anyhow::Result<bool> {
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(baselines_dir)
+        .map_err(|e| anyhow::anyhow!("reading baselines dir {baselines_dir:?}: {e}"))?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort();
+    anyhow::ensure!(!entries.is_empty(), "no baselines in {baselines_dir:?}");
+    let mut failures = Vec::new();
+    let mut gated = 0usize;
+    for path in &entries {
+        let baseline = Baseline::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)
+            .map_err(|e| anyhow::anyhow!("baseline {path:?}: {e}"))?;
+        if baseline.checks.is_some() {
+            gated += baseline.checks.as_ref().map(Vec::len).unwrap_or(0);
+        }
+        failures.extend(gate_one(&baseline, results_dir));
+    }
+    if failures.is_empty() {
+        println!("bench_gate: OK ({} baselines, {gated} pinned checks)", entries.len());
+        Ok(true)
+    } else {
+        eprintln!("bench_gate: {} regression(s):", failures.len());
+        for f in &failures {
+            eprintln!("  REGRESSION {f}");
+        }
+        Ok(false)
+    }
+}
+
+fn rebaseline(results_dir: &Path, baselines_dir: &Path) -> anyhow::Result<()> {
+    std::fs::create_dir_all(baselines_dir)?;
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(baselines_dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.extension().is_some_and(|x| x == "json"))
+        .collect();
+    entries.sort();
+    anyhow::ensure!(
+        !entries.is_empty(),
+        "no baselines to re-pin in {baselines_dir:?} (add a {{\"source\": ..., \"checks\": \
+         null}} stub first)"
+    );
+    for path in &entries {
+        let mut baseline =
+            Baseline::from_json(&Json::parse(&std::fs::read_to_string(path)?)?)?;
+        let record_path = results_dir.join(&baseline.source);
+        let record = Json::parse(&std::fs::read_to_string(&record_path).map_err(|e| {
+            anyhow::anyhow!("{record_path:?}: {e} (run the bench smokes first)")
+        })?)?;
+        let checks = pin_checks(&record);
+        anyhow::ensure!(!checks.is_empty(), "{}: nothing pinnable", baseline.source);
+        println!("pinned {} checks for {}", checks.len(), baseline.source);
+        baseline.checks = Some(checks);
+        std::fs::write(path, baseline.to_json().to_string())?;
+    }
+    Ok(())
+}
+
+/// Prove the gate catches regressions: pin a baseline from a synthetic
+/// record, perturb every gated metric past tolerance, and require every
+/// perturbed check to fail (and the unperturbed record to pass).
+fn self_test() -> anyhow::Result<()> {
+    let record = Json::obj(vec![
+        ("bench", Json::str("synthetic")),
+        (
+            "dense",
+            Json::arr([
+                Json::obj(vec![
+                    ("policy", Json::str("none")),
+                    ("prep_storage_s", Json::num(0.5)),
+                    ("requests", Json::num(40.0)),
+                    ("shard_imbalance", Json::num(1.25)),
+                    ("loss_bits", Json::str("0x3f000000")),
+                ]),
+                Json::obj(vec![
+                    ("policy", Json::str("hyperbatch")),
+                    ("prep_storage_s", Json::num(0.4)),
+                    ("loss_bits", Json::str("0x3f000000")),
+                ]),
+            ]),
+        ),
+    ]);
+    let checks = pin_checks(&record);
+    anyhow::ensure!(checks.len() == 6, "expected 6 pinned checks, got {}", checks.len());
+    for c in &checks {
+        anyhow::ensure!(
+            evaluate(c, &record).is_ok(),
+            "self-test: unperturbed record failed {:?}",
+            c.path
+        );
+    }
+    // a regressed copy: every numeric metric +60% (far past 15%), every
+    // loss bit pattern flipped
+    let regressed = perturb(&record);
+    let mut caught = 0;
+    for c in &checks {
+        match evaluate(c, &regressed) {
+            Err(_) => caught += 1,
+            Ok(()) => anyhow::bail!("self-test: regression at {:?} not caught", c.path),
+        }
+    }
+    println!("bench_gate --self-test: OK ({caught}/{} regressions caught)", checks.len());
+    Ok(())
+}
+
+fn perturb(node: &Json) -> Json {
+    match node {
+        Json::Obj(map) => Json::Obj(
+            map.iter()
+                .map(|(k, v)| {
+                    let v = match v {
+                        Json::Num(n) if NUMERIC_KEYS.contains(&k.as_str()) => {
+                            Json::Num(n * 1.6)
+                        }
+                        Json::Str(_) if EXACT_KEYS.contains(&k.as_str()) => {
+                            Json::str("0xdeadbeef")
+                        }
+                        other => perturb(other),
+                    };
+                    (k.clone(), v)
+                })
+                .collect(),
+        ),
+        Json::Arr(items) => Json::Arr(items.iter().map(perturb).collect()),
+        other => other.clone(),
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut results_dir = PathBuf::from("rust/target/bench_results");
+    let mut baselines_dir = PathBuf::from("bench_baselines");
+    let mut mode_rebaseline = false;
+    let mut mode_self_test = false;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--results" => {
+                results_dir = it.next().map(PathBuf::from).ok_or_else(|| {
+                    anyhow::anyhow!("--results needs a directory")
+                })?;
+            }
+            "--baselines" => {
+                baselines_dir = it.next().map(PathBuf::from).ok_or_else(|| {
+                    anyhow::anyhow!("--baselines needs a directory")
+                })?;
+            }
+            "--rebaseline" => mode_rebaseline = true,
+            "--self-test" => mode_self_test = true,
+            other => anyhow::bail!("unknown argument {other:?} (see the module docs)"),
+        }
+    }
+    // the benches write relative to the package root; accept either cwd
+    if !results_dir.exists() && results_dir.starts_with("rust") {
+        let from_pkg = PathBuf::from("target/bench_results");
+        if from_pkg.exists() {
+            results_dir = from_pkg;
+            if baselines_dir == Path::new("bench_baselines") {
+                baselines_dir = PathBuf::from("../bench_baselines");
+            }
+        }
+    }
+    if mode_self_test {
+        return self_test();
+    }
+    if mode_rebaseline {
+        return rebaseline(&results_dir, &baselines_dir);
+    }
+    if run_gate(&results_dir, &baselines_dir)? {
+        Ok(())
+    } else {
+        std::process::exit(1);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record() -> Json {
+        Json::obj(vec![
+            ("mode", Json::str("tiny")),
+            (
+                "dense",
+                Json::arr([Json::obj(vec![
+                    ("prep_storage_s", Json::num(2.0)),
+                    ("prep_s", Json::num(9.9)), // wall metric: never pinned
+                    ("loss_bits", Json::str("0x41414141")),
+                ])]),
+            ),
+            ("coalescing", Json::obj(vec![("requests", Json::num(100.0))])),
+        ])
+    }
+
+    #[test]
+    fn resolver_handles_dots_and_indices() {
+        let r = record();
+        assert_eq!(resolve(&r, "mode").unwrap().as_str(), Some("tiny"));
+        assert_eq!(resolve(&r, "dense[0].prep_storage_s").unwrap().as_f64(), Some(2.0));
+        assert_eq!(resolve(&r, "coalescing.requests").unwrap().as_f64(), Some(100.0));
+        assert!(resolve(&r, "dense[1].prep_storage_s").is_none());
+        assert!(resolve(&r, "nope").is_none());
+        assert!(resolve(&r, "dense[x]").is_none());
+    }
+
+    #[test]
+    fn pinning_whitelists_simulated_leaves_only() {
+        let checks = pin_checks(&record());
+        let paths: Vec<&str> = checks.iter().map(|c| c.path.as_str()).collect();
+        assert!(paths.contains(&"dense[0].prep_storage_s"));
+        assert!(paths.contains(&"dense[0].loss_bits"));
+        assert!(paths.contains(&"coalescing.requests"));
+        assert!(
+            !paths.iter().any(|p| p.contains("prep_s") && !p.contains("prep_storage_s")),
+            "wall metrics must never be pinned: {paths:?}"
+        );
+        let loss = checks.iter().find(|c| c.path.ends_with("loss_bits")).unwrap();
+        assert!(loss.exact);
+    }
+
+    #[test]
+    fn tolerance_math() {
+        let c = Check {
+            path: "dense[0].prep_storage_s".into(),
+            value: Json::num(2.0),
+            rel_tol: 0.15,
+            exact: false,
+        };
+        assert!(evaluate(&c, &record()).is_ok());
+        // within 15%: passes
+        let mut near = record();
+        if let Json::Obj(m) = &mut near {
+            if let Some(Json::Arr(d)) = m.get_mut("dense") {
+                if let Json::Obj(row) = &mut d[0] {
+                    row.insert("prep_storage_s".into(), Json::num(2.2));
+                }
+            }
+        }
+        assert!(evaluate(&c, &near).is_ok());
+        // past 15%: regression, message names the drift
+        if let Json::Obj(m) = &mut near {
+            if let Some(Json::Arr(d)) = m.get_mut("dense") {
+                if let Json::Obj(row) = &mut d[0] {
+                    row.insert("prep_storage_s".into(), Json::num(2.5));
+                }
+            }
+        }
+        let err = evaluate(&c, &near).unwrap_err();
+        assert!(err.contains("prep_storage_s"), "{err}");
+        // missing path is a regression, not a pass
+        let c2 = Check { path: "gone".into(), value: Json::num(1.0), rel_tol: 0.15, exact: false };
+        assert!(evaluate(&c2, &record()).is_err());
+    }
+
+    #[test]
+    fn exact_checks_catch_bit_flips() {
+        let c = Check {
+            path: "dense[0].loss_bits".into(),
+            value: Json::str("0x41414141"),
+            rel_tol: 0.0,
+            exact: true,
+        };
+        assert!(evaluate(&c, &record()).is_ok());
+        let flipped = perturb(&record());
+        assert!(evaluate(&c, &flipped).is_err());
+    }
+
+    #[test]
+    fn baseline_roundtrip_and_unseeded() {
+        let b = Baseline { source: "BENCH_x.json".into(), checks: Some(pin_checks(&record())) };
+        let back = Baseline::from_json(&b.to_json()).unwrap();
+        assert_eq!(back.source, b.source);
+        assert_eq!(back.checks.as_ref().unwrap().len(), b.checks.as_ref().unwrap().len());
+        for (a, c) in back.checks.unwrap().iter().zip(b.checks.unwrap().iter()) {
+            assert_eq!(a, c);
+        }
+        // unseeded form requires an EXPLICIT null
+        let un = Baseline::from_json(
+            &Json::parse(r#"{"source": "BENCH_x.json", "checks": null}"#).unwrap(),
+        )
+        .unwrap();
+        assert!(un.checks.is_none());
+        // a missing checks key is a loud error, never a silent unseed
+        let err = Baseline::from_json(&Json::parse(r#"{"source": "BENCH_x.json"}"#).unwrap());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn gate_end_to_end_on_disk() {
+        let tmp = agnes::util::TempDir::new().unwrap();
+        let results = tmp.path().join("results");
+        let baselines = tmp.path().join("baselines");
+        std::fs::create_dir_all(&results).unwrap();
+        std::fs::create_dir_all(&baselines).unwrap();
+        std::fs::write(results.join("BENCH_x.json"), record().to_string()).unwrap();
+        std::fs::write(
+            baselines.join("x.json"),
+            r#"{"source": "BENCH_x.json", "checks": null}"#,
+        )
+        .unwrap();
+        // unseeded: passes on structure
+        assert!(run_gate(&results, &baselines).unwrap());
+        // pin, still passes
+        rebaseline(&results, &baselines).unwrap();
+        assert!(run_gate(&results, &baselines).unwrap());
+        // regress the record: gate must fail
+        std::fs::write(results.join("BENCH_x.json"), perturb(&record()).to_string()).unwrap();
+        assert!(!run_gate(&results, &baselines).unwrap());
+        // missing record: gate must fail too
+        std::fs::remove_file(results.join("BENCH_x.json")).unwrap();
+        assert!(!run_gate(&results, &baselines).unwrap());
+    }
+
+    #[test]
+    fn self_test_passes() {
+        self_test().unwrap();
+    }
+}

@@ -6,6 +6,7 @@
 //! as the datasets, see DESIGN.md §Substitutions).
 
 use crate::graph::layout::Layout;
+use crate::graph::reorder::LayoutPolicy;
 use crate::storage::device::SsdSpec;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -208,6 +209,22 @@ impl IoConfig {
     }
 }
 
+/// Storage layout optimizer knobs (`[layout]` — see
+/// [`crate::graph::reorder`]). Distinct from `dataset.layout`, which
+/// relabels *nodes*; this permutes *blocks* on storage behind a persisted
+/// [`BlockRemap`](crate::graph::layout::BlockRemap).
+#[derive(Debug, Clone, Default)]
+pub struct LayoutConfig {
+    /// Block placement policy: `none` (identity — bit-for-bit the
+    /// historical layout), `degree` (heat-ordered packing, no trace
+    /// needed), or `hyperbatch` (co-access packing + stripe co-placement
+    /// from a sampled epoch-0 access trace).
+    pub policy: LayoutPolicy,
+    /// Cap on the hyperbatches sampled into the access trace
+    /// (`hyperbatch` policy only; 0 = trace the whole first epoch).
+    pub trace_hyperbatches: usize,
+}
+
 /// Memory budgets (paper §4.1 settings, scaled).
 #[derive(Debug, Clone)]
 pub struct MemoryConfig {
@@ -299,6 +316,7 @@ pub struct AgnesConfig {
     pub dataset: DatasetConfig,
     pub device: DeviceConfig,
     pub io: IoConfig,
+    pub layout: LayoutConfig,
     pub memory: MemoryConfig,
     pub train: TrainConfig,
 }
@@ -337,6 +355,7 @@ impl AgnesConfig {
         check_gap_blocks(self.io.gap_blocks).map_err(anyhow::Error::msg)?;
         check_stripe_blocks(self.io.stripe_blocks, self.io.block_size, self.io.max_request_bytes)
             .map_err(anyhow::Error::msg)?;
+        check_trace_hyperbatches(self.layout.trace_hyperbatches).map_err(anyhow::Error::msg)?;
         anyhow::ensure!(self.train.minibatch_size >= 1, "train.minibatch_size must be >= 1");
         anyhow::ensure!(self.train.hyperbatch_size >= 1, "train.hyperbatch_size must be >= 1");
         anyhow::ensure!(!self.train.fanouts.is_empty(), "train.fanouts is missing (e.g. [10, 10, 10])");
@@ -405,6 +424,8 @@ impl AgnesConfig {
             ("io", "max_request_bytes") => self.io.max_request_bytes = p(value)?,
             ("io", "gap_blocks") => self.io.gap_blocks = value.parse()?,
             ("io", "stripe_blocks") => self.io.stripe_blocks = p(value)?,
+            ("layout", "policy") => self.layout.policy = value.parse()?,
+            ("layout", "trace_hyperbatches") => self.layout.trace_hyperbatches = p(value)?,
             ("memory", "graph_buffer_bytes") => self.memory.graph_buffer_bytes = p(value)?,
             ("memory", "feature_buffer_bytes") => self.memory.feature_buffer_bytes = p(value)?,
             ("memory", "feature_cache_entries") => self.memory.feature_cache_entries = p(value)?,
@@ -456,6 +477,9 @@ impl AgnesConfig {
         w(&format!("max_request_bytes = {}", self.io.max_request_bytes));
         w(&format!("gap_blocks = {}", self.io.gap_blocks));
         w(&format!("stripe_blocks = {}", self.io.stripe_blocks));
+        w("\n[layout]");
+        w(&format!("policy = \"{}\"", self.layout.policy));
+        w(&format!("trace_hyperbatches = {}", self.layout.trace_hyperbatches));
         w("\n[memory]");
         w(&format!("graph_buffer_bytes = {}", self.memory.graph_buffer_bytes));
         w(&format!("feature_buffer_bytes = {}", self.memory.feature_buffer_bytes));
@@ -480,7 +504,9 @@ impl AgnesConfig {
     /// runs the integration suite once with depth 4 so the staged
     /// executor is exercised beyond the defaults); `AGNES_NUM_SSDS`,
     /// `AGNES_STRIPE_BLOCKS` and `AGNES_GAP_BLOCKS` re-shard the storage
-    /// backend the same way. Applied by [`Self::tiny`] (tests) and
+    /// backend the same way; `AGNES_LAYOUT_POLICY` and
+    /// `AGNES_TRACE_HYPERBATCHES` re-run the storage layout optimizer.
+    /// Applied by [`Self::tiny`] (tests) and
     /// [`crate::util::bench::bench_config`] (fig benches); the CLI takes
     /// the equivalent flags instead.
     pub fn apply_env_overrides(&mut self) {
@@ -531,6 +557,20 @@ impl AgnesConfig {
             match v.trim().parse::<GapBlocks>() {
                 Ok(g) if check_gap_blocks(g).is_ok() => self.io.gap_blocks = g,
                 _ => eprintln!("ignoring invalid AGNES_GAP_BLOCKS={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_LAYOUT_POLICY") {
+            match v.trim().parse::<LayoutPolicy>() {
+                Ok(p) => self.layout.policy = p,
+                _ => eprintln!("ignoring invalid AGNES_LAYOUT_POLICY={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_TRACE_HYPERBATCHES") {
+            match v.trim().parse::<usize>() {
+                Ok(t) if check_trace_hyperbatches(t).is_ok() => {
+                    self.layout.trace_hyperbatches = t
+                }
+                _ => eprintln!("ignoring invalid AGNES_TRACE_HYPERBATCHES={v:?}"),
             }
         }
     }
@@ -638,6 +678,17 @@ fn check_stripe_blocks(
     Ok(())
 }
 
+/// Range check for `layout.trace_hyperbatches` (shared with env
+/// overrides, see [`check_gap_blocks`]): the trace is epoch-0 work done
+/// at build time, so an absurd cap is almost certainly a typo.
+fn check_trace_hyperbatches(t: usize) -> Result<(), String> {
+    if t <= 65536 {
+        Ok(())
+    } else {
+        Err(format!("layout.trace_hyperbatches = {t} must be <= 65536 (0 = whole first epoch)"))
+    }
+}
+
 fn layout_name(l: Layout) -> &'static str {
     match l {
         Layout::Natural => "natural",
@@ -692,6 +743,8 @@ mod tests {
         assert_eq!(c.io.gap_blocks, GapBlocks::Auto);
         assert_eq!(c.io.stripe_blocks, 0);
         assert_eq!(c.io.effective_stripe_blocks(), 1, "1 MiB request in 1 MiB blocks");
+        assert_eq!(c.layout.policy, LayoutPolicy::None);
+        assert_eq!(c.layout.trace_hyperbatches, 0);
         assert_eq!(c.train.fanouts, vec![10, 10, 10]);
     }
 
@@ -798,6 +851,51 @@ mod tests {
         // "auto" is a valid override spelling for the gap knob
         c.apply_overrides_from(vars(&[("AGNES_GAP_BLOCKS", "auto")]));
         assert_eq!(c.io.gap_blocks, GapBlocks::Auto);
+    }
+
+    #[test]
+    fn layout_section_parses_and_roundtrips() {
+        let c = AgnesConfig::from_toml_str(
+            "[layout]\npolicy = \"hyperbatch\"\ntrace_hyperbatches = 8\n",
+        )
+        .unwrap();
+        assert_eq!(c.layout.policy, LayoutPolicy::Hyperbatch);
+        assert_eq!(c.layout.trace_hyperbatches, 8);
+        let back = AgnesConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.layout.policy, LayoutPolicy::Hyperbatch);
+        assert_eq!(back.layout.trace_hyperbatches, 8);
+        // defaults: policy none (bit-for-bit historical layout)
+        assert_eq!(AgnesConfig::default().layout.policy, LayoutPolicy::None);
+        assert_eq!(AgnesConfig::default().layout.trace_hyperbatches, 0);
+        // bad values fail loudly
+        assert!(AgnesConfig::from_toml_str("[layout]\npolicy = \"fancy\"\n").is_err());
+        let mut c = AgnesConfig::default();
+        c.layout.trace_hyperbatches = 1 << 20;
+        assert!(c.validate().unwrap_err().to_string().contains("layout.trace_hyperbatches"));
+    }
+
+    #[test]
+    fn layout_env_overrides_agree_with_validate() {
+        let vars = |pairs: &[(&str, &str)]| {
+            let m: std::collections::HashMap<String, String> =
+                pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+            move |name: &str| m.get(name).cloned()
+        };
+        let mut c = AgnesConfig::default();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_LAYOUT_POLICY", "degree"),
+            ("AGNES_TRACE_HYPERBATCHES", "16"),
+        ]));
+        assert_eq!(c.layout.policy, LayoutPolicy::Degree);
+        assert_eq!(c.layout.trace_hyperbatches, 16);
+        c.validate().unwrap();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_LAYOUT_POLICY", "bogus"),
+            ("AGNES_TRACE_HYPERBATCHES", "9999999"),
+        ]));
+        assert_eq!(c.layout.policy, LayoutPolicy::Degree, "invalid policy override ignored");
+        assert_eq!(c.layout.trace_hyperbatches, 16, "out-of-range cap override ignored");
+        c.validate().unwrap();
     }
 
     #[test]

@@ -1,11 +1,21 @@
 //! Dataset preparation: generate (or reuse) the on-disk stores for a
 //! configured dataset — synthetic power-law topology, the configured
-//! locality layout, graph + feature block stores, and a spec sidecar.
+//! locality layout, graph + feature block stores, the storage layout
+//! optimizer stage (`layout.policy`), and the spec / layout sidecars.
 
 use crate::config::AgnesConfig;
 use crate::graph::datasets::DatasetSpec;
+use crate::graph::layout::{BlockRemap, StripeMap};
+use crate::graph::reorder::{
+    degree_trace, optimize_block_layout, sample_access_trace, LayoutPolicy,
+};
+use crate::graph::CsrGraph;
+use crate::op::{make_hyperbatches, make_minibatches, select_targets};
 use crate::storage::block::FeatureBlockLayout;
-use crate::storage::builder::{build_feature_store, build_graph_store, StorePaths};
+use crate::storage::builder::{
+    apply_block_remap, build_feature_store, build_graph_store, GraphStoreMeta, LayoutMeta,
+    StorePaths,
+};
 use crate::Result;
 use std::path::Path;
 
@@ -27,9 +37,14 @@ fn spec_for(config: &AgnesConfig) -> Result<DatasetSpec> {
         .ok_or_else(|| anyhow::anyhow!("unknown dataset preset {:?}", d.name))
 }
 
-/// Key that invalidates a built dataset when any build-relevant knob moves.
+/// Key that invalidates a built dataset when any build-relevant knob
+/// moves. `layout.policy = "none"` keys are identical to the
+/// pre-optimizer ones (existing built datasets stay valid); other
+/// policies append the policy plus everything the computed remap depends
+/// on — stripe geometry, and (for the trace-driven policy) a hash of the
+/// workload knobs the epoch-0 trace is sampled from.
 fn build_key(config: &AgnesConfig, spec: &DatasetSpec) -> String {
-    format!(
+    let mut key = format!(
         "{}-s{}-f{}-{:?}-bs{}-seed{}",
         spec.name,
         config.dataset.scale,
@@ -37,7 +52,102 @@ fn build_key(config: &AgnesConfig, spec: &DatasetSpec) -> String {
         config.dataset.layout,
         config.io.block_size,
         spec.seed
-    )
+    );
+    if config.layout.policy != LayoutPolicy::None {
+        key.push_str(&format!(
+            "-L{}-ssd{}x{}",
+            config.layout.policy,
+            config.device.num_ssds,
+            config.io.effective_stripe_blocks(),
+        ));
+        // only the trace-driven policy depends on the workload knobs the
+        // epoch-0 trace is sampled from; keying them into a degree build
+        // would rebuild byte-identical stores on unrelated train changes
+        if config.layout.policy == LayoutPolicy::Hyperbatch {
+            let t = &config.train;
+            let trace_sig = fnv1a(&format!(
+                "{}-{}-{:?}-{}-{}-{}",
+                t.minibatch_size,
+                t.hyperbatch_size,
+                t.fanouts,
+                t.target_fraction,
+                t.seed,
+                config.layout.trace_hyperbatches,
+            ));
+            key.push_str(&format!("-t{trace_sig:08x}"));
+        }
+    }
+    key
+}
+
+/// FNV-1a over a string — a stable, dependency-free signature for the
+/// build key (not cryptographic; collisions only risk a spurious reuse
+/// of an equivalent build).
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// The storage layout optimizer stage: compute the block remaps for the
+/// configured policy, rewrite both block files in place, and persist the
+/// `layout.json` sidecar the stores translate through. The `none` policy
+/// writes no sidecar and touches no file — bit-for-bit the historical
+/// build.
+fn optimize_storage_layout(
+    config: &AgnesConfig,
+    spec: &DatasetSpec,
+    g: &CsrGraph,
+    graph_meta: &GraphStoreMeta,
+    feature_layout: FeatureBlockLayout,
+    paths: &StorePaths,
+) -> Result<()> {
+    let policy = config.layout.policy;
+    if policy == LayoutPolicy::None {
+        return Ok(());
+    }
+    let map = StripeMap::new(config.io.effective_stripe_blocks(), config.device.num_ssds);
+    let (graph_trace, feature_trace) = match policy {
+        LayoutPolicy::None => unreachable!(),
+        LayoutPolicy::Degree => degree_trace(g, &graph_meta.index, &feature_layout),
+        LayoutPolicy::Hyperbatch => {
+            // sample epoch 0's hyperbatches exactly as the epoch driver
+            // forms them (select_targets with the epoch-0 seed)
+            let t = &config.train;
+            let targets = select_targets(spec.num_nodes, t.target_fraction, t.seed);
+            let hyperbatches =
+                make_hyperbatches(make_minibatches(&targets, t.minibatch_size), t.hyperbatch_size);
+            sample_access_trace(
+                g,
+                &graph_meta.index,
+                &feature_layout,
+                &hyperbatches,
+                &t.fanouts,
+                config.layout.trace_hyperbatches,
+            )
+        }
+    };
+    let graph_remap =
+        optimize_block_layout(policy, &graph_trace, graph_meta.num_blocks, map)?;
+    // oversized vectors span blocks byte-contiguously: their store keeps
+    // the identity layout (the trace is empty for that geometry anyway)
+    let feature_remap = if feature_layout.feature_bytes() > feature_layout.block_size {
+        BlockRemap::Identity
+    } else {
+        optimize_block_layout(
+            policy,
+            &feature_trace,
+            feature_layout.num_blocks(spec.num_nodes),
+            map,
+        )?
+    };
+    apply_block_remap(&paths.graph_blocks, graph_meta.block_size, &graph_remap)?;
+    apply_block_remap(&paths.feature_blocks, feature_layout.block_size, &feature_remap)?;
+    LayoutMeta { policy, graph: graph_remap, feature: feature_remap }.write(paths)?;
+    Ok(())
 }
 
 /// Generate and persist the dataset stores if absent (idempotent —
@@ -53,9 +163,10 @@ pub fn prepare_dataset(config: &AgnesConfig) -> Result<PreparedDataset> {
     let g = spec.generate();
     let perm = config.dataset.layout.permutation(&g, spec.seed);
     let g = g.relabel(&perm);
-    build_graph_store(&g, config.io.block_size, &paths)?;
+    let graph_meta = build_graph_store(&g, config.io.block_size, &paths)?;
     let layout = FeatureBlockLayout { block_size: config.io.block_size, feature_dim: spec.feature_dim };
     build_feature_store(g.num_nodes(), layout, &paths, spec.seed)?;
+    optimize_storage_layout(config, &spec, &g, &graph_meta, layout, &paths)?;
     std::fs::write(dir.join("spec.json"), spec.to_json().to_string())?;
     std::fs::write(stamp, b"ok")?;
     Ok(PreparedDataset { spec, paths })
@@ -92,6 +203,78 @@ mod tests {
         let a = prepare_dataset(&c1).unwrap();
         let b = prepare_dataset(&c2).unwrap();
         assert_ne!(a.paths.graph_blocks, b.paths.graph_blocks);
+    }
+
+    #[test]
+    fn layout_policies_build_distinct_dirs_with_sidecars() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut none = cfg(tmp.path());
+        none.layout.policy = LayoutPolicy::None;
+        let mut deg = cfg(tmp.path());
+        deg.layout.policy = LayoutPolicy::Degree;
+        let mut hb = cfg(tmp.path());
+        hb.layout.policy = LayoutPolicy::Hyperbatch;
+        let a = prepare_dataset(&none).unwrap();
+        let b = prepare_dataset(&deg).unwrap();
+        let c = prepare_dataset(&hb).unwrap();
+        assert_ne!(a.paths.dir, b.paths.dir);
+        assert_ne!(b.paths.dir, c.paths.dir);
+        // none: no sidecar (bit-for-bit the historical build); others: a
+        // sidecar recording the policy
+        assert!(!a.paths.layout_meta.exists());
+        for (p, policy) in [(&b.paths, LayoutPolicy::Degree), (&c.paths, LayoutPolicy::Hyperbatch)]
+        {
+            let m = LayoutMeta::load(p).unwrap();
+            assert_eq!(m.policy, policy);
+        }
+        // the block files hold the same bytes as a multiset of blocks
+        let mut x = std::fs::read(&a.paths.feature_blocks).unwrap();
+        let mut y = std::fs::read(&c.paths.feature_blocks).unwrap();
+        assert_eq!(x.len(), y.len());
+        let bs = none.io.block_size;
+        let sort_blocks = |v: &mut Vec<u8>| {
+            let mut blocks: Vec<&[u8]> = v.chunks(bs).collect();
+            blocks.sort_unstable();
+            blocks.concat()
+        };
+        assert_eq!(sort_blocks(&mut x), sort_blocks(&mut y), "remap permutes, never rewrites");
+        // rebuilds are idempotent for optimized layouts too
+        let c2 = prepare_dataset(&hb).unwrap();
+        assert_eq!(c.paths.dir, c2.paths.dir);
+    }
+
+    #[test]
+    fn shard_geometry_is_part_of_the_optimized_build_key() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut one = cfg(tmp.path());
+        one.layout.policy = LayoutPolicy::Hyperbatch;
+        let mut four = one.clone();
+        four.device.num_ssds = 4;
+        let a = prepare_dataset(&one).unwrap();
+        let b = prepare_dataset(&four).unwrap();
+        assert_ne!(a.paths.dir, b.paths.dir, "the remap depends on the stripe map");
+        // but the none policy ignores shard geometry (same historical key)
+        let n1 = cfg(tmp.path());
+        let mut n4 = cfg(tmp.path());
+        n4.device.num_ssds = 4;
+        assert_eq!(
+            prepare_dataset(&n1).unwrap().paths.dir,
+            prepare_dataset(&n4).unwrap().paths.dir
+        );
+        // the degree policy ignores the trace knobs (its remap reads only
+        // the graph): changing minibatch_size must reuse the same build
+        let mut d1 = cfg(tmp.path());
+        d1.layout.policy = LayoutPolicy::Degree;
+        let mut d2 = d1.clone();
+        d2.train.minibatch_size *= 2;
+        assert_eq!(
+            prepare_dataset(&d1).unwrap().paths.dir,
+            prepare_dataset(&d2).unwrap().paths.dir
+        );
+        // while the hyperbatch policy re-keys on them
+        let mut h2 = one.clone();
+        h2.train.minibatch_size *= 2;
+        assert_ne!(a.paths.dir, prepare_dataset(&h2).unwrap().paths.dir);
     }
 
     #[test]

@@ -338,6 +338,7 @@ impl AgnesRunner {
         metrics.io_run_blocks =
             self.graph_store.run_blocks_read() + self.feature_store.run_blocks_read();
         metrics.effective_gap_blocks = self.engine.planner.gap_blocks;
+        metrics.layout_policy = self.config.layout.policy.name().to_string();
         let per_shard = self.ssd.per_shard_stats();
         metrics.shard_busy_ns = per_shard.iter().map(|s| s.busy_ns).collect();
         metrics.shard_requests = per_shard.iter().map(|s| s.num_requests).collect();
@@ -906,6 +907,47 @@ mod tests {
             res.metrics.device.total_bytes >= res0.metrics.device.total_bytes,
             "bridging can only add padding bytes"
         );
+    }
+
+    /// The layout-optimizer acceptance shape: every policy trains
+    /// bit-for-bit identically — the remap is a pure translation layer,
+    /// so only the I/O pattern (requests, run lengths, shard balance) may
+    /// move, never the data.
+    #[test]
+    fn layout_policies_train_bit_identically() {
+        use crate::graph::reorder::LayoutPolicy;
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+        // small blocks + tight buffers so the sweeps miss and the block
+        // order actually shows in the request stream; a shuffled node
+        // layout scrambles the block heat so the optimizers genuinely
+        // permute (with the degree node layout the heat order is already
+        // the identity)
+        c.dataset.layout = crate::graph::layout::Layout::Shuffle;
+        c.io.block_size = 4 << 10;
+        c.memory.graph_buffer_bytes = 64 << 10;
+        c.memory.feature_buffer_bytes = 64 << 10;
+        c.device.num_ssds = 2;
+        let run = |policy: LayoutPolicy| {
+            let mut cfg = c.clone();
+            cfg.layout.policy = policy;
+            let mut r = AgnesRunner::open(cfg).unwrap();
+            let res = r.run_epoch(0, &mut NullCompute).unwrap();
+            (res, r.graph_store.remap().is_identity(), r.feature_store.remap().is_identity())
+        };
+        let (none, g_id, f_id) = run(LayoutPolicy::None);
+        assert!(g_id && f_id, "none policy must keep the identity remap");
+        assert_eq!(none.metrics.layout_policy, "none");
+        for policy in [LayoutPolicy::Degree, LayoutPolicy::Hyperbatch] {
+            let (r, g_id, f_id) = run(policy);
+            assert!(!(g_id && f_id), "{policy:?} must remap at least one store");
+            assert_eq!(r.mean_loss.to_bits(), none.mean_loss.to_bits(), "{policy:?} loss");
+            assert_eq!(r.accuracy.to_bits(), none.accuracy.to_bits(), "{policy:?} accuracy");
+            assert_eq!(r.metrics.sampled_nodes, none.metrics.sampled_nodes);
+            assert_eq!(r.metrics.gathered_features, none.metrics.gathered_features);
+            assert_eq!(r.metrics.layout_policy, policy.name());
+        }
     }
 
     #[test]

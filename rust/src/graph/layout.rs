@@ -136,6 +136,146 @@ impl StripeMap {
     }
 }
 
+/// A persisted bijection between **logical** and **physical** block ids.
+///
+/// The stores, planner, and [`StripeMap`] historically all assumed
+/// `BlockId == file offset / block_size`. The storage layout optimizer
+/// ([`crate::graph::reorder`]) breaks that assumption: it permutes blocks
+/// on disk so co-accessed blocks sit contiguously and each hyperbatch's
+/// hot blocks rotate across stripe (= device) boundaries. `BlockRemap` is
+/// the translation layer that keeps the split coherent:
+///
+/// * **logical** ids are what the op layer, buffer pools, caches, and
+///   object index speak — they never change when the layout does;
+/// * **physical** ids are file positions — what `pread` offsets,
+///   [`RunRequest`](crate::storage::plan::RunRequest)s, and the
+///   [`StripeMap`] (shard ownership) are computed from.
+///
+/// The identity remap is the `layout.policy = "none"` contract: every
+/// translation is a no-op and the request stream is bit-for-bit the
+/// pre-optimizer one. Ids at or beyond the remapped range pass through
+/// unchanged (a phantom block past EOF stays a phantom block — the
+/// store's EOF check still catches it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum BlockRemap {
+    /// `physical(b) == b` for every block (the `none` policy, and the
+    /// layout of stores built before the optimizer existed).
+    Identity,
+    /// An explicit bijection over `0..to_physical.len()` blocks.
+    Perm {
+        /// `to_physical[logical] = physical`.
+        to_physical: Vec<u32>,
+        /// `to_logical[physical] = logical` (the inverse, precomputed —
+        /// run reads translate every delivered block back on the hot
+        /// path).
+        to_logical: Vec<u32>,
+    },
+}
+
+impl BlockRemap {
+    /// Build a remap from `to_physical[logical] = physical`, validating
+    /// that it is a bijection over `0..perm.len()`. A permutation that is
+    /// the identity collapses to [`BlockRemap::Identity`], so "optimizer
+    /// produced no change" and "no optimizer ran" are indistinguishable
+    /// everywhere downstream.
+    pub fn from_to_physical(perm: Vec<u32>) -> anyhow::Result<BlockRemap> {
+        let n = perm.len();
+        let mut to_logical = vec![u32::MAX; n];
+        for (logical, &physical) in perm.iter().enumerate() {
+            anyhow::ensure!(
+                (physical as usize) < n,
+                "block remap: physical id {physical} out of range 0..{n}"
+            );
+            anyhow::ensure!(
+                to_logical[physical as usize] == u32::MAX,
+                "block remap: physical id {physical} assigned twice"
+            );
+            to_logical[physical as usize] = logical as u32;
+        }
+        if perm.iter().enumerate().all(|(i, &p)| p == i as u32) {
+            return Ok(BlockRemap::Identity);
+        }
+        Ok(BlockRemap::Perm { to_physical: perm, to_logical })
+    }
+
+    /// The identity remap.
+    pub fn identity() -> BlockRemap {
+        BlockRemap::Identity
+    }
+
+    #[inline]
+    pub fn is_identity(&self) -> bool {
+        matches!(self, BlockRemap::Identity)
+    }
+
+    /// Blocks covered by an explicit permutation (0 for the identity,
+    /// which covers every id).
+    pub fn len(&self) -> usize {
+        match self {
+            BlockRemap::Identity => 0,
+            BlockRemap::Perm { to_physical, .. } => to_physical.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Physical (on-disk) block id of logical block `b`.
+    #[inline]
+    pub fn physical(&self, b: crate::storage::BlockId) -> crate::storage::BlockId {
+        match self {
+            BlockRemap::Identity => b,
+            BlockRemap::Perm { to_physical, .. } => match to_physical.get(b.0 as usize) {
+                Some(&p) => crate::storage::BlockId(p),
+                None => b, // out of range: pass through (phantom reads)
+            },
+        }
+    }
+
+    /// Logical block id stored at physical position `p`.
+    #[inline]
+    pub fn logical(&self, p: crate::storage::BlockId) -> crate::storage::BlockId {
+        match self {
+            BlockRemap::Identity => p,
+            BlockRemap::Perm { to_logical, .. } => match to_logical.get(p.0 as usize) {
+                Some(&l) => crate::storage::BlockId(l),
+                None => p,
+            },
+        }
+    }
+
+    /// Serialize as a flat `to_physical` JSON array (empty = identity).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        match self {
+            BlockRemap::Identity => Json::arr([]),
+            BlockRemap::Perm { to_physical, .. } => {
+                Json::arr(to_physical.iter().map(|&p| Json::num(p as f64)))
+            }
+        }
+    }
+
+    /// Parse the array form written by [`Self::to_json`], re-validating
+    /// the bijection (a hand-edited `layout.json` must not silently alias
+    /// two logical blocks onto one physical position).
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<BlockRemap> {
+        let a = j.as_arr().ok_or_else(|| anyhow::anyhow!("block remap must be an array"))?;
+        if a.is_empty() {
+            return Ok(BlockRemap::Identity);
+        }
+        let perm: Vec<u32> = a
+            .iter()
+            .map(|v| {
+                v.as_u64()
+                    .map(|n| n as u32)
+                    .ok_or_else(|| anyhow::anyhow!("block remap entries must be numbers"))
+            })
+            .collect::<anyhow::Result<_>>()?;
+        BlockRemap::from_to_physical(perm)
+    }
+}
+
 /// Which layout to apply when building the on-disk stores.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Layout {
@@ -259,6 +399,49 @@ mod tests {
         // zero inputs are clamped to the valid minimum
         let z = StripeMap::new(0, 0);
         assert_eq!((z.stripe_blocks, z.num_shards), (1, 1));
+    }
+
+    #[test]
+    fn block_remap_roundtrip_and_translation() {
+        use crate::storage::BlockId;
+        // to_physical: logical 0->2, 1->0, 2->1
+        let r = BlockRemap::from_to_physical(vec![2, 0, 1]).unwrap();
+        assert!(!r.is_identity());
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.physical(BlockId(0)), BlockId(2));
+        assert_eq!(r.physical(BlockId(1)), BlockId(0));
+        assert_eq!(r.logical(BlockId(2)), BlockId(0));
+        assert_eq!(r.logical(BlockId(0)), BlockId(1));
+        // out-of-range ids pass through (phantom reads stay phantom)
+        assert_eq!(r.physical(BlockId(9)), BlockId(9));
+        assert_eq!(r.logical(BlockId(9)), BlockId(9));
+        // inverse really inverts
+        for b in 0..3u32 {
+            assert_eq!(r.logical(r.physical(BlockId(b))), BlockId(b));
+        }
+        // JSON roundtrip
+        let back = BlockRemap::from_json(&r.to_json()).unwrap();
+        assert_eq!(back, r);
+    }
+
+    #[test]
+    fn block_remap_identity_collapses() {
+        use crate::storage::BlockId;
+        let r = BlockRemap::from_to_physical(vec![0, 1, 2, 3]).unwrap();
+        assert!(r.is_identity());
+        assert_eq!(r.physical(BlockId(7)), BlockId(7));
+        // empty JSON array parses back to the identity
+        assert_eq!(BlockRemap::from_json(&r.to_json()).unwrap(), BlockRemap::Identity);
+    }
+
+    #[test]
+    fn block_remap_rejects_non_bijections() {
+        assert!(BlockRemap::from_to_physical(vec![0, 0]).is_err(), "aliased physical id");
+        assert!(BlockRemap::from_to_physical(vec![0, 5]).is_err(), "out-of-range physical id");
+        // hand-edited layout.json with a duplicate must be rejected too
+        use crate::util::json::Json;
+        let bad = Json::arr([Json::num(1.0), Json::num(1.0)]);
+        assert!(BlockRemap::from_json(&bad).is_err());
     }
 
     #[test]

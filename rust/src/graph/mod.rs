@@ -8,6 +8,7 @@ pub mod generate;
 pub mod io;
 pub mod layout;
 pub mod partition;
+pub mod reorder;
 
 pub use datasets::DatasetSpec;
 

@@ -1,0 +1,504 @@
+//! Storage layout optimizer: compute a **block permutation** for the
+//! on-disk stores from the training workload's access structure.
+//!
+//! The node-level layouts of [`super::layout`] (paper §3.2, RealGraph)
+//! decide *which block a node lands in*; this module decides *where each
+//! block lands on storage*. Two effects are targeted (Ginex shows
+//! access-frequency-aware placement is the difference-maker for SSD-based
+//! GNN training; GIDS attributes its win to large, conflict-free storage
+//! accesses):
+//!
+//! 1. **Co-access packing** — blocks touched by the same hyperbatch are
+//!    placed at consecutive physical positions, so the sweep's miss lists
+//!    translate into long contiguous runs and the
+//!    [`IoPlanner`](crate::storage::plan::IoPlanner) coalesces them into
+//!    few large sequential requests (`mean_blocks_per_run` rises).
+//! 2. **Stripe co-placement** — within each co-access segment, the
+//!    hottest blocks are dealt round-robin across the positions owned by
+//!    distinct [`StripeMap`] shards, so every hyperbatch's I/O lands on
+//!    *all* devices of a sharded [`SsdArray`](crate::storage::device::SsdArray)
+//!    instead of hammering whichever shard its hot stripe happens to live
+//!    on (`shard_imbalance()` falls). Because each shard's positions fill
+//!    in ascending order, the dealt blocks still occupy contiguous stripe
+//!    prefixes — balance does not cost run length.
+//!
+//! Three policies (`layout.policy`):
+//!
+//! * [`LayoutPolicy::None`] — identity; bit-for-bit the historical
+//!   layout (property-tested).
+//! * [`LayoutPolicy::Degree`] — the cheap default needing no trace: block
+//!   heat is the degree mass of the nodes it holds (hot hub blocks are
+//!   the ones every minibatch touches), one global heat-ordered segment.
+//! * [`LayoutPolicy::Hyperbatch`] — heat comes from a **sampled access
+//!   trace** of epoch 0's hyperbatches (deterministic fanout-capped
+//!   frontier expansion over the in-memory CSR — a structural stand-in
+//!   for the sampler, not an exact replay), one segment per hyperbatch so
+//!   co-accessed blocks pack together.
+
+use super::layout::{BlockRemap, StripeMap};
+use super::CsrGraph;
+use crate::storage::block::FeatureBlockLayout;
+use crate::storage::object_index::ObjectIndexTable;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+/// Which block-layout policy the store builder applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum LayoutPolicy {
+    /// Keep blocks at their logical positions (the historical layout).
+    #[default]
+    None,
+    /// Degree-mass heat ordering (no trace needed).
+    Degree,
+    /// Hyperbatch co-access packing from a sampled epoch-0 trace.
+    Hyperbatch,
+}
+
+impl LayoutPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LayoutPolicy::None => "none",
+            LayoutPolicy::Degree => "degree",
+            LayoutPolicy::Hyperbatch => "hyperbatch",
+        }
+    }
+
+    pub fn all() -> [LayoutPolicy; 3] {
+        [LayoutPolicy::None, LayoutPolicy::Degree, LayoutPolicy::Hyperbatch]
+    }
+}
+
+impl std::str::FromStr for LayoutPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Ok(LayoutPolicy::None),
+            "degree" => Ok(LayoutPolicy::Degree),
+            "hyperbatch" => Ok(LayoutPolicy::Hyperbatch),
+            other => Err(format!(
+                "unknown layout policy {other:?} (expected none | degree | hyperbatch)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for LayoutPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// A sampled access trace: per hyperbatch, how often each block was
+/// touched. Entries are `(block, count)` sorted by block id; blocks never
+/// touched by a hyperbatch are absent.
+#[derive(Debug, Clone, Default)]
+pub struct AccessTrace {
+    pub hyperbatches: Vec<Vec<(u32, u64)>>,
+}
+
+impl AccessTrace {
+    /// Total distinct (hyperbatch, block) touch pairs — a cheap size
+    /// figure for logs.
+    pub fn touched(&self) -> usize {
+        self.hyperbatches.iter().map(Vec::len).sum()
+    }
+}
+
+/// One trace-sampling pass over the in-memory graph covering both stores:
+/// returns `(graph_trace, feature_trace)` for the given epoch-0
+/// hyperbatches. Frontier expansion is deterministic and fanout-capped
+/// (each node contributes its first `min(fanout, degree)` neighbors;
+/// zero-degree nodes fall back to themselves, like the sampler) — a
+/// *sampled* trace whose per-hyperbatch block frequencies stand in for
+/// the real sweep's, at zero storage I/O and without replaying the
+/// sampler's RNG. `max_hyperbatches` caps the work (0 = trace them all).
+pub fn sample_access_trace(
+    g: &CsrGraph,
+    index: &ObjectIndexTable,
+    feature_layout: &FeatureBlockLayout,
+    hyperbatches: &[Vec<Vec<u32>>],
+    fanouts: &[usize],
+    max_hyperbatches: usize,
+) -> (AccessTrace, AccessTrace) {
+    let take = if max_hyperbatches == 0 {
+        hyperbatches.len()
+    } else {
+        hyperbatches.len().min(max_hyperbatches)
+    };
+    let mut graph_trace = AccessTrace::default();
+    let mut feature_trace = AccessTrace::default();
+    for hb in &hyperbatches[..take] {
+        let mut graph_counts: HashMap<u32, u64> = HashMap::new();
+        let mut feature_counts: HashMap<u32, u64> = HashMap::new();
+        let mut frontier: Vec<u32> = hb.iter().flatten().copied().collect();
+        // level 0..L: features of every level, graph blocks of every
+        // frontier the sampling sweep reads (levels 0..L-1)
+        for (level, &fanout) in fanouts.iter().enumerate() {
+            count_blocks(&frontier, index, feature_layout, &mut graph_counts, &mut feature_counts);
+            let mut next = Vec::with_capacity(frontier.len() * fanout.min(4));
+            for &v in &frontier {
+                let nbrs = g.neighbors(v);
+                if nbrs.is_empty() {
+                    next.push(v);
+                } else {
+                    next.extend_from_slice(&nbrs[..fanout.min(nbrs.len())]);
+                }
+            }
+            frontier = next;
+            // the deepest level is gathered but not sampled from
+            if level + 1 == fanouts.len() {
+                for &v in &frontier {
+                    if let Some(b) = feature_block_of(v, feature_layout) {
+                        *feature_counts.entry(b).or_insert(0) += 1;
+                    }
+                }
+            }
+        }
+        if fanouts.is_empty() {
+            count_blocks(&frontier, index, feature_layout, &mut graph_counts, &mut feature_counts);
+        }
+        graph_trace.hyperbatches.push(sorted(graph_counts));
+        feature_trace.hyperbatches.push(sorted(feature_counts));
+    }
+    (graph_trace, feature_trace)
+}
+
+/// The degree-mass trace of the cheap default policy: one pseudo
+/// hyperbatch whose block counts are the summed degrees of the nodes each
+/// block holds (graph store: via the object index; feature store: via the
+/// block arithmetic). Hot hub blocks — the ones every minibatch touches —
+/// get the highest heat.
+pub fn degree_trace(
+    g: &CsrGraph,
+    index: &ObjectIndexTable,
+    feature_layout: &FeatureBlockLayout,
+) -> (AccessTrace, AccessTrace) {
+    let mut graph_counts: HashMap<u32, u64> = HashMap::new();
+    let mut feature_counts: HashMap<u32, u64> = HashMap::new();
+    for v in 0..g.num_nodes() as u32 {
+        let heat = g.degree(v) as u64 + 1; // +1 so degree-0 blocks still rank
+        for b in index.blocks_of(v) {
+            *graph_counts.entry(b.0).or_insert(0) += heat;
+        }
+        if let Some(b) = feature_block_of(v, feature_layout) {
+            *feature_counts.entry(b).or_insert(0) += heat;
+        }
+    }
+    (
+        AccessTrace { hyperbatches: vec![sorted(graph_counts)] },
+        AccessTrace { hyperbatches: vec![sorted(feature_counts)] },
+    )
+}
+
+fn count_blocks(
+    frontier: &[u32],
+    index: &ObjectIndexTable,
+    feature_layout: &FeatureBlockLayout,
+    graph_counts: &mut HashMap<u32, u64>,
+    feature_counts: &mut HashMap<u32, u64>,
+) {
+    for &v in frontier {
+        // every covering block, not just the home block: the sampler's
+        // hub-continuation path reads blocks_of(v), and those
+        // continuation blocks are among the hottest I/O in a power-law
+        // graph — they must be packed next to the home block, not left
+        // in the untouched tail
+        for b in index.blocks_of(v) {
+            *graph_counts.entry(b.0).or_insert(0) += 1;
+        }
+        if let Some(b) = feature_block_of(v, feature_layout) {
+            *feature_counts.entry(b).or_insert(0) += 1;
+        }
+    }
+}
+
+/// Feature block of `v`, skipping the oversized-vector geometry
+/// (`feature_bytes > block_size`): those stores keep the identity layout
+/// because a vector's covering blocks must stay byte-contiguous on disk.
+fn feature_block_of(v: u32, layout: &FeatureBlockLayout) -> Option<u32> {
+    if layout.feature_bytes() > layout.block_size {
+        None
+    } else {
+        Some(layout.block_of(v))
+    }
+}
+
+fn sorted(counts: HashMap<u32, u64>) -> Vec<(u32, u64)> {
+    let mut v: Vec<(u32, u64)> = counts.into_iter().collect();
+    v.sort_unstable_by_key(|&(b, _)| b);
+    v
+}
+
+/// Compute the block permutation for `policy` over a store of
+/// `num_blocks` blocks striped by `map`.
+///
+/// Placement is deterministic:
+///
+/// 1. Hyperbatches claim blocks in trace order; within a hyperbatch,
+///    unclaimed blocks rank by descending count (ties by logical id).
+///    Each hyperbatch's claims form one contiguous **segment** of
+///    physical positions — co-access packing.
+/// 2. Within a segment, positions are grouped by the shard `map` assigns
+///    them to (each group ascending) and the segment's blocks are dealt
+///    round-robin across the groups, hottest first — stripe
+///    co-placement: the top blocks of every hyperbatch land on distinct
+///    shards whenever the segment spans more than one.
+/// 3. Untouched blocks keep their relative order in a trailing identity
+///    segment (no dealing), so an empty trace yields the identity remap.
+pub fn optimize_block_layout(
+    policy: LayoutPolicy,
+    trace: &AccessTrace,
+    num_blocks: u32,
+    map: StripeMap,
+) -> anyhow::Result<BlockRemap> {
+    if policy == LayoutPolicy::None || num_blocks == 0 {
+        return Ok(BlockRemap::Identity);
+    }
+    let n = num_blocks as usize;
+    let mut claimed = vec![false; n];
+    let mut segments: Vec<Vec<u32>> = Vec::new();
+    for hb in &trace.hyperbatches {
+        let mut seg: Vec<(u32, u64)> = hb
+            .iter()
+            .filter(|&&(b, _)| (b as usize) < n && !claimed[b as usize])
+            .copied()
+            .collect();
+        // hottest first, ties by logical id for determinism
+        seg.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        for &(b, _) in &seg {
+            claimed[b as usize] = true;
+        }
+        if !seg.is_empty() {
+            segments.push(seg.into_iter().map(|(b, _)| b).collect());
+        }
+    }
+    let mut to_physical = vec![u32::MAX; n];
+    let mut pos = 0u32;
+    for seg in &segments {
+        place_segment(seg, pos, map, &mut to_physical);
+        pos += seg.len() as u32;
+    }
+    // trailing identity segment: untouched blocks in logical order
+    for b in 0..n {
+        if !claimed[b] {
+            to_physical[b] = pos;
+            pos += 1;
+        }
+    }
+    debug_assert_eq!(pos as usize, n);
+    BlockRemap::from_to_physical(to_physical)
+}
+
+/// Deal `seg`'s blocks (hottest first) over the physical positions
+/// `[start, start + seg.len())`, rotating across the shards those
+/// positions belong to. Each shard's positions are consumed in ascending
+/// order, so the dealt blocks fill contiguous stripe prefixes.
+fn place_segment(seg: &[u32], start: u32, map: StripeMap, to_physical: &mut [u32]) {
+    let positions = start..start + seg.len() as u32;
+    // group positions by shard, preserving ascending order per shard and
+    // first-appearance order across shards
+    let mut groups: Vec<(u32, VecDeque<u32>)> = Vec::new();
+    for p in positions {
+        let shard = map.shard_of(p);
+        match groups.iter_mut().find(|(s, _)| *s == shard) {
+            Some((_, q)) => q.push_back(p),
+            None => groups.push((shard, VecDeque::from([p]))),
+        }
+    }
+    let mut cursor = 0usize;
+    for &b in seg {
+        // rotate to the next shard that still has free positions
+        while groups[cursor % groups.len()].1.is_empty() {
+            cursor += 1;
+        }
+        let (_, q) = &mut groups[cursor % groups.len()];
+        to_physical[b as usize] = q.pop_front().expect("non-empty group");
+        cursor += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generate::{chung_lu, PowerLawParams};
+    use crate::storage::builder::{build_graph_store, StorePaths};
+    use crate::storage::BlockId;
+
+    fn trace(hbs: &[&[(u32, u64)]]) -> AccessTrace {
+        AccessTrace { hyperbatches: hbs.iter().map(|h| h.to_vec()).collect() }
+    }
+
+    #[test]
+    fn policy_parse_and_names() {
+        assert_eq!("degree".parse::<LayoutPolicy>().unwrap(), LayoutPolicy::Degree);
+        assert_eq!("HYPERBATCH".parse::<LayoutPolicy>().unwrap(), LayoutPolicy::Hyperbatch);
+        assert_eq!("none".parse::<LayoutPolicy>().unwrap(), LayoutPolicy::None);
+        assert!("bogus".parse::<LayoutPolicy>().is_err());
+        assert_eq!(LayoutPolicy::Hyperbatch.to_string(), "hyperbatch");
+        assert_eq!(LayoutPolicy::default(), LayoutPolicy::None);
+    }
+
+    #[test]
+    fn none_policy_is_identity() {
+        let t = trace(&[&[(0, 5), (3, 2)]]);
+        let r = optimize_block_layout(LayoutPolicy::None, &t, 8, StripeMap::new(2, 2)).unwrap();
+        assert!(r.is_identity());
+    }
+
+    #[test]
+    fn empty_trace_is_identity() {
+        let t = AccessTrace::default();
+        let r =
+            optimize_block_layout(LayoutPolicy::Hyperbatch, &t, 16, StripeMap::new(4, 2)).unwrap();
+        assert!(r.is_identity(), "untouched blocks keep their positions");
+    }
+
+    #[test]
+    fn co_accessed_blocks_pack_contiguously() {
+        // hyperbatch 0 touches {10, 3, 7}, hyperbatch 1 touches {1, 12}:
+        // hb0's blocks take physical 0..3 (hottest first), hb1's take 3..5
+        let t = trace(&[&[(3, 5), (7, 9), (10, 1)], &[(1, 2), (12, 2)]]);
+        let r = optimize_block_layout(LayoutPolicy::Hyperbatch, &t, 16, StripeMap::single())
+            .unwrap();
+        assert_eq!(r.physical(BlockId(7)), BlockId(0), "hottest of hb0 leads");
+        assert_eq!(r.physical(BlockId(3)), BlockId(1));
+        assert_eq!(r.physical(BlockId(10)), BlockId(2));
+        assert_eq!(r.physical(BlockId(1)), BlockId(3), "hb1 segment follows");
+        assert_eq!(r.physical(BlockId(12)), BlockId(4));
+        // a block claimed by hb0 is not re-placed by a later hyperbatch
+        let t2 = trace(&[&[(3, 5)], &[(3, 99), (4, 1)]]);
+        let r2 = optimize_block_layout(LayoutPolicy::Hyperbatch, &t2, 8, StripeMap::single())
+            .unwrap();
+        assert_eq!(r2.physical(BlockId(3)), BlockId(0));
+        assert_eq!(r2.physical(BlockId(4)), BlockId(1));
+    }
+
+    #[test]
+    fn untouched_blocks_keep_relative_order() {
+        let t = trace(&[&[(5, 1)]]);
+        let r = optimize_block_layout(LayoutPolicy::Degree, &t, 4, StripeMap::single()).unwrap();
+        // block 5 is out of range (num_blocks 4): ignored, identity result
+        assert!(r.is_identity());
+        let t = trace(&[&[(2, 1)]]);
+        let r = optimize_block_layout(LayoutPolicy::Degree, &t, 4, StripeMap::single()).unwrap();
+        assert_eq!(r.physical(BlockId(2)), BlockId(0));
+        // 0, 1, 3 follow in logical order
+        assert_eq!(r.physical(BlockId(0)), BlockId(1));
+        assert_eq!(r.physical(BlockId(1)), BlockId(2));
+        assert_eq!(r.physical(BlockId(3)), BlockId(3));
+    }
+
+    #[test]
+    fn hot_blocks_deal_across_shards() {
+        // 2 shards, 2-block stripes: physical {0,1} shard0, {2,3} shard1.
+        // One segment of 4 blocks, heat-ordered 8 > 6 > 4 > 2: the two
+        // hottest must land on DISTINCT shards, and each shard's picks
+        // fill its stripe prefix contiguously.
+        let map = StripeMap::new(2, 2);
+        let t = trace(&[&[(0, 2), (1, 4), (2, 6), (3, 8)]]);
+        let r = optimize_block_layout(LayoutPolicy::Hyperbatch, &t, 4, map).unwrap();
+        let hottest = r.physical(BlockId(3));
+        let second = r.physical(BlockId(2));
+        assert_ne!(
+            map.shard_of(hottest.0),
+            map.shard_of(second.0),
+            "top two blocks must land on distinct shards"
+        );
+        // shard0 positions fill ascending: {0,1}; shard1: {2,3}
+        assert_eq!(hottest, BlockId(0));
+        assert_eq!(second, BlockId(2));
+        assert_eq!(r.physical(BlockId(1)), BlockId(1));
+        assert_eq!(r.physical(BlockId(0)), BlockId(3));
+    }
+
+    #[test]
+    fn placement_is_a_bijection_for_random_traces() {
+        use crate::util::rng::Rng;
+        for case in 0..12u64 {
+            let mut rng = Rng::seed_from_u64(case);
+            let n = 1 + rng.gen_range(200) as u32;
+            let map = StripeMap::new(
+                1 + rng.gen_range(16) as u32,
+                1 + rng.gen_range(4) as u32,
+            );
+            let hbs = 1 + rng.gen_range(5);
+            let t = AccessTrace {
+                hyperbatches: (0..hbs)
+                    .map(|_| {
+                        let mut counts: std::collections::HashMap<u32, u64> =
+                            std::collections::HashMap::new();
+                        for _ in 0..rng.gen_range(80) {
+                            *counts
+                                .entry(rng.gen_range(n as usize + 4) as u32)
+                                .or_insert(0) += 1 + rng.gen_range(9) as u64;
+                        }
+                        super::sorted(counts)
+                    })
+                    .collect(),
+            };
+            for policy in [LayoutPolicy::Degree, LayoutPolicy::Hyperbatch] {
+                let r = optimize_block_layout(policy, &t, n, map).unwrap();
+                // from_to_physical validated the bijection; spot-check the
+                // inverse anyway
+                for b in 0..n {
+                    assert_eq!(
+                        r.logical(r.physical(BlockId(b))),
+                        BlockId(b),
+                        "case {case} policy {policy} block {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn traces_cover_the_stores() {
+        let g = chung_lu(&PowerLawParams { num_nodes: 300, num_edges: 3000, ..Default::default() });
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        let meta = build_graph_store(&g, 2048, &paths).unwrap();
+        let flayout = FeatureBlockLayout { block_size: 2048, feature_dim: 16 };
+        let hbs: Vec<Vec<Vec<u32>>> =
+            vec![vec![(0..50).collect(), (50..100).collect()], vec![(100..150).collect()]];
+        let (gt, ft) = sample_access_trace(&g, &meta.index, &flayout, &hbs, &[3, 3], 0);
+        assert_eq!(gt.hyperbatches.len(), 2);
+        assert_eq!(ft.hyperbatches.len(), 2);
+        assert!(gt.touched() > 0 && ft.touched() > 0);
+        // every traced block is in range
+        for hb in &gt.hyperbatches {
+            for &(b, c) in hb {
+                assert!(b < meta.num_blocks && c > 0);
+            }
+        }
+        for hb in &ft.hyperbatches {
+            for &(b, c) in hb {
+                assert!(b < flayout.num_blocks(300) && c > 0);
+            }
+        }
+        // the cap limits the traced hyperbatches
+        let (gt1, _) = sample_access_trace(&g, &meta.index, &flayout, &hbs, &[3, 3], 1);
+        assert_eq!(gt1.hyperbatches.len(), 1);
+
+        // degree trace: one pseudo hyperbatch covering every block
+        let (dg, df) = degree_trace(&g, &meta.index, &flayout);
+        assert_eq!(dg.hyperbatches.len(), 1);
+        assert_eq!(dg.hyperbatches[0].len(), meta.num_blocks as usize);
+        assert_eq!(df.hyperbatches[0].len(), flayout.num_blocks(300) as usize);
+    }
+
+    #[test]
+    fn oversized_feature_geometry_traces_nothing() {
+        // 4096-dim f32 vectors in 4 KiB blocks span blocks: the feature
+        // trace must stay empty so the feature remap stays identity
+        let g = chung_lu(&PowerLawParams { num_nodes: 50, num_edges: 200, ..Default::default() });
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        let meta = build_graph_store(&g, 4096, &paths).unwrap();
+        let flayout = FeatureBlockLayout { block_size: 4096, feature_dim: 4096 };
+        let (_, ft) = degree_trace(&g, &meta.index, &flayout);
+        assert!(ft.hyperbatches[0].is_empty());
+        let hbs = vec![vec![(0..50).collect::<Vec<u32>>()]];
+        let (_, ft2) = sample_access_trace(&g, &meta.index, &flayout, &hbs, &[2], 0);
+        assert!(ft2.hyperbatches[0].is_empty());
+    }
+}

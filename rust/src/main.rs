@@ -19,6 +19,11 @@
 //!                          (auto derives the budget from the device spec)
 //!   --stripe-blocks <n>    RAID0 stripe width in blocks for the sharded
 //!                          backend (0 = auto: one full request per stripe)
+//!   --layout-policy <p>    storage block layout: none | degree | hyperbatch
+//!                          (block permutation packing co-accessed blocks
+//!                          and rotating hot blocks across shards)
+//!   --trace-hyperbatches <n> cap on hyperbatches sampled into the layout
+//!                          trace (hyperbatch policy; 0 = whole epoch 0)
 //!   --hyperbatch <n>       minibatches per hyperbatch
 //!   --minibatch <n>        targets per minibatch
 //!   --pipeline-depth <n>   in-flight hyperbatches (0/1 = sequential)
@@ -35,6 +40,7 @@
 
 use agnes::baselines::{GinexRunner, GnnDriveRunner, MariusRunner, OutreRunner, TrainingSystem};
 use agnes::config::{AgnesConfig, GapBlocks, GnnModel};
+use agnes::graph::reorder::LayoutPolicy;
 use agnes::coordinator::{prepare_dataset, ModeledCompute, NullCompute};
 use agnes::graph::datasets::DatasetSpec;
 use agnes::metrics::{fmt_bytes, fmt_ns};
@@ -141,6 +147,12 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(s) = args.get::<u32>("stripe-blocks")? {
         c.io.stripe_blocks = s;
     }
+    if let Some(p) = args.get::<LayoutPolicy>("layout-policy")? {
+        c.layout.policy = p;
+    }
+    if let Some(t) = args.get::<usize>("trace-hyperbatches")? {
+        c.layout.trace_hyperbatches = t;
+    }
     if let Some(h) = args.get::<usize>("hyperbatch")? {
         c.train.hyperbatch_size = h;
     }
@@ -193,7 +205,7 @@ fn run_system(
         println!(
             "epoch {epoch}: work={} span={} overlap={:.1}% prep={:.1}% sample_io={} gather_io={} \
              loss={:.4} acc={:.3} | io: {} reqs, {}, mean_req={}, {:.1} blocks/run, gap={}, \
-             achieved_bw={}/s",
+             layout={}, achieved_bw={}/s",
             fmt_ns(m.total_ns()),
             fmt_ns(m.span_ns()),
             m.overlap_fraction() * 100.0,
@@ -207,6 +219,7 @@ fn run_system(
             fmt_bytes(m.mean_request_bytes() as u64),
             m.mean_blocks_per_run(),
             m.effective_gap_blocks,
+            if m.layout_policy.is_empty() { "none" } else { &m.layout_policy },
             fmt_bytes(m.device.achieved_bandwidth() as u64),
         );
         if m.num_shards() > 1 {

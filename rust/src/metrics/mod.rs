@@ -74,6 +74,11 @@ pub struct RunMetrics {
     /// static `io.gap_blocks` value, or the device-derived budget when
     /// the knob was left on auto.
     pub effective_gap_blocks: u32,
+    /// The storage layout policy the run's dataset was built with
+    /// (`"none"` | `"degree"` | `"hyperbatch"`; empty until the epoch
+    /// driver snapshots it). Reported alongside `mean_blocks_per_run`
+    /// and `shard_imbalance()` so layout sweeps label their rows.
+    pub layout_policy: String,
     /// Device snapshot at end of run. Under a sharded array the counters
     /// sum across shards and `busy_ns` is the array elapsed (max shard
     /// clock).
@@ -215,6 +220,9 @@ impl RunMetrics {
         self.io_runs += o.io_runs;
         self.io_run_blocks += o.io_run_blocks;
         self.effective_gap_blocks = self.effective_gap_blocks.max(o.effective_gap_blocks);
+        if self.layout_policy.is_empty() {
+            self.layout_policy = o.layout_policy.clone();
+        }
         self.device.merge(&o.device);
         merge_stage_vec(&mut self.shard_busy_ns, &o.shard_busy_ns);
         merge_stage_vec(&mut self.shard_requests, &o.shard_requests);

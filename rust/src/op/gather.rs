@@ -134,7 +134,16 @@ fn gather_sweep(
     prefetched: &mut FeaturePrefetch,
 ) -> Result<()> {
     let dim = store.layout.feature_dim;
-    let blocks = bucket.blocks();
+    let mut blocks = bucket.blocks();
+    // sweep in physical order under an optimized storage layout (see
+    // `sampler::sweep_runs`): co-accessed blocks sit contiguously on
+    // disk, so physical-order chunks coalesce into long runs; gather
+    // results are position-addressed, so processing order cannot change
+    // them
+    let remap = store.remap();
+    if !remap.is_identity() {
+        blocks.sort_unstable_by_key(|&b| remap.physical(b));
+    }
     let run_len = pool.capacity().max(1);
     let runs: Vec<&[BlockId]> = blocks.chunks(run_len).collect();
     for (i, run) in runs.iter().enumerate() {
@@ -152,11 +161,15 @@ fn gather_sweep(
                 }
             }
         }
+        // the pool's batched insert wants its request list sorted by
+        // logical id (physical-order sweeps scramble it)
+        missing.sort_unstable();
         if let Some(next) = runs.get(i + 1) {
-            let next_missing: Vec<BlockId> = {
+            let mut next_missing: Vec<BlockId> = {
                 let guard = pool.lock();
                 next.iter().copied().filter(|&b| !guard.contains(b)).collect()
             };
+            next_missing.sort_unstable();
             if !next_missing.is_empty() {
                 let pending = engine.submit_feature_blocks(store, next_missing.clone());
                 *prefetched = Some((next_missing, pending));

@@ -207,7 +207,17 @@ fn sweep_runs(
     ) -> Result<()>,
     prefetched: &mut GraphPrefetch,
 ) -> Result<()> {
-    let blocks = bucket.blocks();
+    let mut blocks = bucket.blocks();
+    // under an optimized storage layout, sweep in *physical* order: the
+    // optimizer packed co-accessed blocks contiguously on disk, so
+    // physical-order chunks translate into long sequential runs (logical
+    // order would re-scatter them). Processing order does not affect
+    // results — sampling RNG is per-slot and every entry writes a fixed
+    // destination — only the I/O pattern.
+    let remap = store.remap();
+    if !remap.is_identity() {
+        blocks.sort_unstable_by_key(|&b| remap.physical(b));
+    }
     // leave headroom for hub-continuation loads within a run; half the
     // buffer is the processing run, the prefetched next run uses the rest
     let run_len = (pool.capacity() / 2).saturating_sub(1).max(1);
@@ -229,14 +239,18 @@ fn sweep_runs(
                 }
             }
         }
+        // the pool's batched insert wants its request list sorted by
+        // logical id (physical-order sweeps scramble it)
+        missing.sort_unstable();
         // (2) submit the next run's misses to the worker pool *before*
         // loading and processing this run (paper §3.4 (4): threads do not
         // idle on I/O completion)
         if let Some(next) = runs.get(i + 1) {
-            let next_missing: Vec<BlockId> = {
+            let mut next_missing: Vec<BlockId> = {
                 let guard = pool.lock();
                 next.iter().copied().filter(|&b| !guard.contains(b)).collect()
             };
+            next_missing.sort_unstable();
             if !next_missing.is_empty() {
                 let pending = engine.submit_graph_blocks(store, next_missing.clone());
                 *prefetched = Some((next_missing, pending));

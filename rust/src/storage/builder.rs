@@ -5,8 +5,11 @@
 use super::block::{FeatureBlockLayout, GraphBlock, ObjectRecord, BLOCK_HEADER_BYTES, OBJ_HEADER_BYTES};
 use super::object_index::ObjectIndexTable;
 use crate::graph::generate::synth_feature;
+use crate::graph::layout::BlockRemap;
+use crate::graph::reorder::LayoutPolicy;
 use crate::graph::CsrGraph;
 use crate::Result;
+use anyhow::Context;
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
@@ -21,6 +24,11 @@ pub struct StorePaths {
     /// CSR offsets sidecar (u64 per node + 1): kept in memory by the
     /// baselines (Ginex keeps `indptr` resident) for per-node direct reads.
     pub csr_offsets: PathBuf,
+    /// Storage layout sidecar ([`LayoutMeta`]): the block-layout policy
+    /// and the persisted logical→physical [`BlockRemap`]s of both stores.
+    /// Absent for stores built with `layout.policy = "none"` before the
+    /// optimizer existed — the stores then use the identity remap.
+    pub layout_meta: PathBuf,
 }
 
 impl StorePaths {
@@ -31,9 +39,112 @@ impl StorePaths {
             graph_meta: dir.join("graph.meta.json"),
             feature_blocks: dir.join("features.blocks"),
             csr_offsets: dir.join("graph.offsets"),
+            layout_meta: dir.join("layout.json"),
             dir,
         }
     }
+}
+
+/// The persisted storage-layout sidecar: which policy built this dataset
+/// and the block remaps the stores must translate through. Written by
+/// the layout-optimizer build stage, loaded by
+/// [`GraphStore::open`](super::store::GraphStore::open) /
+/// [`FeatureStore::open`](super::store::FeatureStore::open).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayoutMeta {
+    pub policy: LayoutPolicy,
+    pub graph: BlockRemap,
+    pub feature: BlockRemap,
+}
+
+impl Default for LayoutMeta {
+    fn default() -> Self {
+        LayoutMeta {
+            policy: LayoutPolicy::None,
+            graph: BlockRemap::Identity,
+            feature: BlockRemap::Identity,
+        }
+    }
+}
+
+impl LayoutMeta {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("policy", Json::str(self.policy.name())),
+            ("graph", self.graph.to_json()),
+            ("feature", self.feature.to_json()),
+        ])
+    }
+
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<LayoutMeta> {
+        Ok(LayoutMeta {
+            policy: j
+                .req("policy")?
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("layout policy must be a string"))?
+                .parse()
+                .map_err(anyhow::Error::msg)?,
+            graph: BlockRemap::from_json(j.req("graph")?)?,
+            feature: BlockRemap::from_json(j.req("feature")?)?,
+        })
+    }
+
+    /// Persist next to the stores.
+    pub fn write(&self, paths: &StorePaths) -> Result<()> {
+        std::fs::create_dir_all(&paths.dir)?;
+        std::fs::write(&paths.layout_meta, self.to_json().to_string())
+            .context("writing layout meta")?;
+        Ok(())
+    }
+
+    /// Load the sidecar; a missing file is the identity layout (stores
+    /// built before the optimizer existed, or `policy = "none"` builds
+    /// that skipped the sidecar).
+    pub fn load(paths: &StorePaths) -> Result<LayoutMeta> {
+        if !paths.layout_meta.exists() {
+            return Ok(LayoutMeta::default());
+        }
+        let text = std::fs::read_to_string(&paths.layout_meta).context("reading layout meta")?;
+        LayoutMeta::from_json(&crate::util::json::Json::parse(&text)?)
+    }
+}
+
+/// Rewrite a block file so logical block `b` lands at physical position
+/// `remap.physical(b)` — the layout optimizer's on-disk stage. The file
+/// must be exactly `remap.len()` blocks of `block_size` bytes (builders
+/// zero-pad the tail block, so both stores satisfy this). Streams one
+/// block at a time (a random `pread` from the source per sequentially
+/// written output block — O(block_size) memory, so stores larger than
+/// RAM permute fine) into a sibling temp file and renames over the
+/// original, so a crash mid-way never leaves a half-permuted store. A
+/// no-op for the identity remap.
+pub fn apply_block_remap(path: &Path, block_size: usize, remap: &BlockRemap) -> Result<()> {
+    use std::os::unix::fs::FileExt;
+    if remap.is_identity() {
+        return Ok(());
+    }
+    let src = File::open(path).with_context(|| format!("opening {path:?} for remap"))?;
+    let src_len = src.metadata()?.len();
+    anyhow::ensure!(
+        src_len == (remap.len() * block_size) as u64,
+        "block remap geometry mismatch: {path:?} holds {src_len} bytes, remap covers {} blocks \
+         of {block_size}",
+        remap.len(),
+    );
+    let tmp = path.with_extension("remap.tmp");
+    {
+        let mut w = BufWriter::new(File::create(&tmp)?);
+        let mut buf = vec![0u8; block_size];
+        for p in 0..remap.len() as u32 {
+            let logical = remap.logical(super::BlockId(p)).0 as u64;
+            src.read_exact_at(&mut buf, logical * block_size as u64)?;
+            w.write_all(&buf)?;
+        }
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path).context("installing remapped block file")?;
+    Ok(())
 }
 
 /// Metadata persisted next to the graph block file.
@@ -244,6 +355,54 @@ mod tests {
         for w in meta.index.ranges.windows(2) {
             assert!(w[0].1 <= w[1].0, "ranges overlap: {:?}", w);
         }
+    }
+
+    #[test]
+    fn layout_meta_roundtrip_and_default() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let paths = StorePaths::in_dir(dir.path());
+        // missing sidecar = identity layout
+        let m = LayoutMeta::load(&paths).unwrap();
+        assert_eq!(m, LayoutMeta::default());
+        assert!(m.graph.is_identity() && m.feature.is_identity());
+        // roundtrip a real remap
+        let meta = LayoutMeta {
+            policy: LayoutPolicy::Hyperbatch,
+            graph: BlockRemap::from_to_physical(vec![1, 0, 2]).unwrap(),
+            feature: BlockRemap::Identity,
+        };
+        meta.write(&paths).unwrap();
+        let back = LayoutMeta::load(&paths).unwrap();
+        assert_eq!(back, meta);
+    }
+
+    #[test]
+    fn apply_block_remap_permutes_the_file() {
+        let dir = crate::util::TempDir::new().unwrap();
+        let path = dir.path().join("blocks");
+        let bs = 64usize;
+        // 4 blocks, each filled with its logical id
+        let src: Vec<u8> = (0..4u8).flat_map(|b| vec![b; bs]).collect();
+        std::fs::write(&path, &src).unwrap();
+        // logical 0->2, 1->3, 2->1, 3->0
+        let remap = BlockRemap::from_to_physical(vec![2, 3, 1, 0]).unwrap();
+        apply_block_remap(&path, bs, &remap).unwrap();
+        let out = std::fs::read(&path).unwrap();
+        assert_eq!(out.len(), src.len());
+        for p in 0..4u32 {
+            let logical = remap.logical(crate::storage::BlockId(p)).0 as u8;
+            assert!(
+                out[p as usize * bs..(p as usize + 1) * bs].iter().all(|&x| x == logical),
+                "physical {p} must hold logical {logical}"
+            );
+        }
+        // identity is a no-op (file untouched, including mtime semantics)
+        let before = std::fs::read(&path).unwrap();
+        apply_block_remap(&path, bs, &BlockRemap::Identity).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), before);
+        // geometry mismatch is rejected
+        let bad = BlockRemap::from_to_physical(vec![1, 0]).unwrap();
+        assert!(apply_block_remap(&path, bs, &bad).is_err());
     }
 
     #[test]

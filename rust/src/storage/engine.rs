@@ -269,12 +269,14 @@ impl IoEngine {
     }
 
     /// Read pre-planned graph runs concurrently: one `pread` and one
-    /// device request per run. Returns every covered block (bridged-gap
-    /// padding included) as `(id, decoded block)` pairs, ascending when
-    /// the runs are. The scoped workers fan out over the whole
-    /// (shard-interleaved) run list, so every shard's runs proceed
-    /// concurrently; the device charge groups each run onto its owning
-    /// shard's queue and costs the max over the shards.
+    /// device request per run. Runs are in **physical** block space (a
+    /// run is only sequential on disk physically); every covered block
+    /// (bridged-gap padding included) is returned as `(logical id,
+    /// decoded block)` pairs — ascending in physical order. The scoped
+    /// workers fan out over the whole (shard-interleaved) run list, so
+    /// every shard's runs proceed concurrently; the device charge groups
+    /// each run onto its owning shard's queue and costs the max over the
+    /// shards.
     pub fn read_graph_runs(
         &self,
         store: &GraphStore,
@@ -284,12 +286,13 @@ impl IoEngine {
             return Ok(Vec::new());
         }
         let bs = store.block_size();
+        let remap = store.remap();
         let per_run = self.map_parallel(runs, |run| {
             let raw = store.read_run_raw_uncharged(run.start, run.len)?;
             Ok(run
                 .blocks()
                 .enumerate()
-                .map(|(i, b)| (b, GraphBlock::decode(&raw[i * bs..(i + 1) * bs])))
+                .map(|(i, p)| (remap.logical(p), GraphBlock::decode(&raw[i * bs..(i + 1) * bs])))
                 .collect::<Vec<_>>())
         })?;
         store.charge_runs(runs, self.effective_concurrency());
@@ -297,8 +300,9 @@ impl IoEngine {
     }
 
     /// Read pre-planned feature runs concurrently (see
-    /// [`Self::read_graph_runs`]). Each block is a zero-copy
-    /// [`BlockBytes`] view into its run's single allocation.
+    /// [`Self::read_graph_runs`] — runs physical, delivered ids logical).
+    /// Each block is a zero-copy [`BlockBytes`] view into its run's
+    /// single allocation.
     pub fn read_feature_runs(
         &self,
         store: &FeatureStore,
@@ -308,38 +312,65 @@ impl IoEngine {
             return Ok(Vec::new());
         }
         let bs = store.layout.block_size;
+        let remap = store.remap();
         let per_run = self.map_parallel(runs, |run| {
             let raw = Arc::new(store.read_run_raw_uncharged(run.start, run.len)?);
             Ok(run
                 .blocks()
                 .enumerate()
-                .map(|(i, b)| (b, BlockBytes::slice_of(raw.clone(), i * bs, bs)))
+                .map(|(i, p)| (remap.logical(p), BlockBytes::slice_of(raw.clone(), i * bs, bs)))
                 .collect::<Vec<_>>())
         })?;
         store.charge_runs(runs, self.effective_concurrency());
         Ok(per_run.into_iter().flatten().collect())
     }
 
-    /// Plan + read graph blocks as `(id, block)` pairs — the sweeps' hot
-    /// path (one device request per coalesced run, split at the store's
-    /// stripe boundaries so every request stays on one shard).
+    /// Translate a logical block list into the sorted physical list runs
+    /// are planned over. For the identity remap the input is returned
+    /// as-is (zero-copy, zero re-sort): the `layout.policy = "none"`
+    /// request stream is bit-for-bit the pre-optimizer one.
+    fn to_physical(remap: &crate::graph::layout::BlockRemap, blocks: &[BlockId]) -> Vec<BlockId> {
+        let mut phys: Vec<BlockId> = blocks.iter().map(|&b| remap.physical(b)).collect();
+        phys.sort_unstable();
+        phys.dedup();
+        phys
+    }
+
+    /// Plan + read graph blocks as `(logical id, block)` pairs — the
+    /// sweeps' hot path (one device request per coalesced run, split at
+    /// the store's stripe boundaries so every request stays on one
+    /// shard). `blocks` are logical ids; under a remapped layout they are
+    /// translated to physical positions first, so co-accessed blocks the
+    /// optimizer packed together coalesce into long physical runs.
     pub fn read_graph_blocks_coalesced(
         &self,
         store: &GraphStore,
         blocks: &[BlockId],
     ) -> Result<Vec<(BlockId, GraphBlock)>> {
-        let runs = self.plan_striped(blocks, store.block_size(), store.stripe_map());
+        let remap = store.remap();
+        let runs = if remap.is_identity() {
+            self.plan_striped(blocks, store.block_size(), store.stripe_map())
+        } else {
+            let phys = Self::to_physical(remap, blocks);
+            self.plan_striped(&phys, store.block_size(), store.stripe_map())
+        };
         self.read_graph_runs(store, &runs)
     }
 
-    /// Plan + read feature blocks as `(id, bytes)` pairs (see
+    /// Plan + read feature blocks as `(logical id, bytes)` pairs (see
     /// [`Self::read_graph_blocks_coalesced`]).
     pub fn read_feature_blocks_coalesced(
         &self,
         store: &FeatureStore,
         blocks: &[BlockId],
     ) -> Result<Vec<(BlockId, BlockBytes)>> {
-        let runs = self.plan_striped(blocks, store.layout.block_size, store.stripe_map());
+        let remap = store.remap();
+        let runs = if remap.is_identity() {
+            self.plan_striped(blocks, store.layout.block_size, store.stripe_map())
+        } else {
+            let phys = Self::to_physical(remap, blocks);
+            self.plan_striped(&phys, store.layout.block_size, store.stripe_map())
+        };
         self.read_feature_runs(store, &runs)
     }
 
@@ -624,6 +655,69 @@ mod tests {
         for (s, a) in after_sync.iter().zip(&after_async) {
             assert_eq!(2 * s.num_requests, a.num_requests, "async path charges per shard too");
         }
+    }
+
+    #[test]
+    fn remapped_coalesced_reads_return_logical_blocks_and_pack_runs() {
+        use crate::graph::layout::BlockRemap;
+        use crate::graph::reorder::LayoutPolicy;
+        use crate::storage::builder::{apply_block_remap, LayoutMeta};
+        let (_d, paths) = setup();
+        // unremapped reference
+        let ref_store = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
+        let n = ref_store.num_blocks();
+        assert!(n >= 6, "need a few blocks, got {n}");
+        let eng = IoEngine::new(2, 4);
+        let all: Vec<BlockId> = (0..n).map(BlockId).collect();
+        let want: HashMap<BlockId, GraphBlock> =
+            eng.read_graph_blocks_coalesced(&ref_store, &all).unwrap().into_iter().collect();
+        drop(ref_store);
+
+        // remap: scattered logical blocks {0, n/2, n-1} pack into the
+        // physical prefix 0..3; the rest follow in logical order
+        let hot = [0u32, n / 2, n - 1];
+        let mut to_physical = vec![u32::MAX; n as usize];
+        for (i, &b) in hot.iter().enumerate() {
+            to_physical[b as usize] = i as u32;
+        }
+        let mut next = hot.len() as u32;
+        for b in 0..n {
+            if !hot.contains(&b) {
+                to_physical[b as usize] = next;
+                next += 1;
+            }
+        }
+        let remap = BlockRemap::from_to_physical(to_physical).unwrap();
+        apply_block_remap(&paths.graph_blocks, 2048, &remap).unwrap();
+        LayoutMeta { policy: LayoutPolicy::Hyperbatch, graph: remap, feature: BlockRemap::Identity }
+            .write(&paths)
+            .unwrap();
+
+        let ssd = SsdModel::new(SsdSpec::default());
+        let store = GraphStore::open(&paths, ssd.clone()).unwrap();
+        // the scattered logical set is physically contiguous: ONE request
+        let got = eng
+            .read_graph_blocks_coalesced(&store, &hot.map(BlockId).to_vec())
+            .unwrap();
+        assert_eq!(ssd.stats().num_requests, 1, "packed blocks must coalesce into one run");
+        assert_eq!(got.len(), 3);
+        for (b, gb) in &got {
+            assert!(hot.contains(&b.0), "delivered ids must be logical, got {b}");
+            assert_eq!(gb, &want[b], "logical block {b} must decode identically");
+        }
+        // a full sweep still delivers every logical block bit-identically
+        let full: HashMap<BlockId, GraphBlock> =
+            eng.read_graph_blocks_coalesced(&store, &all).unwrap().into_iter().collect();
+        assert_eq!(full, want);
+        // submit/poll path agrees with the sync path under the remap
+        let store = Arc::new(store);
+        let via_pool: HashMap<BlockId, GraphBlock> = eng
+            .submit_graph_blocks(&store, all.clone())
+            .wait()
+            .unwrap()
+            .into_iter()
+            .collect();
+        assert_eq!(via_pool, want);
     }
 
     #[test]

@@ -24,7 +24,9 @@ pub mod plan;
 pub mod store;
 
 pub use block::{FeatureBlockLayout, GraphBlock, ObjectRecord, BLOCK_HEADER_BYTES, OBJ_HEADER_BYTES};
-pub use builder::{build_feature_store, build_graph_store, StorePaths};
+pub use builder::{
+    apply_block_remap, build_feature_store, build_graph_store, LayoutMeta, StorePaths,
+};
 pub use device::{shard_imbalance, DeviceStats, IoClass, SharedArray, SsdArray, SsdModel, SsdSpec};
 pub use engine::IoEngine;
 pub use object_index::ObjectIndexTable;

@@ -19,6 +19,13 @@ use std::sync::Arc;
 
 /// One coalesced read request: `len` consecutive blocks starting at
 /// `start`. Always at least one block.
+///
+/// Run requests live in **physical** block space — a run is only
+/// sequential *on disk* — so under an optimized storage layout
+/// ([`crate::graph::layout::BlockRemap`]) the engine translates logical
+/// miss lists to physical ids before planning, and translates every
+/// delivered block back. With the identity remap (the default) logical
+/// and physical ids coincide and nothing changes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RunRequest {
     pub start: BlockId,

@@ -3,12 +3,12 @@
 //! so simulated storage time survives the OS page cache.
 
 use super::block::{FeatureBlockLayout, GraphBlock};
-use super::builder::{GraphStoreMeta, StorePaths};
+use super::builder::{GraphStoreMeta, LayoutMeta, StorePaths};
 use super::device::SharedArray;
 use super::object_index::ObjectIndexTable;
 use super::plan::RunRequest;
 use super::BlockId;
-use crate::graph::layout::StripeMap;
+use crate::graph::layout::{BlockRemap, StripeMap};
 use crate::Result;
 use byteorder::{ByteOrder, LittleEndian};
 use anyhow::Context;
@@ -29,6 +29,15 @@ pub struct GraphStore {
     /// converts into one), or real per-device shards with stripe-mapped
     /// block ownership for AGNES.
     pub ssd: SharedArray,
+    /// Logical→physical block translation of the storage layout
+    /// optimizer (identity unless the store was built with a
+    /// `layout.policy` other than `none`). **Logical** ids are what every
+    /// caller-facing block API speaks; **physical** ids appear only in
+    /// run-shaped APIs ([`Self::read_run_raw_uncharged`],
+    /// [`Self::charge_runs`]) because a run must be contiguous *on disk*
+    /// and a device charge must land on the shard that physically owns
+    /// the bytes.
+    remap: BlockRemap,
     /// Simulated device ns charged through *this* store (the shared
     /// [`SsdModel`](super::device::SsdModel) clock is global; staged
     /// executors attribute I/O per stage via per-store deltas because the
@@ -56,15 +65,30 @@ impl GraphStore {
         let raw = std::fs::read(&paths.csr_offsets)?;
         let mut offsets = vec![0u64; raw.len() / 8];
         LittleEndian::read_u64_into(&raw, &mut offsets);
+        let remap = LayoutMeta::load(paths)?.graph;
+        anyhow::ensure!(
+            remap.is_identity() || remap.len() == meta.num_blocks as usize,
+            "graph block remap covers {} blocks but the store holds {}",
+            remap.len(),
+            meta.num_blocks
+        );
         Ok(GraphStore {
             file,
             meta,
             csr_offsets: Arc::new(offsets),
             ssd,
+            remap,
             charged_ns: AtomicU64::new(0),
             runs_issued: AtomicU64::new(0),
             run_blocks: AtomicU64::new(0),
         })
+    }
+
+    /// The store's logical→physical block translation (identity unless a
+    /// layout optimizer built this dataset).
+    #[inline]
+    pub fn remap(&self) -> &BlockRemap {
+        &self.remap
     }
 
     /// Charge a batch of reads to the device's single-queue (legacy)
@@ -77,11 +101,12 @@ impl GraphStore {
         ns
     }
 
-    /// Charge a single block-addressed read to the shard owning `b`
-    /// (shard 0 on aggregate arrays — identical to
+    /// Charge a single block-addressed read to the shard owning logical
+    /// block `b` — i.e. the shard the stripe map assigns its *physical*
+    /// position to (shard 0 on aggregate arrays — identical to
     /// [`Self::charge_batch`] there).
     pub fn charge_block(&self, b: BlockId, size: u64, concurrency: u32) -> u64 {
-        let ns = self.ssd.submit_for_block(b, size, concurrency);
+        let ns = self.ssd.submit_for_block(self.remap.physical(b), size, concurrency);
         self.charged_ns.fetch_add(ns, Ordering::Relaxed);
         ns
     }
@@ -102,11 +127,12 @@ impl GraphStore {
 
     /// Charge a batch of *coalesced run* reads — one device request per
     /// run, which is the whole point of the planner (the per-block path
-    /// charges one request per block). Runs are grouped by the shard that
-    /// owns them (the planner's stripe-split guarantees a run never
-    /// straddles shards) and each shard's group is charged on that
-    /// shard's own queue concurrently: the returned — and attributed —
-    /// elapsed time is the max over the shards, not the sum.
+    /// charges one request per block). Runs are **physical** (see
+    /// [`Self::read_run_raw_uncharged`]), grouped by the shard that owns
+    /// them (the planner's stripe-split guarantees a run never straddles
+    /// shards) and each shard's group is charged on that shard's own
+    /// queue concurrently: the returned — and attributed — elapsed time
+    /// is the max over the shards, not the sum.
     pub fn charge_runs(&self, runs: &[RunRequest], concurrency: u32) -> u64 {
         let ns = charge_runs_sharded(&self.ssd, runs, self.meta.block_size, concurrency);
         self.runs_issued.fetch_add(runs.len() as u64, Ordering::Relaxed);
@@ -163,20 +189,26 @@ impl GraphStore {
         Ok(buf)
     }
 
-    /// Read raw block bytes without charging the device model (the async
-    /// [`IoEngine`](super::engine::IoEngine) batch-charges submissions).
+    /// Read raw bytes of **logical** block `b` without charging the
+    /// device model (the async [`IoEngine`](super::engine::IoEngine)
+    /// batch-charges submissions). The read lands at the block's physical
+    /// position.
     pub fn read_block_raw_uncharged(&self, b: BlockId) -> Result<Vec<u8>> {
         let bs = self.meta.block_size;
+        let p = self.remap.physical(b);
         let mut buf = vec![0u8; bs];
         self.file
-            .read_exact_at(&mut buf, b.0 as u64 * bs as u64)
-            .with_context(|| format!("read graph block {b}"))?;
+            .read_exact_at(&mut buf, p.0 as u64 * bs as u64)
+            .with_context(|| format!("read graph block {b} (physical {p})"))?;
         Ok(buf)
     }
 
-    /// Read a coalesced run of `len` consecutive blocks starting at
-    /// `start` with **one** `pread`, without charging the device model
-    /// (the engine charges one request per run via [`Self::charge_runs`]).
+    /// Read a coalesced run of `len` consecutive **physical** blocks
+    /// starting at `start` with **one** `pread`, without charging the
+    /// device model (the engine charges one request per run via
+    /// [`Self::charge_runs`]). Run requests are always physical — a run
+    /// is only sequential on disk in physical space; callers translate
+    /// each delivered block back to its logical id via [`Self::remap`].
     pub fn read_run_raw_uncharged(&self, start: BlockId, len: u32) -> Result<Vec<u8>> {
         let bs = self.meta.block_size;
         let mut buf = vec![0u8; bs * len as usize];
@@ -212,9 +244,7 @@ impl GraphStore {
         let blocks = self.meta.index.blocks_of(v);
         let mut adj: Vec<u32> = Vec::new();
         for b in blocks {
-            let bs = self.meta.block_size;
-            let mut buf = vec![0u8; bs];
-            self.file.read_exact_at(&mut buf, b.0 as u64 * bs as u64)?;
+            let buf = self.read_block_raw_uncharged(b)?;
             let gb = GraphBlock::decode(&buf);
             if let Some(r) = gb.find(v) {
                 if adj.is_empty() {
@@ -239,6 +269,8 @@ pub struct FeatureStore {
     pub num_nodes: usize,
     /// Device array (see [`GraphStore::ssd`]).
     pub ssd: SharedArray,
+    /// Logical→physical block translation (see [`GraphStore::remap`]).
+    remap: BlockRemap,
     /// Simulated device ns charged through this store (see
     /// [`GraphStore::charged_ns`]).
     charged_ns: AtomicU64,
@@ -258,16 +290,40 @@ impl FeatureStore {
         let ssd = ssd.into();
         let file = File::open(&paths.feature_blocks).context("open feature store")?;
         let file_len = file.metadata().context("stat feature store")?.len();
+        let remap = LayoutMeta::load(paths)?.feature;
+        anyhow::ensure!(
+            remap.is_identity() || remap.len() == layout.num_blocks(num_nodes) as usize,
+            "feature block remap covers {} blocks but the store holds {}",
+            remap.len(),
+            layout.num_blocks(num_nodes)
+        );
+        // oversized vectors span consecutive blocks by byte arithmetic,
+        // so their stores must keep the identity layout (the optimizer
+        // never emits a remap for this geometry — see graph::reorder)
+        anyhow::ensure!(
+            remap.is_identity() || layout.feature_bytes() <= layout.block_size,
+            "oversized feature vectors ({} B > {} B blocks) cannot use a block remap",
+            layout.feature_bytes(),
+            layout.block_size
+        );
         Ok(FeatureStore {
             file,
             file_len,
             layout,
             num_nodes,
             ssd,
+            remap,
             charged_ns: AtomicU64::new(0),
             runs_issued: AtomicU64::new(0),
             run_blocks: AtomicU64::new(0),
         })
+    }
+
+    /// The store's logical→physical block translation (see
+    /// [`GraphStore::remap`]).
+    #[inline]
+    pub fn remap(&self) -> &BlockRemap {
+        &self.remap
     }
 
     /// Charge a batch of reads to the device's single-queue (legacy)
@@ -278,10 +334,10 @@ impl FeatureStore {
         ns
     }
 
-    /// Charge a single block-addressed read to the shard owning `b` (see
-    /// [`GraphStore::charge_block`]).
+    /// Charge a single block-addressed read to the shard physically
+    /// owning logical block `b` (see [`GraphStore::charge_block`]).
     pub fn charge_block(&self, b: BlockId, size: u64, concurrency: u32) -> u64 {
-        let ns = self.ssd.submit_for_block(b, size, concurrency);
+        let ns = self.ssd.submit_for_block(self.remap.physical(b), size, concurrency);
         self.charged_ns.fetch_add(ns, Ordering::Relaxed);
         ns
     }
@@ -340,19 +396,21 @@ impl FeatureStore {
         Ok(buf)
     }
 
-    /// Read raw feature-block bytes without charging the device model.
-    /// The store's last block may be partially present on disk (the tail
-    /// is zero-padded), but a block starting beyond EOF is a phantom read
-    /// and an error.
+    /// Read raw bytes of **logical** feature block `b` without charging
+    /// the device model. The store's last block may be partially present
+    /// on disk (the tail is zero-padded), but a block starting beyond EOF
+    /// is a phantom read and an error.
     pub fn read_block_raw_uncharged(&self, b: BlockId) -> Result<Vec<u8>> {
-        self.read_run_raw_uncharged(b, 1)
+        self.read_run_raw_uncharged(self.remap.physical(b), 1)
     }
 
-    /// Read a coalesced run of `len` consecutive feature blocks with one
-    /// `pread` (uncharged — the engine charges one request per run via
-    /// [`Self::charge_runs`]). Per-block EOF semantics are preserved: a
-    /// run whose *last block* starts beyond EOF is a phantom read and an
-    /// error, while a trailing partial block is zero-padded.
+    /// Read a coalesced run of `len` consecutive **physical** feature
+    /// blocks with one `pread` (uncharged — the engine charges one
+    /// request per run via [`Self::charge_runs`]; see
+    /// [`GraphStore::read_run_raw_uncharged`] for the physical-id
+    /// contract). Per-block EOF semantics are preserved: a run whose
+    /// *last block* starts beyond EOF is a phantom read and an error,
+    /// while a trailing partial block is zero-padded.
     pub fn read_run_raw_uncharged(&self, start: BlockId, len: u32) -> Result<Vec<u8>> {
         let bs = self.layout.block_size;
         let mut buf = vec![0u8; bs * len as usize];
@@ -386,11 +444,14 @@ impl FeatureStore {
         self.read_feature_uncharged(v)
     }
 
-    /// Read node `v`'s vector without charging the device model.
+    /// Read node `v`'s vector without charging the device model. The
+    /// byte offset is computed from the *physical* position of the
+    /// node's block (oversized vectors span blocks byte-contiguously,
+    /// which is exactly why their stores keep the identity remap).
     pub fn read_feature_uncharged(&self, v: u32) -> Result<Vec<f32>> {
         let d = self.layout.feature_dim;
-        let off = self.layout.block_of(v) as u64 * self.layout.block_size as u64
-            + self.layout.slot_offset(v) as u64;
+        let p = self.remap.physical(BlockId(self.layout.block_of(v)));
+        let off = p.0 as u64 * self.layout.block_size as u64 + self.layout.slot_offset(v) as u64;
         let mut buf = vec![0u8; 4 * d];
         self.file.read_exact_at(&mut buf, off)?;
         let mut out = vec![0f32; d];
@@ -562,6 +623,87 @@ mod tests {
         // caller-level accounting still counts one run of two blocks
         assert_eq!(store.runs_issued(), 1);
         assert_eq!(store.run_blocks_read(), 2);
+    }
+
+    #[test]
+    fn remapped_stores_translate_reads_and_charges() {
+        use crate::graph::layout::BlockRemap;
+        use crate::graph::reorder::LayoutPolicy;
+        use crate::storage::builder::{apply_block_remap, LayoutMeta};
+        use crate::storage::device::SsdArray;
+        // reference: the unremapped stores
+        let (_d, paths, g) = setup();
+        let ref_gs = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
+        let layout = FeatureBlockLayout { block_size: 2048, feature_dim: 16 };
+        let ref_fs =
+            FeatureStore::open(&paths, layout, 400, SsdModel::new(SsdSpec::default())).unwrap();
+        let gn = ref_gs.num_blocks();
+        let fn_ = ref_fs.num_blocks();
+        let ref_graph: Vec<Vec<u8>> =
+            (0..gn).map(|b| ref_gs.read_block_raw_uncharged(BlockId(b)).unwrap()).collect();
+        let ref_feat: Vec<Vec<u8>> =
+            (0..fn_).map(|b| ref_fs.read_block_raw_uncharged(BlockId(b)).unwrap()).collect();
+        drop((ref_gs, ref_fs));
+
+        // permute both files (reverse order) and persist the sidecar
+        let rev = |n: u32| BlockRemap::from_to_physical((0..n).rev().collect()).unwrap();
+        let (graph_remap, feature_remap) = (rev(gn), rev(fn_));
+        apply_block_remap(&paths.graph_blocks, 2048, &graph_remap).unwrap();
+        apply_block_remap(&paths.feature_blocks, 2048, &feature_remap).unwrap();
+        LayoutMeta {
+            policy: LayoutPolicy::Degree,
+            graph: graph_remap.clone(),
+            feature: feature_remap,
+        }
+        .write(&paths)
+        .unwrap();
+
+        // logical reads are unchanged — the remap is transparent
+        let arr = SsdArray::sharded(SsdSpec::default().with_ssds(2), 1);
+        let gs = GraphStore::open(&paths, arr.clone()).unwrap();
+        let fs = FeatureStore::open(&paths, layout, 400, arr.clone()).unwrap();
+        assert!(!gs.remap().is_identity());
+        for b in 0..gn {
+            assert_eq!(
+                gs.read_block_raw_uncharged(BlockId(b)).unwrap(),
+                ref_graph[b as usize],
+                "graph block {b}"
+            );
+        }
+        for b in 0..fn_ {
+            assert_eq!(
+                fs.read_block_raw_uncharged(BlockId(b)).unwrap(),
+                ref_feat[b as usize],
+                "feature block {b}"
+            );
+        }
+        // adjacency and per-node features still decode correctly
+        for v in (0..400u32).step_by(23) {
+            assert_eq!(gs.read_adjacency_uncharged(v).unwrap(), g.neighbors(v), "node {v}");
+            assert_eq!(fs.read_feature_uncharged(v).unwrap(), synth_feature(v, 16, 9));
+        }
+        // block charges land on the shard owning the PHYSICAL position:
+        // logical 0 now lives at physical gn-1
+        let want_shard = gs.stripe_map().shard_of(gn - 1) as usize;
+        let before = arr.per_shard_stats()[want_shard].num_requests;
+        gs.charge_block(BlockId(0), 2048, 1);
+        assert_eq!(arr.per_shard_stats()[want_shard].num_requests, before + 1);
+    }
+
+    #[test]
+    fn mismatched_remap_is_rejected_at_open() {
+        use crate::graph::layout::BlockRemap;
+        use crate::graph::reorder::LayoutPolicy;
+        use crate::storage::builder::LayoutMeta;
+        let (_d, paths, _g) = setup();
+        LayoutMeta {
+            policy: LayoutPolicy::Degree,
+            graph: BlockRemap::from_to_physical(vec![1, 0]).unwrap(), // wrong size
+            feature: BlockRemap::Identity,
+        }
+        .write(&paths)
+        .unwrap();
+        assert!(GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).is_err());
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! the seed for reproduction).
 
 use agnes::graph::generate::{chung_lu, PowerLawParams};
-use agnes::graph::layout::{bfs_order, degree_order, shuffle_order, StripeMap};
+use agnes::graph::layout::{bfs_order, degree_order, shuffle_order, BlockRemap, StripeMap};
+use agnes::graph::reorder::{optimize_block_layout, AccessTrace, LayoutPolicy};
 use agnes::graph::CsrGraph;
 use agnes::memory::BufferPool;
 use agnes::op::bucket::Bucket;
@@ -374,6 +375,146 @@ fn prop_single_shard_charges_match_prerefactor_model() {
         assert_eq!(l.total_bytes, s.total_bytes, "case {case}");
         assert_eq!(l.size_hist, s.size_hist, "case {case}");
         assert_eq!(l.bytes_hist, s.bytes_hist, "case {case}");
+    }
+}
+
+/// Random access trace over `n` blocks for the layout-optimizer
+/// properties.
+fn random_trace(rng: &mut Rng, n: u32) -> AccessTrace {
+    let hbs = 1 + rng.gen_range(5);
+    AccessTrace {
+        hyperbatches: (0..hbs)
+            .map(|_| {
+                let mut counts: std::collections::BTreeMap<u32, u64> =
+                    std::collections::BTreeMap::new();
+                for _ in 0..rng.gen_range(100) {
+                    // some ids deliberately past the range: must be ignored
+                    *counts.entry(rng.gen_range(n as usize + 8) as u32).or_insert(0) +=
+                        1 + rng.gen_range(7) as u64;
+                }
+                counts.into_iter().collect()
+            })
+            .collect(),
+    }
+}
+
+/// Property: every `BlockRemap` the layout optimizer produces — any
+/// policy, trace, block count, and stripe geometry — is a bijection over
+/// the block range, survives its JSON persistence round trip, and maps
+/// out-of-range ids through unchanged.
+#[test]
+fn prop_block_remap_is_a_bijection_over_the_block_range() {
+    for case in 0..16u64 {
+        let mut rng = Rng::seed_from_u64(1100 + case);
+        let n = 1 + rng.gen_range(300) as u32;
+        let map = StripeMap::new(1 + rng.gen_range(32) as u32, 1 + rng.gen_range(4) as u32);
+        let trace = random_trace(&mut rng, n);
+        for policy in [LayoutPolicy::None, LayoutPolicy::Degree, LayoutPolicy::Hyperbatch] {
+            let remap = optimize_block_layout(policy, &trace, n, map).unwrap();
+            let tag = format!("case {case} policy {policy} n {n}");
+            if policy == LayoutPolicy::None {
+                assert!(remap.is_identity(), "{tag}");
+            }
+            // bijection: physical ids hit every position exactly once
+            let mut seen = vec![false; n as usize];
+            for b in 0..n {
+                let p = remap.physical(BlockId(b));
+                assert!(p.0 < n, "{tag}: physical {p} out of range");
+                assert!(!seen[p.0 as usize], "{tag}: physical {p} hit twice");
+                seen[p.0 as usize] = true;
+                assert_eq!(remap.logical(p), BlockId(b), "{tag}: inverse broken at {b}");
+            }
+            // persistence roundtrip
+            let back = BlockRemap::from_json(&remap.to_json()).unwrap();
+            assert_eq!(back, remap, "{tag}");
+            // ids past the range pass through (phantom reads stay phantom)
+            assert_eq!(remap.physical(BlockId(n + 3)), BlockId(n + 3), "{tag}");
+        }
+    }
+}
+
+/// Property: translating a logical block set through any remap and
+/// planning the striped physical runs still covers every requested
+/// physical block exactly once, with no run straddling a stripe
+/// boundary — the engine's remapped read path rests on exactly this.
+#[test]
+fn prop_remapped_striped_plans_cover_every_block_once_without_straddling() {
+    for case in 0..16u64 {
+        let mut rng = Rng::seed_from_u64(1200 + case);
+        let n = 1 + rng.gen_range(300) as u32;
+        let map = StripeMap::new(1 + rng.gen_range(16) as u32, 1 + rng.gen_range(4) as u32);
+        let trace = random_trace(&mut rng, n);
+        let remap =
+            optimize_block_layout(LayoutPolicy::Hyperbatch, &trace, n, map).unwrap();
+        let block_size = [512usize, 4096][rng.gen_range(2)];
+        let planner = IoPlanner::new(
+            [block_size, 8 * block_size, 1 << 20][rng.gen_range(3)],
+            rng.gen_range(3) as u32,
+        );
+        let logical: BTreeSet<u32> =
+            (0..rng.gen_range(150)).map(|_| rng.gen_range(n as usize) as u32).collect();
+        // what the engine does: translate, sort, dedup, plan striped
+        let mut phys: Vec<BlockId> =
+            logical.iter().map(|&b| remap.physical(BlockId(b))).collect();
+        phys.sort_unstable();
+        phys.dedup();
+        assert_eq!(phys.len(), logical.len(), "case {case}: remap must not alias blocks");
+        let runs = planner.plan_striped(&phys, block_size, map);
+        let tag = format!("case {case} n {n}");
+        let requested: BTreeSet<u32> = phys.iter().map(|b| b.0).collect();
+        let covered: Vec<u32> = runs.iter().flat_map(|r| r.start.0..r.end()).collect();
+        let covered_set: BTreeSet<u32> = covered.iter().copied().collect();
+        assert_eq!(covered.len(), covered_set.len(), "{tag}: physical block covered twice");
+        for &b in &requested {
+            assert!(covered_set.contains(&b), "{tag}: requested physical {b} not covered");
+        }
+        for r in &runs {
+            assert!(
+                r.end() <= map.stripe_end(r.start.0),
+                "{tag}: run {r:?} straddles a shard boundary"
+            );
+        }
+        // translating covered physical ids back to logical reaches every
+        // requested logical block exactly once
+        let logical_back: BTreeSet<u32> = covered_set
+            .iter()
+            .map(|&p| remap.logical(BlockId(p)).0)
+            .filter(|b| logical.contains(b))
+            .collect();
+        assert_eq!(logical_back, logical, "{tag}: logical coverage broken");
+    }
+}
+
+/// Property: gather and sample results under `degree` / `hyperbatch`
+/// storage layouts are bit-identical to the `none` layout — same loss
+/// path inputs (feature bytes per node), same sampled trees — for the
+/// full epoch driver on the tiny dataset.
+#[test]
+fn prop_optimized_layouts_are_bit_identical_to_none() {
+    use agnes::config::AgnesConfig;
+    use agnes::coordinator::NullCompute;
+    use agnes::AgnesRunner;
+    let tmp = TempDir::new().unwrap();
+    let mut base = AgnesConfig::tiny();
+    base.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+    base.dataset.layout = agnes::graph::layout::Layout::Shuffle;
+    base.io.block_size = 4 << 10;
+    base.memory.graph_buffer_bytes = 128 << 10;
+    base.memory.feature_buffer_bytes = 128 << 10;
+    base.device.num_ssds = 4;
+    let run = |policy: LayoutPolicy| {
+        let mut c = base.clone();
+        c.layout.policy = policy;
+        let mut r = AgnesRunner::open(c).unwrap();
+        let res = r.run_epoch(0, &mut NullCompute).unwrap();
+        // per-node feature bytes: total gathered features and the
+        // device-visible byte count both pin the gather output shape
+        (res.mean_loss.to_bits(), res.accuracy.to_bits(), res.metrics.gathered_features,
+         res.metrics.sampled_nodes)
+    };
+    let none = run(LayoutPolicy::None);
+    for policy in [LayoutPolicy::Degree, LayoutPolicy::Hyperbatch] {
+        assert_eq!(run(policy), none, "{policy} diverged from the none layout");
     }
 }
 
