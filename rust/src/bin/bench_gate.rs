@@ -1,7 +1,8 @@
 //! Benchmark regression gate.
 //!
 //! CI runs the bench smokes (`fig2_breakdown`, `fig11_bandwidth`,
-//! `ablation_layout` in their tiny modes), which emit machine-readable
+//! `ablation_layout`, `fig10_sensitivity` in their tiny modes), which
+//! emit machine-readable
 //! `BENCH_*.json` records under `rust/target/bench_results/`. This binary
 //! compares those records against the **committed baselines** in
 //! `bench_baselines/*.json` and exits nonzero on regression, so a perf
@@ -60,6 +61,9 @@ const NUMERIC_KEYS: &[&str] = &[
     "achieved_bw_gbps_4ssd",
     "effective_gap_blocks",
     "storage_s",
+    "gather_storage_s",
+    "reactive_hit_rate",
+    "belady_hit_rate",
 ];
 /// String leaf keys gated exactly (f32 bit patterns).
 const EXACT_KEYS: &[&str] = &["loss_bits"];

@@ -7,6 +7,7 @@
 
 use crate::graph::layout::Layout;
 use crate::graph::reorder::LayoutPolicy;
+use crate::memory::trace::CachePolicy;
 use crate::storage::device::SsdSpec;
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -225,6 +226,20 @@ pub struct LayoutConfig {
     pub trace_hyperbatches: usize,
 }
 
+/// Eviction-policy knobs for the feature cache and buffer pools
+/// (`[cache]` — see [`crate::memory::trace`]). Orthogonal to the
+/// `[memory]` *budgets*: this decides what the budgeted space holds.
+#[derive(Debug, Clone, Default)]
+pub struct CacheConfig {
+    /// `reactive` (default — bit-for-bit the historical access-count /
+    /// LRU policies) or `belady` (record epoch 0's access trace live,
+    /// then evict the entry whose next use is farthest in the future —
+    /// "warmup-then-optimal"). Training values are bit-identical across
+    /// policies under a fixed seed; only residency and modeled I/O time
+    /// change.
+    pub policy: CachePolicy,
+}
+
 /// Memory budgets (paper §4.1 settings, scaled).
 #[derive(Debug, Clone)]
 pub struct MemoryConfig {
@@ -317,6 +332,7 @@ pub struct AgnesConfig {
     pub device: DeviceConfig,
     pub io: IoConfig,
     pub layout: LayoutConfig,
+    pub cache: CacheConfig,
     pub memory: MemoryConfig,
     pub train: TrainConfig,
 }
@@ -426,6 +442,7 @@ impl AgnesConfig {
             ("io", "stripe_blocks") => self.io.stripe_blocks = p(value)?,
             ("layout", "policy") => self.layout.policy = value.parse()?,
             ("layout", "trace_hyperbatches") => self.layout.trace_hyperbatches = p(value)?,
+            ("cache", "policy") => self.cache.policy = value.parse()?,
             ("memory", "graph_buffer_bytes") => self.memory.graph_buffer_bytes = p(value)?,
             ("memory", "feature_buffer_bytes") => self.memory.feature_buffer_bytes = p(value)?,
             ("memory", "feature_cache_entries") => self.memory.feature_cache_entries = p(value)?,
@@ -480,6 +497,8 @@ impl AgnesConfig {
         w("\n[layout]");
         w(&format!("policy = \"{}\"", self.layout.policy));
         w(&format!("trace_hyperbatches = {}", self.layout.trace_hyperbatches));
+        w("\n[cache]");
+        w(&format!("policy = \"{}\"", self.cache.policy));
         w("\n[memory]");
         w(&format!("graph_buffer_bytes = {}", self.memory.graph_buffer_bytes));
         w(&format!("feature_buffer_bytes = {}", self.memory.feature_buffer_bytes));
@@ -505,7 +524,9 @@ impl AgnesConfig {
     /// executor is exercised beyond the defaults); `AGNES_NUM_SSDS`,
     /// `AGNES_STRIPE_BLOCKS` and `AGNES_GAP_BLOCKS` re-shard the storage
     /// backend the same way; `AGNES_LAYOUT_POLICY` and
-    /// `AGNES_TRACE_HYPERBATCHES` re-run the storage layout optimizer.
+    /// `AGNES_TRACE_HYPERBATCHES` re-run the storage layout optimizer;
+    /// `AGNES_CACHE_POLICY` switches the eviction policy
+    /// (reactive | belady).
     /// Applied by [`Self::tiny`] (tests) and
     /// [`crate::util::bench::bench_config`] (fig benches); the CLI takes
     /// the equivalent flags instead.
@@ -571,6 +592,12 @@ impl AgnesConfig {
                     self.layout.trace_hyperbatches = t
                 }
                 _ => eprintln!("ignoring invalid AGNES_TRACE_HYPERBATCHES={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_CACHE_POLICY") {
+            match v.trim().parse::<CachePolicy>() {
+                Ok(p) => self.cache.policy = p,
+                _ => eprintln!("ignoring invalid AGNES_CACHE_POLICY={v:?}"),
             }
         }
     }
@@ -745,6 +772,7 @@ mod tests {
         assert_eq!(c.io.effective_stripe_blocks(), 1, "1 MiB request in 1 MiB blocks");
         assert_eq!(c.layout.policy, LayoutPolicy::None);
         assert_eq!(c.layout.trace_hyperbatches, 0);
+        assert_eq!(c.cache.policy, CachePolicy::Reactive);
         assert_eq!(c.train.fanouts, vec![10, 10, 10]);
     }
 
@@ -895,6 +923,38 @@ mod tests {
         ]));
         assert_eq!(c.layout.policy, LayoutPolicy::Degree, "invalid policy override ignored");
         assert_eq!(c.layout.trace_hyperbatches, 16, "out-of-range cap override ignored");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn cache_section_parses_and_roundtrips() {
+        let c = AgnesConfig::from_toml_str("[cache]\npolicy = \"belady\"\n").unwrap();
+        assert_eq!(c.cache.policy, CachePolicy::Belady);
+        c.validate().unwrap();
+        let back = AgnesConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.cache.policy, CachePolicy::Belady);
+        // default: reactive (bit-for-bit historical policies)
+        assert_eq!(AgnesConfig::default().cache.policy, CachePolicy::Reactive);
+        assert_eq!(AgnesConfig::tiny().cache.policy, CachePolicy::Reactive);
+        // bad values fail loudly
+        assert!(AgnesConfig::from_toml_str("[cache]\npolicy = \"optimal\"\n").is_err());
+    }
+
+    #[test]
+    fn cache_env_override_applies_and_rejects_garbage() {
+        let vars = |pairs: &[(&str, &str)]| {
+            let m: std::collections::HashMap<String, String> =
+                pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+            move |name: &str| m.get(name).cloned()
+        };
+        let mut c = AgnesConfig::default();
+        c.apply_overrides_from(vars(&[("AGNES_CACHE_POLICY", "belady")]));
+        assert_eq!(c.cache.policy, CachePolicy::Belady);
+        c.validate().unwrap();
+        c.apply_overrides_from(vars(&[("AGNES_CACHE_POLICY", "bogus")]));
+        assert_eq!(c.cache.policy, CachePolicy::Belady, "invalid override ignored");
+        c.apply_overrides_from(vars(&[("AGNES_CACHE_POLICY", "Reactive")]));
+        assert_eq!(c.cache.policy, CachePolicy::Reactive, "case-insensitive spelling lands");
         c.validate().unwrap();
     }
 

@@ -24,6 +24,9 @@
 //!                          and rotating hot blocks across shards)
 //!   --trace-hyperbatches <n> cap on hyperbatches sampled into the layout
 //!                          trace (hyperbatch policy; 0 = whole epoch 0)
+//!   --cache-policy <p>     feature-cache/buffer eviction: reactive | belady
+//!                          (belady records epoch 0, then follows the
+//!                          precomputed farthest-next-use schedule)
 //!   --hyperbatch <n>       minibatches per hyperbatch
 //!   --minibatch <n>        targets per minibatch
 //!   --pipeline-depth <n>   in-flight hyperbatches (0/1 = sequential)
@@ -40,9 +43,10 @@
 
 use agnes::baselines::{GinexRunner, GnnDriveRunner, MariusRunner, OutreRunner, TrainingSystem};
 use agnes::config::{AgnesConfig, GapBlocks, GnnModel};
-use agnes::graph::reorder::LayoutPolicy;
 use agnes::coordinator::{prepare_dataset, ModeledCompute, NullCompute};
 use agnes::graph::datasets::DatasetSpec;
+use agnes::graph::reorder::LayoutPolicy;
+use agnes::memory::CachePolicy;
 use agnes::metrics::{fmt_bytes, fmt_ns};
 use agnes::runtime::{ArtifactPaths, XlaCompute};
 use agnes::AgnesRunner;
@@ -153,6 +157,9 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(t) = args.get::<usize>("trace-hyperbatches")? {
         c.layout.trace_hyperbatches = t;
     }
+    if let Some(p) = args.get::<CachePolicy>("cache-policy")? {
+        c.cache.policy = p;
+    }
     if let Some(h) = args.get::<usize>("hyperbatch")? {
         c.train.hyperbatch_size = h;
     }
@@ -221,6 +228,19 @@ fn run_system(
             m.effective_gap_blocks,
             if m.layout_policy.is_empty() { "none" } else { &m.layout_policy },
             fmt_bytes(m.device.achieved_bandwidth() as u64),
+        );
+        println!(
+            "         cache[{}]: graph {:.1}% hit ({} hit / {} miss, {} evict), \
+             feature {:.1}% hit ({} hit / {} miss, {} evict)",
+            if m.cache_policy.is_empty() { "reactive" } else { &m.cache_policy },
+            m.graph_cache_hit_rate() * 100.0,
+            m.graph_cache_hits,
+            m.graph_cache_misses,
+            m.graph_cache_evictions,
+            m.feature_cache_hit_rate() * 100.0,
+            m.feature_cache_hits,
+            m.feature_cache_misses,
+            m.feature_cache_evictions,
         );
         if m.num_shards() > 1 {
             println!(

@@ -9,8 +9,17 @@
 //! The pool is generic over the cached value (decoded [`GraphBlock`]s for
 //! the graph buffer, raw bytes for the feature buffer) and doubles as the
 //! buffer index table `T_buf` — `get` *is* the table lookup.
+//!
+//! Under `cache.policy = belady` ([`super::trace`]) a precomputed
+//! schedule replaces LRU victim selection: the evicted frame is the
+//! unpinned one whose next scheduled use is farthest in the future
+//! (ties broken oldest-LRU-first, which keeps bridged-gap padding blocks
+//! — inserted first, never in the trace — the preferred victims). With no
+//! schedule installed the pool is bit-for-bit the LRU it always was.
 
+use super::trace::{AccessLog, BeladySchedule, ScheduleCursor, TraceRecorder};
 use crate::storage::BlockId;
+use std::cmp::Reverse;
 use std::collections::HashMap;
 use std::sync::Arc;
 
@@ -40,6 +49,8 @@ struct Frame<V> {
     pin_count: u32,
     /// LRU timestamp (monotone counter).
     last_used: u64,
+    /// Next scheduled use (meaningful only when a schedule is installed).
+    next_use: u64,
 }
 
 /// An LRU block buffer with per-block pin counts. Capacity is in blocks
@@ -50,12 +61,60 @@ pub struct BufferPool<V> {
     frames: HashMap<BlockId, Frame<V>>,
     clock: u64,
     stats: PoolStats,
+    recorder: TraceRecorder<BlockId>,
+    cursor: Option<ScheduleCursor<BlockId>>,
 }
 
 impl<V> BufferPool<V> {
     pub fn new(capacity: usize) -> BufferPool<V> {
         assert!(capacity >= 1, "buffer needs at least one frame");
-        BufferPool { capacity, frames: HashMap::with_capacity(capacity), clock: 0, stats: PoolStats::default() }
+        BufferPool {
+            capacity,
+            frames: HashMap::with_capacity(capacity),
+            clock: 0,
+            stats: PoolStats::default(),
+            recorder: TraceRecorder::new(),
+            cursor: None,
+        }
+    }
+
+    /// Start recording the access trace (see [`super::trace`]); stays on.
+    pub fn start_recording(&mut self) {
+        self.recorder.enable();
+    }
+
+    /// Open hyperbatch `h` for both the recorder and (if installed) the
+    /// schedule cursor.
+    pub fn begin_hyperbatch(&mut self, h: usize) {
+        self.recorder.begin_hyperbatch(h);
+        if let Some(c) = &mut self.cursor {
+            c.begin_hyperbatch(h);
+        }
+    }
+
+    /// Drain the recorded access log (empty unless recording).
+    pub fn take_log(&mut self) -> AccessLog<BlockId> {
+        self.recorder.take()
+    }
+
+    /// Switch victim selection to the given Belady schedule, starting at
+    /// position 0. Resident frames are re-keyed by their next scheduled
+    /// use.
+    pub fn install_schedule(&mut self, schedule: BeladySchedule<BlockId>) {
+        let cursor = ScheduleCursor::new(schedule);
+        for (b, f) in self.frames.iter_mut() {
+            f.next_use = cursor.peek_next_use(b);
+        }
+        self.cursor = Some(cursor);
+    }
+
+    /// Drop any partial trace and rewind an installed schedule to position
+    /// 0 (bench pass boundaries); recording stays enabled.
+    pub fn restart_trace(&mut self) {
+        self.recorder.restart();
+        if let Some(c) = &mut self.cursor {
+            c.rewind();
+        }
     }
 
     pub fn capacity(&self) -> usize {
@@ -82,9 +141,14 @@ impl<V> BufferPool<V> {
     /// Counts a hit or miss.
     pub fn get(&mut self, b: BlockId) -> Option<Arc<V>> {
         self.clock += 1;
+        self.recorder.record(b);
+        let next = self.cursor.as_mut().map(|c| c.on_access(&b));
         match self.frames.get_mut(&b) {
             Some(f) => {
                 f.last_used = self.clock;
+                if let Some(n) = next {
+                    f.next_use = n;
+                }
                 self.stats.hits += 1;
                 Some(f.value.clone())
             }
@@ -124,12 +188,24 @@ impl<V> BufferPool<V> {
         }
         let mut evicted = None;
         if self.frames.len() >= self.capacity {
-            let victim = self
-                .frames
-                .iter()
-                .filter(|(_, f)| f.pin_count == 0)
-                .min_by_key(|(_, f)| f.last_used)
-                .map(|(&id, _)| id);
+            // belady: farthest next use, oldest-LRU tie-break (unique
+            // last_used makes the choice deterministic and keeps padding
+            // blocks — never in the trace, inserted first — the preferred
+            // victims). Reactive: plain LRU.
+            let victim = match &self.cursor {
+                Some(_) => self
+                    .frames
+                    .iter()
+                    .filter(|(_, f)| f.pin_count == 0)
+                    .max_by_key(|(_, f)| (f.next_use, Reverse(f.last_used)))
+                    .map(|(&id, _)| id),
+                None => self
+                    .frames
+                    .iter()
+                    .filter(|(_, f)| f.pin_count == 0)
+                    .min_by_key(|(_, f)| f.last_used)
+                    .map(|(&id, _)| id),
+            };
             match victim {
                 Some(id) => {
                     self.frames.remove(&id);
@@ -141,7 +217,11 @@ impl<V> BufferPool<V> {
                 }
             }
         }
-        self.frames.insert(b, Frame { value, pin_count: 0, last_used: self.clock });
+        let next_use = match &self.cursor {
+            Some(c) => c.peek_next_use(&b),
+            None => 0,
+        };
+        self.frames.insert(b, Frame { value, pin_count: 0, last_used: self.clock, next_use });
         evicted
     }
 
@@ -250,5 +330,69 @@ mod tests {
         p.insert(BlockId(1), Arc::new(99));
         assert_eq!(*p.get(BlockId(1)).unwrap(), 99);
         assert_eq!(p.len(), 1);
+    }
+
+    #[test]
+    fn belady_pool_evicts_farthest_next_use() {
+        // trace 1 2 3 1: block 2 is never reused — belady must evict it,
+        // while LRU would have evicted 1 (the block that is reused)
+        let mut p = pool(2);
+        p.start_recording();
+        for b in [1u32, 2, 3, 1] {
+            p.get(BlockId(b));
+        }
+        let log = p.take_log();
+        p.install_schedule(BeladySchedule::build(&log));
+        p.begin_hyperbatch(0);
+        assert!(p.get(BlockId(1)).is_none());
+        p.insert(BlockId(1), Arc::new(1));
+        assert!(p.get(BlockId(2)).is_none());
+        p.insert(BlockId(2), Arc::new(2));
+        assert!(p.get(BlockId(3)).is_none());
+        let evicted = p.insert(BlockId(3), Arc::new(3));
+        assert_eq!(evicted, Some(BlockId(2)), "the dead block is the victim");
+        assert!(p.get(BlockId(1)).is_some(), "the reused block survived");
+    }
+
+    #[test]
+    fn belady_prefers_oldest_on_next_use_ties() {
+        // frames absent from the trace tie at next_use = MAX; the oldest
+        // insert (padding blocks land first) must be the victim
+        let mut p = pool(2);
+        let log = AccessLog { hyperbatches: vec![vec![BlockId(1)]] };
+        p.install_schedule(BeladySchedule::build(&log));
+        p.insert(BlockId(8), Arc::new(8));
+        p.insert(BlockId(9), Arc::new(9));
+        let evicted = p.insert(BlockId(1), Arc::new(1));
+        assert_eq!(evicted, Some(BlockId(8)));
+    }
+
+    #[test]
+    fn belady_respects_pins() {
+        let mut p = pool(2);
+        let log = AccessLog { hyperbatches: vec![vec![BlockId(1)]] };
+        p.install_schedule(BeladySchedule::build(&log));
+        p.insert(BlockId(5), Arc::new(5));
+        p.insert(BlockId(6), Arc::new(6));
+        p.pin(BlockId(5));
+        let evicted = p.insert(BlockId(1), Arc::new(1));
+        assert_eq!(evicted, Some(BlockId(6)), "pinned frame survives even at equal next use");
+    }
+
+    #[test]
+    fn restart_trace_rewinds_schedule() {
+        let mut p = pool(2);
+        p.start_recording();
+        for b in [1u32, 2, 1] {
+            p.get(BlockId(b));
+        }
+        let log = p.take_log();
+        p.install_schedule(BeladySchedule::build(&log));
+        p.get(BlockId(1)); // advances the cursor past position 0
+        p.restart_trace();
+        // after rewind the first position is live again
+        p.insert(BlockId(1), Arc::new(1));
+        p.get(BlockId(1));
+        assert!(p.take_log().total() > 0, "recording stays on across restart");
     }
 }

@@ -12,7 +12,17 @@
 //! eviction index so admission and eviction are O(log n) — the original
 //! O(capacity) eviction scan was the top bottleneck of the gather hot path
 //! (EXPERIMENTS.md §Perf).
+//!
+//! Under `cache.policy = belady` ([`super::trace`]) the reactive
+//! count-threshold rules are replaced by a precomputed Belady/MIN
+//! schedule: `get` advances a [`ScheduleCursor`], eviction picks the
+//! resident vector whose next use is farthest in the future (a second
+//! ordered index keyed by next use), and admission bypasses the count
+//! threshold — a vector is admitted iff its next use comes sooner than
+//! the current farthest resident's. With no schedule installed (warmup
+//! epoch) behavior is bit-for-bit the reactive policy.
 
+use super::trace::{AccessLog, BeladySchedule, ScheduleCursor, TraceRecorder};
 use std::collections::{BTreeSet, HashMap};
 
 /// Cache statistics.
@@ -39,6 +49,18 @@ struct Entry {
     feature: Vec<f32>,
     /// This entry's current key in the eviction index.
     key: (u32, u64),
+    /// This entry's current key in the Belady index (meaningful only when
+    /// a schedule is installed).
+    next_use: u64,
+}
+
+/// Schedule-driven eviction state, present once a Belady schedule has
+/// been installed.
+struct BeladyState {
+    cursor: ScheduleCursor<u32>,
+    /// Eviction order: (next_use, node) ascending — the *last* element is
+    /// the resident whose next use is farthest in the future.
+    index: BTreeSet<(u64, u32)>,
 }
 
 /// Access-count-threshold feature cache.
@@ -54,6 +76,8 @@ pub struct FeatureCache {
     evict_index: BTreeSet<(u32, u64, u32)>,
     clock: u64,
     stats: FeatureCacheStats,
+    recorder: TraceRecorder<u32>,
+    belady: Option<BeladyState>,
 }
 
 impl FeatureCache {
@@ -66,6 +90,56 @@ impl FeatureCache {
             evict_index: BTreeSet::new(),
             clock: 0,
             stats: FeatureCacheStats::default(),
+            recorder: TraceRecorder::new(),
+            belady: None,
+        }
+    }
+
+    /// Start recording the access trace (see [`super::trace`]); stays on.
+    pub fn start_recording(&mut self) {
+        self.recorder.enable();
+    }
+
+    /// Open hyperbatch `h` for both the recorder and (if installed) the
+    /// schedule cursor.
+    pub fn begin_hyperbatch(&mut self, h: usize) {
+        self.recorder.begin_hyperbatch(h);
+        if let Some(b) = &mut self.belady {
+            b.cursor.begin_hyperbatch(h);
+        }
+    }
+
+    /// Drain the recorded access log (empty unless recording).
+    pub fn take_log(&mut self) -> AccessLog<u32> {
+        self.recorder.take()
+    }
+
+    /// Switch eviction to the given Belady schedule, starting at position
+    /// 0. Current residents are re-keyed by their next scheduled use.
+    pub fn install_schedule(&mut self, schedule: BeladySchedule<u32>) {
+        let cursor = ScheduleCursor::new(schedule);
+        let mut index = BTreeSet::new();
+        for (&v, e) in self.resident.iter_mut() {
+            e.next_use = cursor.peek_next_use(&v);
+            index.insert((e.next_use, v));
+        }
+        self.belady = Some(BeladyState { cursor, index });
+    }
+
+    /// Zero counters, residents, and any partial trace, preserving the
+    /// recording flag and an installed schedule (bench pass boundaries).
+    pub fn reset(&mut self, capacity: usize, threshold: u32) {
+        self.capacity = capacity;
+        self.threshold = threshold;
+        self.counts.clear();
+        self.resident.clear();
+        self.evict_index.clear();
+        self.clock = 0;
+        self.stats = FeatureCacheStats::default();
+        self.recorder.restart();
+        if let Some(b) = &mut self.belady {
+            b.cursor.rewind();
+            b.index.clear();
         }
     }
 
@@ -95,6 +169,7 @@ impl FeatureCache {
     /// miss (caller fetches from the feature store and calls [`Self::fill`]).
     pub fn get(&mut self, v: u32) -> Option<&[f32]> {
         self.clock += 1;
+        self.recorder.record(v);
         let count = {
             let c = self.counts.entry(v).or_insert(0);
             *c += 1;
@@ -112,9 +187,17 @@ impl FeatureCache {
                 e.key = (count, self.clock);
                 self.evict_index.insert((count, self.clock, v));
             }
+            if let Some(b) = &mut self.belady {
+                b.index.remove(&(e.next_use, v));
+                e.next_use = b.cursor.on_access(&v);
+                b.index.insert((e.next_use, v));
+            }
             Some(&e.feature)
         } else {
             self.stats.misses += 1;
+            if let Some(b) = &mut self.belady {
+                b.cursor.on_access(&v);
+            }
             None
         }
     }
@@ -124,6 +207,23 @@ impl FeatureCache {
     pub fn wants(&self, v: u32) -> bool {
         if self.capacity == 0 || self.resident.contains_key(&v) {
             return false;
+        }
+        if let Some(b) = &self.belady {
+            // Belady admission bypasses the count threshold: admit iff the
+            // vector is used again, and (at capacity) sooner than the
+            // resident whose next use is farthest away
+            let next = b.cursor.peek_next_use(&v);
+            if next == u64::MAX {
+                return false;
+            }
+            return if self.resident.len() >= self.capacity {
+                match b.index.iter().next_back() {
+                    Some(&(victim_next, _)) => next < victim_next,
+                    None => false,
+                }
+            } else {
+                true
+            };
         }
         let count = self.count(v);
         if count < self.threshold {
@@ -148,7 +248,16 @@ impl FeatureCache {
             return;
         }
         if self.resident.len() >= self.capacity {
-            if let Some(&(c, u, victim)) = self.evict_index.iter().next() {
+            if let Some(b) = &mut self.belady {
+                // farthest-next-use victim (both indexes stay in sync)
+                if let Some(&(n, victim)) = b.index.iter().next_back() {
+                    b.index.remove(&(n, victim));
+                    if let Some(e) = self.resident.remove(&victim) {
+                        self.evict_index.remove(&(e.key.0, e.key.1, victim));
+                    }
+                    self.stats.evictions += 1;
+                }
+            } else if let Some(&(c, u, victim)) = self.evict_index.iter().next() {
                 self.evict_index.remove(&(c, u, victim));
                 self.resident.remove(&victim);
                 self.stats.evictions += 1;
@@ -157,7 +266,15 @@ impl FeatureCache {
         self.clock += 1;
         let key = (self.count(v), self.clock);
         self.evict_index.insert((key.0, key.1, v));
-        self.resident.insert(v, Entry { feature, key });
+        let next_use = match &mut self.belady {
+            Some(b) => {
+                let n = b.cursor.peek_next_use(&v);
+                b.index.insert((n, v));
+                n
+            }
+            None => 0,
+        };
+        self.resident.insert(v, Entry { feature, key, next_use });
         self.stats.admissions += 1;
     }
 
@@ -165,6 +282,9 @@ impl FeatureCache {
     pub fn clear_resident(&mut self) {
         self.resident.clear();
         self.evict_index.clear();
+        if let Some(b) = &mut self.belady {
+            b.index.clear();
+        }
     }
 }
 
@@ -273,6 +393,109 @@ mod tests {
         assert_eq!(c.evict_index.len(), c.resident.len());
         // every resident has a matching index entry
         for (&v, e) in &c.resident {
+            assert!(c.evict_index.contains(&(e.key.0, e.key.1, v)), "node {v} key desync");
+        }
+    }
+
+    /// Replay a trace through the cache: every miss offers a fill.
+    fn replay(c: &mut FeatureCache, hbs: &[&[u32]]) {
+        for (h, hb) in hbs.iter().enumerate() {
+            c.begin_hyperbatch(h);
+            for &v in *hb {
+                if c.get(v).is_none() {
+                    c.fill(v, f(v));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn belady_evicts_farthest_next_use() {
+        // capacity 2, trace: 1 2 3 1 2 — on filling 3, reactive-LFU would
+        // keep whichever is coldest; belady must evict 3's worst rival:
+        // the victim whose next use is farthest (none reused later than 3?
+        // here 3 is never reused, so 3 itself must NOT displace 1 or 2)
+        let trace: &[&[u32]] = &[&[1, 2, 3, 1, 2]];
+        let mut c = FeatureCache::new(2, 1);
+        c.start_recording();
+        replay(&mut c, trace); // warmup records
+        let log = c.take_log();
+        let mut c2 = FeatureCache::new(2, 1);
+        c2.install_schedule(crate::memory::trace::BeladySchedule::build(&log));
+        replay(&mut c2, trace);
+        // 3 is never reused → bypassed; 1 and 2 hit on their second use
+        let s = c2.stats();
+        assert_eq!(s.hits, 2, "belady must keep 1 and 2 resident");
+        assert_eq!(s.evictions, 0, "the dead vector is never admitted");
+    }
+
+    #[test]
+    fn belady_beats_reactive_on_phase_change() {
+        // phase change: hot working set A (0..8) goes dead, B (50..58)
+        // takes over. Count-based admission keeps A until B's counts
+        // out-grow it; belady sees A's next use is never and admits B at
+        // its first access
+        let mut hb1: Vec<u32> = Vec::new();
+        let mut hb2: Vec<u32> = Vec::new();
+        for _ in 0..5 {
+            hb1.extend(0..8u32);
+            hb2.extend(50..58u32);
+        }
+        let trace: Vec<&[u32]> = vec![&hb1, &hb2];
+        let mut reactive = FeatureCache::new(8, 1);
+        replay(&mut reactive, &trace);
+        let mut warm = FeatureCache::new(8, 1);
+        warm.start_recording();
+        replay(&mut warm, &trace);
+        let log = warm.take_log();
+        let mut belady = FeatureCache::new(8, 1);
+        belady.install_schedule(crate::memory::trace::BeladySchedule::build(&log));
+        replay(&mut belady, &trace);
+        assert!(
+            belady.stats().hit_ratio() > reactive.stats().hit_ratio(),
+            "belady {:?} must beat reactive {:?}",
+            belady.stats(),
+            reactive.stats()
+        );
+    }
+
+    #[test]
+    fn belady_reset_preserves_schedule() {
+        let trace: &[&[u32]] = &[&[4, 5, 4, 5]];
+        let mut c = FeatureCache::new(2, 1);
+        c.start_recording();
+        replay(&mut c, trace);
+        let log = c.take_log();
+        c.install_schedule(crate::memory::trace::BeladySchedule::build(&log));
+        c.reset(2, 1);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats().hits + c.stats().misses, 0);
+        replay(&mut c, trace);
+        assert_eq!(c.stats().hits, 2, "schedule survives reset and replays");
+        assert!(c.take_log().total() > 0, "recording flag survives reset");
+    }
+
+    #[test]
+    fn belady_indexes_stay_in_sync_under_churn() {
+        let mut rng = crate::util::Rng::seed_from_u64(3);
+        let mut hbs: Vec<Vec<u32>> = Vec::new();
+        for _ in 0..4 {
+            hbs.push((0..800).map(|_| rng.gen_range(48) as u32).collect());
+        }
+        let trace: Vec<&[u32]> = hbs.iter().map(|h| &h[..]).collect();
+        let mut c = FeatureCache::new(8, 1);
+        c.start_recording();
+        replay(&mut c, &trace);
+        let log = c.take_log();
+        c.reset(8, 1);
+        c.install_schedule(crate::memory::trace::BeladySchedule::build(&log));
+        replay(&mut c, &trace);
+        assert!(c.len() <= 8);
+        let b = c.belady.as_ref().unwrap();
+        assert_eq!(b.index.len(), c.resident.len());
+        assert_eq!(c.evict_index.len(), c.resident.len());
+        for (&v, e) in &c.resident {
+            assert!(b.index.contains(&(e.next_use, v)), "node {v} belady key desync");
             assert!(c.evict_index.contains(&(e.key.0, e.key.1, v)), "node {v} key desync");
         }
     }

@@ -1,12 +1,15 @@
 //! In-memory layer (paper §3.2 layer 2): graph/feature buffers with their
 //! buffer index tables (`T_buf^g`, `T_buf^f`), the LRU-with-pinning
-//! replacement policy of §3.4 (1), and the access-count-threshold feature
-//! cache (`C_f`, `T_ch^f`) of §3.4 (2).
+//! replacement policy of §3.4 (1), the access-count-threshold feature
+//! cache (`C_f`, `T_ch^f`) of §3.4 (2), and the trace-optimal
+//! (Belady/MIN) eviction machinery of [`trace`].
 
 pub mod buffer_pool;
 pub mod feature_cache;
 pub mod shared;
+pub mod trace;
 
 pub use buffer_pool::{BufferPool, PoolStats};
 pub use feature_cache::{FeatureCache, FeatureCacheStats};
 pub use shared::{SharedBufferPool, SharedFeatureCache};
+pub use trace::{AccessLog, BeladySchedule, CachePolicy, ScheduleCursor, TraceRecorder};

@@ -12,6 +12,7 @@
 
 use super::buffer_pool::{BufferPool, PoolStats};
 use super::feature_cache::{FeatureCache, FeatureCacheStats};
+use super::trace::{AccessLog, BeladySchedule};
 use crate::storage::BlockId;
 use std::sync::{Arc, Mutex, MutexGuard};
 
@@ -104,6 +105,32 @@ impl<V> SharedBufferPool<V> {
     pub fn pinned(&self) -> usize {
         self.lock().pinned()
     }
+
+    /// Start recording the pool's access trace (one lock; the per-access
+    /// recording then rides the guards the sweeps already hold).
+    pub fn start_recording(&self) {
+        self.lock().start_recording()
+    }
+
+    /// Open hyperbatch `h` for the recorder and any installed schedule.
+    pub fn begin_hyperbatch(&self, h: usize) {
+        self.lock().begin_hyperbatch(h)
+    }
+
+    /// Drain the recorded access log.
+    pub fn take_log(&self) -> AccessLog<BlockId> {
+        self.lock().take_log()
+    }
+
+    /// Install a Belady eviction schedule (see [`super::trace`]).
+    pub fn install_schedule(&self, schedule: BeladySchedule<BlockId>) {
+        self.lock().install_schedule(schedule)
+    }
+
+    /// Drop partial traces and rewind the schedule (bench pass boundary).
+    pub fn restart_trace(&self) {
+        self.lock().restart_trace()
+    }
 }
 
 /// A cloneable, thread-safe handle to a [`FeatureCache`].
@@ -135,14 +162,36 @@ impl SharedFeatureCache {
         self.lock().is_empty()
     }
 
-    /// Swap in a fresh cache (epoch/bench counter resets).
+    /// Zero counters and residents (epoch/bench counter resets). The
+    /// recording flag and any installed Belady schedule survive — only the
+    /// reactive/statistical state is wiped.
     pub fn reset(&self, capacity: usize, threshold: u32) {
-        *self.lock() = FeatureCache::new(capacity, threshold);
+        self.lock().reset(capacity, threshold);
     }
 
     /// Drop residents, keep access counts (epoch boundary).
     pub fn clear_resident(&self) {
         self.lock().clear_resident()
+    }
+
+    /// Start recording the cache's access trace.
+    pub fn start_recording(&self) {
+        self.lock().start_recording()
+    }
+
+    /// Open hyperbatch `h` for the recorder and any installed schedule.
+    pub fn begin_hyperbatch(&self, h: usize) {
+        self.lock().begin_hyperbatch(h)
+    }
+
+    /// Drain the recorded access log.
+    pub fn take_log(&self) -> AccessLog<u32> {
+        self.lock().take_log()
+    }
+
+    /// Install a Belady eviction schedule (see [`super::trace`]).
+    pub fn install_schedule(&self, schedule: BeladySchedule<u32>) {
+        self.lock().install_schedule(schedule)
     }
 }
 

@@ -1,0 +1,454 @@
+//! Trace-optimal caching: a shared access-trace recorder and precomputed
+//! Belady/MIN eviction schedules for the feature cache and buffer pools.
+//!
+//! Ginex (PAPERS.md) shows that once storage I/O is block-wise, the
+//! dominant remaining win is *provably-optimal* in-memory caching driven
+//! by the (known, repeating) per-epoch access trace. AGNES already has a
+//! deterministic access sequence per hyperbatch: sampling is seeded
+//! per-slot and gathering sweeps the miss set in a fixed order, so the
+//! block/vector access stream of one epoch predicts the next. This module
+//! turns that stream into eviction decisions:
+//!
+//! 1. [`TraceRecorder`] captures the per-hyperbatch access sequence as it
+//!    happens, inside the cache/pool structures themselves — one branch
+//!    per access when disabled, no extra locking on the hot path (the
+//!    shared-handle mutex the sweeps already hold covers the recorder).
+//!    It is the live counterpart of the *sampled* trace in
+//!    [`crate::graph::reorder::sample_access_trace`]: reorder's trace is a
+//!    structural stand-in used before any epoch runs (block placement);
+//!    this one is the exact stream, used for eviction. Both speak
+//!    per-hyperbatch, so a future self-tuning controller (ROADMAP) can
+//!    consume either.
+//! 2. [`BeladySchedule::build`] turns an [`AccessLog`] into per-key
+//!    ascending global access positions plus per-hyperbatch start
+//!    offsets.
+//! 3. [`ScheduleCursor`] walks the schedule during the next epoch:
+//!    `on_access` advances the global position and returns the key's next
+//!    use ("farthest next use" is the Belady/MIN eviction victim);
+//!    `begin_hyperbatch` re-synchronizes the position at every hyperbatch
+//!    boundary, so a trace that drifts (e.g. the feature-block miss set
+//!    shifts with cache contents) degrades gracefully instead of
+//!    compounding.
+//!
+//! The policy knob ([`CachePolicy`]) is plumbed through `cache.policy` /
+//! `--cache-policy` / `AGNES_CACHE_POLICY`. `reactive` is the bit-for-bit
+//! historical behavior; `belady` records epoch 0 live under reactive
+//! semantics and switches to the precomputed schedule from epoch 1 on
+//! ("warmup-then-optimal"). Either way the *training values* are
+//! identical: caching changes residency and modeled I/O time, never the
+//! gathered bytes (property-tested in the coordinator).
+
+use std::collections::HashMap;
+use std::hash::Hash;
+
+/// Which eviction policy the feature cache and buffer pools run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CachePolicy {
+    /// Historical reactive policies: access-count admission + coldest-first
+    /// eviction for the feature cache, LRU for the buffer pools.
+    #[default]
+    Reactive,
+    /// Belady/MIN: record epoch 0, then evict the entry whose next use is
+    /// farthest in the future according to the previous epoch's trace.
+    Belady,
+}
+
+impl CachePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePolicy::Reactive => "reactive",
+            CachePolicy::Belady => "belady",
+        }
+    }
+
+    pub fn all() -> [CachePolicy; 2] {
+        [CachePolicy::Reactive, CachePolicy::Belady]
+    }
+}
+
+impl std::str::FromStr for CachePolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "reactive" => Ok(CachePolicy::Reactive),
+            "belady" => Ok(CachePolicy::Belady),
+            other => Err(format!("unknown cache policy {other:?} (expected reactive | belady)")),
+        }
+    }
+}
+
+impl std::fmt::Display for CachePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One epoch's recorded access stream, split per hyperbatch. Produced by
+/// [`TraceRecorder::take`], consumed by [`BeladySchedule::build`].
+#[derive(Debug, Clone, Default)]
+pub struct AccessLog<K> {
+    pub hyperbatches: Vec<Vec<K>>,
+}
+
+impl<K> AccessLog<K> {
+    /// Total recorded accesses.
+    pub fn total(&self) -> usize {
+        self.hyperbatches.iter().map(Vec::len).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total() == 0
+    }
+}
+
+/// Records the per-hyperbatch access sequence of a cache or pool. Lives
+/// *inside* the cached structure so recording happens under the lock the
+/// sweep already holds — disabled, it is a single branch per access.
+#[derive(Debug)]
+pub struct TraceRecorder<K> {
+    enabled: bool,
+    hyperbatches: Vec<Vec<K>>,
+    current: usize,
+}
+
+impl<K> Default for TraceRecorder<K> {
+    fn default() -> Self {
+        TraceRecorder { enabled: false, hyperbatches: Vec::new(), current: 0 }
+    }
+}
+
+impl<K: Copy> TraceRecorder<K> {
+    pub fn new() -> TraceRecorder<K> {
+        TraceRecorder::default()
+    }
+
+    /// Turn recording on (stays on; each epoch's log refreshes the next
+    /// epoch's schedule).
+    pub fn enable(&mut self) {
+        self.enabled = true;
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Open hyperbatch `h`'s bucket; subsequent [`Self::record`] calls land
+    /// there. Skipped hyperbatch indices leave empty buckets, keeping
+    /// bucket index == hyperbatch index.
+    pub fn begin_hyperbatch(&mut self, h: usize) {
+        if !self.enabled {
+            return;
+        }
+        while self.hyperbatches.len() <= h {
+            self.hyperbatches.push(Vec::new());
+        }
+        self.current = h;
+    }
+
+    /// Append one access to the current hyperbatch's bucket.
+    #[inline]
+    pub fn record(&mut self, k: K) {
+        if !self.enabled {
+            return;
+        }
+        if self.hyperbatches.is_empty() {
+            self.hyperbatches.push(Vec::new());
+            self.current = 0;
+        }
+        self.hyperbatches[self.current].push(k);
+    }
+
+    /// Drain the recorded log (recording stays enabled; the next epoch
+    /// starts a fresh log).
+    pub fn take(&mut self) -> AccessLog<K> {
+        self.current = 0;
+        AccessLog { hyperbatches: std::mem::take(&mut self.hyperbatches) }
+    }
+
+    /// Drop any partial log without touching the enabled flag (counter
+    /// resets between bench passes).
+    pub fn restart(&mut self) {
+        self.hyperbatches.clear();
+        self.current = 0;
+    }
+}
+
+/// Precomputed Belady/MIN schedule: every key's ascending global access
+/// positions plus each hyperbatch's starting position. Built once per
+/// epoch from the previous epoch's [`AccessLog`].
+#[derive(Debug, Clone, Default)]
+pub struct BeladySchedule<K> {
+    positions: HashMap<K, Vec<u64>>,
+    /// Global position at which each hyperbatch's accesses begin.
+    offsets: Vec<u64>,
+    total: u64,
+}
+
+impl<K: Copy + Eq + Hash> BeladySchedule<K> {
+    pub fn build(log: &AccessLog<K>) -> BeladySchedule<K> {
+        let mut positions: HashMap<K, Vec<u64>> = HashMap::new();
+        let mut offsets = Vec::with_capacity(log.hyperbatches.len());
+        let mut pos = 0u64;
+        for hb in &log.hyperbatches {
+            offsets.push(pos);
+            for &k in hb {
+                positions.entry(k).or_default().push(pos);
+                pos += 1;
+            }
+        }
+        BeladySchedule { positions, offsets, total: pos }
+    }
+
+    /// Total positions in the schedule.
+    pub fn len(&self) -> u64 {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Number of distinct keys in the trace.
+    pub fn distinct(&self) -> usize {
+        self.positions.len()
+    }
+}
+
+/// A walk over a [`BeladySchedule`] during the epoch it predicts. The
+/// cursor is the global position of the *next* expected access; a key's
+/// "next use" is its first scheduled position at or after the cursor
+/// (`u64::MAX` = never used again — the ideal eviction victim).
+#[derive(Debug, Clone)]
+pub struct ScheduleCursor<K> {
+    schedule: BeladySchedule<K>,
+    cursor: u64,
+}
+
+impl<K: Copy + Eq + Hash> ScheduleCursor<K> {
+    pub fn new(schedule: BeladySchedule<K>) -> ScheduleCursor<K> {
+        ScheduleCursor { schedule, cursor: 0 }
+    }
+
+    /// Restart the walk (epoch boundary: the same schedule replays).
+    pub fn rewind(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// Re-synchronize at a hyperbatch boundary: jump to the hyperbatch's
+    /// recorded start position (never backwards). Bounds the drift of a
+    /// live stream that diverges from the recorded trace mid-hyperbatch.
+    pub fn begin_hyperbatch(&mut self, h: usize) {
+        let target = self.schedule.offsets.get(h).copied().unwrap_or(self.schedule.total);
+        self.cursor = self.cursor.max(target);
+    }
+
+    /// Consume one access: advance the global position and return `k`'s
+    /// next scheduled use after it.
+    #[inline]
+    pub fn on_access(&mut self, k: &K) -> u64 {
+        self.cursor += 1;
+        self.next_from(k)
+    }
+
+    /// `k`'s next scheduled use at or after the current position, without
+    /// consuming anything (admission decisions).
+    #[inline]
+    pub fn peek_next_use(&self, k: &K) -> u64 {
+        self.next_from(k)
+    }
+
+    fn next_from(&self, k: &K) -> u64 {
+        match self.schedule.positions.get(k) {
+            Some(list) => {
+                let i = list.partition_point(|&p| p < self.cursor);
+                list.get(i).copied().unwrap_or(u64::MAX)
+            }
+            None => u64::MAX,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log(hbs: &[&[u32]]) -> AccessLog<u32> {
+        AccessLog { hyperbatches: hbs.iter().map(|h| h.to_vec()).collect() }
+    }
+
+    #[test]
+    fn policy_parses_and_displays() {
+        use std::str::FromStr;
+        for p in CachePolicy::all() {
+            assert_eq!(CachePolicy::from_str(p.name()).unwrap(), p);
+            assert_eq!(format!("{p}"), p.name());
+        }
+        assert_eq!(CachePolicy::from_str("BELADY").unwrap(), CachePolicy::Belady);
+        assert!(CachePolicy::from_str("optimal").is_err());
+        assert_eq!(CachePolicy::default(), CachePolicy::Reactive);
+    }
+
+    #[test]
+    fn recorder_disabled_is_a_noop() {
+        let mut r: TraceRecorder<u32> = TraceRecorder::new();
+        r.begin_hyperbatch(0);
+        r.record(1);
+        r.record(2);
+        assert!(r.take().is_empty());
+    }
+
+    #[test]
+    fn recorder_buckets_by_hyperbatch() {
+        let mut r: TraceRecorder<u32> = TraceRecorder::new();
+        r.enable();
+        r.begin_hyperbatch(0);
+        r.record(1);
+        r.record(2);
+        r.begin_hyperbatch(2); // skipped index 1 leaves an empty bucket
+        r.record(3);
+        let l = r.take();
+        assert_eq!(l.hyperbatches, vec![vec![1, 2], vec![], vec![3]]);
+        assert_eq!(l.total(), 3);
+        // taking drains but keeps recording
+        r.record(9);
+        assert_eq!(r.take().hyperbatches, vec![vec![9]]);
+    }
+
+    #[test]
+    fn recorder_restart_keeps_enabled() {
+        let mut r: TraceRecorder<u32> = TraceRecorder::new();
+        r.enable();
+        r.record(5);
+        r.restart();
+        assert!(r.is_enabled());
+        assert!(r.take().is_empty());
+    }
+
+    #[test]
+    fn schedule_positions_and_offsets() {
+        let s = BeladySchedule::build(&log(&[&[10, 20, 10], &[20, 30]]));
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.distinct(), 3);
+        let mut c = ScheduleCursor::new(s);
+        // position 0: access 10 → next use at 2
+        assert_eq!(c.on_access(&10), 2);
+        // position 1: access 20 → next use at 3
+        assert_eq!(c.on_access(&20), 3);
+        // position 2: access 10 → never again
+        assert_eq!(c.on_access(&10), u64::MAX);
+        c.begin_hyperbatch(1);
+        assert_eq!(c.peek_next_use(&20), 3);
+        assert_eq!(c.peek_next_use(&30), 4);
+        assert_eq!(c.peek_next_use(&99), u64::MAX);
+    }
+
+    #[test]
+    fn cursor_resyncs_at_hyperbatch_boundaries() {
+        let s = BeladySchedule::build(&log(&[&[1, 2], &[1, 3]]));
+        let mut c = ScheduleCursor::new(s);
+        // live stream diverges: only one access seen in hyperbatch 0
+        c.begin_hyperbatch(0);
+        c.on_access(&1);
+        // boundary resync jumps the cursor to position 2
+        c.begin_hyperbatch(1);
+        assert_eq!(c.peek_next_use(&1), 2);
+        assert_eq!(c.peek_next_use(&2), u64::MAX, "hb0-only key is past");
+        // never moves backwards
+        c.on_access(&1);
+        c.on_access(&3);
+        c.begin_hyperbatch(0);
+        assert_eq!(c.peek_next_use(&3), u64::MAX);
+    }
+
+    #[test]
+    fn cursor_rewind_replays() {
+        let s = BeladySchedule::build(&log(&[&[7, 8, 7]]));
+        let mut c = ScheduleCursor::new(s);
+        assert_eq!(c.on_access(&7), 2);
+        c.rewind();
+        assert_eq!(c.peek_next_use(&7), 0);
+        assert_eq!(c.on_access(&7), 2);
+    }
+
+    #[test]
+    fn recorder_deterministic_under_fixed_seed() {
+        // same seeded access stream → identical logs and schedules
+        let run = || {
+            let mut r: TraceRecorder<u32> = TraceRecorder::new();
+            r.enable();
+            let mut rng = crate::util::Rng::seed_from_u64(42);
+            for h in 0..8 {
+                r.begin_hyperbatch(h);
+                for _ in 0..200 {
+                    r.record(rng.gen_range(64) as u32);
+                }
+            }
+            r.take()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a.hyperbatches, b.hyperbatches);
+        let (sa, sb) = (BeladySchedule::build(&a), BeladySchedule::build(&b));
+        assert_eq!(sa.len(), sb.len());
+        assert_eq!(sa.distinct(), sb.distinct());
+        for k in 0..64u32 {
+            let (mut ca, mut cb) = (ScheduleCursor::new(sa.clone()), ScheduleCursor::new(sb.clone()));
+            assert_eq!(ca.on_access(&k), cb.on_access(&k));
+        }
+    }
+
+    #[test]
+    fn belady_never_evicts_a_key_needed_before_a_retained_one() {
+        // property: simulate an exact replay of a random trace with a
+        // farthest-next-use cache; at every eviction the victim's next use
+        // must be >= every retained key's next use (schedule validity)
+        let mut rng = crate::util::Rng::seed_from_u64(7);
+        for trial in 0..20 {
+            let mut r: TraceRecorder<u32> = TraceRecorder::new();
+            r.enable();
+            for h in 0..4 {
+                r.begin_hyperbatch(h);
+                for _ in 0..300 {
+                    r.record(rng.gen_range(32) as u32);
+                }
+            }
+            let log = r.take();
+            let schedule = BeladySchedule::build(&log);
+            let mut cursor = ScheduleCursor::new(schedule);
+            let capacity = 4 + trial % 8;
+            let mut resident: HashMap<u32, u64> = HashMap::new();
+            for (h, hb) in log.hyperbatches.iter().enumerate() {
+                cursor.begin_hyperbatch(h);
+                for &k in hb {
+                    let next = cursor.on_access(&k);
+                    if let Some(n) = resident.get_mut(&k) {
+                        *n = next;
+                        continue;
+                    }
+                    if resident.len() >= capacity {
+                        let (&victim, &vnext) =
+                            resident.iter().max_by_key(|&(&k, &n)| (n, k)).unwrap();
+                        for (&other, &onext) in &resident {
+                            assert!(
+                                onext <= vnext,
+                                "trial {trial}: evicted {victim} (next {vnext}) \
+                                 but retained {other} needed later ({onext})"
+                            );
+                        }
+                        resident.remove(&victim);
+                    }
+                    resident.insert(k, next);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_schedule_is_total_miss() {
+        let s: BeladySchedule<u32> = BeladySchedule::build(&AccessLog::default());
+        assert!(s.is_empty());
+        let mut c = ScheduleCursor::new(s);
+        assert_eq!(c.on_access(&1), u64::MAX);
+        c.begin_hyperbatch(5); // out of range clamps to end
+        assert_eq!(c.peek_next_use(&1), u64::MAX);
+    }
+}

@@ -94,6 +94,18 @@ pub struct RunMetrics {
     pub graph_hit_ratio: f64,
     /// Feature-cache hit ratio.
     pub feature_hit_ratio: f64,
+    /// Graph-store (graph buffer pool) hits / misses / evictions.
+    pub graph_cache_hits: u64,
+    pub graph_cache_misses: u64,
+    pub graph_cache_evictions: u64,
+    /// Feature-store (feature cache + feature buffer pool) hits / misses /
+    /// evictions.
+    pub feature_cache_hits: u64,
+    pub feature_cache_misses: u64,
+    pub feature_cache_evictions: u64,
+    /// The eviction policy the run's caches used (`"reactive"` |
+    /// `"belady"`; empty until the epoch driver snapshots it).
+    pub cache_policy: String,
     pub minibatches: u64,
     pub sampled_nodes: u64,
     pub gathered_features: u64,
@@ -201,6 +213,18 @@ impl RunMetrics {
         crate::storage::device::shard_imbalance(&self.shard_busy_ns)
     }
 
+    /// Graph-store hit rate over the per-store counters (graph buffer
+    /// pool), in [0, 1]; 0 when no accesses were counted.
+    pub fn graph_cache_hit_rate(&self) -> f64 {
+        hit_rate(self.graph_cache_hits, self.graph_cache_misses)
+    }
+
+    /// Feature-store hit rate over the per-store counters (feature cache
+    /// lookups), in [0, 1]; 0 when no accesses were counted.
+    pub fn feature_cache_hit_rate(&self) -> f64 {
+        hit_rate(self.feature_cache_hits, self.feature_cache_misses)
+    }
+
     pub fn merge(&mut self, o: &RunMetrics) {
         self.sample_wall_ns += o.sample_wall_ns;
         self.gather_wall_ns += o.gather_wall_ns;
@@ -223,6 +247,15 @@ impl RunMetrics {
         if self.layout_policy.is_empty() {
             self.layout_policy = o.layout_policy.clone();
         }
+        if self.cache_policy.is_empty() {
+            self.cache_policy = o.cache_policy.clone();
+        }
+        self.graph_cache_hits += o.graph_cache_hits;
+        self.graph_cache_misses += o.graph_cache_misses;
+        self.graph_cache_evictions += o.graph_cache_evictions;
+        self.feature_cache_hits += o.feature_cache_hits;
+        self.feature_cache_misses += o.feature_cache_misses;
+        self.feature_cache_evictions += o.feature_cache_evictions;
         self.device.merge(&o.device);
         merge_stage_vec(&mut self.shard_busy_ns, &o.shard_busy_ns);
         merge_stage_vec(&mut self.shard_requests, &o.shard_requests);
@@ -233,6 +266,16 @@ impl RunMetrics {
         // ratios: keep the last run's (benches report per-config runs)
         self.graph_hit_ratio = o.graph_hit_ratio;
         self.feature_hit_ratio = o.feature_hit_ratio;
+    }
+}
+
+/// hits / (hits + misses), 0 when nothing was counted.
+fn hit_rate(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
     }
 }
 
@@ -538,6 +581,35 @@ mod tests {
         assert_eq!(a.stage_stall_ns, vec![0, 5, 11]);
         a.merge(&RunMetrics { stage_stall_ns: vec![1, 1], ..Default::default() });
         assert_eq!(a.stage_stall_ns, vec![1, 6, 11], "shorter vectors merge element-wise");
+    }
+
+    #[test]
+    fn per_store_cache_counters_merge_and_rate() {
+        let mut a = RunMetrics::default();
+        assert_eq!(a.graph_cache_hit_rate(), 0.0, "no accesses = rate 0");
+        assert_eq!(a.feature_cache_hit_rate(), 0.0);
+        let b = RunMetrics {
+            graph_cache_hits: 6,
+            graph_cache_misses: 2,
+            graph_cache_evictions: 1,
+            feature_cache_hits: 3,
+            feature_cache_misses: 9,
+            feature_cache_evictions: 4,
+            cache_policy: "belady".into(),
+            ..Default::default()
+        };
+        assert!((b.graph_cache_hit_rate() - 0.75).abs() < 1e-12);
+        assert!((b.feature_cache_hit_rate() - 0.25).abs() < 1e-12);
+        a.merge(&b);
+        a.merge(&b);
+        assert_eq!(a.graph_cache_hits, 12);
+        assert_eq!(a.graph_cache_misses, 4);
+        assert_eq!(a.graph_cache_evictions, 2);
+        assert_eq!(a.feature_cache_hits, 6);
+        assert_eq!(a.feature_cache_misses, 18);
+        assert_eq!(a.feature_cache_evictions, 8);
+        assert_eq!(a.cache_policy, "belady", "first non-empty policy sticks");
+        assert!((a.graph_cache_hit_rate() - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -57,7 +57,7 @@ fn all_three_models_execute() {
     let (runner, _tmp) = tiny_runner();
     let hb = runner.epoch_hyperbatches(0).remove(0);
     let mut metrics = agnes::metrics::RunMetrics::default();
-    let mbs = runner.prepare_hyperbatch(&hb, &mut metrics).unwrap();
+    let mbs = runner.prepare_hyperbatch(0, &hb, &mut metrics).unwrap();
     for model in ["gcn", "sage", "gat"] {
         let mut compute = XlaCompute::load(dir, model).unwrap();
         let r = compute.train_step(&mbs[0]).unwrap();
@@ -75,7 +75,7 @@ fn short_final_minibatch_is_padded_and_masked() {
     // fabricate a short minibatch (last batch of an epoch)
     let hb = vec![vec![1u32, 2, 3]];
     let mut metrics = agnes::metrics::RunMetrics::default();
-    let mbs = runner.prepare_hyperbatch(&hb, &mut metrics).unwrap();
+    let mbs = runner.prepare_hyperbatch(0, &hb, &mut metrics).unwrap();
     assert_eq!(mbs[0].levels[0].len(), 3);
     let r = compute.train_step(&mbs[0]).unwrap();
     assert_eq!(r.total, 3, "mask must restrict to the 3 real targets");
@@ -107,7 +107,7 @@ fn infer_matches_train_accuracy_and_checkpoints() {
     // held-out evaluation: a different epoch seed = unseen targets
     let hb = runner.epoch_hyperbatches(7).remove(0);
     let mut metrics = agnes::metrics::RunMetrics::default();
-    let mbs = runner.prepare_hyperbatch(&hb, &mut metrics).unwrap();
+    let mbs = runner.prepare_hyperbatch(0, &hb, &mut metrics).unwrap();
     let (mut correct, mut total) = (0u32, 0u32);
     for mb in &mbs {
         let (c, t) = infer.eval(compute.params(), mb).unwrap();

@@ -71,7 +71,7 @@ fn identical_sample_trees_across_systems() {
     let agnes = AgnesRunner::open(c.clone()).unwrap();
     let hb = agnes.epoch_hyperbatches(0);
     let mut metrics = agnes::metrics::RunMetrics::default();
-    let mbs = agnes.prepare_hyperbatch(&hb[0], &mut metrics).unwrap();
+    let mbs = agnes.prepare_hyperbatch(0, &hb[0], &mut metrics).unwrap();
 
     // per-node baseline sampling, same targets
     let ginex = GinexRunner::open(c).unwrap();
