@@ -6,7 +6,7 @@
 //! as the datasets, see DESIGN.md §Substitutions).
 
 use crate::graph::layout::Layout;
-use crate::graph::reorder::LayoutPolicy;
+use crate::graph::reorder::{LayoutPolicy, TraceSource};
 use crate::memory::trace::CachePolicy;
 use crate::storage::device::SsdSpec;
 use std::collections::BTreeMap;
@@ -224,6 +224,13 @@ pub struct LayoutConfig {
     /// Cap on the hyperbatches sampled into the access trace
     /// (`hyperbatch` policy only; 0 = trace the whole first epoch).
     pub trace_hyperbatches: usize,
+    /// Where the `hyperbatch` policy's access trace comes from: `sampled`
+    /// (default — the structural fanout-capped simulation in
+    /// `graph::reorder::sample_access_trace`) or `recorded` (a build-time
+    /// warmup epoch over the identity-layout stores with the buffer
+    /// pools' live `TraceRecorder` on, so re-permutation decisions come
+    /// from observed co-access).
+    pub trace_source: TraceSource,
 }
 
 /// Eviction-policy knobs for the feature cache and buffer pools
@@ -325,6 +332,23 @@ impl Default for TrainConfig {
     }
 }
 
+/// Online-inference server knobs (`[serve]` — see
+/// [`crate::coordinator::serve`]).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Worker threads answering inference requests concurrently.
+    pub workers: usize,
+    /// Admission bound: requests in flight beyond this are rejected with
+    /// a typed backpressure error instead of queueing unboundedly.
+    pub max_inflight: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 4, max_inflight: 16 }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default)]
 pub struct AgnesConfig {
@@ -335,6 +359,7 @@ pub struct AgnesConfig {
     pub cache: CacheConfig,
     pub memory: MemoryConfig,
     pub train: TrainConfig,
+    pub serve: ServeConfig,
 }
 
 impl AgnesConfig {
@@ -391,6 +416,7 @@ impl AgnesConfig {
             (1..=2).contains(&self.train.prepare_stages),
             "train.prepare_stages must be 1 (fused prepare) or 2 (split sample/gather)"
         );
+        check_serve(self.serve.workers, self.serve.max_inflight).map_err(anyhow::Error::msg)?;
         Ok(())
     }
 
@@ -442,6 +468,7 @@ impl AgnesConfig {
             ("io", "stripe_blocks") => self.io.stripe_blocks = p(value)?,
             ("layout", "policy") => self.layout.policy = value.parse()?,
             ("layout", "trace_hyperbatches") => self.layout.trace_hyperbatches = p(value)?,
+            ("layout", "trace_source") => self.layout.trace_source = value.parse()?,
             ("cache", "policy") => self.cache.policy = value.parse()?,
             ("memory", "graph_buffer_bytes") => self.memory.graph_buffer_bytes = p(value)?,
             ("memory", "feature_buffer_bytes") => self.memory.feature_buffer_bytes = p(value)?,
@@ -464,9 +491,20 @@ impl AgnesConfig {
             ("train", "seed") => self.train.seed = p(value)?,
             ("train", "pipeline_depth") => self.train.pipeline_depth = p(value)?,
             ("train", "prepare_stages") => self.train.prepare_stages = p(value)?,
+            ("serve", "workers") => self.serve.workers = p(value)?,
+            ("serve", "max_inflight") => self.serve.max_inflight = p(value)?,
             _ => return Err(format!("unknown key {section}.{key}")),
         }
         Ok(())
+    }
+
+    /// Apply one `section.key = value` assignment through the same parser
+    /// the TOML loader uses — the entry point for runtime hot-reload
+    /// (`coordinator::serve`), where a reloaded config is re-validated
+    /// before it is swapped in. Unknown keys error with the offending
+    /// `section.key`.
+    pub fn apply_kv(&mut self, section: &str, key: &str, value: &str) -> Result<(), String> {
+        self.set(section, key, value)
     }
 
     /// Serialize (round-trips through [`Self::from_toml_str`]).
@@ -497,6 +535,7 @@ impl AgnesConfig {
         w("\n[layout]");
         w(&format!("policy = \"{}\"", self.layout.policy));
         w(&format!("trace_hyperbatches = {}", self.layout.trace_hyperbatches));
+        w(&format!("trace_source = \"{}\"", self.layout.trace_source));
         w("\n[cache]");
         w(&format!("policy = \"{}\"", self.cache.policy));
         w("\n[memory]");
@@ -515,6 +554,9 @@ impl AgnesConfig {
         w(&format!("seed = {}", self.train.seed));
         w(&format!("pipeline_depth = {}", self.train.pipeline_depth));
         w(&format!("prepare_stages = {}", self.train.prepare_stages));
+        w("\n[serve]");
+        w(&format!("workers = {}", self.serve.workers));
+        w(&format!("max_inflight = {}", self.serve.max_inflight));
         out
     }
 
@@ -526,7 +568,9 @@ impl AgnesConfig {
     /// backend the same way; `AGNES_LAYOUT_POLICY` and
     /// `AGNES_TRACE_HYPERBATCHES` re-run the storage layout optimizer;
     /// `AGNES_CACHE_POLICY` switches the eviction policy
-    /// (reactive | belady).
+    /// (reactive | belady); `AGNES_TRACE_SOURCE` picks the layout trace
+    /// source (sampled | recorded); `AGNES_SERVE_WORKERS` and
+    /// `AGNES_SERVE_MAX_INFLIGHT` size the inference server.
     /// Applied by [`Self::tiny`] (tests) and
     /// [`crate::util::bench::bench_config`] (fig benches); the CLI takes
     /// the equivalent flags instead.
@@ -598,6 +642,28 @@ impl AgnesConfig {
             match v.trim().parse::<CachePolicy>() {
                 Ok(p) => self.cache.policy = p,
                 _ => eprintln!("ignoring invalid AGNES_CACHE_POLICY={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_TRACE_SOURCE") {
+            match v.trim().parse::<TraceSource>() {
+                Ok(s) => self.layout.trace_source = s,
+                _ => eprintln!("ignoring invalid AGNES_TRACE_SOURCE={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_SERVE_WORKERS") {
+            match v.trim().parse::<usize>() {
+                Ok(w) if check_serve(w, self.serve.max_inflight).is_ok() => {
+                    self.serve.workers = w
+                }
+                _ => eprintln!("ignoring invalid AGNES_SERVE_WORKERS={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_SERVE_MAX_INFLIGHT") {
+            match v.trim().parse::<usize>() {
+                Ok(m) if check_serve(self.serve.workers, m).is_ok() => {
+                    self.serve.max_inflight = m
+                }
+                _ => eprintln!("ignoring invalid AGNES_SERVE_MAX_INFLIGHT={v:?}"),
             }
         }
     }
@@ -716,6 +782,23 @@ fn check_trace_hyperbatches(t: usize) -> Result<(), String> {
     }
 }
 
+/// Range check for `serve.workers` / `serve.max_inflight` (shared with
+/// env overrides and [`AgnesConfig::apply_kv`] hot-reloads): a server
+/// needs at least one worker and one admission slot, and an absurd
+/// inflight bound defeats backpressure entirely.
+fn check_serve(workers: usize, max_inflight: usize) -> Result<(), String> {
+    if workers < 1 {
+        return Err(format!("serve.workers = {workers} must be >= 1"));
+    }
+    if !(1..=4096).contains(&max_inflight) {
+        return Err(format!(
+            "serve.max_inflight = {max_inflight} must be in 1..=4096 (admission control is \
+             pointless without a bound)"
+        ));
+    }
+    Ok(())
+}
+
 fn layout_name(l: Layout) -> &'static str {
     match l {
         Layout::Natural => "natural",
@@ -774,6 +857,9 @@ mod tests {
         assert_eq!(c.layout.trace_hyperbatches, 0);
         assert_eq!(c.cache.policy, CachePolicy::Reactive);
         assert_eq!(c.train.fanouts, vec![10, 10, 10]);
+        assert_eq!(c.layout.trace_source, TraceSource::Sampled);
+        assert_eq!(c.serve.workers, 4);
+        assert_eq!(c.serve.max_inflight, 16);
     }
 
     #[test]
@@ -1001,5 +1087,99 @@ mod tests {
     fn model_parse() {
         assert_eq!("GraphSAGE".parse::<GnnModel>().unwrap(), GnnModel::Sage);
         assert!("mlp".parse::<GnnModel>().is_err());
+    }
+
+    #[test]
+    fn serve_section_parses_and_roundtrips() {
+        let c = AgnesConfig::from_toml_str("[serve]\nworkers = 8\nmax_inflight = 32\n").unwrap();
+        assert_eq!(c.serve.workers, 8);
+        assert_eq!(c.serve.max_inflight, 32);
+        c.validate().unwrap();
+        let back = AgnesConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.serve.workers, 8);
+        assert_eq!(back.serve.max_inflight, 32);
+        // defaults
+        assert_eq!(AgnesConfig::default().serve.workers, 4);
+        assert_eq!(AgnesConfig::default().serve.max_inflight, 16);
+        // bad values fail loudly, naming the key
+        let mut c = AgnesConfig::default();
+        c.serve.workers = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("serve.workers"));
+        let mut c = AgnesConfig::default();
+        c.serve.max_inflight = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("serve.max_inflight"));
+        let mut c = AgnesConfig::default();
+        c.serve.max_inflight = 1 << 20;
+        assert!(c.validate().unwrap_err().to_string().contains("serve.max_inflight"));
+    }
+
+    #[test]
+    fn serve_env_overrides_agree_with_validate() {
+        let vars = |pairs: &[(&str, &str)]| {
+            let m: std::collections::HashMap<String, String> =
+                pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+            move |name: &str| m.get(name).cloned()
+        };
+        let mut c = AgnesConfig::default();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_SERVE_WORKERS", "2"),
+            ("AGNES_SERVE_MAX_INFLIGHT", "3"),
+        ]));
+        assert_eq!(c.serve.workers, 2);
+        assert_eq!(c.serve.max_inflight, 3);
+        c.validate().unwrap();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_SERVE_WORKERS", "0"),
+            ("AGNES_SERVE_MAX_INFLIGHT", "99999"),
+        ]));
+        assert_eq!(c.serve.workers, 2, "invalid worker override ignored");
+        assert_eq!(c.serve.max_inflight, 3, "out-of-range inflight override ignored");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn trace_source_parses_and_roundtrips() {
+        let c = AgnesConfig::from_toml_str(
+            "[layout]\npolicy = \"hyperbatch\"\ntrace_source = \"recorded\"\n",
+        )
+        .unwrap();
+        assert_eq!(c.layout.trace_source, TraceSource::Recorded);
+        c.validate().unwrap();
+        let back = AgnesConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.layout.trace_source, TraceSource::Recorded);
+        // default: sampled (bit-for-bit historical layouts)
+        assert_eq!(AgnesConfig::default().layout.trace_source, TraceSource::Sampled);
+        // bad values fail loudly
+        assert!(AgnesConfig::from_toml_str("[layout]\ntrace_source = \"psychic\"\n").is_err());
+    }
+
+    #[test]
+    fn trace_source_env_override_applies_and_rejects_garbage() {
+        let vars = |pairs: &[(&str, &str)]| {
+            let m: std::collections::HashMap<String, String> =
+                pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+            move |name: &str| m.get(name).cloned()
+        };
+        let mut c = AgnesConfig::default();
+        c.apply_overrides_from(vars(&[("AGNES_TRACE_SOURCE", "recorded")]));
+        assert_eq!(c.layout.trace_source, TraceSource::Recorded);
+        c.validate().unwrap();
+        c.apply_overrides_from(vars(&[("AGNES_TRACE_SOURCE", "bogus")]));
+        assert_eq!(c.layout.trace_source, TraceSource::Recorded, "invalid override ignored");
+        c.apply_overrides_from(vars(&[("AGNES_TRACE_SOURCE", "Sampled")]));
+        assert_eq!(c.layout.trace_source, TraceSource::Sampled, "case-insensitive spelling");
+    }
+
+    #[test]
+    fn apply_kv_is_the_hot_reload_surface() {
+        // apply_kv mirrors set(): same arms, same typed errors — the serve
+        // hot-reload path leans on it plus validate()
+        let mut c = AgnesConfig::default();
+        c.apply_kv("io", "max_request_bytes", "524288").unwrap();
+        assert_eq!(c.io.max_request_bytes, 524288);
+        c.apply_kv("serve", "max_inflight", "8").unwrap();
+        assert_eq!(c.serve.max_inflight, 8);
+        assert!(c.apply_kv("io", "no_such_knob", "1").is_err());
+        assert!(c.apply_kv("nowhere", "key", "1").is_err());
     }
 }

@@ -7,17 +7,26 @@ use crate::config::AgnesConfig;
 use crate::graph::datasets::DatasetSpec;
 use crate::graph::layout::{BlockRemap, StripeMap};
 use crate::graph::reorder::{
-    degree_trace, optimize_block_layout, sample_access_trace, LayoutPolicy,
+    degree_trace, optimize_block_layout, sample_access_trace, trace_from_log, AccessTrace,
+    LayoutPolicy, TraceSource,
 };
 use crate::graph::CsrGraph;
-use crate::op::{make_hyperbatches, make_minibatches, select_targets};
+use crate::memory::{SharedBufferPool, SharedFeatureCache};
+use crate::op::{
+    gather_hyperbatch, make_hyperbatches, make_minibatches, sample_hyperbatch, select_targets,
+};
 use crate::storage::block::FeatureBlockLayout;
 use crate::storage::builder::{
     apply_block_remap, build_feature_store, build_graph_store, GraphStoreMeta, LayoutMeta,
     StorePaths,
 };
+use crate::storage::device::SsdArray;
+use crate::storage::plan::IoPlanner;
+use crate::storage::store::{FeatureStore, GraphStore};
+use crate::storage::IoEngine;
 use crate::Result;
 use std::path::Path;
+use std::sync::Arc;
 
 /// Everything `prepare_dataset` produced / found on disk.
 #[derive(Debug, Clone)]
@@ -75,6 +84,12 @@ fn build_key(config: &AgnesConfig, spec: &DatasetSpec) -> String {
                 config.layout.trace_hyperbatches,
             ));
             key.push_str(&format!("-t{trace_sig:08x}"));
+            // a recorded trace counts the pipeline's real block stream,
+            // not the structural stand-in — different heat, different
+            // remap, different build
+            if config.layout.trace_source == TraceSource::Recorded {
+                key.push_str("-rec");
+            }
         }
     }
     key
@@ -120,14 +135,23 @@ fn optimize_storage_layout(
             let targets = select_targets(spec.num_nodes, t.target_fraction, t.seed);
             let hyperbatches =
                 make_hyperbatches(make_minibatches(&targets, t.minibatch_size), t.hyperbatch_size);
-            sample_access_trace(
-                g,
-                &graph_meta.index,
-                &feature_layout,
-                &hyperbatches,
-                &t.fanouts,
-                config.layout.trace_hyperbatches,
-            )
+            match config.layout.trace_source {
+                TraceSource::Sampled => sample_access_trace(
+                    g,
+                    &graph_meta.index,
+                    &feature_layout,
+                    &hyperbatches,
+                    &t.fanouts,
+                    config.layout.trace_hyperbatches,
+                ),
+                TraceSource::Recorded => record_access_trace(
+                    config,
+                    spec,
+                    feature_layout,
+                    paths,
+                    &hyperbatches,
+                )?,
+            }
         }
     };
     let graph_remap =
@@ -148,6 +172,58 @@ fn optimize_storage_layout(
     apply_block_remap(&paths.feature_blocks, feature_layout.block_size, &feature_remap)?;
     LayoutMeta { policy, graph: graph_remap, feature: feature_remap }.write(paths)?;
     Ok(())
+}
+
+/// The `layout.trace_source = "recorded"` warmup: replay epoch 0's
+/// hyperbatches through the *real* sampling and gathering pipeline
+/// against the just-built (identity-layout) stores, with recording
+/// buffer pools, and turn the drained [`AccessLog`]s into the heat
+/// traces ([`trace_from_log`]). The recorded counts are exactly the
+/// block stream training will issue — recording happens at `get()`
+/// before residency is consulted, so the trace is independent of the
+/// warmup pool capacity. The feature cache is disabled for the warmup
+/// (capacity 0): a cache hit bypasses the feature pool, and a
+/// cache-state-dependent trace would not be reproducible.
+///
+/// Runs at build time, before any remap exists, so logical block ids in
+/// the logs equal physical ones — precisely the ids the optimizer
+/// permutes.
+///
+/// [`AccessLog`]: crate::memory::AccessLog
+fn record_access_trace(
+    config: &AgnesConfig,
+    spec: &DatasetSpec,
+    feature_layout: FeatureBlockLayout,
+    paths: &StorePaths,
+    hyperbatches: &[Vec<Vec<u32>>],
+) -> Result<(AccessTrace, AccessTrace)> {
+    let device = config.device.spec();
+    let ssd = SsdArray::sharded(device, config.io.effective_stripe_blocks());
+    let graph_store = Arc::new(GraphStore::open(paths, ssd.clone())?);
+    let feature_store =
+        Arc::new(FeatureStore::open(paths, feature_layout, spec.num_nodes, ssd)?);
+    let graph_pool = SharedBufferPool::new(config.graph_buffer_blocks());
+    let feature_pool = SharedBufferPool::new(config.feature_buffer_blocks());
+    graph_pool.start_recording();
+    feature_pool.start_recording();
+    let cache = SharedFeatureCache::new(0, u32::MAX); // disabled (see above)
+    let gap = config.io.gap_blocks.resolve(&device, config.io.block_size);
+    let engine = IoEngine::new(config.io.num_threads, config.io.async_depth)
+        .with_planner(IoPlanner::new(config.io.max_request_bytes, gap));
+    let t = &config.train;
+    let take = if config.layout.trace_hyperbatches == 0 {
+        hyperbatches.len()
+    } else {
+        hyperbatches.len().min(config.layout.trace_hyperbatches)
+    };
+    for (i, hb) in hyperbatches[..take].iter().enumerate() {
+        graph_pool.begin_hyperbatch(i);
+        feature_pool.begin_hyperbatch(i);
+        let samples = sample_hyperbatch(&graph_store, &graph_pool, &engine, hb, &t.fanouts, t.seed)?;
+        let node_sets: Vec<Vec<u32>> = (0..hb.len()).map(|mb| samples.flat_nodes(mb)).collect();
+        gather_hyperbatch(&feature_store, &feature_pool, &cache, &engine, &node_sets)?;
+    }
+    Ok((trace_from_log(&graph_pool.take_log()), trace_from_log(&feature_pool.take_log())))
 }
 
 /// Generate and persist the dataset stores if absent (idempotent —
@@ -275,6 +351,64 @@ mod tests {
         let mut h2 = one.clone();
         h2.train.minibatch_size *= 2;
         assert_ne!(a.paths.dir, prepare_dataset(&h2).unwrap().paths.dir);
+    }
+
+    #[test]
+    fn recorded_trace_source_builds_distinct_optimized_store() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut sampled = cfg(tmp.path());
+        sampled.layout.policy = LayoutPolicy::Hyperbatch;
+        sampled.layout.trace_source = TraceSource::Sampled;
+        let mut recorded = sampled.clone();
+        recorded.layout.trace_source = TraceSource::Recorded;
+        let a = prepare_dataset(&sampled).unwrap();
+        let b = prepare_dataset(&recorded).unwrap();
+        // different trace source => different build key => distinct dirs
+        assert_ne!(a.paths.dir, b.paths.dir);
+        // the recorded build carries the optimizer sidecar like any other
+        // hyperbatch build
+        let m = LayoutMeta::load(&b.paths).unwrap();
+        assert_eq!(m.policy, LayoutPolicy::Hyperbatch);
+        // the block files hold the same bytes as a multiset of blocks:
+        // the recorded trace only permutes, never rewrites
+        let mut x = std::fs::read(&a.paths.feature_blocks).unwrap();
+        let mut y = std::fs::read(&b.paths.feature_blocks).unwrap();
+        assert_eq!(x.len(), y.len());
+        let bs = sampled.io.block_size;
+        let sort_blocks = |v: &mut Vec<u8>| {
+            let mut blocks: Vec<&[u8]> = v.chunks(bs).collect();
+            blocks.sort_unstable();
+            blocks.concat()
+        };
+        assert_eq!(sort_blocks(&mut x), sort_blocks(&mut y));
+        // idempotent: the second call reuses the recorded build
+        let b2 = prepare_dataset(&recorded).unwrap();
+        assert_eq!(b.paths.dir, b2.paths.dir);
+        // trace_source is irrelevant to non-hyperbatch policies: the
+        // degree build key must not fork on it
+        let mut d1 = cfg(tmp.path());
+        d1.layout.policy = LayoutPolicy::Degree;
+        let mut d2 = d1.clone();
+        d2.layout.trace_source = TraceSource::Recorded;
+        assert_eq!(
+            prepare_dataset(&d1).unwrap().paths.dir,
+            prepare_dataset(&d2).unwrap().paths.dir
+        );
+    }
+
+    #[test]
+    fn recorded_store_trains_like_any_other() {
+        // the optimized-by-recorded-trace store must serve a full epoch
+        // with the usual invariants (this exercises the remap translation
+        // on the read path)
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = cfg(tmp.path());
+        c.layout.policy = LayoutPolicy::Hyperbatch;
+        c.layout.trace_source = TraceSource::Recorded;
+        let mut r = crate::coordinator::AgnesRunner::open(c).unwrap();
+        let res = r.run_epoch(0, &mut crate::coordinator::NullCompute).unwrap();
+        assert!(res.metrics.minibatches > 0);
+        assert!(res.metrics.gathered_features > 0);
     }
 
     #[test]

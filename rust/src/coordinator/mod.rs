@@ -3,6 +3,18 @@
 //! run the hyperbatch sampling sweep, the hyperbatch gathering sweep, and
 //! hand each minibatch to the computation backend.
 //!
+//! ## Services layer vs. epoch driver
+//!
+//! All long-lived state — stores, buffer pools, feature cache, the
+//! sharded device array, and the I/O engine — lives in
+//! [`EngineServices`] (see [`services`]), which is `Arc`-shared.
+//! [`AgnesRunner`] is a thin epoch driver borrowing those services; the
+//! online inference server ([`serve`]) shares the *same* services
+//! value, so training and serving read through one set of stores,
+//! caches, and block remaps. `AgnesRunner` derefs to `EngineServices`,
+//! so existing call sites (`runner.config`, `runner.feature_store`,
+//! `runner.prepare_hyperbatch(..)`) are unchanged.
+//!
 //! ## Staged pipeline executor
 //!
 //! With `train.pipeline_depth >= 2` the epoch runs as a **staged
@@ -37,23 +49,21 @@
 
 pub mod compute;
 pub mod data;
+pub mod serve;
+pub mod services;
 
 pub use compute::{ComputeBackend, MinibatchData, ModeledCompute, NullCompute, StepResult};
 pub use data::{prepare_dataset, PreparedDataset};
+pub use serve::{
+    AdmitToken, InferenceRequest, InferenceResponse, InferenceServer, ServeError, ServeKnobs,
+    StageBreakdown,
+};
+pub use services::{EngineServices, ServiceCounters, StatsWindow, WindowStats};
 
 use crate::config::AgnesConfig;
-use crate::graph::generate::synth_label;
-use crate::memory::{BeladySchedule, CachePolicy, SharedBufferPool, SharedFeatureCache};
+use crate::memory::CachePolicy;
 use crate::metrics::{RunMetrics, SpanModel, StageTimer};
-use crate::op::{
-    gather_hyperbatch, make_hyperbatches, make_minibatches, sample_hyperbatch, select_targets,
-    SampleOutput,
-};
-use crate::storage::block::{FeatureBlockLayout, GraphBlock};
-use crate::storage::device::{SharedArray, SsdArray};
-use crate::storage::plan::{BlockBytes, IoPlanner};
-use crate::storage::store::{FeatureStore, GraphStore};
-use crate::storage::IoEngine;
+use crate::op::SampleOutput;
 use crate::Result;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -140,192 +150,39 @@ impl EpochTally {
     }
 }
 
-/// The assembled AGNES system (stores + buffers + engine), ready to train.
-/// Stores are `Arc`-shared and the in-memory layer uses shared handles so
-/// the preparation stage can run on a worker thread.
+/// The epoch driver: a thin wrapper over `Arc`-shared [`EngineServices`]
+/// that runs training epochs through the staged pipeline executor. All
+/// stores/pools/engine state lives in the services layer; the runner
+/// only owns the epoch loop. Derefs to [`EngineServices`] so field and
+/// service-method access reads exactly as it did when the runner owned
+/// the handles directly.
 pub struct AgnesRunner {
-    pub config: AgnesConfig,
-    pub dataset: PreparedDataset,
-    /// The sharded SSD array: `device.num_ssds` real per-device queues
-    /// with stripe-mapped block ownership (one shard — bit-for-bit the
-    /// legacy single-queue model — when `num_ssds = 1`).
-    pub ssd: SharedArray,
-    pub graph_store: Arc<GraphStore>,
-    pub feature_store: Arc<FeatureStore>,
-    pub graph_pool: SharedBufferPool<GraphBlock>,
-    pub feature_pool: SharedBufferPool<BlockBytes>,
-    pub feature_cache: SharedFeatureCache,
-    pub engine: IoEngine,
+    services: Arc<EngineServices>,
+}
+
+impl std::ops::Deref for AgnesRunner {
+    type Target = EngineServices;
+
+    fn deref(&self) -> &EngineServices {
+        &self.services
+    }
 }
 
 impl AgnesRunner {
     /// Prepare (or reuse) the dataset on disk and assemble the system.
     pub fn open(config: AgnesConfig) -> Result<AgnesRunner> {
-        let dataset = prepare_dataset(&config)?;
-        // `num_ssds` real shards, each with its own queue and busy clock,
-        // striped over the block space (a single shard is bit-for-bit
-        // the legacy one-queue model)
-        let spec = config.device.spec();
-        let ssd = SsdArray::sharded(spec, config.io.effective_stripe_blocks());
-        let graph_store = Arc::new(GraphStore::open(&dataset.paths, ssd.clone())?);
-        let layout = FeatureBlockLayout {
-            block_size: config.io.block_size,
-            feature_dim: dataset.spec.feature_dim,
-        };
-        let feature_store = Arc::new(FeatureStore::open(
-            &dataset.paths,
-            layout,
-            dataset.spec.num_nodes,
-            ssd.clone(),
-        )?);
-        let graph_pool = SharedBufferPool::new(config.graph_buffer_blocks());
-        let feature_pool = SharedBufferPool::new(config.feature_buffer_blocks());
-        let feature_cache = SharedFeatureCache::new(
-            config.memory.feature_cache_entries,
-            config.memory.feature_cache_threshold,
-        );
-        if config.cache.policy == CachePolicy::Belady {
-            // warmup-then-optimal: epoch 0 runs under reactive semantics
-            // while every store records its live access trace; each epoch
-            // boundary turns the logs into the next epoch's Belady
-            // schedules (see `crate::memory::trace`)
-            graph_pool.start_recording();
-            feature_pool.start_recording();
-            feature_cache.start_recording();
-        }
-        // static gap budgets pass through; the auto knob derives the
-        // bridge budget from the device spec (bridge while reading the
-        // hole is cheaper than paying another request overhead)
-        let gap_blocks = config.io.gap_blocks.resolve(&spec, config.io.block_size);
-        let engine = IoEngine::new(config.io.num_threads, config.io.async_depth)
-            .with_planner(IoPlanner::new(config.io.max_request_bytes, gap_blocks));
-        Ok(AgnesRunner {
-            config,
-            dataset,
-            ssd,
-            graph_store,
-            feature_store,
-            graph_pool,
-            feature_pool,
-            feature_cache,
-            engine,
-        })
+        Ok(AgnesRunner::from_services(Arc::new(EngineServices::open(config)?)))
     }
 
-    /// The epoch's hyperbatches: shuffled targets → minibatches →
-    /// hyperbatches (paper §4.1: minibatch 1000, hyperbatch 1024).
-    pub fn epoch_hyperbatches(&self, epoch: usize) -> Vec<Vec<Vec<u32>>> {
-        let t = &self.config.train;
-        let targets = select_targets(
-            self.dataset.spec.num_nodes,
-            t.target_fraction,
-            t.seed.wrapping_add(epoch as u64),
-        );
-        make_hyperbatches(make_minibatches(&targets, t.minibatch_size), t.hyperbatch_size)
+    /// Drive an existing (possibly shared) services value.
+    pub fn from_services(services: Arc<EngineServices>) -> AgnesRunner {
+        AgnesRunner { services }
     }
 
-    /// Data preparation for one hyperbatch: sampling sweep + gathering
-    /// sweep. Returns the per-minibatch compute inputs. Takes `&self` so
-    /// the pipelined executor can run it on a preparation worker thread.
-    /// `index` is the hyperbatch's position in the epoch — the trace
-    /// recorder buckets accesses by it and an installed Belady schedule
-    /// re-synchronizes its cursor at each boundary.
-    pub fn prepare_hyperbatch(
-        &self,
-        index: usize,
-        targets: &[Vec<u32>],
-        metrics: &mut RunMetrics,
-    ) -> Result<Vec<MinibatchData>> {
-        let samples = self.sample_stage(index, targets, metrics)?;
-        self.gather_stage(index, targets, &samples, metrics)
-    }
-
-    /// The sampling process (S-1..S-3) for one hyperbatch, independently
-    /// callable so the three-stage executor can run it on its own worker.
-    /// Touches only the graph store / graph buffer; simulated I/O is
-    /// attributed through the graph store's per-store charge counter, so
-    /// a concurrently running gather stage (feature store) cannot pollute
-    /// `sample_io_ns`.
-    pub fn sample_stage(
-        &self,
-        index: usize,
-        targets: &[Vec<u32>],
-        metrics: &mut RunMetrics,
-    ) -> Result<SampleOutput> {
-        // open the hyperbatch for the graph buffer's trace recorder /
-        // Belady cursor (no-op under the reactive policy)
-        self.graph_pool.begin_hyperbatch(index);
-        let io_before = self.graph_store.charged_ns();
-        let samples;
-        {
-            let _t = StageTimer::new(&mut metrics.sample_wall_ns);
-            samples = sample_hyperbatch(
-                &self.graph_store,
-                &self.graph_pool,
-                &self.engine,
-                targets,
-                &self.config.train.fanouts,
-                self.config.train.seed,
-            )?;
-        }
-        metrics.sample_io_ns += self.graph_store.charged_ns() - io_before;
-        metrics.sampled_nodes += samples.total_sampled();
-        Ok(samples)
-    }
-
-    /// The gathering process (G-1..G-3) + minibatch assembly for one
-    /// sampled hyperbatch, independently callable so the three-stage
-    /// executor can run it on its own worker. Touches only the feature
-    /// store / feature buffer / feature cache (see [`Self::sample_stage`]
-    /// for the attribution rationale).
-    pub fn gather_stage(
-        &self,
-        index: usize,
-        targets: &[Vec<u32>],
-        samples: &SampleOutput,
-        metrics: &mut RunMetrics,
-    ) -> Result<Vec<MinibatchData>> {
-        // open the hyperbatch for the feature buffer's and feature
-        // cache's trace recorders / Belady cursors (no-op under reactive)
-        self.feature_pool.begin_hyperbatch(index);
-        self.feature_cache.begin_hyperbatch(index);
-        let fanouts = self.config.train.fanouts.clone();
-        let dim = self.dataset.spec.feature_dim;
-        let classes = self.dataset.spec.num_classes;
-        let node_sets: Vec<Vec<u32>> =
-            (0..targets.len()).map(|mb| samples.flat_nodes(mb)).collect();
-        let io_before = self.feature_store.charged_ns();
-        let gathered;
-        {
-            let _t = StageTimer::new(&mut metrics.gather_wall_ns);
-            gathered = gather_hyperbatch(
-                &self.feature_store,
-                &self.feature_pool,
-                &self.feature_cache,
-                &self.engine,
-                &node_sets,
-            )?;
-        }
-        metrics.gather_io_ns += self.feature_store.charged_ns() - io_before;
-        metrics.gathered_features += gathered.cache_hits + gathered.block_fills;
-
-        // ---- assemble per-minibatch compute inputs (the transfer step
-        // happens in the compute backend where the literals are built)
-        let mut out = Vec::with_capacity(targets.len());
-        let mut gathered_features = gathered.features;
-        for (mb, t) in targets.iter().enumerate() {
-            let labels =
-                t.iter().map(|&v| synth_label(v, classes, dim, self.dataset.spec.seed)).collect();
-            out.push(MinibatchData {
-                levels: samples.levels[mb].clone(),
-                features: std::mem::take(&mut gathered_features[mb]),
-                feature_dim: dim,
-                labels,
-                fanouts: fanouts.clone(),
-            });
-        }
-        metrics.minibatches += targets.len() as u64;
-        Ok(out)
+    /// A shared handle to the underlying services (for an inference
+    /// server or another driver running against the same stores).
+    pub fn services(&self) -> Arc<EngineServices> {
+        Arc::clone(&self.services)
     }
 
     /// Run all of one hyperbatch's minibatches through the compute
@@ -349,31 +206,6 @@ impl AgnesRunner {
         let sim = compute.simulated_ns() - sim_before;
         metrics.compute_sim_ns += sim;
         Ok(wall + sim)
-    }
-
-    /// End-of-epoch snapshots shared by both executors.
-    fn finish_metrics(&self, metrics: &mut RunMetrics) {
-        let gp = self.graph_pool.stats();
-        let fc = self.feature_cache.stats();
-        metrics.graph_hit_ratio = gp.hit_ratio();
-        metrics.feature_hit_ratio = fc.hit_ratio();
-        metrics.graph_cache_hits = gp.hits;
-        metrics.graph_cache_misses = gp.misses;
-        metrics.graph_cache_evictions = gp.evictions;
-        metrics.feature_cache_hits = fc.hits;
-        metrics.feature_cache_misses = fc.misses;
-        metrics.feature_cache_evictions = fc.evictions;
-        metrics.cache_policy = self.config.cache.policy.name().to_string();
-        metrics.device = self.ssd.stats();
-        metrics.io_runs = self.graph_store.runs_issued() + self.feature_store.runs_issued();
-        metrics.io_run_blocks =
-            self.graph_store.run_blocks_read() + self.feature_store.run_blocks_read();
-        metrics.effective_gap_blocks = self.engine.planner.gap_blocks;
-        metrics.layout_policy = self.config.layout.policy.name().to_string();
-        let per_shard = self.ssd.per_shard_stats();
-        metrics.shard_busy_ns = per_shard.iter().map(|s| s.busy_ns).collect();
-        metrics.shard_requests = per_shard.iter().map(|s| s.num_requests).collect();
-        metrics.shard_bytes = per_shard.iter().map(|s| s.total_bytes).collect();
     }
 
     /// Run one full epoch: every hyperbatch through preparation and the
@@ -403,26 +235,6 @@ impl AgnesRunner {
             self.install_belady_schedules();
         }
         Ok(result)
-    }
-
-    /// Warmup-then-optimal epoch boundary: drain each store's recorded
-    /// access log and install the Belady schedule it implies, cursor
-    /// rewound for the coming epoch. Recording stays on, so every epoch's
-    /// trace refreshes the next epoch's schedule (epoch shuffling makes
-    /// the traces drift; the per-hyperbatch cursor resync bounds it).
-    fn install_belady_schedules(&self) {
-        let g = self.graph_pool.take_log();
-        if !g.is_empty() {
-            self.graph_pool.install_schedule(BeladySchedule::build(&g));
-        }
-        let f = self.feature_pool.take_log();
-        if !f.is_empty() {
-            self.feature_pool.install_schedule(BeladySchedule::build(&f));
-        }
-        let c = self.feature_cache.take_log();
-        if !c.is_empty() {
-            self.feature_cache.install_schedule(BeladySchedule::build(&c));
-        }
     }
 
     /// The strictly sequential schedule (`pipeline_depth <= 1`): finish
@@ -477,7 +289,7 @@ impl AgnesRunner {
         // depth 2 => rendezvous channel: the producer holds one prepared
         // hyperbatch while the consumer computes on the other
         let (tx, rx) = mpsc::sync_channel::<Result<PreparedHyperbatch>>(depth - 2);
-        let this: &AgnesRunner = self;
+        let this: &EngineServices = &self.services;
 
         let (consumer_result, producer_join) = std::thread::scope(|s| {
             let producer = s.spawn(move || -> u64 {
@@ -566,7 +378,7 @@ impl AgnesRunner {
         let slack = depth - 3;
         let (tx_s, rx_s) = mpsc::sync_channel::<Result<SampledHyperbatch>>(slack / 2);
         let (tx_g, rx_g) = mpsc::sync_channel::<Result<PreparedHyperbatch>>(slack - slack / 2);
-        let this: &AgnesRunner = self;
+        let this: &EngineServices = &self.services;
         let hbs: &[Vec<Vec<u32>>] = &hyperbatches;
 
         let (consumer_result, sample_join, gather_join) = std::thread::scope(|s| {
@@ -673,21 +485,11 @@ impl AgnesRunner {
     }
 
     /// Reset device counters and buffer statistics (between bench phases).
-    /// The cache-policy machinery survives: installed Belady schedules are
-    /// rewound (not dropped) and partial trace logs discarded, so a
-    /// measured pass replays the warm pass's schedule from the top.
+    /// Delegates to [`EngineServices::reset_counters`]; see
+    /// [`StatsWindow`] for the non-destructive per-window alternative a
+    /// long-running server uses.
     pub fn reset_counters(&mut self) {
-        self.ssd.reset();
-        self.graph_store.reset_io_stats();
-        self.feature_store.reset_io_stats();
-        self.graph_pool.reset_stats();
-        self.feature_pool.reset_stats();
-        self.graph_pool.restart_trace();
-        self.feature_pool.restart_trace();
-        self.feature_cache.reset(
-            self.config.memory.feature_cache_entries,
-            self.config.memory.feature_cache_threshold,
-        );
+        self.services.reset_counters();
     }
 }
 

@@ -1,0 +1,675 @@
+//! Online node-inference serving on top of the shared services layer.
+//!
+//! Training amortizes storage latency across an epoch; serving cares
+//! about *per-request* latency. [`InferenceServer`] wraps one
+//! [`EngineServices`] (stores, buffer pools, feature cache, block remap
+//! all stay warm across requests) and answers concurrent requests, each
+//! a deterministic seeded sample → coalesced gather → forward pass:
+//!
+//! * **Determinism** — sampling is driven by the request's own seed
+//!   through the per-slot RNG, and gather results are
+//!   position-addressed, so a request's response is bit-identical no
+//!   matter how many other requests run concurrently or what the cache
+//!   holds (the serving tests assert digest equality against a
+//!   sequential replay).
+//! * **Bounded admission** — at most `serve.max_inflight` requests may
+//!   be in flight; the next one is rejected with the typed
+//!   [`ServeError::Overloaded`] instead of queueing without bound.
+//!   Rejected requests count in `serve_rejected` but never touch the
+//!   latency histogram.
+//! * **Latency accounting** — every completed request records its
+//!   sample/gather/compute breakdown and total latency into a log2
+//!   [`LatencyHistogram`]; [`InferenceServer::metrics`] reports
+//!   p50/p95/p99 and the per-stage sums through [`RunMetrics`].
+//! * **Hot reload** — [`InferenceServer::reload`] re-validates a
+//!   whitelisted knob through the config's own check functions and swaps
+//!   the knob bundle atomically between requests: in-flight work keeps
+//!   the `Arc` snapshot it started with, so nothing is dropped.
+//!
+//! The epoch-scoped trace machinery (`begin_hyperbatch`, Belady
+//! cursors) is deliberately *not* driven here: concurrent requests have
+//! no global hyperbatch order to synchronize cursors against. Serving
+//! therefore works on any policy, but `cache.policy = "reactive"` is
+//! the intended serving configuration; under `belady` the recorders
+//! keep logging and the logs are simply never turned into schedules.
+
+use super::compute::ComputeBackend;
+use super::compute::MinibatchData;
+use super::services::EngineServices;
+use crate::config::AgnesConfig;
+use crate::graph::generate::synth_label;
+use crate::metrics::{LatencyHistogram, RunMetrics};
+use crate::op::{gather_hyperbatch, sample_hyperbatch};
+use crate::storage::plan::IoPlanner;
+use crate::storage::IoEngine;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Instant;
+
+/// One node-inference request: compute predictions for `targets` using
+/// the deterministic sampling stream of `seed`.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    /// Caller-chosen correlation id, echoed in the response.
+    pub id: u64,
+    /// Target nodes to infer (one serving minibatch).
+    pub targets: Vec<u32>,
+    /// Sampling seed: the same `(targets, seed)` pair always produces a
+    /// bit-identical response.
+    pub seed: u64,
+}
+
+/// Per-stage wall-clock breakdown of one served request.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StageBreakdown {
+    pub sample_ns: u64,
+    pub gather_ns: u64,
+    pub compute_ns: u64,
+    pub total_ns: u64,
+}
+
+/// The answer to one [`InferenceRequest`].
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub id: u64,
+    pub loss: f32,
+    pub correct: u32,
+    pub total: u32,
+    /// Gathered node slots (all levels, incl. duplicates).
+    pub nodes: u64,
+    /// FNV-1a over the gathered feature bits — the determinism witness
+    /// the serving tests compare across concurrent and sequential runs.
+    pub features_digest: u64,
+    pub timing: StageBreakdown,
+}
+
+/// Typed serving failure.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Admission control: the server already has `max_inflight` requests
+    /// in flight. Back off and retry; nothing was executed or recorded
+    /// in the latency histogram.
+    Overloaded { inflight: usize, max_inflight: usize },
+    /// The request was admitted but a pipeline stage failed.
+    Failed(anyhow::Error),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { inflight, max_inflight } => write!(
+                f,
+                "server overloaded: {inflight} requests in flight (serve.max_inflight = \
+                 {max_inflight})"
+            ),
+            ServeError::Failed(e) => write!(f, "inference failed: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// The hot-reloadable knob bundle. Snapshotted (`Arc`) by every request
+/// at admission: a concurrent [`InferenceServer::reload`] swaps the
+/// server's bundle for new requests while in-flight ones finish on the
+/// snapshot they started with.
+pub struct ServeKnobs {
+    pub config: AgnesConfig,
+    /// The I/O engine carries the planner knobs (`io.max_request_bytes`,
+    /// `io.gap_blocks`); an `io.*` reload rebuilds it, anything else
+    /// shares the existing one.
+    pub engine: Arc<IoEngine>,
+}
+
+/// Cumulative serving counters (under one lock with the histogram so a
+/// snapshot is consistent).
+#[derive(Default)]
+struct ServeStats {
+    requests: u64,
+    rejected: u64,
+    sample_ns: u64,
+    gather_ns: u64,
+    compute_ns: u64,
+    latency: LatencyHistogram,
+}
+
+/// A long-running inference server over shared [`EngineServices`].
+///
+/// All methods take `&self`; the server is driven from many worker
+/// threads at once (see the `serve` subcommand in `main.rs`).
+pub struct InferenceServer {
+    services: Arc<EngineServices>,
+    knobs: Mutex<Arc<ServeKnobs>>,
+    inflight: AtomicUsize,
+    stats: Mutex<ServeStats>,
+}
+
+/// An admitted in-flight slot, released on drop. Obtained from
+/// [`InferenceServer::try_admit`]; holds an `Arc` to the server so the
+/// token can cross a work-queue channel to whichever worker executes it.
+pub struct AdmitToken {
+    server: Arc<InferenceServer>,
+}
+
+impl AdmitToken {
+    /// Execute `req` on the admitted slot and release it.
+    pub fn run(
+        self,
+        req: &InferenceRequest,
+        compute: &mut dyn ComputeBackend,
+    ) -> Result<InferenceResponse, ServeError> {
+        self.server.execute(req, compute)
+        // Drop releases the slot
+    }
+}
+
+impl Drop for AdmitToken {
+    fn drop(&mut self) {
+        self.server.release_slot();
+    }
+}
+
+/// Borrow-scoped variant of [`AdmitToken`] used by
+/// [`InferenceServer::handle_request`].
+struct SlotGuard<'a>(&'a InferenceServer);
+
+impl Drop for SlotGuard<'_> {
+    fn drop(&mut self) {
+        self.0.release_slot();
+    }
+}
+
+impl InferenceServer {
+    /// Wrap the shared services. The initial knob bundle mirrors
+    /// `services.config`; the serving engine is built fresh so `io.*`
+    /// reloads can swap it without touching the training engine.
+    pub fn new(services: Arc<EngineServices>) -> InferenceServer {
+        let config = services.config.clone();
+        let engine = Arc::new(build_engine(&config));
+        InferenceServer {
+            services,
+            knobs: Mutex::new(Arc::new(ServeKnobs { config, engine })),
+            inflight: AtomicUsize::new(0),
+            stats: Mutex::new(ServeStats::default()),
+        }
+    }
+
+    /// The current knob bundle snapshot.
+    pub fn knobs(&self) -> Arc<ServeKnobs> {
+        Arc::clone(&self.lock_knobs())
+    }
+
+    /// Requests currently in flight.
+    pub fn inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// The shared services this server answers from.
+    pub fn services(&self) -> Arc<EngineServices> {
+        Arc::clone(&self.services)
+    }
+
+    /// Admit-and-execute in one call (the caller's thread does the
+    /// work). Rejects with [`ServeError::Overloaded`] beyond
+    /// `serve.max_inflight`.
+    pub fn handle_request(
+        &self,
+        req: &InferenceRequest,
+        compute: &mut dyn ComputeBackend,
+    ) -> Result<InferenceResponse, ServeError> {
+        self.admit_slot()?;
+        let _guard = SlotGuard(self);
+        self.execute(req, compute)
+    }
+
+    /// Admission for queued execution: reserve an in-flight slot now (so
+    /// backpressure applies at enqueue time), execute later on any
+    /// worker via [`AdmitToken::run`]. Dropping the token releases the
+    /// slot.
+    pub fn try_admit(self: &Arc<Self>) -> Result<AdmitToken, ServeError> {
+        self.admit_slot()?;
+        Ok(AdmitToken { server: Arc::clone(self) })
+    }
+
+    /// Cumulative serving metrics: request/reject counts, latency
+    /// percentiles from the log2 histogram (inclusive bucket upper
+    /// bounds, so within 2x and never optimistic), and the per-stage
+    /// nanosecond sums.
+    pub fn metrics(&self) -> RunMetrics {
+        let st = self.lock_stats();
+        RunMetrics {
+            serve_requests: st.requests,
+            serve_rejected: st.rejected,
+            serve_p50_ns: st.latency.percentile(50.0),
+            serve_p95_ns: st.latency.percentile(95.0),
+            serve_p99_ns: st.latency.percentile(99.0),
+            serve_sample_ns: st.sample_ns,
+            serve_gather_ns: st.gather_ns,
+            serve_compute_ns: st.compute_ns,
+            ..RunMetrics::default()
+        }
+    }
+
+    /// Latencies recorded so far (== completed requests; rejected ones
+    /// never record).
+    pub fn recorded_latencies(&self) -> u64 {
+        self.lock_stats().latency.count()
+    }
+
+    /// Hot-reload one `section.key` knob. Only knobs that are safe to
+    /// swap between requests are accepted:
+    ///
+    /// * `io.max_request_bytes`, `io.gap_blocks` — rebuild the serving
+    ///   I/O engine with a re-validated planner
+    /// * `memory.feature_cache_entries`, `memory.feature_cache_threshold`
+    ///   — resize the shared feature cache (admission counts reset;
+    ///   correctness is residency-independent)
+    /// * `serve.max_inflight` — admission bound for *new* requests
+    ///
+    /// The value goes through [`AgnesConfig::apply_kv`] (the same typed
+    /// parser `set()` uses) and the full [`AgnesConfig::validate`], so a
+    /// reload can never install a config the CLI would have rejected at
+    /// startup. On success the bundle is swapped atomically; in-flight
+    /// requests finish on their admission-time snapshot.
+    pub fn reload(&self, key: &str, value: &str) -> Result<(), String> {
+        const RELOADABLE: &[(&str, &str)] = &[
+            ("io", "max_request_bytes"),
+            ("io", "gap_blocks"),
+            ("memory", "feature_cache_entries"),
+            ("memory", "feature_cache_threshold"),
+            ("serve", "max_inflight"),
+        ];
+        let (section, k) = key
+            .split_once('.')
+            .ok_or_else(|| format!("expected section.key, got {key:?}"))?;
+        if !RELOADABLE.contains(&(section, k)) {
+            return Err(format!(
+                "{key} is not hot-reloadable (reloadable: {})",
+                RELOADABLE
+                    .iter()
+                    .map(|(s, k)| format!("{s}.{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ));
+        }
+        let current = self.knobs();
+        let mut config = current.config.clone();
+        config.apply_kv(section, k, value)?;
+        config.validate().map_err(|e| e.to_string())?;
+        let engine = if section == "io" {
+            Arc::new(build_engine(&config))
+        } else {
+            Arc::clone(&current.engine)
+        };
+        if section == "memory" {
+            self.services.feature_cache.reset(
+                config.memory.feature_cache_entries,
+                config.memory.feature_cache_threshold,
+            );
+        }
+        *self.lock_knobs() = Arc::new(ServeKnobs { config, engine });
+        Ok(())
+    }
+
+    fn lock_knobs(&self) -> MutexGuard<'_, Arc<ServeKnobs>> {
+        self.knobs.lock().expect("serve knobs poisoned")
+    }
+
+    fn lock_stats(&self) -> MutexGuard<'_, ServeStats> {
+        self.stats.lock().expect("serve stats poisoned")
+    }
+
+    fn admit_slot(&self) -> Result<(), ServeError> {
+        let max = self.knobs().config.serve.max_inflight;
+        let prev = self.inflight.fetch_add(1, Ordering::SeqCst);
+        if prev >= max {
+            self.inflight.fetch_sub(1, Ordering::SeqCst);
+            self.lock_stats().rejected += 1;
+            return Err(ServeError::Overloaded { inflight: prev, max_inflight: max });
+        }
+        Ok(())
+    }
+
+    fn release_slot(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// The admitted request body: seeded sample → gather → forward pass,
+    /// timed per stage. Runs entirely on shared `&self` handles, so any
+    /// number of workers execute concurrently.
+    fn execute(
+        &self,
+        req: &InferenceRequest,
+        compute: &mut dyn ComputeBackend,
+    ) -> Result<InferenceResponse, ServeError> {
+        let knobs = self.knobs();
+        let s = &self.services;
+        let start = Instant::now();
+
+        let samples = sample_hyperbatch(
+            &s.graph_store,
+            &s.graph_pool,
+            &knobs.engine,
+            std::slice::from_ref(&req.targets),
+            &knobs.config.train.fanouts,
+            req.seed,
+        )
+        .map_err(ServeError::Failed)?;
+        let sample_ns = start.elapsed().as_nanos() as u64;
+
+        let gather_start = Instant::now();
+        let node_sets = vec![samples.flat_nodes(0)];
+        let nodes = node_sets[0].len() as u64;
+        let gathered = gather_hyperbatch(
+            &s.feature_store,
+            &s.feature_pool,
+            &s.feature_cache,
+            &knobs.engine,
+            &node_sets,
+        )
+        .map_err(ServeError::Failed)?;
+        let gather_ns = gather_start.elapsed().as_nanos() as u64;
+
+        let compute_start = Instant::now();
+        let dim = s.dataset.spec.feature_dim;
+        let classes = s.dataset.spec.num_classes;
+        let labels = req
+            .targets
+            .iter()
+            .map(|&v| synth_label(v, classes, dim, s.dataset.spec.seed))
+            .collect();
+        let mut levels_iter = samples.levels.into_iter();
+        let mut features_iter = gathered.features.into_iter();
+        let mb = MinibatchData {
+            levels: levels_iter.next().expect("one minibatch sampled"),
+            features: features_iter.next().expect("one minibatch gathered"),
+            feature_dim: dim,
+            labels,
+            fanouts: knobs.config.train.fanouts.clone(),
+        };
+        let step = compute.train_step(&mb).map_err(ServeError::Failed)?;
+        let compute_ns = compute_start.elapsed().as_nanos() as u64;
+
+        let timing = StageBreakdown {
+            sample_ns,
+            gather_ns,
+            compute_ns,
+            total_ns: start.elapsed().as_nanos() as u64,
+        };
+        {
+            let mut st = self.lock_stats();
+            st.requests += 1;
+            st.sample_ns += timing.sample_ns;
+            st.gather_ns += timing.gather_ns;
+            st.compute_ns += timing.compute_ns;
+            st.latency.record(timing.total_ns);
+        }
+        Ok(InferenceResponse {
+            id: req.id,
+            loss: step.loss,
+            correct: step.correct,
+            total: step.total,
+            nodes,
+            features_digest: features_digest(&mb.features),
+            timing,
+        })
+    }
+}
+
+/// Build the serving I/O engine from a validated config (same recipe as
+/// [`EngineServices::open`]).
+fn build_engine(config: &AgnesConfig) -> IoEngine {
+    let spec = config.device.spec();
+    let gap = config.io.gap_blocks.resolve(&spec, config.io.block_size);
+    IoEngine::new(config.io.num_threads, config.io.async_depth)
+        .with_planner(IoPlanner::new(config.io.max_request_bytes, gap))
+}
+
+/// FNV-1a over the gathered feature bits: cheap, order-sensitive, and
+/// exact — two responses match iff every f32 matches bit-for-bit.
+fn features_digest(features: &[f32]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &f in features {
+        for b in f.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::NullCompute;
+    use super::*;
+    use crate::coordinator::compute::StepResult;
+    use std::sync::mpsc;
+
+    fn server_with(
+        mutate: impl FnOnce(&mut AgnesConfig),
+    ) -> (Arc<InferenceServer>, crate::util::TempDir) {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+        mutate(&mut c);
+        let services = Arc::new(EngineServices::open(c).unwrap());
+        (Arc::new(InferenceServer::new(services)), tmp)
+    }
+
+    /// Deterministic request batch over the tiny dataset.
+    fn requests(server: &InferenceServer, n: usize, batch: usize) -> Vec<InferenceRequest> {
+        let num_nodes = server.services().dataset.spec.num_nodes as u64;
+        let mut state = 0x243f_6a88_85a3_08d3u64;
+        (0..n)
+            .map(|i| {
+                let targets = (0..batch)
+                    .map(|_| {
+                        state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                        (state % num_nodes) as u32
+                    })
+                    .collect();
+                InferenceRequest { id: i as u64, targets, seed: 1000 + i as u64 }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn concurrent_requests_bit_identical_to_sequential() {
+        let (server, _tmp) = server_with(|_| {});
+        let reqs = requests(&server, 12, 8);
+
+        // sequential reference digests
+        let expected: Vec<(u64, u64)> = reqs
+            .iter()
+            .map(|r| {
+                let resp = server.handle_request(r, &mut NullCompute).unwrap();
+                assert_eq!(resp.id, r.id);
+                assert!(resp.nodes > 0);
+                (resp.features_digest, resp.nodes)
+            })
+            .collect();
+
+        // 4 concurrent clients over disjoint quarters of the same batch
+        let mut got: Vec<(u64, (u64, u64))> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|client| {
+                    let server = &server;
+                    let reqs = &reqs;
+                    scope.spawn(move || {
+                        let mut out = Vec::new();
+                        for r in reqs.iter().skip(client).step_by(4) {
+                            let resp = server.handle_request(r, &mut NullCompute).unwrap();
+                            out.push((r.id, (resp.features_digest, resp.nodes)));
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        got.sort_unstable_by_key(|&(id, _)| id);
+        assert_eq!(got.len(), expected.len());
+        for (id, digest) in got {
+            assert_eq!(
+                digest, expected[id as usize],
+                "request {id}: concurrent response must be bit-identical to sequential"
+            );
+        }
+        // all 24 requests (12 sequential + 12 concurrent) completed
+        let m = server.metrics();
+        assert_eq!(m.serve_requests, 24);
+        assert_eq!(m.serve_rejected, 0);
+        assert!(m.serve_p99_ns >= m.serve_p50_ns);
+        assert!(m.serve_p50_ns > 0);
+        assert!(m.serve_sample_ns > 0 && m.serve_gather_ns > 0);
+    }
+
+    /// A compute backend that parks inside `train_step` until released,
+    /// holding its admission slot occupied.
+    struct GateCompute {
+        entered: mpsc::Sender<()>,
+        release: Arc<Mutex<mpsc::Receiver<()>>>,
+    }
+
+    impl ComputeBackend for GateCompute {
+        fn train_step(&mut self, mb: &MinibatchData) -> crate::Result<StepResult> {
+            self.entered.send(()).unwrap();
+            self.release.lock().unwrap().recv().unwrap();
+            Ok(StepResult { loss: 0.0, correct: 0, total: mb.labels.len() as u32 })
+        }
+    }
+
+    #[test]
+    fn admission_rejects_above_max_inflight() {
+        let (server, _tmp) = server_with(|c| c.serve.max_inflight = 2);
+        let reqs = requests(&server, 3, 4);
+        let (entered_tx, entered_rx) = mpsc::channel();
+        let (release_tx, release_rx) = mpsc::channel();
+        let release_rx = Arc::new(Mutex::new(release_rx));
+
+        std::thread::scope(|scope| {
+            let workers: Vec<_> = (0..2)
+                .map(|i| {
+                    let server = &server;
+                    let req = &reqs[i];
+                    let mut gate = GateCompute {
+                        entered: entered_tx.clone(),
+                        release: Arc::clone(&release_rx),
+                    };
+                    scope.spawn(move || server.handle_request(req, &mut gate))
+                })
+                .collect();
+            // both requests are parked inside compute, slots held
+            entered_rx.recv().unwrap();
+            entered_rx.recv().unwrap();
+            assert_eq!(server.inflight(), 2);
+
+            // the (max_inflight + 1)-th request is rejected, typed
+            let err = server.handle_request(&reqs[2], &mut NullCompute).unwrap_err();
+            match err {
+                ServeError::Overloaded { inflight, max_inflight } => {
+                    assert_eq!(inflight, 2);
+                    assert_eq!(max_inflight, 2);
+                }
+                other => panic!("expected Overloaded, got {other}"),
+            }
+
+            release_tx.send(()).unwrap();
+            release_tx.send(()).unwrap();
+            for w in workers {
+                w.join().unwrap().unwrap();
+            }
+        });
+
+        assert_eq!(server.inflight(), 0, "slots released after completion");
+        let m = server.metrics();
+        assert_eq!(m.serve_requests, 2);
+        assert_eq!(m.serve_rejected, 1);
+        // the rejection left no trace in the latency accounting
+        assert_eq!(server.recorded_latencies(), 2);
+    }
+
+    #[test]
+    fn hot_reload_mid_burst_drops_nothing() {
+        let (server, _tmp) = server_with(|_| {});
+        let reqs = requests(&server, 12, 6);
+        let expected: Vec<u64> = reqs
+            .iter()
+            .map(|r| server.handle_request(r, &mut NullCompute).unwrap().features_digest)
+            .collect();
+
+        // 4 clients re-run the burst while the main thread swaps knobs
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..4)
+                .map(|client| {
+                    let server = &server;
+                    let reqs = &reqs;
+                    let expected = &expected;
+                    scope.spawn(move || {
+                        for r in reqs.iter().skip(client).step_by(4) {
+                            let resp = server.handle_request(r, &mut NullCompute).unwrap();
+                            assert_eq!(
+                                resp.features_digest, expected[r.id as usize],
+                                "request {} served across a reload must stay bit-identical",
+                                r.id
+                            );
+                        }
+                    })
+                })
+                .collect();
+            // reloads race the burst: cache resize, then planner swap
+            server.reload("memory.feature_cache_entries", "32").unwrap();
+            server.reload("io.gap_blocks", "3").unwrap();
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+
+        // the swapped bundle is what new requests see
+        let knobs = server.knobs();
+        assert_eq!(knobs.config.memory.feature_cache_entries, 32);
+        assert_eq!(knobs.engine.planner.gap_blocks, 3, "io reload rebuilt the engine");
+
+        // every request completed exactly once per pass
+        let m = server.metrics();
+        assert_eq!(m.serve_requests, 24);
+        assert_eq!(m.serve_rejected, 0);
+
+        // rejected reloads: out-of-range value, non-whitelisted keys
+        let err = server.reload("io.gap_blocks", "9999").unwrap_err();
+        assert!(err.contains("io.gap_blocks"), "{err}");
+        let err = server.reload("train.seed", "2").unwrap_err();
+        assert!(err.contains("not hot-reloadable"), "{err}");
+        let err = server.reload("io.max_request_bytes", "0").unwrap_err();
+        assert!(err.contains("io.max_request_bytes"), "{err}");
+        let err = server.reload("nonsense", "1").unwrap_err();
+        assert!(err.contains("section.key"), "{err}");
+        // failed reloads left the good bundle in place
+        assert_eq!(server.knobs().engine.planner.gap_blocks, 3);
+    }
+
+    #[test]
+    fn admit_token_crosses_threads_and_releases_on_drop() {
+        let (server, _tmp) = server_with(|c| c.serve.max_inflight = 1);
+        let req = requests(&server, 1, 4).remove(0);
+
+        let token = server.try_admit().unwrap();
+        assert_eq!(server.inflight(), 1);
+        // the slot is held until the token runs (or drops)
+        assert!(matches!(
+            server.try_admit().unwrap_err(),
+            ServeError::Overloaded { .. }
+        ));
+        // hand the token to another thread, run there
+        let resp = std::thread::scope(|scope| {
+            scope.spawn(move || token.run(&req, &mut NullCompute)).join().unwrap()
+        })
+        .unwrap();
+        assert!(resp.nodes > 0);
+        assert_eq!(server.inflight(), 0);
+
+        // dropping an unused token releases without executing
+        drop(server.try_admit().unwrap());
+        assert_eq!(server.inflight(), 0);
+        assert_eq!(server.metrics().serve_requests, 1);
+    }
+}

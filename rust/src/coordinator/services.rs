@@ -1,0 +1,459 @@
+//! The long-lived services layer: every shared handle the AGNES stack
+//! needs to answer work — config, prepared dataset, the sharded
+//! [`SsdArray`], both stores, both buffer pools, the feature cache, and
+//! the I/O engine — bundled into one [`EngineServices`] value that is
+//! `Arc`-shared between the epoch driver ([`super::AgnesRunner`]) and
+//! any number of concurrent inference clients ([`super::serve`]).
+//!
+//! Before this layer existed the runner owned all of these as per-run
+//! locals and everything died with the run. Now the runner is a thin
+//! epoch driver that borrows the services, and a long-running server
+//! can keep the stores, caches, and block remap open across requests.
+//!
+//! All service methods take `&self`: the underlying handles are either
+//! immutable (`Arc<GraphStore>`), internally locked
+//! (`SharedBufferPool`, `SharedFeatureCache`), or atomic (store I/O
+//! counters, device clocks), so the same `EngineServices` value can be
+//! driven from the staged pipeline workers and from serving worker
+//! threads at once.
+
+use crate::config::AgnesConfig;
+use crate::graph::generate::synth_label;
+use crate::memory::{
+    BeladySchedule, CachePolicy, FeatureCacheStats, PoolStats, SharedBufferPool,
+    SharedFeatureCache,
+};
+use crate::metrics::{RunMetrics, StageTimer};
+use crate::op::{
+    gather_hyperbatch, make_hyperbatches, make_minibatches, sample_hyperbatch, select_targets,
+    SampleOutput,
+};
+use crate::storage::block::{FeatureBlockLayout, GraphBlock};
+use crate::storage::device::{DeviceStats, SharedArray, SsdArray};
+use crate::storage::plan::{BlockBytes, IoPlanner};
+use crate::storage::store::{FeatureStore, GraphStore};
+use crate::storage::IoEngine;
+use crate::Result;
+use std::sync::Arc;
+
+use super::compute::MinibatchData;
+use super::data::{prepare_dataset, PreparedDataset};
+
+/// The assembled AGNES system (stores + buffers + engine) as a
+/// long-lived, shareable service. Stores are `Arc`-shared and the
+/// in-memory layer uses shared handles so preparation stages and
+/// serving workers can all drive it concurrently.
+pub struct EngineServices {
+    pub config: AgnesConfig,
+    pub dataset: PreparedDataset,
+    /// The sharded SSD array: `device.num_ssds` real per-device queues
+    /// with stripe-mapped block ownership (one shard — bit-for-bit the
+    /// legacy single-queue model — when `num_ssds = 1`).
+    pub ssd: SharedArray,
+    pub graph_store: Arc<GraphStore>,
+    pub feature_store: Arc<FeatureStore>,
+    pub graph_pool: SharedBufferPool<GraphBlock>,
+    pub feature_pool: SharedBufferPool<BlockBytes>,
+    pub feature_cache: SharedFeatureCache,
+    pub engine: IoEngine,
+}
+
+impl EngineServices {
+    /// Prepare (or reuse) the dataset on disk and assemble the system.
+    pub fn open(config: AgnesConfig) -> Result<EngineServices> {
+        let dataset = prepare_dataset(&config)?;
+        // `num_ssds` real shards, each with its own queue and busy clock,
+        // striped over the block space (a single shard is bit-for-bit
+        // the legacy one-queue model)
+        let spec = config.device.spec();
+        let ssd = SsdArray::sharded(spec, config.io.effective_stripe_blocks());
+        let graph_store = Arc::new(GraphStore::open(&dataset.paths, ssd.clone())?);
+        let layout = FeatureBlockLayout {
+            block_size: config.io.block_size,
+            feature_dim: dataset.spec.feature_dim,
+        };
+        let feature_store = Arc::new(FeatureStore::open(
+            &dataset.paths,
+            layout,
+            dataset.spec.num_nodes,
+            ssd.clone(),
+        )?);
+        let graph_pool = SharedBufferPool::new(config.graph_buffer_blocks());
+        let feature_pool = SharedBufferPool::new(config.feature_buffer_blocks());
+        let feature_cache = SharedFeatureCache::new(
+            config.memory.feature_cache_entries,
+            config.memory.feature_cache_threshold,
+        );
+        if config.cache.policy == CachePolicy::Belady {
+            // warmup-then-optimal: epoch 0 runs under reactive semantics
+            // while every store records its live access trace; each epoch
+            // boundary turns the logs into the next epoch's Belady
+            // schedules (see `crate::memory::trace`)
+            graph_pool.start_recording();
+            feature_pool.start_recording();
+            feature_cache.start_recording();
+        }
+        // static gap budgets pass through; the auto knob derives the
+        // bridge budget from the device spec (bridge while reading the
+        // hole is cheaper than paying another request overhead)
+        let gap_blocks = config.io.gap_blocks.resolve(&spec, config.io.block_size);
+        let engine = IoEngine::new(config.io.num_threads, config.io.async_depth)
+            .with_planner(IoPlanner::new(config.io.max_request_bytes, gap_blocks));
+        Ok(EngineServices {
+            config,
+            dataset,
+            ssd,
+            graph_store,
+            feature_store,
+            graph_pool,
+            feature_pool,
+            feature_cache,
+            engine,
+        })
+    }
+
+    /// The epoch's hyperbatches: shuffled targets → minibatches →
+    /// hyperbatches (paper §4.1: minibatch 1000, hyperbatch 1024).
+    pub fn epoch_hyperbatches(&self, epoch: usize) -> Vec<Vec<Vec<u32>>> {
+        let t = &self.config.train;
+        let targets = select_targets(
+            self.dataset.spec.num_nodes,
+            t.target_fraction,
+            t.seed.wrapping_add(epoch as u64),
+        );
+        make_hyperbatches(make_minibatches(&targets, t.minibatch_size), t.hyperbatch_size)
+    }
+
+    /// Data preparation for one hyperbatch: sampling sweep + gathering
+    /// sweep. Returns the per-minibatch compute inputs. Takes `&self` so
+    /// the pipelined executor can run it on a preparation worker thread.
+    /// `index` is the hyperbatch's position in the epoch — the trace
+    /// recorder buckets accesses by it and an installed Belady schedule
+    /// re-synchronizes its cursor at each boundary.
+    pub fn prepare_hyperbatch(
+        &self,
+        index: usize,
+        targets: &[Vec<u32>],
+        metrics: &mut RunMetrics,
+    ) -> Result<Vec<MinibatchData>> {
+        let samples = self.sample_stage(index, targets, metrics)?;
+        self.gather_stage(index, targets, &samples, metrics)
+    }
+
+    /// The sampling process (S-1..S-3) for one hyperbatch, independently
+    /// callable so the three-stage executor can run it on its own worker.
+    /// Touches only the graph store / graph buffer; simulated I/O is
+    /// attributed through the graph store's per-store charge counter, so
+    /// a concurrently running gather stage (feature store) cannot pollute
+    /// `sample_io_ns`.
+    pub fn sample_stage(
+        &self,
+        index: usize,
+        targets: &[Vec<u32>],
+        metrics: &mut RunMetrics,
+    ) -> Result<SampleOutput> {
+        // open the hyperbatch for the graph buffer's trace recorder /
+        // Belady cursor (no-op under the reactive policy)
+        self.graph_pool.begin_hyperbatch(index);
+        let io_before = self.graph_store.charged_ns();
+        let samples;
+        {
+            let _t = StageTimer::new(&mut metrics.sample_wall_ns);
+            samples = sample_hyperbatch(
+                &self.graph_store,
+                &self.graph_pool,
+                &self.engine,
+                targets,
+                &self.config.train.fanouts,
+                self.config.train.seed,
+            )?;
+        }
+        metrics.sample_io_ns += self.graph_store.charged_ns() - io_before;
+        metrics.sampled_nodes += samples.total_sampled();
+        Ok(samples)
+    }
+
+    /// The gathering process (G-1..G-3) + minibatch assembly for one
+    /// sampled hyperbatch, independently callable so the three-stage
+    /// executor can run it on its own worker. Touches only the feature
+    /// store / feature buffer / feature cache (see [`Self::sample_stage`]
+    /// for the attribution rationale).
+    pub fn gather_stage(
+        &self,
+        index: usize,
+        targets: &[Vec<u32>],
+        samples: &SampleOutput,
+        metrics: &mut RunMetrics,
+    ) -> Result<Vec<MinibatchData>> {
+        // open the hyperbatch for the feature buffer's and feature
+        // cache's trace recorders / Belady cursors (no-op under reactive)
+        self.feature_pool.begin_hyperbatch(index);
+        self.feature_cache.begin_hyperbatch(index);
+        let fanouts = self.config.train.fanouts.clone();
+        let dim = self.dataset.spec.feature_dim;
+        let classes = self.dataset.spec.num_classes;
+        let node_sets: Vec<Vec<u32>> =
+            (0..targets.len()).map(|mb| samples.flat_nodes(mb)).collect();
+        let io_before = self.feature_store.charged_ns();
+        let gathered;
+        {
+            let _t = StageTimer::new(&mut metrics.gather_wall_ns);
+            gathered = gather_hyperbatch(
+                &self.feature_store,
+                &self.feature_pool,
+                &self.feature_cache,
+                &self.engine,
+                &node_sets,
+            )?;
+        }
+        metrics.gather_io_ns += self.feature_store.charged_ns() - io_before;
+        metrics.gathered_features += gathered.cache_hits + gathered.block_fills;
+
+        // ---- assemble per-minibatch compute inputs (the transfer step
+        // happens in the compute backend where the literals are built)
+        let mut out = Vec::with_capacity(targets.len());
+        let mut gathered_features = gathered.features;
+        for (mb, t) in targets.iter().enumerate() {
+            let labels =
+                t.iter().map(|&v| synth_label(v, classes, dim, self.dataset.spec.seed)).collect();
+            out.push(MinibatchData {
+                levels: samples.levels[mb].clone(),
+                features: std::mem::take(&mut gathered_features[mb]),
+                feature_dim: dim,
+                labels,
+                fanouts: fanouts.clone(),
+            });
+        }
+        metrics.minibatches += targets.len() as u64;
+        Ok(out)
+    }
+
+    /// End-of-epoch snapshots shared by both executors.
+    pub(crate) fn finish_metrics(&self, metrics: &mut RunMetrics) {
+        let gp = self.graph_pool.stats();
+        let fc = self.feature_cache.stats();
+        metrics.graph_hit_ratio = gp.hit_ratio();
+        metrics.feature_hit_ratio = fc.hit_ratio();
+        metrics.graph_cache_hits = gp.hits;
+        metrics.graph_cache_misses = gp.misses;
+        metrics.graph_cache_evictions = gp.evictions;
+        metrics.feature_cache_hits = fc.hits;
+        metrics.feature_cache_misses = fc.misses;
+        metrics.feature_cache_evictions = fc.evictions;
+        metrics.cache_policy = self.config.cache.policy.name().to_string();
+        metrics.device = self.ssd.stats();
+        metrics.io_runs = self.graph_store.runs_issued() + self.feature_store.runs_issued();
+        metrics.io_run_blocks =
+            self.graph_store.run_blocks_read() + self.feature_store.run_blocks_read();
+        metrics.effective_gap_blocks = self.engine.planner.gap_blocks;
+        metrics.layout_policy = self.config.layout.policy.name().to_string();
+        let per_shard = self.ssd.per_shard_stats();
+        metrics.shard_busy_ns = per_shard.iter().map(|s| s.busy_ns).collect();
+        metrics.shard_requests = per_shard.iter().map(|s| s.num_requests).collect();
+        metrics.shard_bytes = per_shard.iter().map(|s| s.total_bytes).collect();
+    }
+
+    /// Warmup-then-optimal epoch boundary: drain each store's recorded
+    /// access log and install the Belady schedule it implies, cursor
+    /// rewound for the coming epoch. Recording stays on, so every epoch's
+    /// trace refreshes the next epoch's schedule (epoch shuffling makes
+    /// the traces drift; the per-hyperbatch cursor resync bounds it).
+    pub(crate) fn install_belady_schedules(&self) {
+        let g = self.graph_pool.take_log();
+        if !g.is_empty() {
+            self.graph_pool.install_schedule(BeladySchedule::build(&g));
+        }
+        let f = self.feature_pool.take_log();
+        if !f.is_empty() {
+            self.feature_pool.install_schedule(BeladySchedule::build(&f));
+        }
+        let c = self.feature_cache.take_log();
+        if !c.is_empty() {
+            self.feature_cache.install_schedule(BeladySchedule::build(&c));
+        }
+    }
+
+    /// Reset device counters and buffer statistics (between bench phases).
+    /// The cache-policy machinery survives: installed Belady schedules are
+    /// rewound (not dropped) and partial trace logs discarded, so a
+    /// measured pass replays the warm pass's schedule from the top.
+    pub fn reset_counters(&self) {
+        self.ssd.reset();
+        self.graph_store.reset_io_stats();
+        self.feature_store.reset_io_stats();
+        self.graph_pool.reset_stats();
+        self.feature_pool.reset_stats();
+        self.graph_pool.restart_trace();
+        self.feature_pool.restart_trace();
+        self.feature_cache.reset(
+            self.config.memory.feature_cache_entries,
+            self.config.memory.feature_cache_threshold,
+        );
+    }
+
+    /// One cumulative snapshot of every service counter, taken without
+    /// resetting anything — the read-only complement to
+    /// [`Self::reset_counters`] that a long-running server uses for
+    /// rolling per-window rates (see [`StatsWindow`]).
+    pub fn counters(&self) -> ServiceCounters {
+        ServiceCounters {
+            graph_pool: self.graph_pool.stats(),
+            feature_pool: self.feature_pool.stats(),
+            feature_cache: self.feature_cache.stats(),
+            device: self.ssd.stats(),
+            io_runs: self.graph_store.runs_issued() + self.feature_store.runs_issued(),
+            io_run_blocks: self.graph_store.run_blocks_read()
+                + self.feature_store.run_blocks_read(),
+        }
+    }
+}
+
+/// Cumulative counters across every shared service at one instant.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServiceCounters {
+    pub graph_pool: PoolStats,
+    pub feature_pool: PoolStats,
+    pub feature_cache: FeatureCacheStats,
+    pub device: DeviceStats,
+    pub io_runs: u64,
+    pub io_run_blocks: u64,
+}
+
+/// Per-interval counter deltas for one window (see [`StatsWindow`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct WindowStats {
+    pub graph_hits: u64,
+    pub graph_misses: u64,
+    pub feature_hits: u64,
+    pub feature_misses: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub device_requests: u64,
+    pub device_bytes: u64,
+    pub io_runs: u64,
+    pub io_run_blocks: u64,
+}
+
+impl WindowStats {
+    fn rate(hits: u64, misses: u64) -> f64 {
+        let total = hits + misses;
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
+    /// Graph buffer-pool hit rate within this window.
+    pub fn graph_hit_rate(&self) -> f64 {
+        Self::rate(self.graph_hits, self.graph_misses)
+    }
+
+    /// Feature buffer-pool hit rate within this window.
+    pub fn feature_hit_rate(&self) -> f64 {
+        Self::rate(self.feature_hits, self.feature_misses)
+    }
+
+    /// Feature cache hit rate within this window.
+    pub fn cache_hit_rate(&self) -> f64 {
+        Self::rate(self.cache_hits, self.cache_misses)
+    }
+}
+
+/// Rolling per-window view over the cumulative service counters.
+///
+/// `reset_counters` is epoch-scoped and destructive (it wipes device
+/// clocks and partial trace logs), so a long-running server must never
+/// call it between windows — doing so would also rewind installed Belady
+/// schedules mid-trace. Instead, `StatsWindow` remembers the last
+/// cumulative snapshot and reports saturating deltas, leaving every
+/// schedule, trace recorder, and cumulative counter untouched.
+pub struct StatsWindow {
+    last: ServiceCounters,
+}
+
+impl StatsWindow {
+    /// Open a window at the services' current counter values.
+    pub fn new(services: &EngineServices) -> StatsWindow {
+        StatsWindow { last: services.counters() }
+    }
+
+    /// Close the current window and open the next: returns the counter
+    /// deltas accumulated since the previous `roll` (or `new`).
+    pub fn roll(&mut self, services: &EngineServices) -> WindowStats {
+        let now = services.counters();
+        let w = WindowStats {
+            graph_hits: now.graph_pool.hits.saturating_sub(self.last.graph_pool.hits),
+            graph_misses: now.graph_pool.misses.saturating_sub(self.last.graph_pool.misses),
+            feature_hits: now.feature_pool.hits.saturating_sub(self.last.feature_pool.hits),
+            feature_misses: now.feature_pool.misses.saturating_sub(self.last.feature_pool.misses),
+            cache_hits: now.feature_cache.hits.saturating_sub(self.last.feature_cache.hits),
+            cache_misses: now.feature_cache.misses.saturating_sub(self.last.feature_cache.misses),
+            device_requests: now.device.num_requests.saturating_sub(self.last.device.num_requests),
+            device_bytes: now.device.total_bytes.saturating_sub(self.last.device.total_bytes),
+            io_runs: now.io_runs.saturating_sub(self.last.io_runs),
+            io_run_blocks: now.io_run_blocks.saturating_sub(self.last.io_run_blocks),
+        };
+        self.last = now;
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{AgnesRunner, NullCompute};
+    use super::*;
+
+    fn services() -> (EngineServices, crate::util::TempDir) {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+        (EngineServices::open(c).unwrap(), tmp)
+    }
+
+    #[test]
+    fn runner_shares_services() {
+        let (s, _tmp) = services();
+        let mut r = AgnesRunner::from_services(Arc::new(s));
+        let shared = r.services();
+        let res = r.run_epoch(0, &mut NullCompute).unwrap();
+        assert!(res.metrics.minibatches > 0);
+        // the epoch drove the *shared* services, not a private copy
+        assert!(shared.counters().device.num_requests > 0);
+    }
+
+    #[test]
+    fn stats_window_reports_deltas_without_resetting() {
+        let (s, _tmp) = services();
+        let s = Arc::new(s);
+        let mut r = AgnesRunner::from_services(s.clone());
+        let mut window = StatsWindow::new(&s);
+
+        r.run_epoch(0, &mut NullCompute).unwrap();
+        let before = s.counters();
+        let w0 = window.roll(&s);
+        // rolling a window is read-only: cumulative counters unchanged
+        let after = s.counters();
+        assert_eq!(before.device.num_requests, after.device.num_requests);
+        assert_eq!(before.graph_pool, after.graph_pool);
+        assert!(w0.device_requests > 0);
+        assert!(w0.graph_hits + w0.graph_misses > 0);
+        assert!((0.0..=1.0).contains(&w0.graph_hit_rate()));
+
+        r.run_epoch(1, &mut NullCompute).unwrap();
+        let w1 = window.roll(&s);
+        // the second window covers only epoch 1: the two windows sum to
+        // the cumulative totals
+        let total = s.counters();
+        assert_eq!(w0.device_requests + w1.device_requests, total.device.num_requests);
+        assert_eq!(
+            w0.cache_hits + w0.cache_misses + w1.cache_hits + w1.cache_misses,
+            total.feature_cache.hits + total.feature_cache.misses
+        );
+        // an empty window is all zeros
+        let w2 = window.roll(&s);
+        assert_eq!(w2.device_requests, 0);
+        assert_eq!(w2.graph_hits + w2.graph_misses, 0);
+        assert_eq!(w2.graph_hit_rate(), 0.0);
+    }
+}

@@ -37,8 +37,10 @@
 
 use super::layout::{BlockRemap, StripeMap};
 use super::CsrGraph;
+use crate::memory::AccessLog;
 use crate::storage::block::FeatureBlockLayout;
 use crate::storage::object_index::ObjectIndexTable;
+use crate::storage::BlockId;
 use std::collections::HashMap;
 use std::collections::VecDeque;
 
@@ -83,6 +85,55 @@ impl std::str::FromStr for LayoutPolicy {
 }
 
 impl std::fmt::Display for LayoutPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Where the hyperbatch policy's access trace comes from
+/// (`layout.trace_source`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TraceSource {
+    /// Structural stand-in: deterministic fanout-capped frontier
+    /// expansion over the in-memory CSR ([`sample_access_trace`]). Zero
+    /// storage I/O, but it is not the sampler's exact block stream.
+    #[default]
+    Sampled,
+    /// Replay the real pipeline at build time against temporary
+    /// identity-layout stores with recording buffer pools, and feed the
+    /// recorded [`AccessLog`]s through [`trace_from_log`]. Costs one
+    /// warmup sweep of storage I/O; the heat counts are exactly the block
+    /// stream training will issue.
+    Recorded,
+}
+
+impl TraceSource {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TraceSource::Sampled => "sampled",
+            TraceSource::Recorded => "recorded",
+        }
+    }
+
+    pub fn all() -> [TraceSource; 2] {
+        [TraceSource::Sampled, TraceSource::Recorded]
+    }
+}
+
+impl std::str::FromStr for TraceSource {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "sampled" => Ok(TraceSource::Sampled),
+            "recorded" => Ok(TraceSource::Recorded),
+            other => Err(format!(
+                "unknown trace source {other:?} (expected sampled | recorded)"
+            )),
+        }
+    }
+}
+
+impl std::fmt::Display for TraceSource {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.name())
     }
@@ -188,6 +239,24 @@ pub fn degree_trace(
         AccessTrace { hyperbatches: vec![sorted(graph_counts)] },
         AccessTrace { hyperbatches: vec![sorted(feature_counts)] },
     )
+}
+
+/// Convert a recorded buffer-pool [`AccessLog`] into the layout
+/// optimizer's per-hyperbatch heat trace: every `get()` the pool logged
+/// for a hyperbatch becomes one count against its block. This is the
+/// `layout.trace_source = "recorded"` path — the counts are the *exact*
+/// block stream the pipeline issued (recording happens at `get()`, before
+/// residency is consulted, so the trace is independent of pool capacity).
+pub fn trace_from_log(log: &AccessLog<BlockId>) -> AccessTrace {
+    let mut trace = AccessTrace::default();
+    for hb in &log.hyperbatches {
+        let mut counts: HashMap<u32, u64> = HashMap::new();
+        for b in hb {
+            *counts.entry(b.0).or_insert(0) += 1;
+        }
+        trace.hyperbatches.push(sorted(counts));
+    }
+    trace
 }
 
 fn count_blocks(
@@ -336,6 +405,35 @@ mod tests {
         assert!("bogus".parse::<LayoutPolicy>().is_err());
         assert_eq!(LayoutPolicy::Hyperbatch.to_string(), "hyperbatch");
         assert_eq!(LayoutPolicy::default(), LayoutPolicy::None);
+    }
+
+    #[test]
+    fn trace_source_parse_and_names() {
+        assert_eq!("sampled".parse::<TraceSource>().unwrap(), TraceSource::Sampled);
+        assert_eq!("RECORDED".parse::<TraceSource>().unwrap(), TraceSource::Recorded);
+        assert!("psychic".parse::<TraceSource>().is_err());
+        assert_eq!(TraceSource::Recorded.to_string(), "recorded");
+        assert_eq!(TraceSource::default(), TraceSource::Sampled);
+        assert_eq!(TraceSource::all().len(), 2);
+    }
+
+    #[test]
+    fn trace_from_log_counts_per_hyperbatch() {
+        let log = AccessLog {
+            hyperbatches: vec![
+                vec![BlockId(3), BlockId(1), BlockId(3), BlockId(3)],
+                vec![],
+                vec![BlockId(0), BlockId(0)],
+            ],
+        };
+        let t = trace_from_log(&log);
+        assert_eq!(t.hyperbatches.len(), 3);
+        // sorted by block id, counts accumulated
+        assert_eq!(t.hyperbatches[0], vec![(1, 1), (3, 3)]);
+        assert!(t.hyperbatches[1].is_empty());
+        assert_eq!(t.hyperbatches[2], vec![(0, 2)]);
+        // an empty log yields an empty trace (layout stays identity)
+        assert_eq!(trace_from_log(&AccessLog::default()).touched(), 0);
     }
 
     #[test]

@@ -47,7 +47,7 @@ pub mod storage;
 pub mod util;
 
 pub use config::{AgnesConfig, DatasetConfig, DeviceConfig, TrainConfig};
-pub use coordinator::AgnesRunner;
+pub use coordinator::{AgnesRunner, EngineServices, InferenceServer};
 pub use graph::CsrGraph;
 
 /// Crate-wide result type.

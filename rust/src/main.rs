@@ -6,6 +6,9 @@
 //!   train      run storage-based GNN training (AGNES or a baseline)
 //!   prep       data-preparation-only run (no compute) — I/O report
 //!   report     print Table 2 (dataset statistics at the configured scale)
+//!   serve      long-running node-inference server over shared services:
+//!              a stdin command loop feeds a bounded worker pool
+//!              (admission control, latency percentiles, hot-reload)
 //!
 //! flags (all optional):
 //!   --config <file>        flat TOML config; CLI flags override it
@@ -24,6 +27,9 @@
 //!                          and rotating hot blocks across shards)
 //!   --trace-hyperbatches <n> cap on hyperbatches sampled into the layout
 //!                          trace (hyperbatch policy; 0 = whole epoch 0)
+//!   --trace-source <s>     layout trace source: sampled (structural
+//!                          stand-in, no I/O) | recorded (replay the real
+//!                          pipeline at build time and use its block stream)
 //!   --cache-policy <p>     feature-cache/buffer eviction: reactive | belady
 //!                          (belady records epoch 0, then follows the
 //!                          precomputed farthest-next-use schedule)
@@ -39,18 +45,33 @@
 //!   --epochs <n>
 //!   --artifacts <dir>      AOT artifact directory (default: artifacts)
 //!   --modeled-compute      modeled compute backend instead of XLA
+//!   --serve-workers <n>    serve: inference worker threads
+//!   --serve-max-inflight <n> serve: admission bound (requests beyond it
+//!                          are rejected with a typed backpressure error)
+//!
+//! serve stdin protocol (one command per line):
+//!   infer <seed> <node...>        one request for the given target nodes
+//!   burst <count> <batch> [seed0] enqueue count deterministic requests
+//!   stats                         rolling window + latency percentiles
+//!   reload <section.key> <value>  hot-swap a cache/io knob (re-validated)
+//!   quit                          drain, join workers, print summary
 //! ```
 
 use agnes::baselines::{GinexRunner, GnnDriveRunner, MariusRunner, OutreRunner, TrainingSystem};
 use agnes::config::{AgnesConfig, GapBlocks, GnnModel};
-use agnes::coordinator::{prepare_dataset, ModeledCompute, NullCompute};
+use agnes::coordinator::{
+    prepare_dataset, AdmitToken, ComputeBackend, EngineServices, InferenceRequest,
+    InferenceServer, ModeledCompute, NullCompute, ServeError, StatsWindow,
+};
 use agnes::graph::datasets::DatasetSpec;
-use agnes::graph::reorder::LayoutPolicy;
+use agnes::graph::reorder::{LayoutPolicy, TraceSource};
 use agnes::memory::CachePolicy;
 use agnes::metrics::{fmt_bytes, fmt_ns};
 use agnes::runtime::{ArtifactPaths, XlaCompute};
 use agnes::AgnesRunner;
 use std::collections::HashMap;
+use std::io::BufRead;
+use std::sync::{mpsc, Arc, Mutex};
 
 #[derive(Clone, Copy, PartialEq, Eq)]
 enum System {
@@ -157,6 +178,9 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(t) = args.get::<usize>("trace-hyperbatches")? {
         c.layout.trace_hyperbatches = t;
     }
+    if let Some(s) = args.get::<TraceSource>("trace-source")? {
+        c.layout.trace_source = s;
+    }
     if let Some(p) = args.get::<CachePolicy>("cache-policy")? {
         c.cache.policy = p;
     }
@@ -180,6 +204,12 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     }
     if let Some(m) = args.flags.get("model") {
         c.train.model = m.parse::<GnnModel>().map_err(|e| anyhow::anyhow!(e))?;
+    }
+    if let Some(w) = args.get::<usize>("serve-workers")? {
+        c.serve.workers = w;
+    }
+    if let Some(m) = args.get::<usize>("serve-max-inflight")? {
+        c.serve.max_inflight = m;
     }
     // fail fast on out-of-range values whether they came from the config
     // file or from CLI overrides
@@ -258,8 +288,220 @@ fn run_system(
     Ok(())
 }
 
+/// Admit `req` and queue it for the worker pool, retrying briefly on
+/// backpressure so a burst larger than `serve.max_inflight` still
+/// completes end-to-end while the rejections are exercised and counted.
+fn submit(
+    server: &Arc<InferenceServer>,
+    tx: &mpsc::Sender<(InferenceRequest, AdmitToken)>,
+    req: InferenceRequest,
+) {
+    let mut reported = false;
+    for _ in 0..10_000 {
+        match server.try_admit() {
+            Ok(token) => {
+                if tx.send((req, token)).is_err() {
+                    eprintln!("worker pool gone; dropping request");
+                }
+                return;
+            }
+            Err(e @ ServeError::Overloaded { .. }) => {
+                if !reported {
+                    eprintln!("backpressure: {e}; retrying");
+                    reported = true;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            Err(e) => {
+                eprintln!("admit failed: {e}");
+                return;
+            }
+        }
+    }
+    eprintln!("giving up on request {} after sustained backpressure", req.id);
+}
+
+/// The `serve` command: a worker pool of `serve.workers` threads drains
+/// an admission-bounded queue while the main thread runs the stdin
+/// command loop (see the doc header for the protocol). On `quit`/EOF the
+/// queue is closed, workers drain in-flight requests and join, and a
+/// summary with latency percentiles is printed.
+fn serve_loop(server: Arc<InferenceServer>, args: &Args) -> anyhow::Result<()> {
+    let services = server.services();
+    let workers = server.knobs().config.serve.workers;
+    let modeled = args.has("modeled-compute");
+    let artifacts =
+        args.flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".to_string());
+    let model = server.knobs().config.train.model.name().to_string();
+    if !modeled {
+        let paths = ArtifactPaths::in_dir(&artifacts, &model);
+        anyhow::ensure!(
+            paths.exist(),
+            "artifacts for model {model:?} not found in {artifacts:?}; run `make artifacts` or \
+             pass --modeled-compute"
+        );
+    }
+    let num_nodes = services.dataset.spec.num_nodes as u64;
+    println!(
+        "serving {} ({} nodes): {} workers, max_inflight={}, compute={}",
+        services.dataset.spec.name,
+        num_nodes,
+        workers,
+        server.knobs().config.serve.max_inflight,
+        if modeled { "modeled" } else { "xla" },
+    );
+
+    let (tx, rx) = mpsc::channel::<(InferenceRequest, AdmitToken)>();
+    let rx = Arc::new(Mutex::new(rx));
+    std::thread::scope(|scope| -> anyhow::Result<()> {
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let artifacts = artifacts.clone();
+            let model = model.clone();
+            scope.spawn(move || {
+                // one compute backend per worker (backends are stateful)
+                let mut compute: Box<dyn ComputeBackend> = if modeled {
+                    Box::new(ModeledCompute::new(5_000_000))
+                } else {
+                    match XlaCompute::load(&artifacts, &model) {
+                        Ok(c) => Box::new(c),
+                        Err(e) => {
+                            eprintln!("worker failed to load XLA artifacts: {e}");
+                            return;
+                        }
+                    }
+                };
+                loop {
+                    // hold the receiver lock only to dequeue
+                    let job = rx.lock().expect("queue poisoned").recv();
+                    let (req, token) = match job {
+                        Ok(j) => j,
+                        Err(_) => break, // queue closed: clean shutdown
+                    };
+                    match token.run(&req, compute.as_mut()) {
+                        Ok(resp) => println!(
+                            "resp id={} nodes={} loss={:.4} digest={:016x} total={} \
+                             (sample={} gather={} compute={})",
+                            resp.id,
+                            resp.nodes,
+                            resp.loss,
+                            resp.features_digest,
+                            fmt_ns(resp.timing.total_ns),
+                            fmt_ns(resp.timing.sample_ns),
+                            fmt_ns(resp.timing.gather_ns),
+                            fmt_ns(resp.timing.compute_ns),
+                        ),
+                        Err(e) => eprintln!("request {} failed: {e}", req.id),
+                    }
+                }
+            });
+        }
+
+        let mut window = StatsWindow::new(&services);
+        let mut next_id = 0u64;
+        let mut lcg = 0x243f_6a88_85a3_08d3u64;
+        for line in std::io::stdin().lock().lines() {
+            let line = line?;
+            let mut parts = line.split_whitespace();
+            match parts.next() {
+                None => {}
+                Some("quit") => break,
+                Some("infer") => {
+                    let seed: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(0);
+                    let targets: Vec<u32> =
+                        parts.filter_map(|s| s.parse().ok()).collect();
+                    if targets.is_empty() {
+                        eprintln!("usage: infer <seed> <node...>");
+                        continue;
+                    }
+                    let id = next_id;
+                    next_id += 1;
+                    submit(&server, &tx, InferenceRequest { id, targets, seed });
+                }
+                Some("burst") => {
+                    let count: usize = parts.next().and_then(|s| s.parse().ok()).unwrap_or(8);
+                    let batch: usize = parts.next().and_then(|s| s.parse().ok()).unwrap_or(8);
+                    let seed0: u64 = parts.next().and_then(|s| s.parse().ok()).unwrap_or(1);
+                    for i in 0..count {
+                        let targets = (0..batch)
+                            .map(|_| {
+                                lcg = lcg
+                                    .wrapping_mul(6364136223846793005)
+                                    .wrapping_add(1442695040888963407);
+                                (lcg % num_nodes) as u32
+                            })
+                            .collect();
+                        let id = next_id;
+                        next_id += 1;
+                        submit(
+                            &server,
+                            &tx,
+                            InferenceRequest { id, targets, seed: seed0 + i as u64 },
+                        );
+                    }
+                    println!("burst: {count} requests of {batch} targets enqueued");
+                }
+                Some("stats") => {
+                    let w = window.roll(&services);
+                    let m = server.metrics();
+                    println!(
+                        "stats: inflight={} requests={} rejected={} p50={} p95={} p99={}",
+                        server.inflight(),
+                        m.serve_requests,
+                        m.serve_rejected,
+                        fmt_ns(m.serve_p50_ns),
+                        fmt_ns(m.serve_p95_ns),
+                        fmt_ns(m.serve_p99_ns),
+                    );
+                    println!(
+                        "  window: graph {:.1}% / feature {:.1}% / cache {:.1}% hit, \
+                         {} device reqs, {}, {} runs",
+                        w.graph_hit_rate() * 100.0,
+                        w.feature_hit_rate() * 100.0,
+                        w.cache_hit_rate() * 100.0,
+                        w.device_requests,
+                        fmt_bytes(w.device_bytes),
+                        w.io_runs,
+                    );
+                }
+                Some("reload") => {
+                    let key = parts.next().unwrap_or("");
+                    let value = parts.next().unwrap_or("");
+                    match server.reload(key, value) {
+                        Ok(()) => println!("reloaded {key} = {value}"),
+                        Err(e) => eprintln!("reload rejected: {e}"),
+                    }
+                }
+                Some(other) => {
+                    eprintln!("unknown command {other:?} (infer | burst | stats | reload | quit)")
+                }
+            }
+        }
+        drop(tx); // close the queue: workers drain and exit
+        Ok(())
+    })?;
+
+    let m = server.metrics();
+    println!(
+        "serve summary: requests={} rejected={} p50={} p95={} p99={}",
+        m.serve_requests,
+        m.serve_rejected,
+        fmt_ns(m.serve_p50_ns),
+        fmt_ns(m.serve_p95_ns),
+        fmt_ns(m.serve_p99_ns),
+    );
+    println!(
+        "  stage totals: sample={} gather={} compute={}",
+        fmt_ns(m.serve_sample_ns),
+        fmt_ns(m.serve_gather_ns),
+        fmt_ns(m.serve_compute_ns),
+    );
+    println!("workers joined: {workers}");
+    Ok(())
+}
+
 const HELP: &str = "agnes — storage-based GNN training (AGNES, KDD'26)\n\
-commands: gen-data | train | prep | report | help\n\
+commands: gen-data | train | prep | report | serve | help\n\
 see `rust/src/main.rs` header or README for flags";
 
 fn main() -> anyhow::Result<()> {
@@ -294,6 +536,11 @@ fn main() -> anyhow::Result<()> {
         "prep" => {
             let system = args.get::<System>("system")?.unwrap_or(System::Agnes);
             run_system(system, config, 1, &mut NullCompute)?;
+        }
+        "serve" => {
+            let services = Arc::new(EngineServices::open(config)?);
+            let server = Arc::new(InferenceServer::new(services));
+            serve_loop(server, &args)?;
         }
         "train" => {
             let system = args.get::<System>("system")?.unwrap_or(System::Agnes);

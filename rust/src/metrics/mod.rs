@@ -109,6 +109,23 @@ pub struct RunMetrics {
     pub minibatches: u64,
     pub sampled_nodes: u64,
     pub gathered_features: u64,
+    /// Inference requests the serving loop completed (0 for training-only
+    /// runs; see `coordinator::serve`).
+    pub serve_requests: u64,
+    /// Inference requests rejected by admission control (above
+    /// `serve.max_inflight`). Rejections never enter the latency
+    /// histogram.
+    pub serve_rejected: u64,
+    /// Per-request latency percentiles over completed requests
+    /// (log2-bucketed upper bounds; see [`LatencyHistogram`]).
+    pub serve_p50_ns: u64,
+    pub serve_p95_ns: u64,
+    pub serve_p99_ns: u64,
+    /// Per-stage serving breakdown summed over completed requests:
+    /// sampling sweep, gathering sweep, forward pass.
+    pub serve_sample_ns: u64,
+    pub serve_gather_ns: u64,
+    pub serve_compute_ns: u64,
 }
 
 impl RunMetrics {
@@ -263,6 +280,15 @@ impl RunMetrics {
         self.minibatches += o.minibatches;
         self.sampled_nodes += o.sampled_nodes;
         self.gathered_features += o.gathered_features;
+        self.serve_requests += o.serve_requests;
+        self.serve_rejected += o.serve_rejected;
+        // percentiles don't add across windows; keep the worst observed
+        self.serve_p50_ns = self.serve_p50_ns.max(o.serve_p50_ns);
+        self.serve_p95_ns = self.serve_p95_ns.max(o.serve_p95_ns);
+        self.serve_p99_ns = self.serve_p99_ns.max(o.serve_p99_ns);
+        self.serve_sample_ns += o.serve_sample_ns;
+        self.serve_gather_ns += o.serve_gather_ns;
+        self.serve_compute_ns += o.serve_compute_ns;
         // ratios: keep the last run's (benches report per-config runs)
         self.graph_hit_ratio = o.graph_hit_ratio;
         self.feature_hit_ratio = o.feature_hit_ratio;
@@ -286,6 +312,66 @@ fn merge_stage_vec(dst: &mut Vec<u64>, src: &[u64]) {
     }
     for (d, s) in dst.iter_mut().zip(src) {
         *d += s;
+    }
+}
+
+/// Log2-bucketed latency histogram for the serving loop: O(1) record,
+/// O(64) percentile, fixed memory — the right shape for a long-running
+/// server where an exact reservoir would grow without bound. Bucket `i`
+/// holds samples in `[2^(i-1), 2^i)` nanoseconds (bucket 0 holds exact
+/// zeros), so percentiles are reported as the bucket's inclusive upper
+/// bound — within 2x of the true value, pessimistic never optimistic.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: [u64; 64],
+    count: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> LatencyHistogram {
+        LatencyHistogram { buckets: [0; 64], count: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    fn bucket_of(ns: u64) -> usize {
+        (64 - ns.leading_zeros() as usize).min(63)
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, ns: u64) {
+        self.buckets[Self::bucket_of(ns)] += 1;
+        self.count += 1;
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The `p`-th percentile (`p` in `[0, 100]`) as the inclusive upper
+    /// bound of the bucket the rank falls in; 0 when empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return if i == 0 { 0 } else { (1u64 << i) - 1 };
+            }
+        }
+        (1u64 << 63) - 1
+    }
+
+    /// Fold another histogram in (window aggregation).
+    pub fn merge(&mut self, o: &LatencyHistogram) {
+        for (d, s) in self.buckets.iter_mut().zip(&o.buckets) {
+            *d += s;
+        }
+        self.count += o.count;
     }
 }
 
@@ -648,6 +734,68 @@ mod tests {
         a.merge(&m);
         assert_eq!(a.io_runs, 4);
         assert_eq!(a.io_run_blocks, 256);
+    }
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(99.0), 0, "empty histogram reports 0");
+        // 99 fast samples (~1µs) and one slow outlier (~1ms)
+        for _ in 0..99 {
+            h.record(1_000);
+        }
+        h.record(1_000_000);
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        let p99 = h.percentile(99.0);
+        let p100 = h.percentile(100.0);
+        // bucketed upper bounds: within 2x, pessimistic never optimistic
+        assert!((1_000..2_048).contains(&p50), "p50 {p50}");
+        assert!((1_000..2_048).contains(&p99), "p99 {p99}");
+        assert!((1_000_000..2_097_152).contains(&p100), "p100 {p100}");
+        assert!(p50 <= p99 && p99 <= p100, "percentiles must be monotonic");
+        // merge folds counts and keeps the distribution
+        let mut other = LatencyHistogram::default();
+        other.record(1_000_000);
+        other.record(1_000_000);
+        h.merge(&other);
+        assert_eq!(h.count(), 102);
+        assert!(h.percentile(100.0) >= 1_000_000);
+        // a zero sample lands in bucket 0 and reports 0
+        let mut z = LatencyHistogram::default();
+        z.record(0);
+        assert_eq!(z.percentile(50.0), 0);
+    }
+
+    #[test]
+    fn serve_metrics_merge() {
+        let mut a = RunMetrics {
+            serve_requests: 10,
+            serve_rejected: 1,
+            serve_p50_ns: 100,
+            serve_p99_ns: 900,
+            serve_sample_ns: 40,
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            serve_requests: 5,
+            serve_rejected: 2,
+            serve_p50_ns: 80,
+            serve_p99_ns: 1_200,
+            serve_sample_ns: 10,
+            serve_gather_ns: 7,
+            serve_compute_ns: 3,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.serve_requests, 15, "request counts add across windows");
+        assert_eq!(a.serve_rejected, 3);
+        assert_eq!(a.serve_p50_ns, 100, "percentiles keep the worst observed");
+        assert_eq!(a.serve_p99_ns, 1_200);
+        assert_eq!(a.serve_sample_ns, 50);
+        assert_eq!(a.serve_gather_ns, 7);
+        assert_eq!(a.serve_compute_ns, 3);
     }
 
     #[test]
