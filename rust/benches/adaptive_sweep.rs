@@ -1,0 +1,194 @@
+//! Adaptive runtime controller vs the static `pipeline_depth x
+//! gap_blocks` grid (ISSUE 8 acceptance): a dense sweep driven for a few
+//! epochs with `adaptive.enabled = true` and `io.gap_blocks = "auto"`
+//! must reach a measured-epoch prepare **storage** time no worse than the
+//! best static grid configuration — with bit-identical loss, since the
+//! controller only reshapes requests and schedules, never training data.
+//!
+//! `cargo bench --bench adaptive_sweep`
+//!
+//! Set `AGNES_ADAPTIVE_TINY=1` for the CI smoke configuration (tiny
+//! dataset, seconds instead of minutes). Either way the bench emits
+//! `target/bench_results/BENCH_adaptive.json` with the full grid and the
+//! adaptive run's decisions, so the perf trajectory accumulates across
+//! builds and the bench-regression gate can pin the storage seconds and
+//! loss bits.
+
+use agnes::config::{AgnesConfig, GapBlocks};
+use agnes::coordinator::{EpochResult, ModeledCompute};
+use agnes::util::bench::{bench_config, secs, Table, MODELED_COMPUTE_NS};
+use agnes::util::json::Json;
+use agnes::AgnesRunner;
+
+/// Epochs per run: epoch 0 observes (and the controller decides at its
+/// boundary), epoch 1 runs adapted and washes the observation epoch's
+/// residual buffer state out, epoch 2 is measured.
+const EPOCHS: usize = 3;
+const DEPTHS: [usize; 2] = [1, 2];
+/// The full gap-candidate set the controller prices (0 plus every power
+/// of two up to the validation cap), so the adaptive choice always has an
+/// exact static twin in the grid.
+const GAPS: [u32; 12] = [0, 1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024];
+
+fn tiny_mode() -> bool {
+    std::env::var("AGNES_ADAPTIVE_TINY").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The dense-sweep workload of the fig11 family, with buffers deliberately
+/// smaller than the dataset so every epoch pays real storage I/O (a fully
+/// resident sweep would leave the controller nothing to adapt).
+fn dense_config(tiny: bool) -> AgnesConfig {
+    let mut c = if tiny { bench_config("tiny", 1.0) } else { bench_config("ig", 0.5) };
+    c.dataset.feature_dim = 256;
+    c.io.block_size = 4 << 10;
+    c.io.max_request_bytes = 256 << 10;
+    c.memory.graph_buffer_bytes = 512 << 10;
+    c.memory.feature_buffer_bytes = 4 << 20;
+    c.memory.feature_cache_entries = 1024;
+    c.train.minibatch_size = 64;
+    c.train.hyperbatch_size = 32;
+    c.train.target_fraction = 1.0;
+    c
+}
+
+fn run_epochs(c: &AgnesConfig) -> anyhow::Result<Vec<EpochResult>> {
+    let mut runner = AgnesRunner::open(c.clone())?;
+    let mut compute = ModeledCompute::new(MODELED_COMPUTE_NS);
+    (0..EPOCHS).map(|e| runner.run_epoch(e, &mut compute)).collect()
+}
+
+/// Measured-epoch prepare storage time: the simulated device nanoseconds
+/// charged while sampling + gathering, per-epoch by construction (unlike
+/// the cumulative device counters, which span the whole runner).
+fn prep_storage_ns(r: &EpochResult) -> u64 {
+    r.metrics.sample_io_ns + r.metrics.gather_io_ns
+}
+
+fn loss_bits(r: &EpochResult) -> String {
+    format!("0x{:08x}", r.mean_loss.to_bits())
+}
+
+fn main() -> anyhow::Result<()> {
+    let tiny = tiny_mode();
+
+    // ---- the static grid ----------------------------------------------
+    println!("=== Adaptive controller vs static grid: dense sweep (AGNES) ===\n");
+    let mut t = Table::new(
+        "adaptive_grid",
+        &["depth", "gap_blocks", "prep_storage_s", "loss_bits"],
+    );
+    let mut grid_json: Vec<Json> = Vec::new();
+    let mut best_ns = u64::MAX;
+    let mut losses: Vec<u32> = Vec::new();
+    for &depth in &DEPTHS {
+        for &gap in &GAPS {
+            let mut c = dense_config(tiny);
+            c.train.pipeline_depth = depth;
+            c.io.gap_blocks = GapBlocks::Fixed(gap);
+            let runs = run_epochs(&c)?;
+            let last = runs.last().unwrap();
+            let ns = prep_storage_ns(last);
+            best_ns = best_ns.min(ns);
+            losses.push(last.mean_loss.to_bits());
+            t.row(vec![
+                depth.to_string(),
+                gap.to_string(),
+                secs(ns),
+                loss_bits(last),
+            ]);
+            grid_json.push(Json::obj(vec![
+                ("depth", Json::num(depth as f64)),
+                ("gap", Json::num(gap)),
+                ("prep_storage_s", Json::num(ns as f64 * 1e-9)),
+                ("loss_bits", Json::str(loss_bits(last))),
+            ]));
+        }
+    }
+
+    // ---- the adaptive run ---------------------------------------------
+    let mut c = dense_config(tiny);
+    c.train.pipeline_depth = *DEPTHS.iter().max().unwrap();
+    c.io.gap_blocks = GapBlocks::Auto;
+    c.adaptive.enabled = true;
+    let runs = run_epochs(&c)?;
+    let last = runs.last().unwrap();
+    let adaptive_ns = prep_storage_ns(last);
+    losses.push(last.mean_loss.to_bits());
+    t.row(vec![
+        format!("{} (adaptive)", c.train.pipeline_depth),
+        format!("auto->{}", last.metrics.effective_gap_blocks),
+        secs(adaptive_ns),
+        loss_bits(last),
+    ]);
+    t.finish();
+
+    let mut decisions: Vec<String> = Vec::new();
+    for (e, r) in runs.iter().enumerate() {
+        if let Some(line) = r.metrics.controller.epoch_summary(e as u32) {
+            println!("{line}");
+            decisions.push(line);
+        }
+    }
+    println!(
+        "\nadaptive {} vs best static {} (grid of {} configs)",
+        secs(adaptive_ns),
+        secs(best_ns),
+        DEPTHS.len() * GAPS.len(),
+    );
+
+    // ---- the acceptance assertions ------------------------------------
+    // The spec-derived "auto" seed is never a power of two on this block
+    // size, while the controller only picks histogram bucket bounds — so
+    // the observation epoch must always produce at least one decision.
+    anyhow::ensure!(
+        !runs[0].metrics.controller.decisions.is_empty(),
+        "adaptive observation epoch logged no controller decisions"
+    );
+    // The measured epoch runs at the modeled-optimal gap candidate, whose
+    // exact static twin is in the grid; the 2% slack only absorbs the
+    // observation epoch's residual buffer-pool state (gap padding warms
+    // the pool, so the adapted run enters the measured epoch with a
+    // slightly different tail of resident blocks than its static twin).
+    anyhow::ensure!(
+        adaptive_ns <= best_ns + best_ns / 50,
+        "adaptive measured epoch ({adaptive_ns} ns) slower than the best \
+         static grid config ({best_ns} ns)"
+    );
+    // Neither the schedule, nor the gap budget, nor the controller itself
+    // may ever change the training outcome.
+    let first = losses[0];
+    anyhow::ensure!(
+        losses.iter().all(|&b| b == first),
+        "loss diverged across the grid/adaptive runs"
+    );
+
+    // machine-readable perf record for the trajectory
+    let report = Json::obj(vec![
+        ("bench", Json::str("adaptive_sweep")),
+        ("mode", Json::str(if tiny { "tiny" } else { "bench" })),
+        ("grid", Json::arr(grid_json)),
+        (
+            "adaptive",
+            Json::obj(vec![
+                ("prep_storage_s", Json::num(adaptive_ns as f64 * 1e-9)),
+                ("best_static_prep_storage_s", Json::num(best_ns as f64 * 1e-9)),
+                ("effective_gap_blocks", Json::num(last.metrics.effective_gap_blocks as f64)),
+                ("pipeline_depth", Json::num(last.metrics.pipeline_depth as f64)),
+                ("loss_bits", Json::str(loss_bits(last))),
+                ("decisions", Json::arr(decisions.iter().map(|d| Json::str(d.clone())))),
+            ]),
+        ),
+    ]);
+    std::fs::create_dir_all("target/bench_results")?;
+    std::fs::write("target/bench_results/BENCH_adaptive.json", report.to_string())?;
+    println!("\n[json] target/bench_results/BENCH_adaptive.json");
+
+    println!(
+        "\nShape check vs paper: the self-tuning controller reaches the \
+         best static (pipeline_depth x gap_blocks) grid configuration's \
+         prepare storage time from the live trace alone — no grid search — \
+         while the loss stays bit-identical across every schedule, budget, \
+         and the adaptive run itself."
+    );
+    Ok(())
+}

@@ -18,6 +18,7 @@ use agnes::config::{AgnesConfig, GnnModel};
 use agnes::coordinator::{EpochResult, ModeledCompute, NullCompute};
 use agnes::metrics::RunMetrics;
 use agnes::storage::device::IoClass;
+use agnes::storage::plan::{plan_hist_bound, PlanHistogram, PLAN_HIST_BUCKETS};
 use agnes::util::bench::{bench_config, run_epoch_by_name, secs, Table, MODELED_COMPUTE_NS};
 use agnes::util::json::Json;
 
@@ -200,6 +201,46 @@ fn main() -> anyhow::Result<()> {
         secs(off_m.prep_ns()),
         secs(on_m.prep_ns()),
     );
+
+    // The planner's observed distributions behind that win: hole sizes
+    // between requested blocks (what gap bridging can buy) and emitted
+    // run lengths (what coalescing produced). This is the exact input the
+    // adaptive controller prices `io.gap_blocks = "auto"` from.
+    println!("\n=== Planner distributions: hole sizes and run lengths (AGNES) ===\n");
+    let mut t5 = Table::new(
+        "fig2f_plan_histogram",
+        &["size<=blocks", "holes", "hole_blocks", "runs", "run_blocks"],
+    );
+    let plan = &on_m.plan;
+    for i in 0..PLAN_HIST_BUCKETS {
+        if plan.holes.counts[i] == 0 && plan.runs.counts[i] == 0 {
+            continue;
+        }
+        t5.row(vec![
+            plan_hist_bound(i).to_string(),
+            plan.holes.counts[i].to_string(),
+            plan.holes.blocks[i].to_string(),
+            plan.runs.counts[i].to_string(),
+            plan.runs.blocks[i].to_string(),
+        ]);
+    }
+    t5.finish();
+    println!(
+        "\nPlanner saw {} holes ({} blocks) and emitted {} runs ({} blocks)",
+        plan.holes.total_count(),
+        plan.holes.total_blocks(),
+        plan.runs.total_count(),
+        plan.runs.total_blocks(),
+    );
+    let hist_json = |h: &PlanHistogram| {
+        Json::arr((0..PLAN_HIST_BUCKETS).map(|i| Json::num(h.counts[i] as f64)))
+    };
+    coalescing_json.push((
+        "plan_hist_bounds",
+        Json::arr((0..PLAN_HIST_BUCKETS).map(|i| Json::num(plan_hist_bound(i)))),
+    ));
+    coalescing_json.push(("hole_hist", hist_json(&plan.holes)));
+    coalescing_json.push(("run_hist", hist_json(&plan.runs)));
 
     // AGNES's answer to 2(a): the staged pipeline executor hides data
     // preparation behind compute. Same config, same work — only the

@@ -4,6 +4,9 @@
 //! with the device model silenced (pure CPU cost).
 //!
 //! `cargo bench --bench micro_hotpath`
+//!
+//! Set `AGNES_MICRO_TINY=1` for the CI smoke configuration (tiny dataset,
+//! 4 KiB blocks — exercises the same hot loops in seconds).
 
 use agnes::config::AgnesConfig;
 use agnes::coordinator::NullCompute;
@@ -22,9 +25,19 @@ fn time<R>(f: impl FnOnce() -> R) -> (R, f64) {
     (r, t0.elapsed().as_secs_f64())
 }
 
+fn tiny_mode() -> bool {
+    std::env::var("AGNES_MICRO_TINY").map(|v| v == "1").unwrap_or(false)
+}
+
 fn main() -> anyhow::Result<()> {
     // free device: isolate CPU cost of the hot loops
-    let mut config: AgnesConfig = bench_config("pa", 0.1);
+    let mut config: AgnesConfig = if tiny_mode() {
+        let mut c = bench_config("tiny", 1.0);
+        c.io.block_size = 4 << 10;
+        c
+    } else {
+        bench_config("pa", 0.1)
+    };
     config.device.bandwidth = 1e15;
     config.device.request_overhead = 0.0;
     let mut runner = AgnesRunner::open(config.clone())?;

@@ -332,6 +332,38 @@ impl Default for TrainConfig {
     }
 }
 
+/// Self-tuning runtime controller knobs (`[adaptive]` — see
+/// [`crate::runtime::controller`]). The controller runs at epoch
+/// boundaries, consumes the live `RunMetrics` deltas, and adapts the
+/// effective pipeline depth, the gap-bridging budget (when
+/// `io.gap_blocks = "auto"`), and — optionally — the on-disk block
+/// layout. Every decision is a pure function of (seed, observed
+/// deterministic counters), so fixed-seed runs stay bit-identical.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// Master switch. `false` (the default) skips the controller
+    /// entirely and reproduces the static path bit-for-bit.
+    pub enabled: bool,
+    /// Observe-only mode: decisions are computed and logged in the
+    /// `ControllerLog`, but none is applied — the run stays bit-for-bit
+    /// the static path. Hot-reloadable on a live `InferenceServer`.
+    pub frozen: bool,
+    /// Allow the online `BlockRemap` re-permute (rewrites the block
+    /// files in place through the atomic temp+rename path when the
+    /// predicted run-length gain exceeds the modeled rewrite cost).
+    /// Off by default because it mutates the built dataset directory.
+    pub relayout: bool,
+    /// Minimum fractional modeled improvement a decision must predict
+    /// before it is applied (hysteresis against churn).
+    pub min_gain: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig { enabled: false, frozen: false, relayout: false, min_gain: 0.05 }
+    }
+}
+
 /// Online-inference server knobs (`[serve]` — see
 /// [`crate::coordinator::serve`]).
 #[derive(Debug, Clone)]
@@ -359,6 +391,7 @@ pub struct AgnesConfig {
     pub cache: CacheConfig,
     pub memory: MemoryConfig,
     pub train: TrainConfig,
+    pub adaptive: AdaptiveConfig,
     pub serve: ServeConfig,
 }
 
@@ -416,6 +449,7 @@ impl AgnesConfig {
             (1..=2).contains(&self.train.prepare_stages),
             "train.prepare_stages must be 1 (fused prepare) or 2 (split sample/gather)"
         );
+        check_adaptive_min_gain(self.adaptive.min_gain).map_err(anyhow::Error::msg)?;
         check_serve(self.serve.workers, self.serve.max_inflight).map_err(anyhow::Error::msg)?;
         Ok(())
     }
@@ -491,6 +525,10 @@ impl AgnesConfig {
             ("train", "seed") => self.train.seed = p(value)?,
             ("train", "pipeline_depth") => self.train.pipeline_depth = p(value)?,
             ("train", "prepare_stages") => self.train.prepare_stages = p(value)?,
+            ("adaptive", "enabled") => self.adaptive.enabled = p(value)?,
+            ("adaptive", "frozen") => self.adaptive.frozen = p(value)?,
+            ("adaptive", "relayout") => self.adaptive.relayout = p(value)?,
+            ("adaptive", "min_gain") => self.adaptive.min_gain = p(value)?,
             ("serve", "workers") => self.serve.workers = p(value)?,
             ("serve", "max_inflight") => self.serve.max_inflight = p(value)?,
             _ => return Err(format!("unknown key {section}.{key}")),
@@ -554,6 +592,11 @@ impl AgnesConfig {
         w(&format!("seed = {}", self.train.seed));
         w(&format!("pipeline_depth = {}", self.train.pipeline_depth));
         w(&format!("prepare_stages = {}", self.train.prepare_stages));
+        w("\n[adaptive]");
+        w(&format!("enabled = {}", self.adaptive.enabled));
+        w(&format!("frozen = {}", self.adaptive.frozen));
+        w(&format!("relayout = {}", self.adaptive.relayout));
+        w(&format!("min_gain = {}", self.adaptive.min_gain));
         w("\n[serve]");
         w(&format!("workers = {}", self.serve.workers));
         w(&format!("max_inflight = {}", self.serve.max_inflight));
@@ -648,6 +691,30 @@ impl AgnesConfig {
             match v.trim().parse::<TraceSource>() {
                 Ok(s) => self.layout.trace_source = s,
                 _ => eprintln!("ignoring invalid AGNES_TRACE_SOURCE={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_ADAPTIVE") {
+            match v.trim().parse::<bool>() {
+                Ok(b) => self.adaptive.enabled = b,
+                _ => eprintln!("ignoring invalid AGNES_ADAPTIVE={v:?} (true | false)"),
+            }
+        }
+        if let Some(v) = var("AGNES_ADAPTIVE_FROZEN") {
+            match v.trim().parse::<bool>() {
+                Ok(b) => self.adaptive.frozen = b,
+                _ => eprintln!("ignoring invalid AGNES_ADAPTIVE_FROZEN={v:?} (true | false)"),
+            }
+        }
+        if let Some(v) = var("AGNES_ADAPTIVE_RELAYOUT") {
+            match v.trim().parse::<bool>() {
+                Ok(b) => self.adaptive.relayout = b,
+                _ => eprintln!("ignoring invalid AGNES_ADAPTIVE_RELAYOUT={v:?} (true | false)"),
+            }
+        }
+        if let Some(v) = var("AGNES_ADAPTIVE_MIN_GAIN") {
+            match v.trim().parse::<f64>() {
+                Ok(g) if check_adaptive_min_gain(g).is_ok() => self.adaptive.min_gain = g,
+                _ => eprintln!("ignoring invalid AGNES_ADAPTIVE_MIN_GAIN={v:?}"),
             }
         }
         if let Some(v) = var("AGNES_SERVE_WORKERS") {
@@ -782,6 +849,18 @@ fn check_trace_hyperbatches(t: usize) -> Result<(), String> {
     }
 }
 
+/// Range check for `adaptive.min_gain` (shared with env overrides and
+/// hot-reloads, see [`check_gap_blocks`]): a negative threshold would
+/// accept decisions that predict a regression, and one above 1 can
+/// never trigger.
+fn check_adaptive_min_gain(g: f64) -> Result<(), String> {
+    if (0.0..=1.0).contains(&g) {
+        Ok(())
+    } else {
+        Err(format!("adaptive.min_gain = {g} must be in [0, 1] (fractional modeled improvement)"))
+    }
+}
+
 /// Range check for `serve.workers` / `serve.max_inflight` (shared with
 /// env overrides and [`AgnesConfig::apply_kv`] hot-reloads): a server
 /// needs at least one worker and one admission slot, and an absurd
@@ -858,8 +937,65 @@ mod tests {
         assert_eq!(c.cache.policy, CachePolicy::Reactive);
         assert_eq!(c.train.fanouts, vec![10, 10, 10]);
         assert_eq!(c.layout.trace_source, TraceSource::Sampled);
+        assert!(!c.adaptive.enabled);
+        assert!(!c.adaptive.frozen);
+        assert!(!c.adaptive.relayout);
+        assert_eq!(c.adaptive.min_gain, 0.05);
         assert_eq!(c.serve.workers, 4);
         assert_eq!(c.serve.max_inflight, 16);
+    }
+
+    #[test]
+    fn adaptive_section_parses_and_roundtrips() {
+        let c = AgnesConfig::from_toml_str(
+            "[adaptive]\nenabled = true\nfrozen = true\nrelayout = true\nmin_gain = 0.2\n",
+        )
+        .unwrap();
+        assert!(c.adaptive.enabled);
+        assert!(c.adaptive.frozen);
+        assert!(c.adaptive.relayout);
+        assert_eq!(c.adaptive.min_gain, 0.2);
+        c.validate().unwrap();
+        let back = AgnesConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert!(back.adaptive.enabled && back.adaptive.frozen && back.adaptive.relayout);
+        assert_eq!(back.adaptive.min_gain, 0.2);
+        // defaults: controller off — bit-for-bit the static path
+        let d = AgnesConfig::default();
+        assert!(!d.adaptive.enabled && !d.adaptive.frozen && !d.adaptive.relayout);
+        // bad values fail loudly, naming the key
+        assert!(AgnesConfig::from_toml_str("[adaptive]\nenabled = maybe\n").is_err());
+        let mut c = AgnesConfig::default();
+        c.adaptive.min_gain = -0.5;
+        assert!(c.validate().unwrap_err().to_string().contains("adaptive.min_gain"));
+        let mut c = AgnesConfig::default();
+        c.adaptive.min_gain = 2.0;
+        assert!(c.validate().unwrap_err().to_string().contains("adaptive.min_gain"));
+    }
+
+    #[test]
+    fn adaptive_env_overrides_agree_with_validate() {
+        let vars = |pairs: &[(&str, &str)]| {
+            let m: std::collections::HashMap<String, String> =
+                pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+            move |name: &str| m.get(name).cloned()
+        };
+        let mut c = AgnesConfig::default();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_ADAPTIVE", "true"),
+            ("AGNES_ADAPTIVE_FROZEN", "true"),
+            ("AGNES_ADAPTIVE_RELAYOUT", "true"),
+            ("AGNES_ADAPTIVE_MIN_GAIN", "0.1"),
+        ]));
+        assert!(c.adaptive.enabled && c.adaptive.frozen && c.adaptive.relayout);
+        assert_eq!(c.adaptive.min_gain, 0.1);
+        c.validate().unwrap();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_ADAPTIVE", "yes"),          // not a bool
+            ("AGNES_ADAPTIVE_MIN_GAIN", "7.0"), // out of [0, 1]
+        ]));
+        assert!(c.adaptive.enabled, "invalid bool override ignored");
+        assert_eq!(c.adaptive.min_gain, 0.1, "out-of-range gain override ignored");
+        c.validate().unwrap();
     }
 
     #[test]

@@ -220,9 +220,11 @@ impl AgnesRunner {
         epoch: usize,
         compute: &mut dyn ComputeBackend,
     ) -> Result<EpochResult> {
-        let depth = self.config.train.pipeline_depth;
+        // the adaptive controller may have decided a different effective
+        // depth for this epoch (never above `train.pipeline_depth`)
+        let depth = self.services.effective_pipeline_depth();
         let split = self.config.train.prepare_stages >= 2;
-        let result = if depth >= 3 && split {
+        let mut result = if depth >= 3 && split {
             // three stages each hold one in-flight hyperbatch, so the
             // split schedule needs depth >= 3 to admit the pipeline at all
             self.run_epoch_three_stage(epoch, compute, depth)
@@ -231,9 +233,17 @@ impl AgnesRunner {
         } else {
             self.run_epoch_sequential(epoch, compute)
         }?;
+        // drain the epoch's recorded access logs exactly once — the
+        // Belady scheduler and the adaptive controller share the drain
+        // (an unconditional drain also keeps an idle recorder from
+        // accumulating logs across epochs)
+        let logs = self.drain_access_logs();
         if self.config.cache.policy == CachePolicy::Belady {
-            self.install_belady_schedules();
+            self.install_belady_from(&logs);
         }
+        let decisions =
+            self.controller_step(epoch as u32, &logs, result.metrics.compute_sim_ns)?;
+        result.metrics.controller.decisions.extend(decisions);
         Ok(result)
     }
 
@@ -985,6 +995,192 @@ mod tests {
             assert!(
                 err.is_err(),
                 "truncated store must fail the {prepare_stages}-stage-prepare epoch, got {err:?}"
+            );
+        }
+    }
+
+    /// Tight-budget tiny config for the adaptive-controller tests: 4 KiB
+    /// blocks put the spec-derived auto gap seed off the controller's
+    /// power-of-two candidate grid (so epoch 0 always produces a gap
+    /// decision) and small buffers make the sweeps miss, giving the
+    /// recorded trace real holes.
+    fn adaptive_config() -> (AgnesConfig, crate::util::TempDir) {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+        c.io.block_size = 4 << 10;
+        c.memory.graph_buffer_bytes = 64 << 10;
+        c.memory.feature_buffer_bytes = 64 << 10;
+        c.memory.feature_cache_entries = 64;
+        c.io.gap_blocks = crate::config::GapBlocks::Auto;
+        (c, tmp)
+    }
+
+    /// The adaptive-controller determinism contract: decisions are pure
+    /// functions of (config, spec, recorded trace), and the recorded
+    /// trace is schedule- and cache-policy-invariant (pre-residency
+    /// logging, per-structure hyperbatch buckets). Every schedule and
+    /// policy must therefore produce bit-identical decision lists, and
+    /// re-running the same configuration replays them exactly.
+    #[test]
+    fn controller_decisions_identical_across_schedules_and_policies() {
+        use crate::runtime::controller::ControllerAction;
+        let (mut c, _tmp) = adaptive_config();
+        c.adaptive.enabled = true;
+        let run = |depth: usize, stages: usize, policy: CachePolicy| {
+            let mut cfg = c.clone();
+            cfg.train.pipeline_depth = depth;
+            cfg.train.prepare_stages = stages;
+            cfg.cache.policy = policy;
+            let mut r = AgnesRunner::open(cfg).unwrap();
+            let e0 = r.run_epoch(0, &mut NullCompute).unwrap();
+            let e1 = r.run_epoch(1, &mut NullCompute).unwrap();
+            (e0, e1)
+        };
+        let (b0, b1) = run(1, 1, CachePolicy::Reactive);
+        // epoch 0 must move the gap budget off the spec-derived seed...
+        let seed = c.device.spec().adaptive_gap_blocks(c.io.block_size);
+        let gap_to = b0
+            .metrics
+            .controller
+            .decisions
+            .iter()
+            .find_map(|d| match &d.action {
+                ControllerAction::Gap { from, to, .. } => {
+                    assert_eq!(*from, seed);
+                    assert!(d.applied, "off-grid seed must be replaced: {d:?}");
+                    Some(*to)
+                }
+                _ => None,
+            })
+            .expect("epoch 0 must emit a gap decision under io.gap_blocks = auto");
+        assert_ne!(gap_to, seed);
+        // ...and the adapted budget is what epoch 1 actually ran with
+        assert_eq!(b1.metrics.effective_gap_blocks, gap_to);
+
+        for (depth, stages) in [(1usize, 1usize), (3, 1), (4, 2)] {
+            for policy in [CachePolicy::Reactive, CachePolicy::Belady] {
+                let (e0, e1) = run(depth, stages, policy);
+                assert_eq!(
+                    b0.metrics.controller.decisions, e0.metrics.controller.decisions,
+                    "epoch 0 decisions must replay (depth {depth}, stages {stages}, {policy:?})"
+                );
+                assert_eq!(
+                    b1.metrics.controller.decisions, e1.metrics.controller.decisions,
+                    "epoch 1 decisions must replay (depth {depth}, stages {stages}, {policy:?})"
+                );
+                assert_eq!(b0.mean_loss.to_bits(), e0.mean_loss.to_bits());
+                assert_eq!(b1.mean_loss.to_bits(), e1.mean_loss.to_bits());
+            }
+        }
+    }
+
+    /// Frozen mode is observe-only: every decision is logged with
+    /// `applied = false` and the run stays bit-for-bit the static path —
+    /// same training values, same I/O stream, same gap budget. A
+    /// disabled controller records nothing at all.
+    #[test]
+    fn frozen_controller_observes_without_perturbing_the_run() {
+        let (c, _tmp) = adaptive_config();
+        let run = |enabled: bool, frozen: bool| {
+            let mut cfg = c.clone();
+            cfg.adaptive.enabled = enabled;
+            cfg.adaptive.frozen = frozen;
+            let mut r = AgnesRunner::open(cfg).unwrap();
+            let e0 = r.run_epoch(0, &mut NullCompute).unwrap();
+            let e1 = r.run_epoch(1, &mut NullCompute).unwrap();
+            (e0, e1)
+        };
+        let (s0, s1) = run(false, false);
+        let (f0, f1) = run(true, true);
+        assert!(s0.metrics.controller.is_empty(), "disabled must record nothing");
+        assert!(s1.metrics.controller.is_empty());
+        assert!(!f0.metrics.controller.is_empty(), "frozen must still decide");
+        let frozen_decisions =
+            f0.metrics.controller.decisions.iter().chain(&f1.metrics.controller.decisions);
+        for d in frozen_decisions {
+            assert!(!d.applied, "frozen must never apply: {d:?}");
+            assert_eq!(d.reason, "frozen");
+        }
+        for (s, f) in [(&s0, &f0), (&s1, &f1)] {
+            assert_eq!(s.mean_loss.to_bits(), f.mean_loss.to_bits());
+            assert_eq!(s.accuracy.to_bits(), f.accuracy.to_bits());
+            assert_eq!(s.metrics.device.num_requests, f.metrics.device.num_requests);
+            assert_eq!(s.metrics.device.total_bytes, f.metrics.device.total_bytes);
+            assert_eq!(s.metrics.effective_gap_blocks, f.metrics.effective_gap_blocks);
+        }
+    }
+
+    /// The replay contract at the services layer: rebuilding
+    /// `ControllerInputs` from the same drained logs and re-running
+    /// `decide` reproduces the decision list bit-for-bit — internal
+    /// controller state gates decisions but never feeds values into them.
+    #[test]
+    fn controller_replay_from_drained_logs_is_bit_identical() {
+        let (mut c, _tmp) = adaptive_config();
+        c.adaptive.enabled = true;
+        c.train.pipeline_depth = 4;
+        let r = AgnesRunner::open(c).unwrap();
+        let hbs = r.epoch_hyperbatches(0);
+        let mut metrics = RunMetrics::default();
+        for (i, hb) in hbs.iter().enumerate() {
+            r.prepare_hyperbatch(i, hb, &mut metrics).unwrap();
+        }
+        let logs = r.drain_access_logs();
+        let compute_ns = 5_000_000;
+        let (i1, _) = r.controller_inputs(0, &logs, compute_ns).unwrap();
+        let (i2, _) = r.controller_inputs(0, &logs, compute_ns).unwrap();
+        let d1 = r.controller.decide(&i1);
+        let d2 = r.controller.decide(&i2);
+        assert!(!d1.is_empty(), "the 4 KiB auto seed must yield a gap decision");
+        assert_eq!(d1, d2, "same inputs must replay the same decisions");
+    }
+
+    /// Online relayout: with the hysteresis gate opened, an applied
+    /// re-permute may rewrite a store between epochs — training stays
+    /// bit-identical to the static run either way, because a block remap
+    /// is a pure translation layer.
+    #[test]
+    fn online_relayout_trains_bit_identically() {
+        use crate::runtime::controller::ControllerAction;
+        let (mut c, _tmp) = adaptive_config();
+        // shuffled node layout scrambles the block heat so a trace-packed
+        // candidate layout genuinely differs from the identity
+        c.dataset.layout = crate::graph::layout::Layout::Shuffle;
+        // static reference first: the adaptive run may permute the shared
+        // dataset dir afterwards
+        let mut r_static = AgnesRunner::open(c.clone()).unwrap();
+        let s0 = r_static.run_epoch(0, &mut NullCompute).unwrap();
+        let s1 = r_static.run_epoch(1, &mut NullCompute).unwrap();
+        drop(r_static);
+        let mut ca = c.clone();
+        ca.adaptive.enabled = true;
+        ca.adaptive.relayout = true;
+        ca.adaptive.min_gain = 0.0;
+        let mut r = AgnesRunner::open(ca).unwrap();
+        let a0 = r.run_epoch(0, &mut NullCompute).unwrap();
+        let a1 = r.run_epoch(1, &mut NullCompute).unwrap();
+        assert_eq!(s0.mean_loss.to_bits(), a0.mean_loss.to_bits());
+        assert_eq!(s1.mean_loss.to_bits(), a1.mean_loss.to_bits());
+        assert_eq!(s1.accuracy.to_bits(), a1.accuracy.to_bits());
+        // every relayout decision carries a coherent model record; when
+        // one is applied the store's remap must have left the identity
+        let mut applied_relayout = false;
+        let decisions =
+            a0.metrics.controller.decisions.iter().chain(&a1.metrics.controller.decisions);
+        for d in decisions {
+            if let ControllerAction::Relayout { gain, saved_ns, rewrite_ns, .. } = &d.action {
+                assert!((0.0..=1.0).contains(gain), "gain {gain} out of range");
+                if d.applied {
+                    assert!(saved_ns >= rewrite_ns);
+                    applied_relayout = true;
+                }
+            }
+        }
+        if applied_relayout {
+            assert!(
+                !(r.graph_store.remap().is_identity() && r.feature_store.remap().is_identity()),
+                "an applied relayout must move a store off the identity remap"
             );
         }
     }

@@ -265,6 +265,10 @@ impl InferenceServer {
     ///   — resize the shared feature cache (admission counts reset;
     ///   correctness is residency-independent)
     /// * `serve.max_inflight` — admission bound for *new* requests
+    /// * `adaptive.enabled`, `adaptive.frozen`, `adaptive.relayout`,
+    ///   `adaptive.min_gain` — drive the live runtime controller
+    ///   (enabling also turns trace recording on; freezing makes it
+    ///   observe-only from the next epoch boundary)
     ///
     /// The value goes through [`AgnesConfig::apply_kv`] (the same typed
     /// parser `set()` uses) and the full [`AgnesConfig::validate`], so a
@@ -278,6 +282,10 @@ impl InferenceServer {
             ("memory", "feature_cache_entries"),
             ("memory", "feature_cache_threshold"),
             ("serve", "max_inflight"),
+            ("adaptive", "enabled"),
+            ("adaptive", "frozen"),
+            ("adaptive", "relayout"),
+            ("adaptive", "min_gain"),
         ];
         let (section, k) = key
             .split_once('.')
@@ -306,6 +314,24 @@ impl InferenceServer {
                 config.memory.feature_cache_entries,
                 config.memory.feature_cache_threshold,
             );
+        }
+        if section == "adaptive" {
+            // drive the *live* controller shared with any training
+            // driver on these services; decisions change from the next
+            // epoch boundary on
+            let a = &config.adaptive;
+            let ctl = &self.services.controller;
+            ctl.set_frozen(a.frozen);
+            ctl.set_relayout(a.relayout);
+            ctl.set_min_gain(a.min_gain);
+            if a.enabled && !ctl.is_enabled() {
+                // enabling at runtime must also turn trace recording on,
+                // or the controller would observe empty logs forever
+                self.services.graph_pool.start_recording();
+                self.services.feature_pool.start_recording();
+                self.services.feature_cache.start_recording();
+            }
+            ctl.set_enabled(a.enabled);
         }
         *self.lock_knobs() = Arc::new(ServeKnobs { config, engine });
         Ok(())
@@ -645,6 +671,36 @@ mod tests {
         assert!(err.contains("section.key"), "{err}");
         // failed reloads left the good bundle in place
         assert_eq!(server.knobs().engine.planner.gap_blocks, 3);
+    }
+
+    #[test]
+    fn adaptive_keys_hot_reload_onto_live_controller() {
+        let (server, _tmp) = server_with(|_| {});
+        let services = server.services();
+        let ctl = &services.controller;
+        assert!(!ctl.is_enabled(), "tiny config starts with the controller off");
+
+        // enable + tune: the live controller (not just the knob bundle)
+        // must reflect every accepted reload
+        server.reload("adaptive.enabled", "true").unwrap();
+        server.reload("adaptive.frozen", "true").unwrap();
+        server.reload("adaptive.relayout", "true").unwrap();
+        server.reload("adaptive.min_gain", "0.25").unwrap();
+        assert!(ctl.is_enabled() && ctl.is_frozen() && ctl.relayout_enabled());
+        assert_eq!(ctl.min_gain(), 0.25);
+        assert!(server.knobs().config.adaptive.enabled, "knob bundle tracks the reload");
+        // enabling turned recording on, so a future epoch boundary sees
+        // a real trace (requests below feed the recorders)
+        let req = requests(&server, 1, 4).remove(0);
+        server.handle_request(&req, &mut NullCompute).unwrap();
+        assert!(!services.drain_access_logs().graph.is_empty());
+
+        // disable again: controller off, invalid values still rejected
+        server.reload("adaptive.enabled", "false").unwrap();
+        assert!(!ctl.is_enabled());
+        let err = server.reload("adaptive.min_gain", "1.5").unwrap_err();
+        assert!(err.contains("adaptive.min_gain"), "{err}");
+        assert_eq!(ctl.min_gain(), 0.25, "bad reload left state");
     }
 
     #[test]

@@ -17,10 +17,12 @@
 //! driven from the staged pipeline workers and from serving worker
 //! threads at once.
 
-use crate::config::AgnesConfig;
+use crate::config::{AgnesConfig, GapBlocks};
 use crate::graph::generate::synth_label;
+use crate::graph::layout::BlockRemap;
+use crate::graph::reorder::{optimize_block_layout, trace_from_log, LayoutPolicy};
 use crate::memory::{
-    BeladySchedule, CachePolicy, FeatureCacheStats, PoolStats, SharedBufferPool,
+    AccessLog, BeladySchedule, CachePolicy, FeatureCacheStats, PoolStats, SharedBufferPool,
     SharedFeatureCache,
 };
 use crate::metrics::{RunMetrics, StageTimer};
@@ -28,11 +30,16 @@ use crate::op::{
     gather_hyperbatch, make_hyperbatches, make_minibatches, sample_hyperbatch, select_targets,
     SampleOutput,
 };
+use crate::runtime::controller::{
+    ControllerAction, ControllerDecision, ControllerInputs, RuntimeController, StoreTrace,
+    TraceModel,
+};
 use crate::storage::block::{FeatureBlockLayout, GraphBlock};
+use crate::storage::builder::{apply_block_remap, LayoutMeta};
 use crate::storage::device::{DeviceStats, SharedArray, SsdArray};
 use crate::storage::plan::{BlockBytes, IoPlanner};
 use crate::storage::store::{FeatureStore, GraphStore};
-use crate::storage::IoEngine;
+use crate::storage::{BlockId, IoEngine};
 use crate::Result;
 use std::sync::Arc;
 
@@ -56,6 +63,31 @@ pub struct EngineServices {
     pub feature_pool: SharedBufferPool<BlockBytes>,
     pub feature_cache: SharedFeatureCache,
     pub engine: IoEngine,
+    /// The self-tuning runtime controller (`[adaptive]`): adapts pipeline
+    /// depth, gap budget, and block layout at epoch boundaries from the
+    /// epoch's recorded access traces. Inert when `adaptive.enabled` is
+    /// off — the run is then bit-for-bit the static path.
+    pub controller: RuntimeController,
+}
+
+/// One epoch's recorded pre-residency access logs, drained **once** at
+/// the epoch boundary and shared by every consumer (Belady scheduling,
+/// the runtime controller) — a second `take_log` would see an empty
+/// trace, so consumers must never drain independently.
+pub struct EpochLogs {
+    pub graph: AccessLog<BlockId>,
+    pub feature: AccessLog<BlockId>,
+    /// Feature-**cache** accesses are logged per node id (the cache is
+    /// node-granular); the controller maps them to feature blocks itself.
+    pub cache: AccessLog<u32>,
+}
+
+/// The relayout candidate remaps backing an epoch's `Relayout` decisions
+/// (kept outside [`ControllerInputs`] — the controller prices them as
+/// [`TraceModel`]s; only the applier needs the permutation itself).
+pub(crate) struct RelayoutCandidates {
+    pub graph: Option<BlockRemap>,
+    pub feature: Option<BlockRemap>,
 }
 
 impl EngineServices {
@@ -84,11 +116,13 @@ impl EngineServices {
             config.memory.feature_cache_entries,
             config.memory.feature_cache_threshold,
         );
-        if config.cache.policy == CachePolicy::Belady {
+        if config.cache.policy == CachePolicy::Belady || config.adaptive.enabled {
             // warmup-then-optimal: epoch 0 runs under reactive semantics
             // while every store records its live access trace; each epoch
             // boundary turns the logs into the next epoch's Belady
-            // schedules (see `crate::memory::trace`)
+            // schedules (see `crate::memory::trace`). The adaptive
+            // controller consumes the same logs (recording happens at
+            // `get()`, before residency, so it never perturbs the run).
             graph_pool.start_recording();
             feature_pool.start_recording();
             feature_cache.start_recording();
@@ -99,6 +133,8 @@ impl EngineServices {
         let gap_blocks = config.io.gap_blocks.resolve(&spec, config.io.block_size);
         let engine = IoEngine::new(config.io.num_threads, config.io.async_depth)
             .with_planner(IoPlanner::new(config.io.max_request_bytes, gap_blocks));
+        let controller =
+            RuntimeController::new(&config.adaptive, config.train.pipeline_depth as u32);
         Ok(EngineServices {
             config,
             dataset,
@@ -109,6 +145,7 @@ impl EngineServices {
             feature_pool,
             feature_cache,
             engine,
+            controller,
         })
     }
 
@@ -245,32 +282,210 @@ impl EngineServices {
         metrics.io_runs = self.graph_store.runs_issued() + self.feature_store.runs_issued();
         metrics.io_run_blocks =
             self.graph_store.run_blocks_read() + self.feature_store.run_blocks_read();
-        metrics.effective_gap_blocks = self.engine.planner.gap_blocks;
+        metrics.effective_gap_blocks = self.engine.effective_gap_blocks();
         metrics.layout_policy = self.config.layout.policy.name().to_string();
+        metrics.plan = self.engine.plan_stats();
         let per_shard = self.ssd.per_shard_stats();
         metrics.shard_busy_ns = per_shard.iter().map(|s| s.busy_ns).collect();
         metrics.shard_requests = per_shard.iter().map(|s| s.num_requests).collect();
         metrics.shard_bytes = per_shard.iter().map(|s| s.total_bytes).collect();
     }
 
-    /// Warmup-then-optimal epoch boundary: drain each store's recorded
-    /// access log and install the Belady schedule it implies, cursor
-    /// rewound for the coming epoch. Recording stays on, so every epoch's
-    /// trace refreshes the next epoch's schedule (epoch shuffling makes
-    /// the traces drift; the per-hyperbatch cursor resync bounds it).
-    pub(crate) fn install_belady_schedules(&self) {
-        let g = self.graph_pool.take_log();
-        if !g.is_empty() {
-            self.graph_pool.install_schedule(BeladySchedule::build(&g));
+    /// Drain the epoch's recorded access logs — once; see [`EpochLogs`].
+    /// Recording stays on, so the next epoch's trace accumulates afresh.
+    pub(crate) fn drain_access_logs(&self) -> EpochLogs {
+        EpochLogs {
+            graph: self.graph_pool.take_log(),
+            feature: self.feature_pool.take_log(),
+            cache: self.feature_cache.take_log(),
         }
-        let f = self.feature_pool.take_log();
-        if !f.is_empty() {
-            self.feature_pool.install_schedule(BeladySchedule::build(&f));
+    }
+
+    /// Warmup-then-optimal epoch boundary: install the Belady schedule
+    /// each drained log implies, cursor rewound for the coming epoch
+    /// (epoch shuffling makes the traces drift; the per-hyperbatch cursor
+    /// resync bounds it).
+    pub(crate) fn install_belady_from(&self, logs: &EpochLogs) {
+        if !logs.graph.is_empty() {
+            self.graph_pool.install_schedule(BeladySchedule::build(&logs.graph));
         }
-        let c = self.feature_cache.take_log();
-        if !c.is_empty() {
-            self.feature_cache.install_schedule(BeladySchedule::build(&c));
+        if !logs.feature.is_empty() {
+            self.feature_pool.install_schedule(BeladySchedule::build(&logs.feature));
         }
+        if !logs.cache.is_empty() {
+            self.feature_cache.install_schedule(BeladySchedule::build(&logs.cache));
+        }
+    }
+
+    /// The pipeline depth the next epoch should run at: the configured
+    /// `train.pipeline_depth` unless the controller decided (and applied)
+    /// a shallower or equal target.
+    pub fn effective_pipeline_depth(&self) -> usize {
+        self.controller.effective_depth(self.config.train.pipeline_depth as u32) as usize
+    }
+
+    /// Map the feature cache's node-granular access log to feature-block
+    /// granularity. The cache log is recorded *before* residency is
+    /// consulted, so — unlike the feature pool's log, which only sees
+    /// cache misses — the block stream is identical across cache policies
+    /// and capacities, which the controller's determinism contract needs.
+    fn feature_block_log(&self, cache: &AccessLog<u32>) -> AccessLog<BlockId> {
+        let fl = self.feature_store.layout;
+        AccessLog {
+            hyperbatches: cache
+                .hyperbatches
+                .iter()
+                .map(|hb| hb.iter().map(|&v| BlockId(fl.block_of(v))).collect())
+                .collect(),
+        }
+    }
+
+    /// Assemble the controller's epoch observation from the drained logs:
+    /// each store's trace priced under its live layout, plus (when online
+    /// relayout is enabled) a candidate remap priced against the same
+    /// trace. Pure in `(logs, compute_ns)` given fixed stores/config —
+    /// the determinism-replay test calls it twice and compares decisions.
+    pub(crate) fn controller_inputs(
+        &self,
+        epoch: u32,
+        logs: &EpochLogs,
+        compute_ns: u64,
+    ) -> Result<(ControllerInputs, RelayoutCandidates)> {
+        let spec = self.config.device.spec();
+        let map = self.graph_store.stripe_map();
+        let bs = self.config.io.block_size;
+        let max_req = self.config.io.max_request_bytes;
+        let mut stores = Vec::new();
+        let mut candidates = RelayoutCandidates { graph: None, feature: None };
+
+        if !logs.graph.is_empty() {
+            let remap = self.graph_store.remap();
+            let cur = TraceModel::from_log(&logs.graph, &remap, map, bs, max_req);
+            let mut st = StoreTrace::new("graph", cur);
+            st.file_bytes = self.graph_store.num_blocks() as u64 * bs as u64;
+            if self.controller.relayout_enabled() {
+                let cand = optimize_block_layout(
+                    LayoutPolicy::Hyperbatch,
+                    &trace_from_log(&logs.graph),
+                    self.graph_store.num_blocks(),
+                    map,
+                )?;
+                if cand != *remap {
+                    st.candidate =
+                        Some(TraceModel::from_log(&logs.graph, &cand, map, bs, max_req));
+                    candidates.graph = Some(cand);
+                }
+            }
+            stores.push(st);
+        }
+
+        // oversized feature geometry keeps the identity layout and byte
+        // arithmetic; skip modeling it (the optimizer never remaps it)
+        let fl = self.feature_store.layout;
+        if !logs.cache.is_empty() && fl.feature_bytes() <= fl.block_size {
+            let flog = self.feature_block_log(&logs.cache);
+            let remap = self.feature_store.remap();
+            let cur = TraceModel::from_log(&flog, &remap, map, bs, max_req);
+            let mut st = StoreTrace::new("feature", cur);
+            st.file_bytes = self.feature_store.num_blocks() as u64 * bs as u64;
+            if self.controller.relayout_enabled() {
+                let cand = optimize_block_layout(
+                    LayoutPolicy::Hyperbatch,
+                    &trace_from_log(&flog),
+                    self.feature_store.num_blocks(),
+                    map,
+                )?;
+                if cand != *remap {
+                    st.candidate = Some(TraceModel::from_log(&flog, &cand, map, bs, max_req));
+                    candidates.feature = Some(cand);
+                }
+            }
+            stores.push(st);
+        }
+
+        let inputs = ControllerInputs {
+            epoch,
+            compute_ns,
+            current_depth: self.effective_pipeline_depth() as u32,
+            current_gap: self.engine.effective_gap_blocks(),
+            auto_gap: matches!(self.config.io.gap_blocks, GapBlocks::Auto),
+            spec,
+            concurrency: self.engine.effective_concurrency(),
+            stores,
+        };
+        Ok((inputs, candidates))
+    }
+
+    /// One controller step at an epoch boundary: decide from the drained
+    /// logs, apply what the controller accepted (gap override on the
+    /// engine, relayout on the stores; depth is absorbed by `commit`),
+    /// and return the decisions for the epoch's `RunMetrics`.
+    pub(crate) fn controller_step(
+        &self,
+        epoch: u32,
+        logs: &EpochLogs,
+        compute_ns: u64,
+    ) -> Result<Vec<ControllerDecision>> {
+        if !self.controller.is_enabled() {
+            return Ok(Vec::new());
+        }
+        let (inputs, candidates) = self.controller_inputs(epoch, logs, compute_ns)?;
+        let decisions = self.controller.decide(&inputs);
+        for d in &decisions {
+            if !d.applied {
+                continue;
+            }
+            match &d.action {
+                ControllerAction::Gap { to, .. } => self.engine.set_gap_override(Some(*to)),
+                ControllerAction::Relayout { store, .. } => {
+                    let cand = match *store {
+                        "graph" => candidates.graph.clone(),
+                        _ => candidates.feature.clone(),
+                    };
+                    if let Some(next) = cand {
+                        self.apply_relayout(store, next)?;
+                    }
+                }
+                ControllerAction::Depth { .. } => {}
+            }
+        }
+        self.controller.commit(&decisions);
+        Ok(decisions)
+    }
+
+    /// Rewrite one store's block file so its **full** logical→physical
+    /// remap becomes `next`, then persist the sidecar and hot-swap the
+    /// store's handle. The on-disk rewrite permutes *physical* positions,
+    /// so the streamed permutation is the delta between the live remap
+    /// and `next` (block at old physical position `old.physical(l)` must
+    /// land at `next.physical(l)`). Atomic temp+rename per file; only
+    /// safe at an epoch boundary (no in-flight reads of stale physical
+    /// ids — callers hold the boundary).
+    fn apply_relayout(&self, store: &str, next: BlockRemap) -> Result<()> {
+        let paths = &self.dataset.paths;
+        let bs = self.config.io.block_size;
+        let mut meta = LayoutMeta::load(paths)?;
+        if meta.policy == LayoutPolicy::None {
+            // datasets built without the optimizer have no sidecar yet;
+            // record which placement family the online permute follows
+            meta.policy = LayoutPolicy::Hyperbatch;
+        }
+        if store == "graph" {
+            let old = self.graph_store.remap();
+            let delta = delta_remap(&old, &next, self.graph_store.num_blocks())?;
+            apply_block_remap(&paths.graph_blocks, bs, &delta)?;
+            meta.graph = next;
+            meta.write(paths)?;
+            self.graph_store.reload_layout(paths)?;
+        } else {
+            let old = self.feature_store.remap();
+            let delta = delta_remap(&old, &next, self.feature_store.num_blocks())?;
+            apply_block_remap(&paths.feature_blocks, bs, &delta)?;
+            meta.feature = next;
+            meta.write(paths)?;
+            self.feature_store.reload_layout(paths)?;
+        }
+        Ok(())
     }
 
     /// Reset device counters and buffer statistics (between bench phases).
@@ -289,6 +504,13 @@ impl EngineServices {
             self.config.memory.feature_cache_entries,
             self.config.memory.feature_cache_threshold,
         );
+        self.engine.reset_plan_stats();
+        // like the Belady schedules, learned adaptive state (depth
+        // target, gap override, relayout) survives a counter reset — a
+        // measured bench phase is exactly where the warm phase's
+        // adaptation should pay off; `controller.reset()` is for callers
+        // that really want the static initial state back
+        self.controller.reset_log();
     }
 
     /// One cumulative snapshot of every service counter, taken without
@@ -306,6 +528,20 @@ impl EngineServices {
                 + self.feature_store.run_blocks_read(),
         }
     }
+}
+
+/// The physical-space permutation that rewrites a file laid out by `old`
+/// into the layout `next` prescribes: the block at old physical position
+/// `old.physical(l)` must land at `next.physical(l)`, expressed in
+/// [`apply_block_remap`]'s convention (`to_physical[src] = dst` over
+/// file positions). Collapses to the identity (a no-op rewrite) when the
+/// two layouts agree.
+fn delta_remap(old: &BlockRemap, next: &BlockRemap, num_blocks: u32) -> Result<BlockRemap> {
+    let mut to_physical = vec![0u32; num_blocks as usize];
+    for l in 0..num_blocks {
+        to_physical[old.physical(BlockId(l)).0 as usize] = next.physical(BlockId(l)).0;
+    }
+    BlockRemap::from_to_physical(to_physical)
 }
 
 /// Cumulative counters across every shared service at one instant.

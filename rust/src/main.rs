@@ -33,6 +33,19 @@
 //!   --cache-policy <p>     feature-cache/buffer eviction: reactive | belady
 //!                          (belady records epoch 0, then follows the
 //!                          precomputed farthest-next-use schedule)
+//!   --adaptive             enable the self-tuning runtime controller:
+//!                          at every epoch boundary it re-derives pipeline
+//!                          depth, gap budget (under --gap-blocks auto) and
+//!                          optionally block layout from the epoch's
+//!                          recorded trace (prints one `[adaptive]` line
+//!                          per epoch with decisions + reasons)
+//!   --adaptive-frozen      observe-only: decisions are computed and
+//!                          logged but never applied (bit-for-bit the
+//!                          static run)
+//!   --adaptive-relayout    allow online block-layout rewrites (persists
+//!                          into the dataset dir; see README)
+//!   --adaptive-min-gain <f> minimum modeled relative gain before a
+//!                          relayout is accepted (default 0.05)
 //!   --hyperbatch <n>       minibatches per hyperbatch
 //!   --minibatch <n>        targets per minibatch
 //!   --pipeline-depth <n>   in-flight hyperbatches (0/1 = sequential)
@@ -53,7 +66,8 @@
 //!   infer <seed> <node...>        one request for the given target nodes
 //!   burst <count> <batch> [seed0] enqueue count deterministic requests
 //!   stats                         rolling window + latency percentiles
-//!   reload <section.key> <value>  hot-swap a cache/io knob (re-validated)
+//!   reload <section.key> <value>  hot-swap a cache/io/adaptive knob
+//!                                 (re-validated)
 //!   quit                          drain, join workers, print summary
 //! ```
 
@@ -184,6 +198,18 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(p) = args.get::<CachePolicy>("cache-policy")? {
         c.cache.policy = p;
     }
+    if let Some(a) = args.get::<bool>("adaptive")? {
+        c.adaptive.enabled = a;
+    }
+    if let Some(f) = args.get::<bool>("adaptive-frozen")? {
+        c.adaptive.frozen = f;
+    }
+    if let Some(r) = args.get::<bool>("adaptive-relayout")? {
+        c.adaptive.relayout = r;
+    }
+    if let Some(g) = args.get::<f64>("adaptive-min-gain")? {
+        c.adaptive.min_gain = g;
+    }
     if let Some(h) = args.get::<usize>("hyperbatch")? {
         c.train.hyperbatch_size = h;
     }
@@ -283,6 +309,9 @@ fn run_system(
                     .collect::<Vec<_>>()
                     .join(" / "),
             );
+        }
+        if let Some(line) = m.controller.epoch_summary(epoch as u32) {
+            println!("         {line}");
         }
     }
     Ok(())

@@ -3,7 +3,9 @@
 //! overlap/stall attribution for the staged epoch executor, and report
 //! formatting shared by the benches.
 
+use crate::runtime::controller::ControllerLog;
 use crate::storage::device::DeviceStats;
+use crate::storage::plan::PlanStats;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
@@ -126,6 +128,14 @@ pub struct RunMetrics {
     pub serve_sample_ns: u64,
     pub serve_gather_ns: u64,
     pub serve_compute_ns: u64,
+    /// Planner hole/run-length histograms accumulated over every coalesced
+    /// plan this run issued (see `storage::plan::PlanStats`). Holes are
+    /// recorded budget-independently (the workload's gap distribution);
+    /// runs reflect the budget actually in force.
+    pub plan: PlanStats,
+    /// The adaptive runtime controller's decision log for this run (empty
+    /// when the controller is disabled; see `runtime::controller`).
+    pub controller: ControllerLog,
 }
 
 impl RunMetrics {
@@ -289,6 +299,8 @@ impl RunMetrics {
         self.serve_sample_ns += o.serve_sample_ns;
         self.serve_gather_ns += o.serve_gather_ns;
         self.serve_compute_ns += o.serve_compute_ns;
+        self.plan.merge(&o.plan);
+        self.controller.merge(&o.controller);
         // ratios: keep the last run's (benches report per-config runs)
         self.graph_hit_ratio = o.graph_hit_ratio;
         self.feature_hit_ratio = o.feature_hit_ratio;
@@ -499,6 +511,26 @@ pub fn fmt_bytes(b: u64) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn merge_carries_plan_and_controller() {
+        use crate::runtime::controller::{ControllerAction, ControllerDecision};
+        let mut a = RunMetrics::default();
+        a.plan.holes.record(3);
+        a.controller.push(ControllerDecision {
+            epoch: 0,
+            action: ControllerAction::Depth { from: 1, to: 2 },
+            applied: true,
+            reason: "test".into(),
+        });
+        let mut b = RunMetrics::default();
+        b.plan.holes.record(5);
+        b.merge(&a);
+        assert_eq!(b.plan.holes.total_count(), 2);
+        assert_eq!(b.plan.holes.total_blocks(), 8);
+        assert_eq!(b.controller.decisions.len(), 1);
+        assert!(b.controller.epoch_summary(0).unwrap().contains("depth 1->2"));
+    }
 
     #[test]
     fn prep_fraction_math() {

@@ -1,0 +1,791 @@
+//! Self-tuning runtime controller (`[adaptive]`).
+//!
+//! Runs at epoch boundaries inside
+//! [`EngineServices`](crate::coordinator::services::EngineServices) and
+//! turns the epoch's *recorded, policy-invariant* observations into three
+//! online decisions:
+//!
+//! 1. **Pipeline depth** — the effective number of in-flight hyperbatches,
+//!    grown while storage prepare is the modeled bottleneck and shrunk
+//!    when compute dominates, always capped by `train.pipeline_depth`.
+//! 2. **Gap budget** — when `io.gap_blocks = "auto"`, the spec-only
+//!    [`SsdSpec::adaptive_gap_blocks`] seed is replaced by the budget that
+//!    minimizes the *modeled* storage time of the epoch's own block trace
+//!    (priced exactly from the hole histogram), applied to the next epoch
+//!    via the engine's gap override.
+//! 3. **Relayout** — an online [`BlockRemap`](crate::graph::layout::BlockRemap)
+//!    re-permute of a store file, accepted only when the modeled time gain
+//!    beats `adaptive.min_gain` *and* the one-off modeled rewrite cost.
+//!
+//! ## Determinism contract
+//!
+//! Every decision is a pure function of (config, device spec, recorded
+//! block trace, modeled compute time). The recorded traces come from the
+//! pre-residency access logs — the sequence of *requested* blocks, which
+//! is identical across cache policies (reactive/belady) and pipeline
+//! schedules (the sampler requests the same blocks in the same hyperbatch
+//! order regardless of who overlaps what) — never from wall-clock stalls
+//! or cache-miss-dependent I/O counters. Replaying [`RuntimeController::decide`]
+//! on the same [`ControllerInputs`] reproduces the decision list
+//! bit-for-bit; fixed-seed runs therefore stay bit-identical.
+//!
+//! The trace model deliberately prices the *requested* stream, not the
+//! post-cache miss stream: it overstates absolute bytes when the buffer
+//! pool holds blocks across hyperbatches, but every gap/layout candidate
+//! is priced against the same stream, so the comparison — the only thing
+//! a decision consumes — is unbiased.
+
+use crate::config::AdaptiveConfig;
+use crate::graph::layout::{BlockRemap, StripeMap};
+use crate::memory::AccessLog;
+use crate::storage::device::SsdSpec;
+use crate::storage::plan::{plan_hist_bound, PlanHistogram, PLAN_HIST_BUCKETS};
+use crate::storage::BlockId;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Largest gap budget the controller will ever pick — the `io.gap_blocks`
+/// validation cap (also [`SsdSpec::adaptive_gap_blocks`]'s cap).
+pub const GAP_CANDIDATE_MAX: u32 = 1024;
+
+/// The gap budgets the controller evaluates: 0 plus every power of two up
+/// to [`GAP_CANDIDATE_MAX`]. Powers of two are exactly the
+/// [`PlanHistogram`] bucket bounds, so each candidate is priced *exactly*
+/// from the histogram (every bucket is either fully bridged or fully
+/// split at a bound).
+pub fn gap_candidates() -> impl Iterator<Item = u32> {
+    std::iter::once(0).chain((0..=10).map(|i| 1u32 << i))
+}
+
+/// Analytic storage-time model of one epoch's recorded block trace for
+/// one store, in **physical** block space. Built once per epoch from the
+/// pre-residency access log; priced under any gap budget in O(buckets).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TraceModel {
+    /// Distinct requested blocks, summed over hyperbatches (each
+    /// hyperbatch plans its own sweep).
+    pub blocks: u64,
+    /// Maximal physically-consecutive runs at gap budget 0, split at
+    /// stripe boundaries like the planner itself.
+    pub runs: u64,
+    /// Hole sizes between consecutive requested blocks sharing a stripe
+    /// (the bridgeable holes — cross-stripe holes can never be bridged).
+    pub holes: PlanHistogram,
+    /// Store block size in bytes.
+    pub block_size: usize,
+    /// Planner request-size cap (`io.max_request_bytes`).
+    pub max_request_bytes: usize,
+}
+
+impl TraceModel {
+    /// Build the model from a pre-residency access log, translating each
+    /// logical block through `remap` — pass the store's live remap to
+    /// price the current layout, or a candidate remap to price a
+    /// hypothetical one against the *same* trace.
+    pub fn from_log(
+        log: &AccessLog<BlockId>,
+        remap: &BlockRemap,
+        map: StripeMap,
+        block_size: usize,
+        max_request_bytes: usize,
+    ) -> TraceModel {
+        let mut m = TraceModel {
+            blocks: 0,
+            runs: 0,
+            holes: PlanHistogram::default(),
+            block_size,
+            max_request_bytes,
+        };
+        let mut phys: Vec<u32> = Vec::new();
+        for hb in &log.hyperbatches {
+            if hb.is_empty() {
+                continue;
+            }
+            phys.clear();
+            phys.extend(hb.iter().map(|&b| remap.physical(b).0));
+            phys.sort_unstable();
+            phys.dedup();
+            m.blocks += phys.len() as u64;
+            m.runs += 1;
+            for w in phys.windows(2) {
+                let hole = w[1] - w[0] - 1;
+                let cross = map.is_sharded()
+                    && w[0] / map.stripe_blocks != w[1] / map.stripe_blocks;
+                if hole > 0 || cross {
+                    m.runs += 1;
+                }
+                if hole > 0 && !cross {
+                    m.holes.record(hole);
+                }
+            }
+        }
+        m
+    }
+
+    /// (count, blocks) of holes a budget of `gap` blocks bridges. Exact
+    /// when `gap` is a bucket bound (see [`gap_candidates`]).
+    pub fn bridged(&self, gap: u32) -> (u64, u64) {
+        let mut count = 0;
+        let mut blocks = 0;
+        for i in 0..PLAN_HIST_BUCKETS {
+            if plan_hist_bound(i) <= gap {
+                count += self.holes.counts[i];
+                blocks += self.holes.blocks[i];
+            }
+        }
+        (count, blocks)
+    }
+
+    /// Total bytes read under a `gap`-block budget (requested blocks plus
+    /// bridged padding).
+    pub fn bytes_at(&self, gap: u32) -> u64 {
+        let (_, pad) = self.bridged(gap);
+        (self.blocks + pad) * self.block_size as u64
+    }
+
+    /// Device requests under a `gap`-block budget: each bridged hole
+    /// merges two runs, and the request-size cap re-splits oversized runs
+    /// (modeled in aggregate: at least `ceil(bytes / cap)` requests).
+    pub fn requests_at(&self, gap: u32) -> u64 {
+        if self.blocks == 0 {
+            return 0;
+        }
+        let (merged, _) = self.bridged(gap);
+        let runs = self.runs.saturating_sub(merged).max(1);
+        let cap_splits = self.bytes_at(gap).div_ceil(self.max_request_bytes.max(1) as u64);
+        runs.max(cap_splits)
+    }
+
+    /// Mean delivered blocks per request under a `gap`-block budget (the
+    /// quantity an online relayout tries to raise).
+    pub fn mean_blocks_per_run(&self, gap: u32) -> f64 {
+        let reqs = self.requests_at(gap);
+        if reqs == 0 {
+            return 0.0;
+        }
+        (self.bytes_at(gap) / self.block_size as u64) as f64 / reqs as f64
+    }
+
+    /// Modeled storage nanoseconds under a `gap`-block budget — the same
+    /// bandwidth/latency max as [`SsdModel`](crate::storage::device::SsdModel):
+    /// `max(bytes / array_bw, requests · overhead / effective_qd)`.
+    pub fn time_ns(&self, gap: u32, spec: &SsdSpec, concurrency: u32) -> u64 {
+        let reqs = self.requests_at(gap);
+        if reqs == 0 {
+            return 0;
+        }
+        let qd = concurrency
+            .min(reqs.min(u32::MAX as u64) as u32)
+            .clamp(1, spec.queue_depth * spec.num_ssds);
+        let bw_s = self.bytes_at(gap) as f64 / spec.array_bandwidth();
+        let lat_s = reqs as f64 * spec.request_overhead / qd as f64;
+        (bw_s.max(lat_s) * 1e9) as u64
+    }
+}
+
+/// Pick the gap budget minimizing the summed modeled time of `models`
+/// (one [`TraceModel`] per store). Ties break toward the *smallest*
+/// budget — less padding for the same modeled time. Returns
+/// `(budget, modeled_ns)`.
+pub fn choose_gap(models: &[&TraceModel], spec: &SsdSpec, concurrency: u32) -> (u32, u64) {
+    let mut best = (0u32, u64::MAX);
+    for g in gap_candidates() {
+        let t: u64 = models.iter().map(|m| m.time_ns(g, spec, concurrency)).sum();
+        if t < best.1 {
+            best = (g, t);
+        }
+    }
+    best
+}
+
+/// Effective pipeline depth for a prepare/compute time ratio: one slot
+/// for the hyperbatch being computed plus enough prepare lookahead to
+/// hide the storage time behind compute, capped by the configured
+/// `train.pipeline_depth`. `compute_ns = 0` (nothing to hide behind)
+/// saturates to the cap.
+pub fn depth_target(prep_ns: u64, compute_ns: u64, cap: u32) -> u32 {
+    if cap <= 1 {
+        return cap.max(1);
+    }
+    if compute_ns == 0 {
+        return cap;
+    }
+    let lookahead = prep_ns.div_ceil(compute_ns);
+    (1 + lookahead).clamp(1, cap as u64) as u32
+}
+
+/// One store's observation for an epoch: the trace priced under the live
+/// layout, optionally the same trace priced under a candidate remap, and
+/// the file size that a rewrite would have to stream twice.
+#[derive(Debug, Clone, Default)]
+pub struct StoreTrace {
+    /// `"graph"` or `"feature"` (labels decisions and CLI lines).
+    pub name: &'static str,
+    pub current: TraceModel,
+    /// The same trace under the relayout candidate's remap (`None` when
+    /// relayout is off or no candidate exists for this store).
+    pub candidate: Option<TraceModel>,
+    /// Store file length in bytes (rewrite cost input).
+    pub file_bytes: u64,
+}
+
+impl StoreTrace {
+    pub fn new(name: &'static str, current: TraceModel) -> StoreTrace {
+        StoreTrace { name, current, candidate: None, file_bytes: 0 }
+    }
+}
+
+/// Everything one [`RuntimeController::decide`] call consumes. Built by
+/// the coordinator from the epoch's recorded logs; feeding the same
+/// inputs twice yields the same decisions (the determinism-replay test
+/// relies on exactly this).
+#[derive(Debug, Clone, Default)]
+pub struct ControllerInputs {
+    pub epoch: u32,
+    /// Modeled compute time of the epoch (policy- and schedule-invariant).
+    pub compute_ns: u64,
+    /// Depth the *next* epoch would run at absent a new decision.
+    pub current_depth: u32,
+    /// Gap budget currently in force.
+    pub current_gap: u32,
+    /// Whether `io.gap_blocks = "auto"` (a fixed budget is never touched).
+    pub auto_gap: bool,
+    pub spec: SsdSpec,
+    /// Engine submission concurrency (`io.async_depth`).
+    pub concurrency: u32,
+    pub stores: Vec<StoreTrace>,
+}
+
+/// One decision the controller took (or declined), with its inputs and
+/// reason — the auditable record inside `RunMetrics`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ControllerDecision {
+    pub epoch: u32,
+    pub action: ControllerAction,
+    /// Whether the decision was applied to the next epoch (`false` when
+    /// frozen, rejected by the gain gate, or already in force).
+    pub applied: bool,
+    pub reason: String,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ControllerAction {
+    /// Adapt the effective pipeline depth.
+    Depth { from: u32, to: u32 },
+    /// Refine the gap-bridging budget (`modeled_ns` is the summed modeled
+    /// storage time at `to`).
+    Gap { from: u32, to: u32, modeled_ns: u64 },
+    /// Re-permute one store's block layout online. `saved_ns` is the
+    /// modeled per-epoch saving, `rewrite_ns` the one-off rewrite cost.
+    Relayout { store: &'static str, gain: f64, saved_ns: u64, rewrite_ns: u64 },
+}
+
+impl ControllerAction {
+    fn describe(&self) -> String {
+        match self {
+            ControllerAction::Depth { from, to } => format!("depth {from}->{to}"),
+            ControllerAction::Gap { from, to, modeled_ns } => {
+                format!("gap {from}->{to} ({:.2} ms modeled)", *modeled_ns as f64 / 1e6)
+            }
+            ControllerAction::Relayout { store, gain, saved_ns, rewrite_ns } => format!(
+                "relayout {store} (gain {:.1}%, saves {:.2} ms/epoch, rewrite {:.2} ms)",
+                gain * 100.0,
+                *saved_ns as f64 / 1e6,
+                *rewrite_ns as f64 / 1e6
+            ),
+        }
+    }
+}
+
+/// The per-run decision record, carried inside `RunMetrics` (empty when
+/// the controller is disabled).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ControllerLog {
+    pub decisions: Vec<ControllerDecision>,
+}
+
+impl ControllerLog {
+    pub fn push(&mut self, d: ControllerDecision) {
+        self.decisions.push(d);
+    }
+
+    pub fn merge(&mut self, other: &ControllerLog) {
+        self.decisions.extend(other.decisions.iter().cloned());
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.decisions.is_empty()
+    }
+
+    /// One human-readable line summarizing epoch `epoch`'s decisions
+    /// (`None` when the controller recorded nothing for it).
+    pub fn epoch_summary(&self, epoch: u32) -> Option<String> {
+        let parts: Vec<String> = self
+            .decisions
+            .iter()
+            .filter(|d| d.epoch == epoch)
+            .map(|d| {
+                let mark = if d.applied { "" } else { "-" };
+                format!("{mark}{} [{}]", d.action.describe(), d.reason)
+            })
+            .collect();
+        if parts.is_empty() {
+            None
+        } else {
+            Some(format!("[adaptive] epoch {epoch}: {}", parts.join("; ")))
+        }
+    }
+}
+
+/// Epoch-boundary feedback controller. Owned by `EngineServices` (shared
+/// across engine clones), so all state is interior-mutable; decisions
+/// themselves are pure functions of [`ControllerInputs`].
+#[derive(Debug)]
+pub struct RuntimeController {
+    enabled: AtomicBool,
+    frozen: AtomicBool,
+    relayout: AtomicBool,
+    /// `f64::to_bits` of `adaptive.min_gain` (atomics carry no floats).
+    min_gain_bits: AtomicU64,
+    /// Configured depth cap (`train.pipeline_depth`).
+    depth_cap: u32,
+    /// Depth decided for the next epoch; 0 = no decision yet (use the
+    /// configured depth).
+    depth_target: AtomicU32,
+    log: Mutex<ControllerLog>,
+}
+
+impl RuntimeController {
+    pub fn new(cfg: &AdaptiveConfig, depth_cap: u32) -> RuntimeController {
+        RuntimeController {
+            enabled: AtomicBool::new(cfg.enabled),
+            frozen: AtomicBool::new(cfg.frozen),
+            relayout: AtomicBool::new(cfg.relayout),
+            min_gain_bits: AtomicU64::new(cfg.min_gain.to_bits()),
+            depth_cap,
+            depth_target: AtomicU32::new(0),
+            log: Mutex::new(ControllerLog::default()),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    pub fn set_enabled(&self, v: bool) {
+        self.enabled.store(v, Ordering::Relaxed);
+    }
+
+    pub fn is_frozen(&self) -> bool {
+        self.frozen.load(Ordering::Relaxed)
+    }
+
+    pub fn set_frozen(&self, v: bool) {
+        self.frozen.store(v, Ordering::Relaxed);
+    }
+
+    pub fn relayout_enabled(&self) -> bool {
+        self.relayout.load(Ordering::Relaxed)
+    }
+
+    pub fn set_relayout(&self, v: bool) {
+        self.relayout.store(v, Ordering::Relaxed);
+    }
+
+    pub fn min_gain(&self) -> f64 {
+        f64::from_bits(self.min_gain_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn set_min_gain(&self, v: f64) {
+        self.min_gain_bits.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn depth_cap(&self) -> u32 {
+        self.depth_cap
+    }
+
+    /// The depth the next epoch should run at: the controller's target
+    /// when one was decided (and applied), else `config_depth`.
+    pub fn effective_depth(&self, config_depth: u32) -> u32 {
+        if !self.is_enabled() {
+            return config_depth;
+        }
+        match self.depth_target.load(Ordering::Relaxed) {
+            0 => config_depth,
+            d => d,
+        }
+    }
+
+    /// Compute the epoch's decisions. Pure in `inputs` — internal state
+    /// only gates (enabled/frozen/min_gain), it never feeds values into a
+    /// decision — so replaying the same inputs reproduces the same list.
+    /// Nothing is applied here; [`Self::commit`] does that.
+    pub fn decide(&self, inputs: &ControllerInputs) -> Vec<ControllerDecision> {
+        if !self.is_enabled() {
+            return Vec::new();
+        }
+        let frozen = self.is_frozen();
+        let min_gain = self.min_gain();
+        let mut out = Vec::new();
+
+        if inputs.stores.is_empty() {
+            // nothing recorded (e.g. zero hyperbatches): no decisions
+            return out;
+        }
+
+        // (1) gap budget: argmin of the modeled storage time over the
+        // recorded trace (only meaningful under io.gap_blocks = "auto")
+        let models: Vec<&TraceModel> = inputs.stores.iter().map(|s| &s.current).collect();
+        let mut gap = inputs.current_gap;
+        let prep_ns: u64 = if inputs.auto_gap {
+            let (best, best_ns) = choose_gap(&models, &inputs.spec, inputs.concurrency);
+            let (applied, reason) = if frozen {
+                (false, "frozen".to_string())
+            } else if best == inputs.current_gap {
+                (false, "already in force".to_string())
+            } else {
+                (true, "modeled argmin over hole histogram".to_string())
+            };
+            if applied {
+                gap = best;
+            }
+            out.push(ControllerDecision {
+                epoch: inputs.epoch,
+                action: ControllerAction::Gap {
+                    from: inputs.current_gap,
+                    to: best,
+                    modeled_ns: best_ns,
+                },
+                applied,
+                reason,
+            });
+            best_ns
+        } else {
+            models
+                .iter()
+                .map(|m| m.time_ns(inputs.current_gap, &inputs.spec, inputs.concurrency))
+                .sum()
+        };
+
+        // (2) pipeline depth: enough lookahead to hide the modeled
+        // storage time behind the modeled compute time, within the cap
+        let target = depth_target(prep_ns, inputs.compute_ns, self.depth_cap);
+        if target != inputs.current_depth {
+            let (applied, reason) = if frozen {
+                (false, "frozen".to_string())
+            } else {
+                (
+                    true,
+                    format!(
+                        "prep {:.2} ms vs compute {:.2} ms",
+                        prep_ns as f64 / 1e6,
+                        inputs.compute_ns as f64 / 1e6
+                    ),
+                )
+            };
+            out.push(ControllerDecision {
+                epoch: inputs.epoch,
+                action: ControllerAction::Depth { from: inputs.current_depth, to: target },
+                applied,
+                reason,
+            });
+        }
+
+        // (3) online relayout: accept only when the modeled per-epoch
+        // saving clears both the hysteresis gate and the rewrite cost
+        if self.relayout_enabled() {
+            for s in &inputs.stores {
+                let Some(cand) = &s.candidate else { continue };
+                let cur_ns = s.current.time_ns(gap, &inputs.spec, inputs.concurrency);
+                let cand_ns = cand.time_ns(gap, &inputs.spec, inputs.concurrency);
+                let saved_ns = cur_ns.saturating_sub(cand_ns);
+                let gain = if cur_ns == 0 { 0.0 } else { saved_ns as f64 / cur_ns as f64 };
+                // rewrite streams the file once in and once out
+                let rewrite_ns =
+                    (2.0 * s.file_bytes as f64 / inputs.spec.array_bandwidth() * 1e9) as u64;
+                let (applied, reason) = if frozen {
+                    (false, "frozen".to_string())
+                } else if gain < min_gain {
+                    (false, format!("gain below min_gain {min_gain}"))
+                } else if saved_ns < rewrite_ns {
+                    (false, "rewrite cost exceeds per-epoch saving".to_string())
+                } else {
+                    (true, "modeled gain clears rewrite cost".to_string())
+                };
+                out.push(ControllerDecision {
+                    epoch: inputs.epoch,
+                    action: ControllerAction::Relayout {
+                        store: s.name,
+                        gain,
+                        saved_ns,
+                        rewrite_ns,
+                    },
+                    applied,
+                    reason,
+                });
+            }
+        }
+        out
+    }
+
+    /// Record `decisions` in the log and absorb the depth target. Gap
+    /// overrides and relayouts touch engine/store state the controller
+    /// does not own, so the coordinator applies those and calls this for
+    /// the rest.
+    pub fn commit(&self, decisions: &[ControllerDecision]) {
+        for d in decisions {
+            if let (ControllerAction::Depth { to, .. }, true) = (&d.action, d.applied) {
+                self.depth_target.store(*to, Ordering::Relaxed);
+            }
+        }
+        let mut log = self.log.lock().unwrap();
+        for d in decisions {
+            log.push(d.clone());
+        }
+    }
+
+    /// Snapshot the accumulated log (for `RunMetrics`).
+    pub fn log_snapshot(&self) -> ControllerLog {
+        self.log.lock().unwrap().clone()
+    }
+
+    /// Drop the accumulated decision log but keep learned state (depth
+    /// target) — what a between-phases counter reset wants.
+    pub fn reset_log(&self) {
+        self.log.lock().unwrap().decisions.clear();
+    }
+
+    /// Drop accumulated decisions *and* learned targets, returning the
+    /// controller to its static initial state.
+    pub fn reset(&self) {
+        self.depth_target.store(0, Ordering::Relaxed);
+        self.reset_log();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_of(hyperbatches: &[&[u32]]) -> AccessLog<BlockId> {
+        AccessLog {
+            hyperbatches: hyperbatches
+                .iter()
+                .map(|hb| hb.iter().copied().map(BlockId).collect())
+                .collect(),
+        }
+    }
+
+    fn model(hyperbatches: &[&[u32]]) -> TraceModel {
+        TraceModel::from_log(
+            &log_of(hyperbatches),
+            &BlockRemap::Identity,
+            StripeMap::single(),
+            4096,
+            1 << 20,
+        )
+    }
+
+    #[test]
+    fn trace_model_counts_runs_and_holes() {
+        // [1,2,4,8]: runs {1,2} {4} {8}, holes {3} (1 blk) and {5..8} (3)
+        let m = model(&[&[1, 2, 4, 8]]);
+        assert_eq!(m.blocks, 4);
+        assert_eq!(m.runs, 3);
+        assert_eq!(m.holes.total_count(), 2);
+        assert_eq!(m.holes.total_blocks(), 4);
+        // gap 1 bridges {3}: 2 runs, 5 blocks; gap 4 bridges both
+        assert_eq!(m.requests_at(0), 3);
+        assert_eq!(m.requests_at(1), 2);
+        assert_eq!(m.bytes_at(1), 5 * 4096);
+        assert_eq!(m.requests_at(4), 1);
+        assert_eq!(m.bytes_at(4), 8 * 4096);
+        assert_eq!(m.mean_blocks_per_run(4), 8.0);
+        // duplicate accesses dedup within a hyperbatch, not across
+        let m2 = model(&[&[1, 1, 2], &[2]]);
+        assert_eq!(m2.blocks, 3);
+        assert_eq!(m2.runs, 2);
+    }
+
+    #[test]
+    fn trace_model_splits_runs_at_stripe_boundaries() {
+        // stripe width 4 over 2 shards: hole {3} crosses no boundary,
+        // the 2->5 adjacency crosses the boundary at 4
+        let log = log_of(&[&[2, 5, 6]]);
+        let m = TraceModel::from_log(&log, &BlockRemap::Identity, StripeMap::new(4, 2), 4096, 1 << 20);
+        assert_eq!(m.runs, 2, "split at the stripe boundary");
+        assert_eq!(m.holes.total_count(), 0, "cross-stripe holes are not bridgeable");
+        // and a remap is applied before the scan
+        let rev = BlockRemap::from_to_physical(vec![7, 6, 5, 4, 3, 2, 1, 0]).unwrap();
+        let m2 = TraceModel::from_log(&log, &rev, StripeMap::single(), 4096, 1 << 20);
+        // physical ids {5,2,1}: runs {1,2} {5}, hole {3,4}
+        assert_eq!(m2.runs, 2);
+        assert_eq!(m2.holes.total_blocks(), 2);
+    }
+
+    #[test]
+    fn request_cap_bounds_run_length() {
+        // 512 contiguous blocks of 4 KiB under a 1 MiB cap: 2 MiB total
+        let ids: Vec<u32> = (0..512).collect();
+        let m = model(&[&ids]);
+        assert_eq!(m.runs, 1);
+        assert_eq!(m.requests_at(0), 2, "cap splits the single run");
+    }
+
+    #[test]
+    fn time_model_matches_device_semantics() {
+        let m = model(&[&[1, 2, 4, 8]]);
+        let spec = SsdSpec::default();
+        // few requests: latency term dominates at low concurrency
+        let t1 = m.time_ns(0, &spec, 1);
+        let t8 = m.time_ns(0, &spec, 8);
+        assert!(t1 >= t8, "higher concurrency never slows the model");
+        assert_eq!(m.time_ns(0, &spec, 1), (3.0 * spec.request_overhead * 1e9) as u64);
+        // empty trace prices to zero
+        assert_eq!(model(&[]).time_ns(0, &spec, 8), 0);
+    }
+
+    #[test]
+    fn choose_gap_prefers_smallest_on_ties() {
+        // a perfectly contiguous trace: every budget prices identically,
+        // so the tie must break to 0
+        let ids: Vec<u32> = (0..64).collect();
+        let m = model(&[&ids]);
+        let (g, _) = choose_gap(&[&m], &SsdSpec::default(), 8);
+        assert_eq!(g, 0);
+    }
+
+    #[test]
+    fn choose_gap_bridges_when_overhead_dominates() {
+        // many 1-block holes between single blocks: bridging halves the
+        // request count for tiny extra bytes
+        let ids: Vec<u32> = (0..256).map(|i| i * 2).collect();
+        let m = model(&[&ids]);
+        let (g, ns) = choose_gap(&[&m], &SsdSpec::default(), 8);
+        assert!(g >= 1, "1-block holes should be bridged, got {g}");
+        assert!(ns <= m.time_ns(0, &SsdSpec::default(), 8));
+    }
+
+    #[test]
+    fn depth_target_tracks_prep_compute_ratio() {
+        assert_eq!(depth_target(0, 100, 8), 1, "no prep -> no lookahead");
+        assert_eq!(depth_target(100, 100, 8), 2);
+        assert_eq!(depth_target(250, 100, 8), 4, "1 + ceil(2.5)");
+        assert_eq!(depth_target(10_000, 100, 8), 8, "capped");
+        assert_eq!(depth_target(10_000, 0, 8), 8, "no compute saturates");
+        assert_eq!(depth_target(10_000, 0, 1), 1, "cap 1 pins sequential");
+    }
+
+    fn inputs_with(stores: Vec<StoreTrace>, auto_gap: bool) -> ControllerInputs {
+        ControllerInputs {
+            epoch: 0,
+            compute_ns: 1_000_000,
+            current_depth: 1,
+            current_gap: 0,
+            auto_gap,
+            spec: SsdSpec::default(),
+            concurrency: 8,
+            stores,
+        }
+    }
+
+    #[test]
+    fn decide_is_pure_and_disabled_is_silent() {
+        let cfg = AdaptiveConfig { enabled: true, ..Default::default() };
+        let c = RuntimeController::new(&cfg, 4);
+        let ids: Vec<u32> = (0..256).map(|i| i * 2).collect();
+        let inp = inputs_with(vec![StoreTrace::new("graph", model(&[&ids]))], true);
+        let a = c.decide(&inp);
+        let b = c.decide(&inp);
+        assert_eq!(a, b, "replaying the inputs reproduces the decisions");
+        assert!(!a.is_empty());
+        let off = RuntimeController::new(&AdaptiveConfig::default(), 4);
+        assert!(off.decide(&inp).is_empty(), "disabled controller decides nothing");
+    }
+
+    #[test]
+    fn frozen_logs_but_never_applies() {
+        let cfg = AdaptiveConfig { enabled: true, frozen: true, ..Default::default() };
+        let c = RuntimeController::new(&cfg, 4);
+        let ids: Vec<u32> = (0..256).map(|i| i * 2).collect();
+        let inp = inputs_with(vec![StoreTrace::new("graph", model(&[&ids]))], true);
+        let ds = c.decide(&inp);
+        assert!(!ds.is_empty());
+        assert!(ds.iter().all(|d| !d.applied), "frozen decisions are observe-only");
+        c.commit(&ds);
+        assert_eq!(c.effective_depth(2), 2, "unapplied depth leaves the config value");
+        assert!(c.log_snapshot().epoch_summary(0).is_some());
+    }
+
+    #[test]
+    fn commit_applies_depth_and_reset_clears() {
+        let cfg = AdaptiveConfig { enabled: true, ..Default::default() };
+        let c = RuntimeController::new(&cfg, 8);
+        let d = ControllerDecision {
+            epoch: 0,
+            action: ControllerAction::Depth { from: 1, to: 3 },
+            applied: true,
+            reason: "test".into(),
+        };
+        c.commit(&[d]);
+        assert_eq!(c.effective_depth(1), 3);
+        assert_eq!(c.log_snapshot().decisions.len(), 1);
+        c.reset();
+        assert_eq!(c.effective_depth(1), 1);
+        assert!(c.log_snapshot().is_empty());
+    }
+
+    #[test]
+    fn relayout_gate_weighs_gain_against_rewrite() {
+        let cfg = AdaptiveConfig {
+            enabled: true,
+            relayout: true,
+            min_gain: 0.05,
+            ..Default::default()
+        };
+        let c = RuntimeController::new(&cfg, 4);
+        // current: 256 scattered single blocks; candidate: contiguous
+        let scattered: Vec<u32> = (0..256).map(|i| i * 64).collect();
+        let contiguous: Vec<u32> = (0..256).collect();
+        let mut st = StoreTrace::new("graph", model(&[&scattered]));
+        st.candidate = Some(model(&[&contiguous]));
+        st.file_bytes = 256 * 4096; // tiny file: rewrite is cheap
+        let inp = inputs_with(vec![st], false);
+        let ds = c.decide(&inp);
+        let relayout = ds
+            .iter()
+            .find(|d| matches!(d.action, ControllerAction::Relayout { .. }))
+            .expect("relayout considered");
+        assert!(relayout.applied, "large modeled gain accepted: {relayout:?}");
+        // an enormous file tips the rewrite cost over the saving
+        let mut st2 = StoreTrace::new("graph", model(&[&scattered]));
+        st2.candidate = Some(model(&[&contiguous]));
+        st2.file_bytes = 1 << 50;
+        let ds2 = c.decide(&inputs_with(vec![st2], false));
+        let r2 = ds2
+            .iter()
+            .find(|d| matches!(d.action, ControllerAction::Relayout { .. }))
+            .unwrap();
+        assert!(!r2.applied);
+        assert!(r2.reason.contains("rewrite"));
+    }
+
+    #[test]
+    fn log_merge_and_summary() {
+        let mut a = ControllerLog::default();
+        a.push(ControllerDecision {
+            epoch: 1,
+            action: ControllerAction::Gap { from: 0, to: 8, modeled_ns: 2_000_000 },
+            applied: true,
+            reason: "test".into(),
+        });
+        let mut b = ControllerLog::default();
+        b.merge(&a);
+        b.merge(&a);
+        assert_eq!(b.decisions.len(), 2);
+        let line = a.epoch_summary(1).unwrap();
+        assert!(line.contains("gap 0->8"), "{line}");
+        assert!(a.epoch_summary(2).is_none());
+        assert!(ControllerLog::default().is_empty());
+    }
+}

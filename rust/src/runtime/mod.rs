@@ -19,6 +19,8 @@
 //! returning the tuple `(p'_0 … p'_{k-1}, loss, correct)`. `mask` makes
 //! short (last) minibatches exact: padded rows carry zero weight.
 
+pub mod controller;
+
 use crate::coordinator::{ComputeBackend, MinibatchData, StepResult};
 use crate::Result;
 use crate::util::json::Json;

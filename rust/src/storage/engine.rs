@@ -39,12 +39,12 @@
 //!   stage.
 
 use super::block::GraphBlock;
-use super::plan::{BlockBytes, IoPlanner, RunRequest};
+use super::plan::{BlockBytes, IoPlanner, PlanRecorder, PlanStats, RunRequest};
 use super::store::{FeatureStore, GraphStore};
 use super::BlockId;
 use crate::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 
@@ -190,10 +190,24 @@ pub struct IoEngine {
     pub num_threads: usize,
     /// Outstanding async requests per thread (submission-ring depth).
     pub async_depth: u32,
-    /// Run-coalescing planner applied to every batched read.
+    /// Run-coalescing planner applied to every batched read. The
+    /// *configured* planner: the runtime controller can override its gap
+    /// budget per epoch without rebuilding the engine (see
+    /// [`Self::set_gap_override`] / [`Self::effective_planner`]).
     pub planner: IoPlanner,
     pool: Arc<WorkerPool>,
+    /// Observed hole/run-length distributions, shared across all clones
+    /// of this engine (the submit/poll path clones the engine into its
+    /// pool jobs) — the runtime controller's observability input.
+    recorder: Arc<PlanRecorder>,
+    /// Per-epoch gap-budget override installed by the runtime controller
+    /// (`u32::MAX` = none: use `planner.gap_blocks`). Shared across
+    /// clones so in-flight submit/poll jobs plan with the same budget.
+    gap_override: Arc<AtomicU32>,
 }
+
+/// Sentinel for "no gap override installed".
+const NO_GAP_OVERRIDE: u32 = u32::MAX;
 
 impl std::fmt::Debug for IoEngine {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -235,6 +249,8 @@ impl IoEngine {
             async_depth: async_depth.max(1),
             planner: IoPlanner::default(),
             pool: WorkerPool::new(MAX_CONCURRENT_SUBMITTERS),
+            recorder: Arc::new(PlanRecorder::default()),
+            gap_override: Arc::new(AtomicU32::new(NO_GAP_OVERRIDE)),
         }
     }
 
@@ -250,22 +266,67 @@ impl IoEngine {
         self.num_threads as u32 * self.async_depth
     }
 
+    /// Install (or with `None` clear) the runtime controller's per-epoch
+    /// gap-budget override. Takes effect on the next planned batch, on
+    /// every clone of this engine.
+    pub fn set_gap_override(&self, gap: Option<u32>) {
+        self.gap_override.store(gap.unwrap_or(NO_GAP_OVERRIDE), Ordering::Relaxed);
+    }
+
+    /// The currently installed gap override, if any.
+    pub fn gap_override(&self) -> Option<u32> {
+        match self.gap_override.load(Ordering::Relaxed) {
+            NO_GAP_OVERRIDE => None,
+            g => Some(g),
+        }
+    }
+
+    /// The planner batched reads actually use: the configured planner
+    /// with the controller's gap override (if installed) applied.
+    pub fn effective_planner(&self) -> IoPlanner {
+        match self.gap_override() {
+            None => self.planner,
+            Some(g) => IoPlanner { gap_blocks: g, ..self.planner },
+        }
+    }
+
+    /// The gap budget batched reads are currently planned with.
+    pub fn effective_gap_blocks(&self) -> u32 {
+        self.effective_planner().gap_blocks
+    }
+
+    /// Snapshot the hole/run-length distributions observed by every
+    /// striped plan since the last [`Self::reset_plan_stats`].
+    pub fn plan_stats(&self) -> PlanStats {
+        self.recorder.snapshot()
+    }
+
+    pub fn reset_plan_stats(&self) {
+        self.recorder.reset()
+    }
+
     /// Compile a sorted block list into coalesced run requests under this
-    /// engine's planner.
+    /// engine's (effective) planner.
     pub fn plan(&self, blocks: &[BlockId], block_size: usize) -> Vec<RunRequest> {
-        self.planner.plan(blocks, block_size)
+        self.effective_planner().plan(blocks, block_size)
     }
 
     /// Compile a sorted block list into shard-aware run requests: the
     /// coalesced plan, split at the stripe boundaries of `map` so no
     /// request straddles two devices (verbatim for single-shard maps).
+    /// Every plan is also folded into the engine's shared hole/run-length
+    /// histograms (the runtime controller's observability input).
     pub fn plan_striped(
         &self,
         blocks: &[BlockId],
         block_size: usize,
         map: crate::graph::layout::StripeMap,
     ) -> Vec<RunRequest> {
-        self.planner.plan_striped(blocks, block_size, map)
+        let runs = self.effective_planner().plan_striped(blocks, block_size, map);
+        let mut stats = PlanStats::default();
+        stats.record_plan(blocks, &runs, map);
+        self.recorder.add(&stats);
+        runs
     }
 
     /// Read pre-planned graph runs concurrently: one `pread` and one
@@ -351,7 +412,7 @@ impl IoEngine {
         let runs = if remap.is_identity() {
             self.plan_striped(blocks, store.block_size(), store.stripe_map())
         } else {
-            let phys = Self::to_physical(remap, blocks);
+            let phys = Self::to_physical(&remap, blocks);
             self.plan_striped(&phys, store.block_size(), store.stripe_map())
         };
         self.read_graph_runs(store, &runs)
@@ -368,7 +429,7 @@ impl IoEngine {
         let runs = if remap.is_identity() {
             self.plan_striped(blocks, store.layout.block_size, store.stripe_map())
         } else {
-            let phys = Self::to_physical(remap, blocks);
+            let phys = Self::to_physical(&remap, blocks);
             self.plan_striped(&phys, store.layout.block_size, store.stripe_map())
         };
         self.read_feature_runs(store, &runs)
@@ -718,6 +779,39 @@ mod tests {
             .into_iter()
             .collect();
         assert_eq!(via_pool, want);
+    }
+
+    #[test]
+    fn plan_stats_and_gap_override_ride_every_clone() {
+        let (_d, paths) = setup();
+        let ssd = SsdModel::new(SsdSpec::default());
+        let store = GraphStore::open(&paths, ssd.clone()).unwrap();
+        let eng = IoEngine::new(2, 2).with_planner(IoPlanner::new(1 << 20, 0));
+        // blocks 0,2,4: two 1-block holes, three 1-block runs under gap 0
+        let blocks = vec![BlockId(0), BlockId(2), BlockId(4)];
+        eng.read_graph_blocks_coalesced(&store, &blocks).unwrap();
+        let s = eng.plan_stats();
+        assert_eq!(s.holes.total_count(), 2);
+        assert_eq!(s.holes.total_blocks(), 2);
+        assert_eq!(s.runs.total_count(), 3);
+        assert_eq!(ssd.stats().num_requests, 3);
+        // install a gap override on a CLONE: the original engine's next
+        // plan bridges both holes into one run (shared atomic)
+        ssd.reset();
+        eng.reset_plan_stats();
+        let clone = eng.clone();
+        clone.set_gap_override(Some(1));
+        assert_eq!(eng.effective_gap_blocks(), 1);
+        assert_eq!(eng.planner.gap_blocks, 0, "configured planner untouched");
+        eng.read_graph_blocks_coalesced(&store, &blocks).unwrap();
+        assert_eq!(ssd.stats().num_requests, 1, "override must bridge the holes");
+        let s = eng.plan_stats();
+        assert_eq!(s.holes.total_count(), 2, "hole histogram is budget-independent");
+        assert_eq!(s.runs.total_count(), 1);
+        // clearing restores the configured budget
+        eng.set_gap_override(None);
+        assert_eq!(eng.effective_gap_blocks(), 0);
+        assert_eq!(eng.gap_override(), None);
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use super::BlockId;
 use crate::graph::layout::StripeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// One coalesced read request: `len` consecutive blocks starting at
@@ -168,6 +169,158 @@ impl IoPlanner {
             }
         }
         out
+    }
+}
+
+/// Buckets of [`PlanHistogram`]: bucket 0 holds size 1, bucket `i` holds
+/// sizes in `(2^(i-1), 2^i]`, and the last bucket additionally absorbs
+/// everything larger. 12 buckets cover sizes up to 2048 exactly — past
+/// the 1024-block `io.gap_blocks` validation cap, so every bridgeable
+/// hole size lands in its exact bucket.
+pub const PLAN_HIST_BUCKETS: usize = 12;
+
+/// Upper bound (inclusive) of bucket `i`: the largest size it holds.
+#[inline]
+pub fn plan_hist_bound(i: usize) -> u32 {
+    1u32 << i
+}
+
+#[inline]
+fn bucket_of(v: u32) -> usize {
+    debug_assert!(v >= 1);
+    // ceil(log2(v)): 1 -> 0, 2 -> 1, (2, 4] -> 2, (4, 8] -> 3, ...
+    ((32 - (v - 1).leading_zeros()) as usize).min(PLAN_HIST_BUCKETS - 1)
+}
+
+/// Log2-bucketed size distribution (hole sizes or run lengths, in
+/// blocks) with both a value count and a total-blocks mass per bucket —
+/// the mass is what lets the controller price "bridge every hole of up
+/// to `2^i` blocks" exactly from the histogram alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlanHistogram {
+    /// Number of observed values per bucket.
+    pub counts: [u64; PLAN_HIST_BUCKETS],
+    /// Total blocks across the observed values per bucket.
+    pub blocks: [u64; PLAN_HIST_BUCKETS],
+}
+
+impl PlanHistogram {
+    /// Record one value (a hole size or run length in blocks; 0 is
+    /// ignored — there is no zero-size hole or run).
+    #[inline]
+    pub fn record(&mut self, v: u32) {
+        if v == 0 {
+            return;
+        }
+        let b = bucket_of(v);
+        self.counts[b] += 1;
+        self.blocks[b] += v as u64;
+    }
+
+    pub fn merge(&mut self, other: &PlanHistogram) {
+        for i in 0..PLAN_HIST_BUCKETS {
+            self.counts[i] += other.counts[i];
+            self.blocks[i] += other.blocks[i];
+        }
+    }
+
+    pub fn total_count(&self) -> u64 {
+        self.counts.iter().sum()
+    }
+
+    pub fn total_blocks(&self) -> u64 {
+        self.blocks.iter().sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total_count() == 0
+    }
+}
+
+/// The planner's observed input/output distributions for one window:
+/// `holes` is the workload (gap sizes between consecutive requested
+/// blocks within one stripe, recorded whether or not the current budget
+/// bridged them), `runs` is the outcome (emitted run lengths under the
+/// current budget). The controller refines `io.gap_blocks = "auto"`
+/// from `holes`; `runs` is the observability side (fig2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct PlanStats {
+    pub holes: PlanHistogram,
+    pub runs: PlanHistogram,
+}
+
+impl PlanStats {
+    /// Record one planned sweep: run lengths from the emitted `runs`,
+    /// hole sizes from the gaps between consecutive requested `blocks`
+    /// sharing a stripe (a cross-stripe hole is never bridgeable — the
+    /// run would split right back at the boundary — so it is not part of
+    /// the decision input). `blocks` is normalized defensively like the
+    /// planner itself.
+    pub fn record_plan(&mut self, blocks: &[BlockId], runs: &[RunRequest], map: StripeMap) {
+        let mut buf = Vec::new();
+        let blocks = normalized(blocks, &mut buf);
+        for w in blocks.windows(2) {
+            let hole = w[1].0 - w[0].0 - 1;
+            if hole == 0 {
+                continue;
+            }
+            if map.is_sharded() && w[0].0 / map.stripe_blocks != w[1].0 / map.stripe_blocks {
+                continue;
+            }
+            self.holes.record(hole);
+        }
+        for r in runs {
+            self.runs.record(r.len);
+        }
+    }
+
+    pub fn merge(&mut self, other: &PlanStats) {
+        self.holes.merge(&other.holes);
+        self.runs.merge(&other.runs);
+    }
+}
+
+/// Shared, thread-safe accumulator for [`PlanStats`]: the I/O engine is
+/// cloned into its dispatch-pool workers, so the recorder rides an
+/// `Arc` and accumulates with relaxed atomics (counters only — no
+/// ordering dependencies).
+#[derive(Debug, Default)]
+pub struct PlanRecorder {
+    hole_counts: [AtomicU64; PLAN_HIST_BUCKETS],
+    hole_blocks: [AtomicU64; PLAN_HIST_BUCKETS],
+    run_counts: [AtomicU64; PLAN_HIST_BUCKETS],
+    run_blocks: [AtomicU64; PLAN_HIST_BUCKETS],
+}
+
+impl PlanRecorder {
+    /// Fold one sweep's local stats into the shared accumulator.
+    pub fn add(&self, s: &PlanStats) {
+        for i in 0..PLAN_HIST_BUCKETS {
+            self.hole_counts[i].fetch_add(s.holes.counts[i], Ordering::Relaxed);
+            self.hole_blocks[i].fetch_add(s.holes.blocks[i], Ordering::Relaxed);
+            self.run_counts[i].fetch_add(s.runs.counts[i], Ordering::Relaxed);
+            self.run_blocks[i].fetch_add(s.runs.blocks[i], Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> PlanStats {
+        let mut s = PlanStats::default();
+        for i in 0..PLAN_HIST_BUCKETS {
+            s.holes.counts[i] = self.hole_counts[i].load(Ordering::Relaxed);
+            s.holes.blocks[i] = self.hole_blocks[i].load(Ordering::Relaxed);
+            s.runs.counts[i] = self.run_counts[i].load(Ordering::Relaxed);
+            s.runs.blocks[i] = self.run_blocks[i].load(Ordering::Relaxed);
+        }
+        s
+    }
+
+    pub fn reset(&self) {
+        for i in 0..PLAN_HIST_BUCKETS {
+            self.hole_counts[i].store(0, Ordering::Relaxed);
+            self.hole_blocks[i].store(0, Ordering::Relaxed);
+            self.run_counts[i].store(0, Ordering::Relaxed);
+            self.run_blocks[i].store(0, Ordering::Relaxed);
+        }
     }
 }
 
@@ -423,6 +576,88 @@ mod tests {
         // unsorted input is handled defensively, like plan()
         let runs2 = p.plan_striped(&ids(&[7, 2, 5, 5]), 4096, map);
         assert_eq!(runs2, runs);
+    }
+
+    #[test]
+    fn plan_histogram_buckets_are_exact_powers_of_two() {
+        // bucket 0 = {1}, bucket i = (2^(i-1), 2^i]
+        assert_eq!(bucket_of(1), 0);
+        assert_eq!(bucket_of(2), 1);
+        assert_eq!(bucket_of(3), 2);
+        assert_eq!(bucket_of(4), 2);
+        assert_eq!(bucket_of(5), 3);
+        assert_eq!(bucket_of(8), 3);
+        assert_eq!(bucket_of(1024), 10);
+        assert_eq!(bucket_of(2048), 11);
+        assert_eq!(bucket_of(1 << 20), PLAN_HIST_BUCKETS - 1, "overflow clamps");
+        assert_eq!(plan_hist_bound(0), 1);
+        assert_eq!(plan_hist_bound(10), 1024);
+        let mut h = PlanHistogram::default();
+        h.record(0); // ignored
+        h.record(1);
+        h.record(4);
+        h.record(4);
+        assert_eq!(h.total_count(), 3);
+        assert_eq!(h.total_blocks(), 9);
+        assert_eq!(h.counts[2], 2);
+        assert_eq!(h.blocks[2], 8);
+        let mut h2 = h;
+        h2.merge(&h);
+        assert_eq!(h2.total_count(), 6);
+        assert_eq!(h2.total_blocks(), 18);
+    }
+
+    #[test]
+    fn plan_stats_record_holes_and_runs() {
+        let p = IoPlanner::new(1 << 20, 0);
+        let blocks = ids(&[1, 2, 4, 7, 8]); // holes {3} (1 blk) and {5,6} (2 blks)
+        let runs = p.plan(&blocks, 4096);
+        let mut s = PlanStats::default();
+        s.record_plan(&blocks, &runs, StripeMap::new(64, 1));
+        assert_eq!(s.holes.total_count(), 2);
+        assert_eq!(s.holes.total_blocks(), 3);
+        assert_eq!(s.runs.total_count(), 3, "three runs under gap 0");
+        assert_eq!(s.runs.total_blocks(), 5);
+        // the hole distribution is the WORKLOAD: it must not depend on
+        // the active gap budget (the controller evaluates other budgets
+        // against it)
+        let p1 = IoPlanner::new(1 << 20, 2);
+        let runs1 = p1.plan(&blocks, 4096);
+        let mut s1 = PlanStats::default();
+        s1.record_plan(&blocks, &runs1, StripeMap::new(64, 1));
+        assert_eq!(s1.holes, s.holes, "holes are budget-independent");
+        assert_eq!(s1.runs.total_count(), 1, "both holes bridged into one run");
+    }
+
+    #[test]
+    fn plan_stats_skip_cross_stripe_holes() {
+        // hole {3,4} crosses the stripe boundary at 4 (stripe width 4):
+        // never bridgeable, so not recorded; hole {6} inside stripe 1 is
+        let map = StripeMap::new(4, 2);
+        let p = IoPlanner::new(1 << 20, 0);
+        let blocks = ids(&[2, 5, 7]);
+        let runs = p.plan_striped(&blocks, 4096, map);
+        let mut s = PlanStats::default();
+        s.record_plan(&blocks, &runs, map);
+        assert_eq!(s.holes.total_count(), 1);
+        assert_eq!(s.holes.total_blocks(), 1);
+    }
+
+    #[test]
+    fn plan_recorder_accumulates_and_resets() {
+        let rec = PlanRecorder::default();
+        let mut s = PlanStats::default();
+        s.holes.record(3);
+        s.runs.record(8);
+        rec.add(&s);
+        rec.add(&s);
+        let snap = rec.snapshot();
+        assert_eq!(snap.holes.total_count(), 2);
+        assert_eq!(snap.holes.total_blocks(), 6);
+        assert_eq!(snap.runs.total_blocks(), 16);
+        rec.reset();
+        assert!(rec.snapshot().holes.is_empty());
+        assert!(rec.snapshot().runs.is_empty());
     }
 
     #[test]

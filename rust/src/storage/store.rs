@@ -15,11 +15,18 @@ use anyhow::Context;
 use std::fs::File;
 use std::os::unix::fs::FileExt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 /// Read-only graph block store.
+///
+/// The backing file handle and the block remap sit behind `RwLock`s so
+/// the adaptive controller's *online relayout* can atomically swap in a
+/// rewritten file + new permutation via [`Self::reload_layout`] without
+/// tearing down the store (every clone of the I/O engine shares it). The
+/// swap happens at an epoch boundary — no sweep is in flight — so
+/// readers only ever observe a consistent (file, remap) pair.
 pub struct GraphStore {
-    file: File,
+    file: RwLock<File>,
     pub meta: GraphStoreMeta,
     /// CSR offsets (resident, as Ginex keeps `indptr` in memory) — used by
     /// the baselines' per-node direct reads and by tests as ground truth.
@@ -37,7 +44,7 @@ pub struct GraphStore {
     /// [`Self::charge_runs`]) because a run must be contiguous *on disk*
     /// and a device charge must land on the shard that physically owns
     /// the bytes.
-    remap: BlockRemap,
+    remap: RwLock<Arc<BlockRemap>>,
     /// Simulated device ns charged through *this* store (the shared
     /// [`SsdModel`](super::device::SsdModel) clock is global; staged
     /// executors attribute I/O per stage via per-store deltas because the
@@ -73,11 +80,11 @@ impl GraphStore {
             meta.num_blocks
         );
         Ok(GraphStore {
-            file,
+            file: RwLock::new(file),
             meta,
             csr_offsets: Arc::new(offsets),
             ssd,
-            remap,
+            remap: RwLock::new(Arc::new(remap)),
             charged_ns: AtomicU64::new(0),
             runs_issued: AtomicU64::new(0),
             run_blocks: AtomicU64::new(0),
@@ -85,10 +92,31 @@ impl GraphStore {
     }
 
     /// The store's logical→physical block translation (identity unless a
-    /// layout optimizer built this dataset).
+    /// layout optimizer built this dataset or the adaptive controller
+    /// re-permuted it online). Returns a snapshot handle: an in-progress
+    /// [`Self::reload_layout`] never mutates a remap a caller holds.
     #[inline]
-    pub fn remap(&self) -> &BlockRemap {
-        &self.remap
+    pub fn remap(&self) -> Arc<BlockRemap> {
+        self.remap.read().unwrap().clone()
+    }
+
+    /// Re-open the (rewritten) block file and reload the layout sidecar,
+    /// atomically swapping both in. Called by the adaptive controller
+    /// after an online [`apply_block_remap`](super::builder::apply_block_remap)
+    /// — the rename replaced the inode, so the old handle must go too.
+    /// Only safe at an epoch boundary (no sweep in flight).
+    pub fn reload_layout(&self, paths: &StorePaths) -> Result<()> {
+        let file = File::open(&paths.graph_blocks).context("reopen graph store")?;
+        let remap = LayoutMeta::load(paths)?.graph;
+        anyhow::ensure!(
+            remap.is_identity() || remap.len() == self.meta.num_blocks as usize,
+            "graph block remap covers {} blocks but the store holds {}",
+            remap.len(),
+            self.meta.num_blocks
+        );
+        *self.file.write().unwrap() = file;
+        *self.remap.write().unwrap() = Arc::new(remap);
+        Ok(())
     }
 
     /// Charge a batch of reads to the device's single-queue (legacy)
@@ -106,7 +134,7 @@ impl GraphStore {
     /// position to (shard 0 on aggregate arrays — identical to
     /// [`Self::charge_batch`] there).
     pub fn charge_block(&self, b: BlockId, size: u64, concurrency: u32) -> u64 {
-        let ns = self.ssd.submit_for_block(self.remap.physical(b), size, concurrency);
+        let ns = self.ssd.submit_for_block(self.remap().physical(b), size, concurrency);
         self.charged_ns.fetch_add(ns, Ordering::Relaxed);
         ns
     }
@@ -195,9 +223,11 @@ impl GraphStore {
     /// position.
     pub fn read_block_raw_uncharged(&self, b: BlockId) -> Result<Vec<u8>> {
         let bs = self.meta.block_size;
-        let p = self.remap.physical(b);
+        let p = self.remap().physical(b);
         let mut buf = vec![0u8; bs];
         self.file
+            .read()
+            .unwrap()
             .read_exact_at(&mut buf, p.0 as u64 * bs as u64)
             .with_context(|| format!("read graph block {b} (physical {p})"))?;
         Ok(buf)
@@ -213,6 +243,8 @@ impl GraphStore {
         let bs = self.meta.block_size;
         let mut buf = vec![0u8; bs * len as usize];
         self.file
+            .read()
+            .unwrap()
             .read_exact_at(&mut buf, start.0 as u64 * bs as u64)
             .with_context(|| format!("read graph run {start}+{len}"))?;
         Ok(buf)
@@ -258,19 +290,22 @@ impl GraphStore {
     }
 }
 
-/// Read-only feature block store.
+/// Read-only feature block store. Like [`GraphStore`], the file handle
+/// (with its captured length) and the remap are interior-mutable so
+/// [`Self::reload_layout`] can swap in an online relayout at an epoch
+/// boundary.
 pub struct FeatureStore {
-    file: File,
-    /// Backing-file length, captured at open (run reads need it for EOF
-    /// semantics on the zero-padded tail; re-statting per read would put
-    /// a syscall on the hot path).
-    file_len: u64,
+    /// Backing file plus its length, captured together at open (run
+    /// reads need the length for EOF semantics on the zero-padded tail;
+    /// re-statting per read would put a syscall on the hot path), and
+    /// swapped together on reload.
+    file: RwLock<(File, u64)>,
     pub layout: FeatureBlockLayout,
     pub num_nodes: usize,
     /// Device array (see [`GraphStore::ssd`]).
     pub ssd: SharedArray,
     /// Logical→physical block translation (see [`GraphStore::remap`]).
-    remap: BlockRemap,
+    remap: RwLock<Arc<BlockRemap>>,
     /// Simulated device ns charged through this store (see
     /// [`GraphStore::charged_ns`]).
     charged_ns: AtomicU64,
@@ -307,12 +342,11 @@ impl FeatureStore {
             layout.block_size
         );
         Ok(FeatureStore {
-            file,
-            file_len,
+            file: RwLock::new((file, file_len)),
             layout,
             num_nodes,
             ssd,
-            remap,
+            remap: RwLock::new(Arc::new(remap)),
             charged_ns: AtomicU64::new(0),
             runs_issued: AtomicU64::new(0),
             run_blocks: AtomicU64::new(0),
@@ -322,8 +356,33 @@ impl FeatureStore {
     /// The store's logical→physical block translation (see
     /// [`GraphStore::remap`]).
     #[inline]
-    pub fn remap(&self) -> &BlockRemap {
-        &self.remap
+    pub fn remap(&self) -> Arc<BlockRemap> {
+        self.remap.read().unwrap().clone()
+    }
+
+    /// Re-open the (rewritten) block file and reload the layout sidecar
+    /// (see [`GraphStore::reload_layout`]). Only safe at an epoch
+    /// boundary.
+    pub fn reload_layout(&self, paths: &StorePaths) -> Result<()> {
+        let file = File::open(&paths.feature_blocks).context("reopen feature store")?;
+        let file_len = file.metadata().context("stat feature store")?.len();
+        let remap = LayoutMeta::load(paths)?.feature;
+        let num_blocks = self.layout.num_blocks(self.num_nodes);
+        anyhow::ensure!(
+            remap.is_identity() || remap.len() == num_blocks as usize,
+            "feature block remap covers {} blocks but the store holds {}",
+            remap.len(),
+            num_blocks
+        );
+        anyhow::ensure!(
+            remap.is_identity() || self.layout.feature_bytes() <= self.layout.block_size,
+            "oversized feature vectors ({} B > {} B blocks) cannot use a block remap",
+            self.layout.feature_bytes(),
+            self.layout.block_size
+        );
+        *self.file.write().unwrap() = (file, file_len);
+        *self.remap.write().unwrap() = Arc::new(remap);
+        Ok(())
     }
 
     /// Charge a batch of reads to the device's single-queue (legacy)
@@ -337,7 +396,7 @@ impl FeatureStore {
     /// Charge a single block-addressed read to the shard physically
     /// owning logical block `b` (see [`GraphStore::charge_block`]).
     pub fn charge_block(&self, b: BlockId, size: u64, concurrency: u32) -> u64 {
-        let ns = self.ssd.submit_for_block(self.remap.physical(b), size, concurrency);
+        let ns = self.ssd.submit_for_block(self.remap().physical(b), size, concurrency);
         self.charged_ns.fetch_add(ns, Ordering::Relaxed);
         ns
     }
@@ -401,7 +460,7 @@ impl FeatureStore {
     /// on disk (the tail is zero-padded), but a block starting beyond EOF
     /// is a phantom read and an error.
     pub fn read_block_raw_uncharged(&self, b: BlockId) -> Result<Vec<u8>> {
-        self.read_run_raw_uncharged(self.remap.physical(b), 1)
+        self.read_run_raw_uncharged(self.remap().physical(b), 1)
     }
 
     /// Read a coalesced run of `len` consecutive **physical** feature
@@ -415,14 +474,15 @@ impl FeatureStore {
         let bs = self.layout.block_size;
         let mut buf = vec![0u8; bs * len as usize];
         let off = start.0 as u64 * bs as u64;
-        let flen = self.file_len;
+        let guard = self.file.read().unwrap();
+        let (file, flen) = (&guard.0, guard.1);
         let last_off = off + (len.saturating_sub(1)) as u64 * bs as u64;
         anyhow::ensure!(
             len >= 1 && last_off < flen,
             "feature run {start}+{len} beyond EOF (offset {off}, len {flen})"
         );
         let want = (buf.len() as u64).min(flen - off) as usize;
-        self.file.read_exact_at(&mut buf[..want], off)?;
+        file.read_exact_at(&mut buf[..want], off)?;
         Ok(buf)
     }
 
@@ -450,10 +510,10 @@ impl FeatureStore {
     /// which is exactly why their stores keep the identity remap).
     pub fn read_feature_uncharged(&self, v: u32) -> Result<Vec<f32>> {
         let d = self.layout.feature_dim;
-        let p = self.remap.physical(BlockId(self.layout.block_of(v)));
+        let p = self.remap().physical(BlockId(self.layout.block_of(v)));
         let off = p.0 as u64 * self.layout.block_size as u64 + self.layout.slot_offset(v) as u64;
         let mut buf = vec![0u8; 4 * d];
-        self.file.read_exact_at(&mut buf, off)?;
+        self.file.read().unwrap().0.read_exact_at(&mut buf, off)?;
         let mut out = vec![0f32; d];
         LittleEndian::read_f32_into(&buf, &mut out);
         Ok(out)
@@ -688,6 +748,57 @@ mod tests {
         let before = arr.per_shard_stats()[want_shard].num_requests;
         gs.charge_block(BlockId(0), 2048, 1);
         assert_eq!(arr.per_shard_stats()[want_shard].num_requests, before + 1);
+    }
+
+    #[test]
+    fn reload_layout_swaps_file_and_remap_online() {
+        use crate::graph::layout::BlockRemap;
+        use crate::graph::reorder::LayoutPolicy;
+        use crate::storage::builder::{apply_block_remap, LayoutMeta};
+        let (_d, paths, g) = setup();
+        let gs = GraphStore::open(&paths, SsdModel::new(SsdSpec::default())).unwrap();
+        let layout = FeatureBlockLayout { block_size: 2048, feature_dim: 16 };
+        let fs =
+            FeatureStore::open(&paths, layout, 400, SsdModel::new(SsdSpec::default())).unwrap();
+        assert!(gs.remap().is_identity());
+        let ref_graph: Vec<Vec<u8>> = (0..gs.num_blocks())
+            .map(|b| gs.read_block_raw_uncharged(BlockId(b)).unwrap())
+            .collect();
+
+        // rewrite both files in reverse order while the stores stay open
+        let rev = |n: u32| BlockRemap::from_to_physical((0..n).rev().collect()).unwrap();
+        let (graph_remap, feature_remap) = (rev(gs.num_blocks()), rev(fs.num_blocks()));
+        apply_block_remap(&paths.graph_blocks, 2048, &graph_remap).unwrap();
+        apply_block_remap(&paths.feature_blocks, 2048, &feature_remap).unwrap();
+        LayoutMeta { policy: LayoutPolicy::Hyperbatch, graph: graph_remap, feature: feature_remap }
+            .write(&paths)
+            .unwrap();
+        gs.reload_layout(&paths).unwrap();
+        fs.reload_layout(&paths).unwrap();
+
+        // logical reads are unchanged through the swapped (file, remap)
+        assert!(!gs.remap().is_identity());
+        for b in 0..gs.num_blocks() {
+            assert_eq!(
+                gs.read_block_raw_uncharged(BlockId(b)).unwrap(),
+                ref_graph[b as usize],
+                "graph block {b}"
+            );
+        }
+        for v in (0..400u32).step_by(23) {
+            assert_eq!(gs.read_adjacency_uncharged(v).unwrap(), g.neighbors(v), "node {v}");
+            assert_eq!(fs.read_feature_uncharged(v).unwrap(), synth_feature(v, 16, 9));
+        }
+        // a mismatched sidecar is rejected and leaves the store intact
+        LayoutMeta {
+            policy: LayoutPolicy::Hyperbatch,
+            graph: BlockRemap::from_to_physical(vec![1, 0]).unwrap(),
+            feature: BlockRemap::Identity,
+        }
+        .write(&paths)
+        .unwrap();
+        assert!(gs.reload_layout(&paths).is_err());
+        assert!(!gs.remap().is_identity(), "failed reload must not clobber the remap");
     }
 
     #[test]
