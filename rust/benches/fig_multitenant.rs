@@ -1,0 +1,256 @@
+//! Multi-tenant fair-share I/O scheduling over the shared SSD array —
+//! the fairness/isolation experiment for the tenant-aware scheduler
+//! (backlog-proportional lane budgets, deficit-round-robin shares, AIMD
+//! congestion backoff; see README §Multi-tenancy).
+//!
+//! Three legs, all on a 4-shard array:
+//!
+//! 1. **Fairness sweep** — 1/2/4 equal-share tenants submitting the same
+//!    bandwidth-bound trace round-robin. Asserts each of 2 concurrent
+//!    tenants keeps ≥ 45% of the solo modeled throughput, and each of 4
+//!    keeps its deficit-round-robin guarantee (1/4 of device time).
+//! 2. **Hot tenant** — one tenant floods 10x the volume of a light
+//!    tenant. Asserts the light tenant never starves (achieved share ≥
+//!    its fair-share guarantee) and the hot tenant's AIMD backoff
+//!    actually engages.
+//! 3. **Solo epoch identity** — a full training epoch with multi-tenancy
+//!    registered but no competitor submitting must be **bit-identical**
+//!    (loss bits + device counters) to the unregistered path.
+//!
+//! `cargo bench --bench fig_multitenant`
+//!
+//! Set `AGNES_MT_TINY=1` for the CI smoke configuration. Either way the
+//! bench emits `target/bench_results/BENCH_multitenant.json`.
+
+use agnes::coordinator::NullCompute;
+use agnes::storage::device::{SharedArray, SsdArray, SsdSpec, TenantId, TenantStats, TENANT_DEFAULT};
+use agnes::util::bench::{bench_config, run_epoch_by_name, Table};
+use agnes::util::json::Json;
+
+const SHARDS: u32 = 4;
+
+fn tiny_mode() -> bool {
+    std::env::var("AGNES_MT_TINY").map(|v| v == "1").unwrap_or(false)
+}
+
+fn fresh_array() -> SharedArray {
+    SsdArray::sharded(SsdSpec::default().with_ssds(SHARDS), 0)
+}
+
+fn stat_for(stats: &[(TenantId, TenantStats)], id: TenantId) -> TenantStats {
+    stats.iter().find(|(t, _)| *t == id).map(|(_, s)| *s).unwrap_or_default()
+}
+
+/// Modeled throughput a tenant experienced: bytes over the wall time its
+/// submissions occupied (service + interference stall).
+fn modeled_gbps(s: &TenantStats) -> f64 {
+    if s.busy_ns + s.stall_ns == 0 {
+        return 0.0;
+    }
+    s.bytes as f64 / (s.busy_ns + s.stall_ns) as f64
+}
+
+/// One fairness leg: `n` equal-share tenants round-robin the same
+/// bandwidth-bound batch (8 MiB per shard per submit — large enough that
+/// the bandwidth term dominates, small enough that equal interleaving
+/// stays under the congestion threshold).
+fn fairness_leg(n: usize, rounds: usize) -> Vec<(TenantId, TenantStats)> {
+    let ssd = fresh_array();
+    for t in 0..n {
+        ssd.register_tenant(t as TenantId, 1.0 / n as f64, 0);
+    }
+    let batch: Vec<Vec<u64>> = (0..SHARDS).map(|_| vec![1u64 << 20; 8]).collect();
+    for _ in 0..rounds {
+        for t in 0..n {
+            ssd.submit_sharded_for(t as TenantId, &batch, 32);
+        }
+    }
+    ssd.tenant_stats()
+}
+
+/// Hot-tenant leg: equal shares, 10x volume imbalance. Returns
+/// (light, hot, max hot backoff observed).
+fn hot_tenant_leg(rounds: usize) -> (TenantStats, TenantStats, u32) {
+    const LIGHT: TenantId = 0;
+    const HOT: TenantId = 1;
+    let ssd = fresh_array();
+    ssd.register_tenant(LIGHT, 0.5, 0);
+    ssd.register_tenant(HOT, 0.5, 0);
+    let hot_batch: Vec<Vec<u64>> = (0..SHARDS).map(|_| vec![1u64 << 21; 10]).collect();
+    let light_batch: Vec<Vec<u64>> = (0..SHARDS).map(|_| vec![1u64 << 20; 2]).collect();
+    let mut max_backoff = 0;
+    for _ in 0..rounds {
+        ssd.submit_sharded_for(HOT, &hot_batch, 32);
+        max_backoff = max_backoff.max(ssd.tenant_backoff(HOT));
+        ssd.submit_sharded_for(LIGHT, &light_batch, 16);
+    }
+    let stats = ssd.tenant_stats();
+    (stat_for(&stats, LIGHT), stat_for(&stats, HOT), max_backoff)
+}
+
+fn tenant_json(id: TenantId, s: &TenantStats) -> Json {
+    Json::obj(vec![
+        ("tenant", Json::num(id as f64)),
+        ("requests", Json::num(s.requests as f64)),
+        ("total_bytes", Json::num(s.bytes as f64)),
+        ("busy_ns", Json::num(s.busy_ns as f64)),
+        ("stall_ns", Json::num(s.stall_ns as f64)),
+        ("achieved_share", Json::num(s.achieved_share())),
+        ("modeled_gbps", Json::num(modeled_gbps(s))),
+    ])
+}
+
+fn main() -> anyhow::Result<()> {
+    let tiny = tiny_mode();
+    let rounds = if tiny { 16 } else { 128 };
+
+    // ---- leg 1: equal-share fairness sweep -----------------------------
+    println!("=== Multi-tenant fairness sweep (4-shard array) ===\n");
+    let mut t = Table::new(
+        "multitenant_fairness",
+        &["tenants", "tenant", "achieved_share", "modeled_gbps", "stall_ms"],
+    );
+    let mut sweep_json: Vec<Json> = Vec::new();
+    let mut solo_gbps = 0.0;
+    for n in [1usize, 2, 4] {
+        let stats = fairness_leg(n, rounds);
+        for (id, s) in &stats {
+            t.row(vec![
+                n.to_string(),
+                id.to_string(),
+                format!("{:.3}", s.achieved_share()),
+                format!("{:.2}", modeled_gbps(s)),
+                format!("{:.2}", s.stall_ns as f64 / 1e6),
+            ]);
+            sweep_json.push(Json::obj(vec![
+                ("tenants", Json::num(n as f64)),
+                ("detail", tenant_json(*id, s)),
+            ]));
+        }
+        let solo = stat_for(&stats, 0);
+        match n {
+            1 => {
+                solo_gbps = modeled_gbps(&solo);
+                anyhow::ensure!(
+                    solo.stall_ns == 0 && solo.achieved_share() == 1.0,
+                    "a solo tenant must see zero interference"
+                );
+            }
+            2 => {
+                for (id, s) in &stats {
+                    anyhow::ensure!(
+                        modeled_gbps(s) >= 0.45 * solo_gbps,
+                        "tenant {id} of 2 got {:.2} GB/s, < 45% of solo {:.2} GB/s",
+                        modeled_gbps(s),
+                        solo_gbps
+                    );
+                }
+            }
+            _ => {
+                for (id, s) in &stats {
+                    anyhow::ensure!(
+                        s.achieved_share() >= 0.25 * 0.99,
+                        "tenant {id} of 4 got share {:.3}, below the DRR guarantee",
+                        s.achieved_share()
+                    );
+                }
+            }
+        }
+    }
+    t.finish();
+
+    // ---- leg 2: hot tenant vs light tenant -----------------------------
+    let (light, hot, hot_backoff) = hot_tenant_leg(if tiny { 12 } else { 32 });
+    println!(
+        "\nhot-tenant leg: light share {:.3} ({} reqs), hot share {:.3} ({} reqs), max hot backoff {}",
+        light.achieved_share(),
+        light.requests,
+        hot.achieved_share(),
+        hot.requests,
+        hot_backoff
+    );
+    anyhow::ensure!(light.busy_ns > 0, "light tenant did no work under the hot tenant");
+    anyhow::ensure!(
+        light.achieved_share() >= 0.5 * 0.999,
+        "light tenant starved: achieved {:.4} < fair-share guarantee 0.5",
+        light.achieved_share()
+    );
+    anyhow::ensure!(
+        hot_backoff >= 1,
+        "hot tenant never hit AIMD backoff despite a 10x backlog lead"
+    );
+
+    // ---- leg 3: solo epoch identity (registered vs unregistered) -------
+    // Unlike the fairness legs (pinned to 4 shards), this one honors the
+    // AGNES_NUM_SSDS override bench_config applied, so the CI matrix
+    // proves identity on both the 1-shard and 4-shard legs.
+    let c = if tiny { bench_config("tiny", 1.0) } else { bench_config("ig", 0.5) };
+    let base = run_epoch_by_name("agnes", &c, &mut NullCompute)?;
+    let mut c2 = c.clone();
+    c2.tenant.share = 0.6; // registers train@0.6 / serve@0.4; serve stays idle
+    let reg = run_epoch_by_name("agnes", &c2, &mut NullCompute)?;
+    println!(
+        "\nepoch identity: loss {:#010x} vs {:#010x}, {} vs {} requests",
+        base.mean_loss.to_bits(),
+        reg.mean_loss.to_bits(),
+        base.metrics.device.num_requests,
+        reg.metrics.device.num_requests
+    );
+    anyhow::ensure!(
+        base.mean_loss.to_bits() == reg.mean_loss.to_bits(),
+        "registering an idle tenant changed the training loss bits"
+    );
+    anyhow::ensure!(
+        base.metrics.device.num_requests == reg.metrics.device.num_requests
+            && base.metrics.device.total_bytes == reg.metrics.device.total_bytes
+            && base.metrics.device.busy_ns == reg.metrics.device.busy_ns
+            && base.metrics.shard_busy_ns == reg.metrics.shard_busy_ns,
+        "registering an idle tenant changed the device counters"
+    );
+    let train = TENANT_DEFAULT as usize;
+    anyhow::ensure!(
+        reg.metrics.tenant_requests.get(train).copied().unwrap_or(0) > 0,
+        "registered epoch attributed no requests to the training tenant"
+    );
+    anyhow::ensure!(
+        reg.metrics.tenant_stall_ns.iter().sum::<u64>() == 0,
+        "solo training epoch accrued interference stall"
+    );
+
+    // machine-readable perf record for the trajectory
+    let report = Json::obj(vec![
+        ("bench", Json::str("fig_multitenant")),
+        ("mode", Json::str(if tiny { "tiny" } else { "bench" })),
+        ("fairness_sweep", Json::arr(sweep_json)),
+        (
+            "hot_tenant",
+            Json::obj(vec![
+                ("light", tenant_json(0, &light)),
+                ("hot", tenant_json(1, &hot)),
+                ("max_hot_backoff", Json::num(hot_backoff as f64)),
+            ]),
+        ),
+        (
+            "epoch_identity",
+            Json::obj(vec![
+                ("num_ssds", Json::num(c.device.num_ssds as f64)),
+                ("requests", Json::num(reg.metrics.device.num_requests as f64)),
+                ("total_bytes", Json::num(reg.metrics.device.total_bytes as f64)),
+                // hex string so the f32 bit pattern is gated exactly
+                ("loss_bits", Json::str(format!("0x{:08x}", reg.mean_loss.to_bits()))),
+            ]),
+        ),
+    ]);
+    std::fs::create_dir_all("target/bench_results")?;
+    std::fs::write("target/bench_results/BENCH_multitenant.json", report.to_string())?;
+    println!("\n[json] target/bench_results/BENCH_multitenant.json");
+
+    println!(
+        "\nShape check: with equal shares each tenant's modeled throughput \
+         tracks 1/N of the array (deficit-round-robin), a 10x hot tenant \
+         cannot push the light tenant below its guarantee (AIMD backoff \
+         absorbs the backlog), and a registered-but-solo tenant pays \
+         nothing — the scheduler is work-conserving."
+    );
+    Ok(())
+}

@@ -381,6 +381,29 @@ impl Default for ServeConfig {
     }
 }
 
+/// Multi-tenant fair-share I/O scheduling knobs (`[tenant]` — see
+/// [`crate::storage::device::SsdArray::register_tenant`]). With `share =
+/// 1.0` (the default) no tenant is registered and every device charge
+/// takes the historical unscheduled path bit-for-bit; below 1.0 the
+/// coordinator registers training at `share` and serving at `1 - share`,
+/// and contending submits are arbitrated by the array's deficit-weighted
+/// scheduler with congestion backpressure.
+#[derive(Debug, Clone)]
+pub struct TenantConfig {
+    /// Training's guaranteed fraction of the shared device time, in
+    /// (0, 1]. `1.0` = multi-tenancy off (solo training owns the array).
+    pub share: f64,
+    /// Per-submit cap on a tenant's outstanding device requests (a token
+    /// budget below the engine's own concurrency). `0` = no cap.
+    pub max_outstanding: u32,
+}
+
+impl Default for TenantConfig {
+    fn default() -> Self {
+        TenantConfig { share: 1.0, max_outstanding: 0 }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default)]
 pub struct AgnesConfig {
@@ -393,6 +416,7 @@ pub struct AgnesConfig {
     pub train: TrainConfig,
     pub adaptive: AdaptiveConfig,
     pub serve: ServeConfig,
+    pub tenant: TenantConfig,
 }
 
 impl AgnesConfig {
@@ -451,6 +475,7 @@ impl AgnesConfig {
         );
         check_adaptive_min_gain(self.adaptive.min_gain).map_err(anyhow::Error::msg)?;
         check_serve(self.serve.workers, self.serve.max_inflight).map_err(anyhow::Error::msg)?;
+        check_tenant(self.tenant.share, self.tenant.max_outstanding).map_err(anyhow::Error::msg)?;
         Ok(())
     }
 
@@ -531,6 +556,8 @@ impl AgnesConfig {
             ("adaptive", "min_gain") => self.adaptive.min_gain = p(value)?,
             ("serve", "workers") => self.serve.workers = p(value)?,
             ("serve", "max_inflight") => self.serve.max_inflight = p(value)?,
+            ("tenant", "share") => self.tenant.share = p(value)?,
+            ("tenant", "max_outstanding") => self.tenant.max_outstanding = p(value)?,
             _ => return Err(format!("unknown key {section}.{key}")),
         }
         Ok(())
@@ -600,6 +627,9 @@ impl AgnesConfig {
         w("\n[serve]");
         w(&format!("workers = {}", self.serve.workers));
         w(&format!("max_inflight = {}", self.serve.max_inflight));
+        w("\n[tenant]");
+        w(&format!("share = {}", self.tenant.share));
+        w(&format!("max_outstanding = {}", self.tenant.max_outstanding));
         out
     }
 
@@ -731,6 +761,22 @@ impl AgnesConfig {
                     self.serve.max_inflight = m
                 }
                 _ => eprintln!("ignoring invalid AGNES_SERVE_MAX_INFLIGHT={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_TENANT_SHARE") {
+            match v.trim().parse::<f64>() {
+                Ok(s) if check_tenant(s, self.tenant.max_outstanding).is_ok() => {
+                    self.tenant.share = s
+                }
+                _ => eprintln!("ignoring invalid AGNES_TENANT_SHARE={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_TENANT_MAX_OUTSTANDING") {
+            match v.trim().parse::<u32>() {
+                Ok(m) if check_tenant(self.tenant.share, m).is_ok() => {
+                    self.tenant.max_outstanding = m
+                }
+                _ => eprintln!("ignoring invalid AGNES_TENANT_MAX_OUTSTANDING={v:?}"),
             }
         }
     }
@@ -878,6 +924,26 @@ fn check_serve(workers: usize, max_inflight: usize) -> Result<(), String> {
     Ok(())
 }
 
+/// Range check for `tenant.share` / `tenant.max_outstanding` (shared
+/// with env overrides and [`AgnesConfig::apply_kv`] hot-reloads, see
+/// [`check_gap_blocks`]): a zero or negative share would starve training
+/// outright, above 1 is meaningless, and an absurd outstanding cap is a
+/// typo (0 stays the documented "no cap" sentinel).
+fn check_tenant(share: f64, max_outstanding: u32) -> Result<(), String> {
+    if share.is_nan() || share <= 0.0 || share > 1.0 {
+        return Err(format!(
+            "tenant.share = {share} must be in (0, 1] (training's guaranteed fraction; 1.0 \
+             disables multi-tenancy)"
+        ));
+    }
+    if max_outstanding > 4096 {
+        return Err(format!(
+            "tenant.max_outstanding = {max_outstanding} must be <= 4096 (0 = no cap)"
+        ));
+    }
+    Ok(())
+}
+
 fn layout_name(l: Layout) -> &'static str {
     match l {
         Layout::Natural => "natural",
@@ -943,6 +1009,8 @@ mod tests {
         assert_eq!(c.adaptive.min_gain, 0.05);
         assert_eq!(c.serve.workers, 4);
         assert_eq!(c.serve.max_inflight, 16);
+        assert_eq!(c.tenant.share, 0.7);
+        assert_eq!(c.tenant.max_outstanding, 0);
     }
 
     #[test]
@@ -1270,6 +1338,60 @@ mod tests {
         ]));
         assert_eq!(c.serve.workers, 2, "invalid worker override ignored");
         assert_eq!(c.serve.max_inflight, 3, "out-of-range inflight override ignored");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn tenant_section_parses_and_roundtrips() {
+        let c =
+            AgnesConfig::from_toml_str("[tenant]\nshare = 0.6\nmax_outstanding = 32\n").unwrap();
+        assert_eq!(c.tenant.share, 0.6);
+        assert_eq!(c.tenant.max_outstanding, 32);
+        c.validate().unwrap();
+        let back = AgnesConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.tenant.share, 0.6);
+        assert_eq!(back.tenant.max_outstanding, 32);
+        // defaults: multi-tenancy off, no outstanding cap
+        assert_eq!(AgnesConfig::default().tenant.share, 1.0);
+        assert_eq!(AgnesConfig::default().tenant.max_outstanding, 0);
+        // bad values fail loudly, naming the key
+        let mut c = AgnesConfig::default();
+        c.tenant.share = 0.0;
+        assert!(c.validate().unwrap_err().to_string().contains("tenant.share"));
+        let mut c = AgnesConfig::default();
+        c.tenant.share = 1.5;
+        assert!(c.validate().unwrap_err().to_string().contains("tenant.share"));
+        let mut c = AgnesConfig::default();
+        c.tenant.max_outstanding = 1 << 20;
+        assert!(c.validate().unwrap_err().to_string().contains("tenant.max_outstanding"));
+        // apply_kv is the hot-reload surface for these knobs too
+        let mut c = AgnesConfig::default();
+        c.apply_kv("tenant", "share", "0.5").unwrap();
+        assert_eq!(c.tenant.share, 0.5);
+        assert!(c.apply_kv("tenant", "no_such_knob", "1").is_err());
+    }
+
+    #[test]
+    fn tenant_env_overrides_agree_with_validate() {
+        let vars = |pairs: &[(&str, &str)]| {
+            let m: std::collections::HashMap<String, String> =
+                pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+            move |name: &str| m.get(name).cloned()
+        };
+        let mut c = AgnesConfig::default();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_TENANT_SHARE", "0.8"),
+            ("AGNES_TENANT_MAX_OUTSTANDING", "64"),
+        ]));
+        assert_eq!(c.tenant.share, 0.8);
+        assert_eq!(c.tenant.max_outstanding, 64);
+        c.validate().unwrap();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_TENANT_SHARE", "0"),              // outside (0, 1]
+            ("AGNES_TENANT_MAX_OUTSTANDING", "99999"), // > 4096
+        ]));
+        assert_eq!(c.tenant.share, 0.8, "out-of-range share override ignored");
+        assert_eq!(c.tenant.max_outstanding, 64, "out-of-range cap override ignored");
         c.validate().unwrap();
     }
 

@@ -58,7 +58,7 @@ pub use serve::{
     AdmitToken, InferenceRequest, InferenceResponse, InferenceServer, ServeError, ServeKnobs,
     StageBreakdown,
 };
-pub use services::{EngineServices, ServiceCounters, StatsWindow, WindowStats};
+pub use services::{EngineServices, ServiceCounters, StatsWindow, WindowStats, COUNTER_TENANTS};
 
 use crate::config::AgnesConfig;
 use crate::memory::CachePolicy;

@@ -40,6 +40,7 @@ use crate::config::AgnesConfig;
 use crate::graph::generate::synth_label;
 use crate::metrics::{LatencyHistogram, RunMetrics};
 use crate::op::{gather_hyperbatch, sample_hyperbatch};
+use crate::storage::device::TENANT_SERVE;
 use crate::storage::plan::IoPlanner;
 use crate::storage::IoEngine;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -443,12 +444,17 @@ impl InferenceServer {
 }
 
 /// Build the serving I/O engine from a validated config (same recipe as
-/// [`EngineServices::open`]).
+/// [`EngineServices::open`]), tagged with the serving tenant so its
+/// device charges are attributed — and, under `tenant.share < 1.0`,
+/// fair-share scheduled — separately from training. With multi-tenancy
+/// off the tag is inert: an unregistered tenant takes the historical
+/// unscheduled path bit-for-bit.
 fn build_engine(config: &AgnesConfig) -> IoEngine {
     let spec = config.device.spec();
     let gap = config.io.gap_blocks.resolve(&spec, config.io.block_size);
     IoEngine::new(config.io.num_threads, config.io.async_depth)
         .with_planner(IoPlanner::new(config.io.max_request_bytes, gap))
+        .with_tenant(TENANT_SERVE)
 }
 
 /// FNV-1a over the gathered feature bits: cheap, order-sensitive, and
@@ -654,6 +660,7 @@ mod tests {
         let knobs = server.knobs();
         assert_eq!(knobs.config.memory.feature_cache_entries, 32);
         assert_eq!(knobs.engine.planner.gap_blocks, 3, "io reload rebuilt the engine");
+        assert_eq!(knobs.engine.tenant(), TENANT_SERVE, "rebuilt engine keeps the serving tenant");
 
         // every request completed exactly once per pass
         let m = server.metrics();

@@ -36,7 +36,9 @@ use crate::runtime::controller::{
 };
 use crate::storage::block::{FeatureBlockLayout, GraphBlock};
 use crate::storage::builder::{apply_block_remap, LayoutMeta};
-use crate::storage::device::{DeviceStats, SharedArray, SsdArray};
+use crate::storage::device::{
+    DeviceStats, SharedArray, SsdArray, TenantStats, TENANT_DEFAULT, TENANT_SERVE,
+};
 use crate::storage::plan::{BlockBytes, IoPlanner};
 use crate::storage::store::{FeatureStore, GraphStore};
 use crate::storage::{BlockId, IoEngine};
@@ -99,6 +101,16 @@ impl EngineServices {
         // the legacy one-queue model)
         let spec = config.device.spec();
         let ssd = SsdArray::sharded(spec, config.io.effective_stripe_blocks());
+        // Multi-tenant fair sharing: below 1.0, training is guaranteed
+        // `tenant.share` of device time and the serving path the
+        // remainder, arbitrated by the array's deficit-weighted
+        // scheduler. At the default 1.0 nothing is registered and every
+        // charge takes the historical unscheduled path bit-for-bit.
+        if config.tenant.share < 1.0 {
+            let mo = config.tenant.max_outstanding;
+            ssd.register_tenant(TENANT_DEFAULT, config.tenant.share, mo);
+            ssd.register_tenant(TENANT_SERVE, 1.0 - config.tenant.share, mo);
+        }
         let graph_store = Arc::new(GraphStore::open(&dataset.paths, ssd.clone())?);
         let layout = FeatureBlockLayout {
             block_size: config.io.block_size,
@@ -289,6 +301,22 @@ impl EngineServices {
         metrics.shard_busy_ns = per_shard.iter().map(|s| s.busy_ns).collect();
         metrics.shard_requests = per_shard.iter().map(|s| s.num_requests).collect();
         metrics.shard_bytes = per_shard.iter().map(|s| s.total_bytes).collect();
+        // per-tenant attribution (empty when multi-tenancy is off —
+        // unregistered arrays have no tenant table)
+        let tenants = self.ssd.tenant_stats();
+        if let Some(n) = tenants.iter().map(|(id, _)| *id as usize + 1).max() {
+            metrics.tenant_bytes = vec![0; n];
+            metrics.tenant_requests = vec![0; n];
+            metrics.tenant_busy_ns = vec![0; n];
+            metrics.tenant_stall_ns = vec![0; n];
+            for (id, st) in &tenants {
+                let i = *id as usize;
+                metrics.tenant_bytes[i] = st.bytes;
+                metrics.tenant_requests[i] = st.requests;
+                metrics.tenant_busy_ns[i] = st.busy_ns;
+                metrics.tenant_stall_ns[i] = st.stall_ns;
+            }
+        }
     }
 
     /// Drain the epoch's recorded access logs — once; see [`EpochLogs`].
@@ -412,6 +440,12 @@ impl EngineServices {
             spec,
             concurrency: self.engine.effective_concurrency(),
             stores,
+            tenant_stall_ns: self
+                .ssd
+                .tenant_stats()
+                .iter()
+                .find(|(id, _)| *id == TENANT_DEFAULT)
+                .map_or(0, |(_, st)| st.stall_ns),
         };
         Ok((inputs, candidates))
     }
@@ -518,6 +552,12 @@ impl EngineServices {
     /// [`Self::reset_counters`] that a long-running server uses for
     /// rolling per-window rates (see [`StatsWindow`]).
     pub fn counters(&self) -> ServiceCounters {
+        let mut tenants = [TenantStats::default(); COUNTER_TENANTS];
+        for (id, st) in self.ssd.tenant_stats() {
+            if let Some(slot) = tenants.get_mut(id as usize) {
+                *slot = st;
+            }
+        }
         ServiceCounters {
             graph_pool: self.graph_pool.stats(),
             feature_pool: self.feature_pool.stats(),
@@ -526,6 +566,7 @@ impl EngineServices {
             io_runs: self.graph_store.runs_issued() + self.feature_store.runs_issued(),
             io_run_blocks: self.graph_store.run_blocks_read()
                 + self.feature_store.run_blocks_read(),
+            tenants,
         }
     }
 }
@@ -544,8 +585,13 @@ fn delta_remap(old: &BlockRemap, next: &BlockRemap, num_blocks: u32) -> Result<B
     BlockRemap::from_to_physical(to_physical)
 }
 
+/// Fixed per-tenant counter slots tracked by [`ServiceCounters`]: slot
+/// [`TENANT_DEFAULT`] is training, slot [`TENANT_SERVE`] the inference
+/// path. Unregistered tenants (multi-tenancy off) report all zeros.
+pub const COUNTER_TENANTS: usize = 2;
+
 /// Cumulative counters across every shared service at one instant.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Default)]
 pub struct ServiceCounters {
     pub graph_pool: PoolStats,
     pub feature_pool: PoolStats,
@@ -553,6 +599,8 @@ pub struct ServiceCounters {
     pub device: DeviceStats,
     pub io_runs: u64,
     pub io_run_blocks: u64,
+    /// Per-tenant scheduler counters (see [`COUNTER_TENANTS`]).
+    pub tenants: [TenantStats; COUNTER_TENANTS],
 }
 
 /// Per-interval counter deltas for one window (see [`StatsWindow`]).
@@ -568,6 +616,9 @@ pub struct WindowStats {
     pub device_bytes: u64,
     pub io_runs: u64,
     pub io_run_blocks: u64,
+    /// Per-tenant deltas for the window, same slot layout as
+    /// [`ServiceCounters::tenants`] (all zeros with multi-tenancy off).
+    pub tenants: [TenantStats; COUNTER_TENANTS],
 }
 
 impl WindowStats {
@@ -618,6 +669,15 @@ impl StatsWindow {
     /// deltas accumulated since the previous `roll` (or `new`).
     pub fn roll(&mut self, services: &EngineServices) -> WindowStats {
         let now = services.counters();
+        let mut tenants = [TenantStats::default(); COUNTER_TENANTS];
+        for (i, slot) in tenants.iter_mut().enumerate() {
+            *slot = TenantStats {
+                bytes: now.tenants[i].bytes.saturating_sub(self.last.tenants[i].bytes),
+                requests: now.tenants[i].requests.saturating_sub(self.last.tenants[i].requests),
+                busy_ns: now.tenants[i].busy_ns.saturating_sub(self.last.tenants[i].busy_ns),
+                stall_ns: now.tenants[i].stall_ns.saturating_sub(self.last.tenants[i].stall_ns),
+            };
+        }
         let w = WindowStats {
             graph_hits: now.graph_pool.hits.saturating_sub(self.last.graph_pool.hits),
             graph_misses: now.graph_pool.misses.saturating_sub(self.last.graph_pool.misses),
@@ -629,6 +689,7 @@ impl StatsWindow {
             device_bytes: now.device.total_bytes.saturating_sub(self.last.device.total_bytes),
             io_runs: now.io_runs.saturating_sub(self.last.io_runs),
             io_run_blocks: now.io_run_blocks.saturating_sub(self.last.io_run_blocks),
+            tenants,
         };
         self.last = now;
         w
@@ -691,5 +752,40 @@ mod tests {
         assert_eq!(w2.device_requests, 0);
         assert_eq!(w2.graph_hits + w2.graph_misses, 0);
         assert_eq!(w2.graph_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn stats_windows_attribute_each_tenant_separately() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = tmp.path().to_string_lossy().into_owned();
+        c.tenant.share = 0.6; // registers training @0.6 and serving @0.4
+        let s = Arc::new(EngineServices::open(c).unwrap());
+        let mut r = AgnesRunner::from_services(s.clone());
+        let mut window = StatsWindow::new(&s);
+
+        // a training epoch is charged to the training tenant only
+        r.run_epoch(0, &mut NullCompute).unwrap();
+        let w0 = window.roll(&s);
+        assert!(w0.tenants[TENANT_DEFAULT as usize].requests > 0);
+        assert!(w0.tenants[TENANT_DEFAULT as usize].bytes > 0);
+        assert_eq!(w0.tenants[TENANT_SERVE as usize].requests, 0);
+
+        // serving-tenant traffic lands in the other slot only — and the
+        // roll is non-destructive, so the cumulative totals equal the
+        // window sums per tenant
+        let per_shard: Vec<Vec<u64>> =
+            (0..s.ssd.num_shards()).map(|_| vec![1u64 << 20]).collect();
+        s.ssd.submit_sharded_for(TENANT_SERVE, &per_shard, 4);
+        let w1 = window.roll(&s);
+        assert_eq!(w1.tenants[TENANT_DEFAULT as usize].requests, 0);
+        assert!(w1.tenants[TENANT_SERVE as usize].requests > 0);
+        let total = s.counters();
+        for t in [TENANT_DEFAULT as usize, TENANT_SERVE as usize] {
+            assert_eq!(
+                w0.tenants[t].requests + w1.tenants[t].requests,
+                total.tenants[t].requests
+            );
+        }
     }
 }

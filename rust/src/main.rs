@@ -61,6 +61,12 @@
 //!   --serve-workers <n>    serve: inference worker threads
 //!   --serve-max-inflight <n> serve: admission bound (requests beyond it
 //!                          are rejected with a typed backpressure error)
+//!   --tenant-share <f>     training's guaranteed fraction of device time,
+//!                          in (0, 1]; 1.0 (default) disables multi-tenant
+//!                          scheduling, below it the serving path gets the
+//!                          remaining 1 - share
+//!   --tenant-max-outstanding <n> per-submit cap on one tenant's
+//!                          outstanding device requests (0 = no cap)
 //!
 //! serve stdin protocol (one command per line):
 //!   infer <seed> <node...>        one request for the given target nodes
@@ -237,6 +243,12 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(m) = args.get::<usize>("serve-max-inflight")? {
         c.serve.max_inflight = m;
     }
+    if let Some(s) = args.get::<f64>("tenant-share")? {
+        c.tenant.share = s;
+    }
+    if let Some(m) = args.get::<u32>("tenant-max-outstanding")? {
+        c.tenant.max_outstanding = m;
+    }
     // fail fast on out-of-range values whether they came from the config
     // file or from CLI overrides
     c.validate()?;
@@ -309,6 +321,24 @@ fn run_system(
                     .collect::<Vec<_>>()
                     .join(" / "),
             );
+        }
+        if !m.tenant_requests.is_empty() {
+            // multi-tenant run: per-tenant device attribution
+            let line = m
+                .tenant_requests
+                .iter()
+                .enumerate()
+                .map(|(i, &reqs)| {
+                    format!(
+                        "t{i}: {reqs} reqs {} stall={} share={:.2}",
+                        fmt_bytes(m.tenant_bytes.get(i).copied().unwrap_or(0)),
+                        fmt_ns(m.tenant_stall_ns.get(i).copied().unwrap_or(0)),
+                        m.tenant_achieved_share(i),
+                    )
+                })
+                .collect::<Vec<_>>()
+                .join("; ");
+            println!("         tenants: {line}");
         }
         if let Some(line) = m.controller.epoch_summary(epoch as u32) {
             println!("         {line}");
@@ -492,6 +522,23 @@ fn serve_loop(server: Arc<InferenceServer>, args: &Args) -> anyhow::Result<()> {
                         fmt_bytes(w.device_bytes),
                         w.io_runs,
                     );
+                    // per-tenant window deltas (only under multi-tenancy;
+                    // idle/unregistered tenants print nothing)
+                    let names = ["train", "serve"];
+                    for (i, t) in w.tenants.iter().enumerate() {
+                        if t.requests == 0 && t.stall_ns == 0 {
+                            continue;
+                        }
+                        println!(
+                            "  tenant {}: {} reqs, {}, busy={} stall={} share={:.2}",
+                            names.get(i).copied().unwrap_or("?"),
+                            t.requests,
+                            fmt_bytes(t.bytes),
+                            fmt_ns(t.busy_ns),
+                            fmt_ns(t.stall_ns),
+                            t.achieved_share(),
+                        );
+                    }
                 }
                 Some("reload") => {
                     let key = parts.next().unwrap_or("");

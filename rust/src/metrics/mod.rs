@@ -92,6 +92,17 @@ pub struct RunMetrics {
     pub shard_requests: Vec<u64>,
     /// Per-shard bytes read.
     pub shard_bytes: Vec<u64>,
+    /// Per-tenant bytes charged through the array's fair-share scheduler
+    /// (index = `TenantId`; empty when no tenant is registered — the
+    /// single-tenant fast path never touches the scheduler).
+    pub tenant_bytes: Vec<u64>,
+    /// Per-tenant device request counts.
+    pub tenant_requests: Vec<u64>,
+    /// Per-tenant modeled service nanoseconds (the tenant's own I/O).
+    pub tenant_busy_ns: Vec<u64>,
+    /// Per-tenant modeled stall nanoseconds (queueing behind other
+    /// tenants' work on shared shards).
+    pub tenant_stall_ns: Vec<u64>,
     /// Graph-buffer cache hit ratio.
     pub graph_hit_ratio: f64,
     /// Feature-cache hit ratio.
@@ -240,6 +251,20 @@ impl RunMetrics {
         crate::storage::device::shard_imbalance(&self.shard_busy_ns)
     }
 
+    /// A tenant's achieved device share: own modeled service time over
+    /// service + stall, in (0, 1]. 1.0 when the tenant charged no I/O (or
+    /// never went through the scheduler) — an uncontended tenant keeps
+    /// the whole device.
+    pub fn tenant_achieved_share(&self, tenant: usize) -> f64 {
+        let busy = self.tenant_busy_ns.get(tenant).copied().unwrap_or(0);
+        let stall = self.tenant_stall_ns.get(tenant).copied().unwrap_or(0);
+        if busy + stall == 0 {
+            1.0
+        } else {
+            busy as f64 / (busy + stall) as f64
+        }
+    }
+
     /// Graph-store hit rate over the per-store counters (graph buffer
     /// pool), in [0, 1]; 0 when no accesses were counted.
     pub fn graph_cache_hit_rate(&self) -> f64 {
@@ -287,6 +312,10 @@ impl RunMetrics {
         merge_stage_vec(&mut self.shard_busy_ns, &o.shard_busy_ns);
         merge_stage_vec(&mut self.shard_requests, &o.shard_requests);
         merge_stage_vec(&mut self.shard_bytes, &o.shard_bytes);
+        merge_stage_vec(&mut self.tenant_bytes, &o.tenant_bytes);
+        merge_stage_vec(&mut self.tenant_requests, &o.tenant_requests);
+        merge_stage_vec(&mut self.tenant_busy_ns, &o.tenant_busy_ns);
+        merge_stage_vec(&mut self.tenant_stall_ns, &o.tenant_stall_ns);
         self.minibatches += o.minibatches;
         self.sampled_nodes += o.sampled_nodes;
         self.gathered_features += o.gathered_features;
@@ -751,6 +780,29 @@ mod tests {
         a.merge(&RunMetrics { shard_busy_ns: vec![0, 20], ..Default::default() });
         assert_eq!(a.shard_busy_ns, vec![30, 30]);
         assert_eq!(a.shard_imbalance(), 1.0);
+    }
+
+    #[test]
+    fn tenant_metrics_merge_and_share() {
+        let mut a = RunMetrics::default();
+        assert_eq!(a.tenant_achieved_share(0), 1.0, "no scheduled I/O = full share");
+        let b = RunMetrics {
+            tenant_bytes: vec![400, 100],
+            tenant_requests: vec![4, 1],
+            tenant_busy_ns: vec![60, 10],
+            tenant_stall_ns: vec![20, 0],
+            ..Default::default()
+        };
+        assert!((b.tenant_achieved_share(0) - 0.75).abs() < 1e-12);
+        assert_eq!(b.tenant_achieved_share(1), 1.0, "stall-free tenant keeps full share");
+        assert_eq!(b.tenant_achieved_share(9), 1.0, "unknown tenants default to 1");
+        a.merge(&b);
+        a.merge(&RunMetrics { tenant_stall_ns: vec![0, 30], ..Default::default() });
+        assert_eq!(a.tenant_bytes, vec![400, 100]);
+        assert_eq!(a.tenant_requests, vec![4, 1]);
+        assert_eq!(a.tenant_busy_ns, vec![60, 10]);
+        assert_eq!(a.tenant_stall_ns, vec![20, 30]);
+        assert!((a.tenant_achieved_share(1) - 0.25).abs() < 1e-12);
     }
 
     #[test]

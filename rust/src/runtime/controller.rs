@@ -254,6 +254,12 @@ pub struct ControllerInputs {
     /// Engine submission concurrency (`io.async_depth`).
     pub concurrency: u32,
     pub stores: Vec<StoreTrace>,
+    /// Modeled ns the training tenant's submits stalled behind other
+    /// tenants on the shared array this run (0 when multi-tenancy is
+    /// off). Folded into decision *reasons* for observability only —
+    /// it never changes a decision, so solo runs keep the determinism
+    /// contract bit-for-bit.
+    pub tenant_stall_ns: u64,
 }
 
 /// One decision the controller took (or declined), with its inputs and
@@ -474,14 +480,20 @@ impl RuntimeController {
             let (applied, reason) = if frozen {
                 (false, "frozen".to_string())
             } else {
-                (
-                    true,
-                    format!(
-                        "prep {:.2} ms vs compute {:.2} ms",
-                        prep_ns as f64 / 1e6,
-                        inputs.compute_ns as f64 / 1e6
-                    ),
-                )
+                let mut r = format!(
+                    "prep {:.2} ms vs compute {:.2} ms",
+                    prep_ns as f64 / 1e6,
+                    inputs.compute_ns as f64 / 1e6
+                );
+                if inputs.tenant_stall_ns > 0 {
+                    // contended array: surface how much of prepare was
+                    // spent stalled behind the other tenants' queues
+                    r.push_str(&format!(
+                        ", tenant stall {:.2} ms",
+                        inputs.tenant_stall_ns as f64 / 1e6
+                    ));
+                }
+                (true, r)
             };
             out.push(ControllerDecision {
                 epoch: inputs.epoch,
@@ -686,6 +698,7 @@ mod tests {
             spec: SsdSpec::default(),
             concurrency: 8,
             stores,
+            tenant_stall_ns: 0,
         }
     }
 
@@ -701,6 +714,31 @@ mod tests {
         assert!(!a.is_empty());
         let off = RuntimeController::new(&AdaptiveConfig::default(), 4);
         assert!(off.decide(&inp).is_empty(), "disabled controller decides nothing");
+    }
+
+    #[test]
+    fn tenant_stall_lands_in_reasons_but_never_in_decisions() {
+        let cfg = AdaptiveConfig { enabled: true, ..Default::default() };
+        let c = RuntimeController::new(&cfg, 4);
+        let scattered: Vec<u32> = (0..256).map(|i| i * 64).collect();
+        let solo = inputs_with(vec![StoreTrace::new("graph", model(&[&scattered]))], false);
+        let mut contended = solo.clone();
+        contended.tenant_stall_ns = 1_500_000;
+
+        let a = c.decide(&solo);
+        let b = c.decide(&contended);
+        let depth_of = |ds: &[ControllerDecision]| {
+            ds.iter()
+                .find(|d| matches!(d.action, ControllerAction::Depth { .. }))
+                .cloned()
+                .expect("depth decision present")
+        };
+        let (da, db) = (depth_of(&a), depth_of(&b));
+        // the *decision* is stall-invariant; only the reason annotates it
+        assert_eq!(da.action, db.action);
+        assert_eq!(da.applied, db.applied);
+        assert!(!da.reason.contains("tenant stall"), "{}", da.reason);
+        assert!(db.reason.contains("tenant stall 1.50 ms"), "{}", db.reason);
     }
 
     #[test]

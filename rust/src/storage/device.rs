@@ -30,6 +30,30 @@ use std::sync::Mutex;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+/// Identity of a traffic source contending for the shared array.
+pub type TenantId = u32;
+
+/// The default tenant: training traffic.
+pub const TENANT_DEFAULT: TenantId = 0;
+/// The inference-serving tenant (see `coordinator::serve`).
+pub const TENANT_SERVE: TenantId = 1;
+
+/// Modeled busy backlog (ns of queued shard work) beyond which the
+/// scheduler treats the array as congested and halves the aggressor
+/// tenant's outstanding budget (AIMD backpressure).
+pub const CONGESTION_BACKLOG_NS: u64 = 5_000_000;
+
+/// How far into the virtual past a competitor's last completion still
+/// counts as "live" for congestion detection. Beyond this horizon a
+/// silent tenant is treated as departed and stops throttling others
+/// (work conservation); within it, a lagging tenant's queued backlog is
+/// evidence of congestion.
+const ACTIVITY_HORIZON_NS: u64 = 8 * CONGESTION_BACKLOG_NS;
+
+/// Hard cap on the AIMD backoff shift: budget never drops below
+/// `concurrency >> 6` (and never below one outstanding request).
+const MAX_BACKOFF_SHIFT: u32 = 6;
+
 /// Static description of the SSD array.
 #[derive(Debug, Clone, Copy)]
 pub struct SsdSpec {
@@ -235,6 +259,65 @@ impl SsdModel {
     }
 }
 
+/// Per-tenant cumulative scheduler statistics (simulated ns).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantStats {
+    pub bytes: u64,
+    pub requests: u64,
+    /// Modeled device time serving this tenant's own requests.
+    pub busy_ns: u64,
+    /// Modeled time this tenant's submits waited behind other tenants'
+    /// queued shard work (the congestion signal, integrated).
+    pub stall_ns: u64,
+}
+
+impl TenantStats {
+    /// Fraction of this tenant's modeled wall time spent being served
+    /// rather than stalled behind other tenants: `1.0` = unimpeded
+    /// (solo), and never below `share / total_active_share` under the
+    /// deficit-round-robin guarantee.
+    pub fn achieved_share(&self) -> f64 {
+        let total = self.busy_ns + self.stall_ns;
+        if total == 0 { 1.0 } else { self.busy_ns as f64 / total as f64 }
+    }
+
+    pub fn merge(&mut self, other: &TenantStats) {
+        self.bytes += other.bytes;
+        self.requests += other.requests;
+        self.busy_ns += other.busy_ns;
+        self.stall_ns += other.stall_ns;
+    }
+}
+
+/// Scheduler state for one registered tenant.
+#[derive(Debug, Clone)]
+struct TenantState {
+    id: TenantId,
+    /// Guaranteed fraction of device time under contention (relative
+    /// weight; shares need not sum to 1).
+    share: f64,
+    /// Token budget: cap on outstanding requests per submit (0 = no cap
+    /// beyond the caller's concurrency).
+    max_outstanding: u32,
+    /// Virtual completion clock: when this tenant's last submitted work
+    /// (service + stall) finishes on the shared array timeline.
+    clock: u64,
+    /// AIMD congestion backoff: the outstanding budget is shifted right
+    /// by this many bits while the tenant is the congestion aggressor.
+    backoff: u32,
+    stats: TenantStats,
+}
+
+/// Shared fair-share scheduler state (guarded by one mutex: submits are
+/// serialized through the scheduler, which is what "shared queue
+/// occupancy" means — tenants observe each other's backlog).
+#[derive(Debug, Default)]
+struct TenantSched {
+    tenants: Vec<TenantState>,
+    /// Per-shard cumulative modeled service ns (shared queue occupancy).
+    shard_clock: Vec<u64>,
+}
+
 /// A (possibly sharded) SSD array in front of a block store.
 ///
 /// Two construction modes:
@@ -264,6 +347,9 @@ pub struct SsdArray {
     pub spec: SsdSpec,
     map: StripeMap,
     shards: Vec<SharedSsd>,
+    /// Multi-tenant fair-share scheduler (engages only for tenants that
+    /// were [`SsdArray::register_tenant`]-ed; empty = pre-scheduler path).
+    sched: Mutex<TenantSched>,
 }
 
 pub type SharedArray = Arc<SsdArray>;
@@ -274,7 +360,12 @@ pub type SharedArray = Arc<SsdArray>;
 impl From<SharedSsd> for SharedArray {
     fn from(ssd: SharedSsd) -> SharedArray {
         let spec = ssd.spec;
-        Arc::new(SsdArray { spec, map: StripeMap::single(), shards: vec![ssd] })
+        Arc::new(SsdArray {
+            spec,
+            map: StripeMap::single(),
+            shards: vec![ssd],
+            sched: Mutex::new(TenantSched::default()),
+        })
     }
 }
 
@@ -291,7 +382,12 @@ impl SsdArray {
     pub fn sharded(spec: SsdSpec, stripe_blocks: u32) -> SharedArray {
         let n = spec.num_ssds.max(1);
         let shards = (0..n).map(|_| SsdModel::new(spec.with_ssds(1))).collect();
-        Arc::new(SsdArray { spec, map: StripeMap::new(stripe_blocks, n), shards })
+        Arc::new(SsdArray {
+            spec,
+            map: StripeMap::new(stripe_blocks, n),
+            shards,
+            sched: Mutex::new(TenantSched::default()),
+        })
     }
 
     #[inline]
@@ -336,20 +432,195 @@ impl SsdArray {
     /// Charge per-shard request batches concurrently: `per_shard[i]` is
     /// dispatched on shard `i`'s own queue, each shard clamps to its own
     /// queue depth, and the returned elapsed nanoseconds are the **max**
-    /// over the shards (they run in parallel), not the sum. The caller's
-    /// `concurrency` outstanding requests are split evenly across the
-    /// shards (static queue assignment), which is what makes a hot shard
-    /// visible: a batch landing on one shard only gets that shard's slice
-    /// of the submission ring and that shard's queue depth.
+    /// over the shards (they run in parallel), not the sum.
+    ///
+    /// The caller's `concurrency` outstanding requests are assigned to
+    /// the shard lanes in proportion to each lane's queued bytes
+    /// (backlog-proportional queue assignment, see [`backlog_lanes`]):
+    /// idle shards get no slots, a hot shard can absorb the entire
+    /// budget up to its own queue depth, and budget past a lane's clamp
+    /// water-fills the remaining lanes. A balanced batch degenerates to
+    /// the historical even split; a skewed one no longer wastes queue
+    /// slots on idle shards. A hot shard still cannot exceed its own
+    /// queue depth — borrowing *submission slots* is allowed, borrowing
+    /// another device's *queue* is not.
     pub fn submit_sharded(&self, per_shard: &[Vec<u64>], concurrency: u32) -> u64 {
         debug_assert_eq!(per_shard.len(), self.shards.len(), "per-shard batch arity");
-        let lane_concurrency = (concurrency / self.shards.len().max(1) as u32).max(1);
+        let lanes = backlog_lanes(per_shard, concurrency, self.spec.queue_depth);
         let mut elapsed = 0u64;
-        for (shard, sizes) in self.shards.iter().zip(per_shard) {
+        for ((shard, sizes), &lane) in self.shards.iter().zip(per_shard).zip(&lanes) {
             if !sizes.is_empty() {
-                elapsed = elapsed.max(shard.submit_batch(sizes, lane_concurrency));
+                elapsed = elapsed.max(shard.submit_batch(sizes, lane));
             }
         }
+        elapsed
+    }
+
+    /// Register a tenant with the fair-share scheduler. `share` is the
+    /// guaranteed fraction of device time under contention (a relative
+    /// weight; shares need not sum to 1) and `max_outstanding` is the
+    /// tenant's token budget — a cap on outstanding requests per submit
+    /// (0 = no cap beyond the caller's concurrency). Unregistered
+    /// tenants bypass the scheduler entirely, so a configuration that
+    /// registers nobody stays bit-for-bit the pre-scheduler path.
+    /// Re-registering an id updates its share/budget in place.
+    pub fn register_tenant(&self, id: TenantId, share: f64, max_outstanding: u32) {
+        let mut sched = self.sched.lock().unwrap();
+        if sched.shard_clock.len() != self.shards.len() {
+            sched.shard_clock = vec![0; self.shards.len()];
+        }
+        let share = share.max(f64::MIN_POSITIVE);
+        if let Some(t) = sched.tenants.iter_mut().find(|t| t.id == id) {
+            t.share = share;
+            t.max_outstanding = max_outstanding;
+            return;
+        }
+        sched.tenants.push(TenantState {
+            id,
+            share,
+            max_outstanding,
+            clock: 0,
+            backoff: 0,
+            stats: TenantStats::default(),
+        });
+        sched.tenants.sort_by_key(|t| t.id);
+    }
+
+    /// Cumulative per-tenant scheduler stats, sorted by tenant id.
+    /// Empty unless tenants were registered.
+    pub fn tenant_stats(&self) -> Vec<(TenantId, TenantStats)> {
+        self.sched.lock().unwrap().tenants.iter().map(|t| (t.id, t.stats)).collect()
+    }
+
+    /// Current AIMD backoff shift of a tenant (0 = full budget). Test
+    /// and bench observability for the congestion-control loop.
+    pub fn tenant_backoff(&self, id: TenantId) -> u32 {
+        self.sched
+            .lock()
+            .unwrap()
+            .tenants
+            .iter()
+            .find(|t| t.id == id)
+            .map(|t| t.backoff)
+            .unwrap_or(0)
+    }
+
+    /// [`Self::submit_sharded`] on behalf of `tenant`.
+    ///
+    /// Registered tenants go through the fair-share scheduler: the
+    /// batch is charged on the owning shards with the tenant's
+    /// (possibly congestion-backed-off) outstanding budget, then
+    /// delayed behind other tenants' modeled queued shard work in
+    /// proportion to the competing share weight — the fluid
+    /// (byte-granular) limit of deficit-round-robin dispatch, which
+    /// guarantees each tenant at least `share / total_active_share` of
+    /// device time while it is backlogged. Unregistered tenants (and
+    /// arrays with no registrations) take the plain
+    /// [`Self::submit_sharded`] path unchanged; a *solo* registered
+    /// tenant is also bit-identical to that path, because with no
+    /// competing occupancy every submit stalls zero and keeps its full
+    /// budget (the scheduler is work-conserving).
+    pub fn submit_sharded_for(
+        &self,
+        tenant: TenantId,
+        per_shard: &[Vec<u64>],
+        concurrency: u32,
+    ) -> u64 {
+        {
+            let sched = self.sched.lock().unwrap();
+            if !sched.tenants.iter().any(|t| t.id == tenant) {
+                drop(sched);
+                return self.submit_sharded(per_shard, concurrency);
+            }
+        }
+        self.submit_scheduled(tenant, per_shard, concurrency)
+    }
+
+    /// The scheduler path of [`Self::submit_sharded_for`] (tenant is
+    /// known to be registered).
+    fn submit_scheduled(&self, tenant: TenantId, per_shard: &[Vec<u64>], concurrency: u32) -> u64 {
+        debug_assert_eq!(per_shard.len(), self.shards.len(), "per-shard batch arity");
+        let mut sched = self.sched.lock().unwrap();
+        let sched = &mut *sched;
+        if sched.shard_clock.len() != self.shards.len() {
+            sched.shard_clock = vec![0; self.shards.len()];
+        }
+        let ti = sched.tenants.iter().position(|t| t.id == tenant).expect("registered tenant");
+        let arrival = sched.tenants[ti].clock;
+        let share_self = sched.tenants[ti].share;
+        // competitors whose submitted work completes after this tenant's
+        // arrival still occupy the shared queues at this submit
+        let mut share_other = 0.0f64;
+        for (i, t) in sched.tenants.iter().enumerate() {
+            if i != ti && t.clock > arrival {
+                share_other += t.share;
+            }
+        }
+        // congestion signal: how far this tenant's completion clock leads
+        // the most-lagged recently-live competitor — exactly the modeled
+        // busy backlog that competitor must stall behind on the shards
+        // this tenant has been loading. A lead past the threshold marks
+        // this tenant as the aggressor: it backs off multiplicatively
+        // (AIMD); every uncongested submit recovers additively. Tenants
+        // silent for longer than the activity horizon are treated as
+        // departed so a lone backlogged tenant is never throttled on
+        // their account (work conservation).
+        let mut min_live_clock = u64::MAX;
+        for (i, t) in sched.tenants.iter().enumerate() {
+            if i != ti && t.stats.requests > 0 && t.clock + ACTIVITY_HORIZON_NS > arrival {
+                min_live_clock = min_live_clock.min(t.clock);
+            }
+        }
+        let congested = min_live_clock != u64::MAX
+            && arrival.saturating_sub(min_live_clock) > CONGESTION_BACKLOG_NS;
+        // token budget, then AIMD backoff
+        let mut budget = concurrency;
+        let max_outstanding = sched.tenants[ti].max_outstanding;
+        if max_outstanding > 0 {
+            budget = budget.min(max_outstanding);
+        }
+        budget = (budget >> sched.tenants[ti].backoff).max(1);
+        let lanes = backlog_lanes(per_shard, budget, self.spec.queue_depth);
+        let mut service_max = 0u64; // this tenant's own device time
+        let mut elapsed = 0u64; // service + DRR interference, max over shards
+        let mut bytes = 0u64;
+        let mut requests = 0u64;
+        for (i, sizes) in per_shard.iter().enumerate() {
+            if sizes.is_empty() {
+                continue;
+            }
+            let service = self.shards[i].submit_batch(sizes, lanes[i]);
+            if service == 0 {
+                continue; // zero-sized requests are free and occupy nothing
+            }
+            // DRR fluid limit: while this tenant drains `service` worth
+            // of shard time at weight share_self, competitors drain at
+            // share_other — it waits behind at most that much of their
+            // queued backlog on this shard, and never more than the
+            // backlog that actually exists.
+            let backlog = sched.shard_clock[i].saturating_sub(arrival);
+            let interference = if share_other > 0.0 {
+                backlog.min((service as f64 * share_other / share_self).ceil() as u64)
+            } else {
+                0
+            };
+            sched.shard_clock[i] += service;
+            service_max = service_max.max(service);
+            elapsed = elapsed.max(service + interference);
+            bytes += sizes.iter().sum::<u64>();
+            requests += sizes.iter().filter(|&&sz| sz > 0).count() as u64;
+        }
+        let t = &mut sched.tenants[ti];
+        t.clock = arrival + elapsed;
+        t.backoff = if congested {
+            (t.backoff + 1).min(MAX_BACKOFF_SHIFT)
+        } else {
+            t.backoff.saturating_sub(1)
+        };
+        t.stats.bytes += bytes;
+        t.stats.requests += requests;
+        t.stats.busy_ns += service_max;
+        t.stats.stall_ns += elapsed - service_max;
         elapsed
     }
 
@@ -388,10 +659,21 @@ impl SsdArray {
         shard_imbalance(&self.shards.iter().map(|s| s.busy_ns()).collect::<Vec<_>>())
     }
 
-    /// Reset every shard's counters (between bench phases).
+    /// Reset every shard's counters (between bench phases), plus the
+    /// scheduler's clocks and per-tenant stats. Tenant registrations
+    /// (share / token budget) survive the reset.
     pub fn reset(&self) {
         for shard in &self.shards {
             shard.reset();
+        }
+        let mut sched = self.sched.lock().unwrap();
+        for c in sched.shard_clock.iter_mut() {
+            *c = 0;
+        }
+        for t in sched.tenants.iter_mut() {
+            t.clock = 0;
+            t.backoff = 0;
+            t.stats = TenantStats::default();
         }
     }
 
@@ -400,6 +682,70 @@ impl SsdArray {
     pub fn utilization(&self) -> f64 {
         self.stats().achieved_bandwidth() / self.spec.array_bandwidth()
     }
+}
+
+/// Backlog-proportional lane assignment: split `concurrency` outstanding
+/// slots across shard dispatch lanes in proportion to each lane's queued
+/// bytes, clamp each lane at what it can actually use (its shard's own
+/// `queue_depth`, and never more slots than it has real requests), then
+/// water-fill any remainder one slot at a time over the unclamped lanes
+/// in shard order. Lanes with no backlog get nothing — the budget
+/// follows the queued bytes instead of being floored at
+/// `concurrency / num_shards` the way the old even split was.
+///
+/// A balanced batch reproduces the even split exactly; extra lane slots
+/// beyond a shard's real request count or queue depth are never charged
+/// differently by [`SsdModel::submit_batch`] (it clamps internally), so
+/// this assignment only redistributes budget that would otherwise idle.
+pub fn backlog_lanes(per_shard: &[Vec<u64>], concurrency: u32, queue_depth: u32) -> Vec<u32> {
+    let n = per_shard.len();
+    let caps: Vec<u32> = per_shard
+        .iter()
+        .map(|sizes| {
+            let real = sizes.iter().filter(|&&sz| sz > 0).count() as u64;
+            real.min(queue_depth.max(1) as u64) as u32
+        })
+        .collect();
+    let mut weights: Vec<u64> = per_shard.iter().map(|s| s.iter().sum()).collect();
+    let mut total_w: u128 = weights.iter().map(|&w| w as u128).sum();
+    if total_w == 0 {
+        // degenerate all-zero-byte backlog: weight by request count so
+        // the (free) requests still get dispatched somewhere
+        weights = per_shard.iter().map(|s| s.len() as u64).collect();
+        total_w = weights.iter().map(|&w| w as u128).sum();
+    }
+    if total_w == 0 {
+        return vec![0; n];
+    }
+    let mut lanes: Vec<u32> = (0..n)
+        .map(|i| {
+            if weights[i] == 0 || caps[i] == 0 {
+                return 0;
+            }
+            let prop = (concurrency as u128 * weights[i] as u128 / total_w) as u32;
+            prop.clamp(1, caps[i])
+        })
+        .collect();
+    // water-fill: hand the unassigned remainder one slot at a time to
+    // lanes still under their clamp, round-robin in shard order
+    let mut rem = concurrency.saturating_sub(lanes.iter().sum());
+    while rem > 0 {
+        let mut gave = false;
+        for i in 0..n {
+            if rem == 0 {
+                break;
+            }
+            if weights[i] > 0 && lanes[i] < caps[i] {
+                lanes[i] += 1;
+                rem -= 1;
+                gave = true;
+            }
+        }
+        if !gave {
+            break;
+        }
+    }
+    lanes
 }
 
 /// Busiest-over-mean imbalance of a per-shard busy-ns vector (1.0 for
@@ -629,6 +975,174 @@ mod tests {
         assert_eq!(shard_imbalance(&[10, 10, 10, 10]), 1.0);
         assert_eq!(shard_imbalance(&[40, 0, 0, 0]), 4.0);
         assert!((shard_imbalance(&[30, 10]) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn one_hot_shard_reclaims_idle_lanes() {
+        // satellite regression: a batch touching one shard of four gets
+        // the whole outstanding budget, not an even-split floor of 1/4
+        let four = SsdArray::sharded(SsdSpec::default().with_ssds(4), 1);
+        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); 4];
+        per_shard[1] = vec![4096u64; 2000];
+        let t_hot = four.submit_sharded(&per_shard, 16);
+        // identical to a lone single-shard device at the same concurrency
+        let solo = SsdArray::sharded(SsdSpec::default(), 1);
+        let t_solo = solo.submit_sharded(&[per_shard[1].clone()], 16);
+        assert_eq!(t_hot, t_solo, "idle lanes' budget must follow the backlog");
+        // the old even split floored the hot lane at 16/4 = 4 outstanding
+        let t_old = model(1).submit_batch(&per_shard[1], 4);
+        assert!(
+            (t_old as f64 / t_hot as f64 - 4.0).abs() < 1e-3,
+            "backlog-proportional lanes should be ~4x the old even split: {t_old} vs {t_hot}"
+        );
+    }
+
+    #[test]
+    fn backlog_lanes_follow_queued_bytes() {
+        // balanced backlog reproduces the even split exactly
+        let balanced: Vec<Vec<u64>> = (0..4).map(|_| vec![4096u64; 100]).collect();
+        assert_eq!(backlog_lanes(&balanced, 16, 128), vec![4, 4, 4, 4]);
+        // skew: budget proportional to queued bytes, min 1 per active lane
+        let skewed = vec![vec![4096u64; 300], vec![4096u64; 100], Vec::new(), Vec::new()];
+        assert_eq!(backlog_lanes(&skewed, 16, 128), vec![12, 4, 0, 0]);
+        // a capped hot lane water-fills the remainder into other lanes
+        let capped = vec![vec![4096u64; 1000], vec![4096u64; 10], Vec::new(), Vec::new()];
+        let lanes = backlog_lanes(&capped, 256, 128);
+        assert_eq!(lanes[0], 128, "own queue depth clamps the hot lane");
+        assert_eq!(lanes[1], 10, "remainder water-fills up to the lane's request count");
+        assert_eq!(lanes[2] + lanes[3], 0);
+        // no backlog anywhere: no lanes
+        assert_eq!(backlog_lanes(&[Vec::new(), Vec::new()], 8, 128), vec![0, 0]);
+    }
+
+    // ---- multi-tenant fair-share scheduler ----
+
+    #[test]
+    fn unregistered_tenant_takes_the_direct_path() {
+        let a = SsdArray::sharded(SsdSpec::default().with_ssds(2), 1);
+        let b = SsdArray::sharded(SsdSpec::default().with_ssds(2), 1);
+        let batch = vec![vec![4096u64; 50], vec![1u64 << 20; 3]];
+        let ta = a.submit_sharded_for(9, &batch, 8);
+        let tb = b.submit_sharded(&batch, 8);
+        assert_eq!(ta, tb);
+        assert!(a.tenant_stats().is_empty(), "no registrations, no tenant accounting");
+    }
+
+    #[test]
+    fn solo_registered_tenant_is_bit_identical_and_stall_free() {
+        // a registered tenant with the array to itself must charge
+        // exactly like the unscheduled path: zero stall, same lanes,
+        // same device counters (the work-conserving contract)
+        let sched = SsdArray::sharded(SsdSpec::default().with_ssds(4), 1);
+        sched.register_tenant(TENANT_DEFAULT, 1.0, 0);
+        // a second registered-but-idle tenant must not change anything
+        sched.register_tenant(TENANT_SERVE, 0.5, 0);
+        let plain = SsdArray::sharded(SsdSpec::default().with_ssds(4), 1);
+        let traces: Vec<(Vec<Vec<u64>>, u32)> = vec![
+            ((0..4).map(|_| vec![4096u64; 500]).collect(), 16),
+            (vec![vec![1u64 << 20; 64], Vec::new(), vec![4096; 9], Vec::new()], 32),
+            (vec![Vec::new(), vec![0, 4096], Vec::new(), Vec::new()], 1),
+        ];
+        for (batch, conc) in &traces {
+            let a = sched.submit_sharded_for(TENANT_DEFAULT, batch, *conc);
+            let b = plain.submit_sharded(batch, *conc);
+            assert_eq!(a, b);
+        }
+        let (ss, ps) = (sched.stats(), plain.stats());
+        assert_eq!(ss.busy_ns, ps.busy_ns);
+        assert_eq!(ss.num_requests, ps.num_requests);
+        assert_eq!(ss.total_bytes, ps.total_bytes);
+        let stats = sched.tenant_stats();
+        assert_eq!(stats.len(), 2);
+        assert_eq!(stats[0].1.stall_ns, 0, "solo tenant never stalls");
+        assert_eq!(stats[0].1.achieved_share(), 1.0);
+        assert_eq!(stats[1].1, TenantStats::default(), "idle tenant untouched");
+        assert_eq!(sched.tenant_backoff(TENANT_DEFAULT), 0, "no congestion when solo");
+    }
+
+    #[test]
+    fn contending_tenants_split_device_time_by_share() {
+        // two equal-share tenants interleaving identical bandwidth-bound
+        // sweeps: each stalls behind the other, but never below its 50%
+        // guaranteed fraction of device time
+        let arr = SsdArray::sharded(SsdSpec::default().with_ssds(4), 1);
+        arr.register_tenant(0, 0.5, 0);
+        arr.register_tenant(1, 0.5, 0);
+        let batch: Vec<Vec<u64>> = (0..4).map(|_| vec![1u64 << 20; 16]).collect();
+        for _ in 0..20 {
+            arr.submit_sharded_for(0, &batch, 64);
+            arr.submit_sharded_for(1, &batch, 64);
+        }
+        let stats = arr.tenant_stats();
+        for (id, s) in &stats {
+            assert!(s.stall_ns > 0, "tenant {id} saw no contention");
+            let share = s.achieved_share();
+            assert!(share >= 0.499, "tenant {id} starved: achieved {share}");
+            assert!(share < 0.95, "tenant {id} unrealistically unimpeded: {share}");
+        }
+        // symmetric load: both are slowed alike
+        let (a, b) = (stats[0].1, stats[1].1);
+        assert_eq!(a.bytes, b.bytes);
+        assert!((a.stall_ns as f64 / b.stall_ns.max(1) as f64 - 1.0).abs() < 0.2);
+    }
+
+    #[test]
+    fn hot_tenant_backs_off_under_congestion() {
+        // a tenant flooding the array while a light tenant lags past the
+        // congestion threshold must have its budget halved (AIMD), and
+        // the light tenant keeps its guaranteed share
+        let arr = SsdArray::sharded(SsdSpec::default().with_ssds(4), 1);
+        arr.register_tenant(0, 0.5, 0);
+        arr.register_tenant(1, 0.5, 0);
+        let hot: Vec<Vec<u64>> = (0..4).map(|_| vec![1u64 << 20; 160]).collect(); // ~24 ms
+        let light: Vec<Vec<u64>> = (0..4).map(|_| vec![1u64 << 20; 4]).collect();
+        let mut saw_backoff = 0u32;
+        for _ in 0..10 {
+            arr.submit_sharded_for(0, &hot, 64);
+            arr.submit_sharded_for(1, &light, 64);
+            saw_backoff = saw_backoff.max(arr.tenant_backoff(0));
+        }
+        assert!(saw_backoff > 0, "hot tenant never backed off");
+        assert_eq!(arr.tenant_backoff(1), 0, "light tenant must not be punished");
+        let stats = arr.tenant_stats();
+        let light_share = stats[1].1.achieved_share();
+        assert!(light_share >= 0.499, "light tenant starved: {light_share}");
+    }
+
+    #[test]
+    fn tenant_token_budget_caps_outstanding() {
+        // max_outstanding is a hard token budget: a capped tenant's
+        // latency-bound sweep runs at the capped depth
+        let capped = SsdArray::sharded(SsdSpec::default(), 1);
+        capped.register_tenant(3, 1.0, 4);
+        let t_capped = capped.submit_sharded_for(3, &[vec![4096u64; 2000]], 64);
+        let free = SsdArray::sharded(SsdSpec::default(), 1);
+        free.register_tenant(3, 1.0, 0);
+        let t_free = free.submit_sharded_for(3, &[vec![4096u64; 2000]], 64);
+        assert!(
+            (t_capped as f64 / t_free as f64 - 16.0).abs() < 1e-3,
+            "budget 4 vs 64 outstanding: {t_capped} vs {t_free}"
+        );
+    }
+
+    #[test]
+    fn reset_clears_scheduler_state_but_keeps_registrations() {
+        let arr = SsdArray::sharded(SsdSpec::default().with_ssds(2), 1);
+        arr.register_tenant(0, 0.5, 0);
+        arr.register_tenant(1, 0.5, 0);
+        let batch = vec![vec![1u64 << 20; 8], vec![1u64 << 20; 8]];
+        arr.submit_sharded_for(0, &batch, 16);
+        arr.submit_sharded_for(1, &batch, 16);
+        assert!(arr.tenant_stats()[1].1.stall_ns > 0);
+        arr.reset();
+        assert_eq!(arr.busy_ns(), 0);
+        for (_, s) in arr.tenant_stats() {
+            assert_eq!(s, TenantStats::default());
+        }
+        // still registered: the scheduler path re-engages, stall-free
+        let t = arr.submit_sharded_for(0, &batch, 16);
+        assert!(t > 0);
+        assert_eq!(arr.tenant_stats()[0].1.stall_ns, 0);
     }
 
     #[test]

@@ -39,6 +39,7 @@
 //!   stage.
 
 use super::block::GraphBlock;
+use super::device::{TenantId, TENANT_DEFAULT};
 use super::plan::{BlockBytes, IoPlanner, PlanRecorder, PlanStats, RunRequest};
 use super::store::{FeatureStore, GraphStore};
 use super::BlockId;
@@ -204,6 +205,11 @@ pub struct IoEngine {
     /// (`u32::MAX` = none: use `planner.gap_blocks`). Shared across
     /// clones so in-flight submit/poll jobs plan with the same budget.
     gap_override: Arc<AtomicU32>,
+    /// The tenant every device charge from this engine is attributed to.
+    /// Rides clones, so submit/poll jobs charge the submitting tenant. A
+    /// tenant not registered on the array takes the unscheduled path, so
+    /// the default engine is bit-identical to the pre-tenant one.
+    tenant: TenantId,
 }
 
 /// Sentinel for "no gap override installed".
@@ -215,6 +221,7 @@ impl std::fmt::Debug for IoEngine {
             .field("num_threads", &self.num_threads)
             .field("async_depth", &self.async_depth)
             .field("planner", &self.planner)
+            .field("tenant", &self.tenant)
             .finish()
     }
 }
@@ -251,6 +258,7 @@ impl IoEngine {
             pool: WorkerPool::new(MAX_CONCURRENT_SUBMITTERS),
             recorder: Arc::new(PlanRecorder::default()),
             gap_override: Arc::new(AtomicU32::new(NO_GAP_OVERRIDE)),
+            tenant: TENANT_DEFAULT,
         }
     }
 
@@ -259,6 +267,20 @@ impl IoEngine {
     pub fn with_planner(mut self, planner: IoPlanner) -> IoEngine {
         self.planner = planner;
         self
+    }
+
+    /// Attribute this engine's device charges to `tenant` (builder style).
+    /// Serving tags its engine [`super::device::TENANT_SERVE`]; training
+    /// keeps [`TENANT_DEFAULT`]. A no-op unless the tenant is registered
+    /// on the store's array.
+    pub fn with_tenant(mut self, tenant: TenantId) -> IoEngine {
+        self.tenant = tenant;
+        self
+    }
+
+    /// The tenant this engine charges I/O to.
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
     }
 
     /// Effective outstanding-request count presented to the device.
@@ -296,9 +318,16 @@ impl IoEngine {
     }
 
     /// Snapshot the hole/run-length distributions observed by every
-    /// striped plan since the last [`Self::reset_plan_stats`].
+    /// striped plan since the last [`Self::reset_plan_stats`] (all
+    /// tenants aggregated — the historical view).
     pub fn plan_stats(&self) -> PlanStats {
         self.recorder.snapshot()
+    }
+
+    /// One tenant's share of the observed plan distributions (engines
+    /// sharing a recorder attribute each sweep to their own tenant).
+    pub fn plan_stats_for(&self, tenant: TenantId) -> PlanStats {
+        self.recorder.snapshot_for(tenant)
     }
 
     pub fn reset_plan_stats(&self) {
@@ -325,7 +354,7 @@ impl IoEngine {
         let runs = self.effective_planner().plan_striped(blocks, block_size, map);
         let mut stats = PlanStats::default();
         stats.record_plan(blocks, &runs, map);
-        self.recorder.add(&stats);
+        self.recorder.add_for(self.tenant, &stats);
         runs
     }
 
@@ -356,7 +385,7 @@ impl IoEngine {
                 .map(|(i, p)| (remap.logical(p), GraphBlock::decode(&raw[i * bs..(i + 1) * bs])))
                 .collect::<Vec<_>>())
         })?;
-        store.charge_runs(runs, self.effective_concurrency());
+        store.charge_runs_as(self.tenant, runs, self.effective_concurrency());
         Ok(per_run.into_iter().flatten().collect())
     }
 
@@ -382,7 +411,7 @@ impl IoEngine {
                 .map(|(i, p)| (remap.logical(p), BlockBytes::slice_of(raw.clone(), i * bs, bs)))
                 .collect::<Vec<_>>())
         })?;
-        store.charge_runs(runs, self.effective_concurrency());
+        store.charge_runs_as(self.tenant, runs, self.effective_concurrency());
         Ok(per_run.into_iter().flatten().collect())
     }
 

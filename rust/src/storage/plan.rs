@@ -280,21 +280,25 @@ impl PlanStats {
     }
 }
 
-/// Shared, thread-safe accumulator for [`PlanStats`]: the I/O engine is
-/// cloned into its dispatch-pool workers, so the recorder rides an
-/// `Arc` and accumulates with relaxed atomics (counters only — no
-/// ordering dependencies).
+/// Per-tenant attribution slots in the [`PlanRecorder`]: one for the
+/// training tenant ([`super::device::TENANT_DEFAULT`]) and one for the
+/// serving tenant ([`super::device::TENANT_SERVE`]); any higher tenant
+/// id folds into the last slot so attribution is lossy past the tracked
+/// set but the aggregate stays exact.
+pub const PLAN_TENANT_SLOTS: usize = 2;
+
+/// One tenant's share of the shared plan histograms (atomics — see
+/// [`PlanRecorder`]).
 #[derive(Debug, Default)]
-pub struct PlanRecorder {
+struct PlanRecorderSlot {
     hole_counts: [AtomicU64; PLAN_HIST_BUCKETS],
     hole_blocks: [AtomicU64; PLAN_HIST_BUCKETS],
     run_counts: [AtomicU64; PLAN_HIST_BUCKETS],
     run_blocks: [AtomicU64; PLAN_HIST_BUCKETS],
 }
 
-impl PlanRecorder {
-    /// Fold one sweep's local stats into the shared accumulator.
-    pub fn add(&self, s: &PlanStats) {
+impl PlanRecorderSlot {
+    fn add(&self, s: &PlanStats) {
         for i in 0..PLAN_HIST_BUCKETS {
             self.hole_counts[i].fetch_add(s.holes.counts[i], Ordering::Relaxed);
             self.hole_blocks[i].fetch_add(s.holes.blocks[i], Ordering::Relaxed);
@@ -303,7 +307,7 @@ impl PlanRecorder {
         }
     }
 
-    pub fn snapshot(&self) -> PlanStats {
+    fn snapshot(&self) -> PlanStats {
         let mut s = PlanStats::default();
         for i in 0..PLAN_HIST_BUCKETS {
             s.holes.counts[i] = self.hole_counts[i].load(Ordering::Relaxed);
@@ -314,12 +318,62 @@ impl PlanRecorder {
         s
     }
 
-    pub fn reset(&self) {
+    fn reset(&self) {
         for i in 0..PLAN_HIST_BUCKETS {
             self.hole_counts[i].store(0, Ordering::Relaxed);
             self.hole_blocks[i].store(0, Ordering::Relaxed);
             self.run_counts[i].store(0, Ordering::Relaxed);
             self.run_blocks[i].store(0, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Shared, thread-safe accumulator for [`PlanStats`]: the I/O engine is
+/// cloned into its dispatch-pool workers, so the recorder rides an
+/// `Arc` and accumulates with relaxed atomics (counters only — no
+/// ordering dependencies). Plans are attributed per tenant (the engine
+/// tags each sweep with its tenant); the plain [`Self::snapshot`] is the
+/// sum over every tenant, so single-tenant callers see exactly the
+/// pre-tenant histograms.
+#[derive(Debug, Default)]
+pub struct PlanRecorder {
+    slots: [PlanRecorderSlot; PLAN_TENANT_SLOTS],
+}
+
+impl PlanRecorder {
+    #[inline]
+    fn slot_of(tenant: super::device::TenantId) -> usize {
+        (tenant as usize).min(PLAN_TENANT_SLOTS - 1)
+    }
+
+    /// Fold one sweep's local stats into the shared accumulator,
+    /// attributed to the default (training) tenant.
+    pub fn add(&self, s: &PlanStats) {
+        self.add_for(super::device::TENANT_DEFAULT, s);
+    }
+
+    /// Fold one sweep's local stats into `tenant`'s attribution slot.
+    pub fn add_for(&self, tenant: super::device::TenantId, s: &PlanStats) {
+        self.slots[Self::slot_of(tenant)].add(s);
+    }
+
+    /// Aggregate over every tenant (the historical, tenant-blind view).
+    pub fn snapshot(&self) -> PlanStats {
+        let mut s = PlanStats::default();
+        for slot in &self.slots {
+            s.merge(&slot.snapshot());
+        }
+        s
+    }
+
+    /// One tenant's observed plan distributions.
+    pub fn snapshot_for(&self, tenant: super::device::TenantId) -> PlanStats {
+        self.slots[Self::slot_of(tenant)].snapshot()
+    }
+
+    pub fn reset(&self) {
+        for slot in &self.slots {
+            slot.reset();
         }
     }
 }
@@ -658,6 +712,33 @@ mod tests {
         rec.reset();
         assert!(rec.snapshot().holes.is_empty());
         assert!(rec.snapshot().runs.is_empty());
+    }
+
+    #[test]
+    fn plan_recorder_attributes_tenants_and_aggregates() {
+        use crate::storage::device::{TENANT_DEFAULT, TENANT_SERVE};
+        let rec = PlanRecorder::default();
+        let mut train = PlanStats::default();
+        train.holes.record(3);
+        train.runs.record(8);
+        let mut serve = PlanStats::default();
+        serve.runs.record(2);
+        rec.add_for(TENANT_DEFAULT, &train);
+        rec.add_for(TENANT_SERVE, &serve);
+        // per-tenant views are disjoint
+        assert_eq!(rec.snapshot_for(TENANT_DEFAULT), train);
+        assert_eq!(rec.snapshot_for(TENANT_SERVE), serve);
+        // the aggregate is their sum — and `add` lands on the default slot
+        let mut want = train;
+        want.merge(&serve);
+        assert_eq!(rec.snapshot(), want);
+        rec.add(&serve);
+        assert_eq!(rec.snapshot_for(TENANT_DEFAULT).runs.total_count(), 2);
+        // out-of-range tenants clamp into the last slot (aggregate exact)
+        rec.reset();
+        rec.add_for(7, &serve);
+        assert_eq!(rec.snapshot_for(TENANT_SERVE), serve);
+        assert!(rec.snapshot_for(TENANT_DEFAULT).runs.is_empty());
     }
 
     #[test]

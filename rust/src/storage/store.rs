@@ -4,7 +4,7 @@
 
 use super::block::{FeatureBlockLayout, GraphBlock};
 use super::builder::{GraphStoreMeta, LayoutMeta, StorePaths};
-use super::device::SharedArray;
+use super::device::{SharedArray, TenantId, TENANT_DEFAULT};
 use super::object_index::ObjectIndexTable;
 use super::plan::RunRequest;
 use super::BlockId;
@@ -162,7 +162,18 @@ impl GraphStore {
     /// queue concurrently: the returned — and attributed — elapsed time
     /// is the max over the shards, not the sum.
     pub fn charge_runs(&self, runs: &[RunRequest], concurrency: u32) -> u64 {
-        let ns = charge_runs_sharded(&self.ssd, runs, self.meta.block_size, concurrency);
+        self.charge_runs_as(TENANT_DEFAULT, runs, concurrency)
+    }
+
+    /// [`Self::charge_runs`] on behalf of a tenant: the device charge
+    /// goes through the array's fair-share scheduler when the tenant is
+    /// registered (see
+    /// [`SsdArray::register_tenant`](super::device::SsdArray::register_tenant)),
+    /// so the attributed elapsed time includes any modeled stall behind
+    /// other tenants' queued work. Unregistered tenants charge exactly
+    /// like [`Self::charge_runs`].
+    pub fn charge_runs_as(&self, tenant: TenantId, runs: &[RunRequest], concurrency: u32) -> u64 {
+        let ns = charge_runs_sharded(&self.ssd, tenant, runs, self.meta.block_size, concurrency);
         self.runs_issued.fetch_add(runs.len() as u64, Ordering::Relaxed);
         let blocks: u64 = runs.iter().map(|r| r.len as u64).sum();
         self.run_blocks.fetch_add(blocks, Ordering::Relaxed);
@@ -417,7 +428,13 @@ impl FeatureStore {
     /// shard's queue (one device request per run — see
     /// [`GraphStore::charge_runs`]).
     pub fn charge_runs(&self, runs: &[RunRequest], concurrency: u32) -> u64 {
-        let ns = charge_runs_sharded(&self.ssd, runs, self.layout.block_size, concurrency);
+        self.charge_runs_as(TENANT_DEFAULT, runs, concurrency)
+    }
+
+    /// [`Self::charge_runs`] on behalf of a tenant (see
+    /// [`GraphStore::charge_runs_as`]).
+    pub fn charge_runs_as(&self, tenant: TenantId, runs: &[RunRequest], concurrency: u32) -> u64 {
+        let ns = charge_runs_sharded(&self.ssd, tenant, runs, self.layout.block_size, concurrency);
         self.runs_issued.fetch_add(runs.len() as u64, Ordering::Relaxed);
         let blocks: u64 = runs.iter().map(|r| r.len as u64).sum();
         self.run_blocks.fetch_add(blocks, Ordering::Relaxed);
@@ -532,6 +549,7 @@ impl FeatureStore {
 /// exactly the legacy one-queue batch in run order.
 fn charge_runs_sharded(
     ssd: &SharedArray,
+    tenant: TenantId,
     runs: &[RunRequest],
     block_size: usize,
     concurrency: u32,
@@ -548,7 +566,7 @@ fn charge_runs_sharded(
             start = cut;
         }
     }
-    ssd.submit_sharded(&per_shard, concurrency)
+    ssd.submit_sharded_for(tenant, &per_shard, concurrency)
 }
 
 #[cfg(test)]

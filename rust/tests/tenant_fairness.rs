@@ -1,0 +1,165 @@
+//! Property tests for the multi-tenant fair-share I/O scheduler over
+//! random submit traces (seeded, shrink-free — same convention as
+//! `proptests.rs`: a deterministic fan of generated cases, with the
+//! case number in every assertion message).
+//!
+//! The two scheduler invariants under test:
+//!
+//! * **Work conservation** — the scheduler never throttles work that has
+//!   nothing to contend with: a registered tenant whose competitors are
+//!   idle charges bit-identically to the unscheduled path, and a tenant
+//!   that outlives its competitors stops paying interference once its
+//!   completion clock passes theirs.
+//! * **Starvation freedom** — a backlogged tenant keeps at least
+//!   `share / total_active_share` of device time no matter how much
+//!   volume a competing hot tenant pushes.
+
+use agnes::storage::device::{SsdArray, SsdSpec, TenantId};
+use agnes::util::Rng;
+
+const LIGHT: TenantId = 0;
+const HOT: TenantId = 1;
+
+/// A random per-shard batch: up to 5 requests per shard of 4 KiB..2 MiB,
+/// occasionally an empty lane (the one-hot / skewed shapes).
+fn random_batch(rng: &mut Rng, shards: usize) -> Vec<Vec<u64>> {
+    (0..shards)
+        .map(|_| {
+            let n = rng.gen_range(6);
+            (0..n).map(|_| 4096 * (1 + rng.gen_range(512)) as u64).collect()
+        })
+        .collect()
+}
+
+/// At least one lane must carry a real request, or the submit is a no-op
+/// on both paths and proves nothing.
+fn random_nonempty_batch(rng: &mut Rng, shards: usize) -> Vec<Vec<u64>> {
+    loop {
+        let b = random_batch(rng, shards);
+        if b.iter().any(|lane| !lane.is_empty()) {
+            return b;
+        }
+    }
+}
+
+/// Property: a registered tenant with only idle (never-submitting)
+/// competitors is **bit-identical** to the unscheduled path — same
+/// elapsed per submit, same per-shard device counters — and records
+/// zero stall and zero backoff across any random trace.
+#[test]
+fn prop_work_conserving_solo_tenant_is_bit_identical() {
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(0x7e4a_0000 + case);
+        let shards = 1 + rng.gen_range(4) as u32;
+        let spec = SsdSpec::default().with_ssds(shards);
+        let scheduled = SsdArray::sharded(spec, 0);
+        let plain = SsdArray::sharded(spec, 0);
+        scheduled.register_tenant(LIGHT, 0.05 + 0.95 * rng.gen_f64(), 0);
+        // an idle competitor occupies no queue and must change nothing
+        scheduled.register_tenant(HOT, 0.05 + 0.95 * rng.gen_f64(), 0);
+
+        for step in 0..32 {
+            let batch = random_batch(&mut rng, shards as usize);
+            let conc = 1 + rng.gen_range(64) as u32;
+            let a = scheduled.submit_sharded_for(LIGHT, &batch, conc);
+            let b = plain.submit_sharded(&batch, conc);
+            assert_eq!(a, b, "case {case} step {step}: solo elapsed diverged");
+        }
+        for (i, (s, p)) in scheduled
+            .per_shard_stats()
+            .iter()
+            .zip(plain.per_shard_stats())
+            .enumerate()
+        {
+            assert_eq!(s.num_requests, p.num_requests, "case {case} shard {i}");
+            assert_eq!(s.total_bytes, p.total_bytes, "case {case} shard {i}");
+            assert_eq!(s.busy_ns, p.busy_ns, "case {case} shard {i}");
+        }
+        let stats = scheduled.tenant_stats();
+        let light = stats.iter().find(|(id, _)| *id == LIGHT).unwrap().1;
+        assert_eq!(light.stall_ns, 0, "case {case}: solo tenant stalled");
+        assert_eq!(light.achieved_share(), 1.0, "case {case}");
+        assert_eq!(scheduled.tenant_backoff(LIGHT), 0, "case {case}");
+    }
+}
+
+/// Property: work conservation after a competitor departs — once the hot
+/// tenant stops submitting, the light tenant's stall stops accruing
+/// within a bounded number of solo submits and its AIMD budget recovers
+/// to full (backoff 0).
+#[test]
+fn prop_work_conserving_after_competitor_departs() {
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(0x0de9_a000 + case);
+        let spec = SsdSpec::default().with_ssds(4);
+        let ssd = SsdArray::sharded(spec, 0);
+        ssd.register_tenant(LIGHT, 0.5, 0);
+        ssd.register_tenant(HOT, 0.5, 0);
+
+        // contention phase: hot pushes 10x volume
+        for _ in 0..16 {
+            let hot: Vec<Vec<u64>> = (0..4).map(|_| vec![1u64 << 21; 10]).collect();
+            ssd.submit_sharded_for(HOT, &hot, 32);
+            ssd.submit_sharded_for(LIGHT, &random_nonempty_batch(&mut rng, 4), 32);
+        }
+
+        // departure: the light tenant keeps going alone; its stall must
+        // stop growing (and backoff decay to zero) within bounded work
+        let mut quiet = 0;
+        let mut last_stall = 0;
+        for step in 0..400 {
+            ssd.submit_sharded_for(LIGHT, &random_nonempty_batch(&mut rng, 4), 32);
+            let stats = ssd.tenant_stats();
+            let light = stats.iter().find(|(id, _)| *id == LIGHT).unwrap().1;
+            if step > 0 && light.stall_ns == last_stall {
+                quiet += 1;
+                if quiet >= 3 {
+                    break;
+                }
+            } else {
+                quiet = 0;
+            }
+            last_stall = light.stall_ns;
+        }
+        assert!(quiet >= 3, "case {case}: stall never stopped accruing after departure");
+        assert_eq!(ssd.tenant_backoff(LIGHT), 0, "case {case}: budget never recovered");
+    }
+}
+
+/// Property: starvation freedom — across random traces with a hot tenant
+/// pushing an order of magnitude more volume, the light tenant's
+/// achieved share of device time never drops below its deficit-round-
+/// robin guarantee `share / (share_light + share_hot)` (to within the
+/// per-submit ceil rounding, hence the 0.999 factor).
+#[test]
+fn prop_light_tenant_never_starves() {
+    for case in 0..8u64 {
+        let mut rng = Rng::seed_from_u64(0x5afe_0000 + case);
+        let share_light = 0.1 + 0.8 * rng.gen_f64();
+        let share_hot = 0.1 + 0.8 * rng.gen_f64();
+        let spec = SsdSpec::default().with_ssds(4);
+        let ssd = SsdArray::sharded(spec, 0);
+        ssd.register_tenant(LIGHT, share_light, 0);
+        ssd.register_tenant(HOT, share_hot, 0);
+
+        for _ in 0..32 {
+            // hot floods all four shards; light interleaves small batches
+            let volume = 4 + rng.gen_range(12);
+            let hot: Vec<Vec<u64>> =
+                (0..4).map(|_| vec![1u64 << 21; volume]).collect();
+            ssd.submit_sharded_for(HOT, &hot, 32);
+            ssd.submit_sharded_for(LIGHT, &random_nonempty_batch(&mut rng, 4), 16);
+        }
+
+        let stats = ssd.tenant_stats();
+        let light = stats.iter().find(|(id, _)| *id == LIGHT).unwrap().1;
+        assert!(light.busy_ns > 0, "case {case}: light tenant did no work");
+        let guaranteed = share_light / (share_light + share_hot);
+        assert!(
+            light.achieved_share() >= guaranteed * 0.999,
+            "case {case}: achieved {:.4} < guaranteed {:.4} (shares {share_light:.3}/{share_hot:.3})",
+            light.achieved_share(),
+            guaranteed,
+        );
+    }
+}
