@@ -61,7 +61,7 @@ fn shard_json(ssds: u32, r: &EpochResult) -> Json {
         ("effective_gap_blocks", Json::num(m.effective_gap_blocks as f64)),
         (
             "shard_busy_ns",
-            Json::arr(m.shard_busy_ns.iter().map(|&ns| Json::num(ns as f64)).collect()),
+            Json::arr(m.shards.busy_ns.iter().map(|&ns| Json::num(ns as f64)).collect()),
         ),
         ("shard_imbalance", Json::num(m.shard_imbalance())),
         // hex string, not a JSON number: f32 bit patterns survive exactly

@@ -1,54 +1,247 @@
-//! Figure 7 — AGNES (single machine, storage-based) vs DistDGL (in-memory
-//! distributed, analytic cost model) on PA: epoch time as the DistDGL
-//! cluster grows 1 → 4 instances.
+//! Figure 7 — distributed training: AGNES workers over partitioned SSD
+//! arrays vs DistDGL (in-memory distributed, analytic cost model) on PA.
+//!
+//! Since `runtime::dist`, the AGNES side is a **real multi-worker
+//! simulated epoch**: each worker runs a full services stack over its own
+//! SSD array, trains the minibatches whose targets its partition owns,
+//! and pays modeled halo-exchange + gradient all-reduce traffic over the
+//! `NetModel` interconnect, with hyperbatch barriers ending each round at
+//! the slowest worker. The DistDGL side intentionally stays the
+//! closed-form model — its comm-bound scaling curve is the contrast.
 //!
 //! `cargo bench --bench fig7_distributed`
+//!
+//! Set `AGNES_FIG7_TINY=1` for the CI smoke configuration. Either way the
+//! bench sweeps workers × shards, **asserts** that one worker is
+//! bit-identical (loss bits + device counters) to the single-machine
+//! path on every shard count, **asserts** that the modeled epoch
+//! (storage + compute + comm) improves from 1 to 2 workers on the dense
+//! leg, and emits `target/bench_results/BENCH_fig7.json` for the bench
+//! gate.
 
 use agnes::baselines::DistDglModel;
-use agnes::coordinator::ModeledCompute;
+use agnes::config::AgnesConfig;
+use agnes::coordinator::{ComputeBackend, EpochResult, ModeledCompute};
+use agnes::runtime::dist::{DistEpochResult, DistRunner};
 use agnes::util::bench::{bench_config, run_epoch_by_name, secs, Table, MODELED_COMPUTE_NS};
+use agnes::util::json::Json;
+
+fn tiny_mode() -> bool {
+    std::env::var("AGNES_FIG7_TINY").map(|v| v == "1").unwrap_or(false)
+}
+
+/// The fig7 workload. The tiny leg shrinks the minibatch so the target
+/// stream still splits into enough minibatches that distributing them
+/// across workers matters (one lone minibatch cannot speed up).
+fn fig7_config(tiny: bool) -> AgnesConfig {
+    if tiny {
+        let mut c = bench_config("tiny", 1.0);
+        c.train.minibatch_size = 20;
+        c.train.target_fraction = 0.2;
+        c
+    } else {
+        bench_config("pa", 0.1)
+    }
+}
+
+/// One distributed leg: `workers` full stacks over a `ssds`-shard array,
+/// each with its own modeled-GPU replica.
+fn run_dist(
+    base: &AgnesConfig,
+    workers: usize,
+    ssds: u32,
+) -> anyhow::Result<(DistRunner, DistEpochResult)> {
+    let mut c = base.clone();
+    c.dist.workers = workers;
+    c.device.num_ssds = ssds;
+    let runner = DistRunner::open(c)?;
+    let mut computes: Vec<Box<dyn ComputeBackend>> = (0..workers)
+        .map(|_| Box::new(ModeledCompute::new(MODELED_COMPUTE_NS)) as Box<dyn ComputeBackend>)
+        .collect();
+    let d = runner.run_epoch(0, &mut computes)?;
+    Ok((runner, d))
+}
+
+/// Per-machine comm time of a leg: workers communicate concurrently, so
+/// the epoch pays the slowest worker's share (matches DistDGL's
+/// per-machine `comm_secs`).
+fn comm_ns(d: &DistEpochResult) -> u64 {
+    d.workers.iter().map(|w| w.comm.comm_ns).max().unwrap_or(0)
+}
+
+fn dist_json(ssds: u32, workers: usize, partitioner: &str, d: &DistEpochResult) -> Json {
+    let requests: u64 = d.workers.iter().map(|w| w.result.metrics.device.num_requests).sum();
+    let total_bytes: u64 = d.workers.iter().map(|w| w.result.metrics.device.total_bytes).sum();
+    let halo_bytes: u64 = d.workers.iter().map(|w| w.comm.halo_bytes).sum();
+    let allreduce_bytes: u64 = d.workers.iter().map(|w| w.comm.allreduce_bytes).sum();
+    Json::obj(vec![
+        ("system", Json::str("agnes-dist")),
+        ("num_ssds", Json::num(ssds as f64)),
+        ("workers", Json::num(workers as f64)),
+        ("partitioner", Json::str(partitioner)),
+        // the deterministic barrier-synchronized span the gate pins
+        ("epoch_modeled_s", Json::num(d.modeled_epoch_ns as f64 * 1e-9)),
+        ("comm_s", Json::num(comm_ns(d) as f64 * 1e-9)),
+        ("remote_fraction", Json::num(d.remote_fraction)),
+        ("edge_cut", Json::num(d.edge_cut)),
+        ("requests", Json::num(requests as f64)),
+        ("total_bytes", Json::num(total_bytes as f64)),
+        ("halo_bytes", Json::num(halo_bytes as f64)),
+        ("allreduce_bytes", Json::num(allreduce_bytes as f64)),
+        ("net_rpcs", Json::num(d.net.rpcs as f64)),
+        // hex string so the f32 bit pattern is gated exactly
+        ("loss_bits", Json::str(format!("0x{:08x}", d.mean_loss.to_bits()))),
+    ])
+}
 
 fn main() -> anyhow::Result<()> {
-    println!("=== Figure 7: AGNES vs DistDGL (PA, SAGE) ===\n");
-    let config = bench_config("pa", 0.1);
+    let tiny = tiny_mode();
+    let base = fig7_config(tiny);
+    let shards: &[u32] = if tiny { &[1, 2] } else { &[1, 4] };
+    let worker_counts: &[usize] = if tiny { &[1, 2] } else { &[1, 2, 4] };
 
-    // measured: AGNES on this substrate
-    let mut compute = ModeledCompute::new(MODELED_COMPUTE_NS);
-    let r = run_epoch_by_name("agnes", &config, &mut compute)?;
-    let agnes_total = r.metrics.sample_io_ns + r.metrics.gather_io_ns + compute.simulated_ns;
-    let num_minibatches = r.metrics.minibatches;
-    let sampled_per_mb = r.metrics.sampled_nodes / num_minibatches.max(1);
-
-    // modeled: DistDGL with the same workload volume
-    let spec =
-        agnes::graph::datasets::DatasetSpec::preset("pa", 0.1, config.dataset.feature_dim).unwrap();
-    let g = spec.generate();
-
+    println!("=== Figure 7: AGNES distributed workers vs DistDGL (PA, SAGE) ===\n");
     let mut t = Table::new(
         "fig7_distributed",
-        &["system", "machines", "epoch_s", "comm_s", "remote_frac"],
+        &["system", "machines", "num_ssds", "epoch_s", "comm_s", "remote_frac", "edge_cut"],
     );
-    t.row(vec!["agnes".into(), "1".into(), secs(agnes_total), "0".into(), "0".into()]);
-    for machines in [1usize, 2, 4] {
-        let m = DistDglModel {
-            num_machines: machines,
-            compute_per_minibatch: MODELED_COMPUTE_NS as f64 * 1e-9,
-            ..Default::default()
-        };
-        let e = m.epoch(&g, num_minibatches, sampled_per_mb, config.dataset.feature_dim);
-        t.row(vec![
-            "distdgl".into(),
-            machines.to_string(),
-            format!("{:.2}", e.total_secs),
-            format!("{:.2}", e.comm_secs),
-            format!("{:.3}", e.remote_fraction),
-        ]);
+
+    // ---- the AGNES sweep: workers × shards, real simulated epochs ------
+    let mut dist_json_rows: Vec<Json> = Vec::new();
+    let mut legs: Vec<(u32, usize, DistEpochResult)> = Vec::new();
+    let mut single: Vec<(u32, EpochResult)> = Vec::new();
+    for &ssds in shards {
+        // the single-machine reference for this shard count (also feeds
+        // the DistDGL workload volume below)
+        let mut c1 = base.clone();
+        c1.device.num_ssds = ssds;
+        let mut compute = ModeledCompute::new(MODELED_COMPUTE_NS);
+        let r = run_epoch_by_name("agnes", &c1, &mut compute)?;
+        single.push((ssds, r));
+
+        for &workers in worker_counts {
+            let (runner, d) = run_dist(&base, workers, ssds)?;
+            t.row(vec![
+                "agnes".into(),
+                workers.to_string(),
+                ssds.to_string(),
+                secs(d.modeled_epoch_ns),
+                secs(comm_ns(&d)),
+                format!("{:.3}", d.remote_fraction),
+                format!("{:.3}", d.edge_cut),
+            ]);
+            dist_json_rows.push(dist_json(ssds, workers, &runner.partitioner().to_string(), &d));
+            legs.push((ssds, workers, d));
+        }
+    }
+
+    // ---- assert: one worker IS the single-machine path, bit for bit ----
+    for &(ssds, workers, ref d) in &legs {
+        if workers != 1 {
+            continue;
+        }
+        let r = &single.iter().find(|(s, _)| *s == ssds).unwrap().1;
+        let dm = &d.workers[0].result.metrics;
+        anyhow::ensure!(
+            d.mean_loss.to_bits() == r.mean_loss.to_bits(),
+            "{ssds}-shard 1-worker loss diverged from single-machine: {:#010x} vs {:#010x}",
+            d.mean_loss.to_bits(),
+            r.mean_loss.to_bits()
+        );
+        anyhow::ensure!(
+            dm.device.num_requests == r.metrics.device.num_requests
+                && dm.device.total_bytes == r.metrics.device.total_bytes
+                && dm.device.busy_ns == r.metrics.device.busy_ns
+                && dm.minibatches == r.metrics.minibatches,
+            "{ssds}-shard 1-worker device counters diverged from single-machine"
+        );
+        anyhow::ensure!(
+            d.remote_fraction == 0.0 && d.net.bytes == 0,
+            "one worker must pay no interconnect traffic"
+        );
+    }
+
+    // ---- assert: distributing the epoch helps on the dense leg ---------
+    let dense = *shards.last().unwrap();
+    let modeled = |workers: usize| {
+        legs.iter().find(|(s, w, _)| *s == dense && *w == workers).unwrap().2.modeled_epoch_ns
+    };
+    anyhow::ensure!(
+        modeled(2) < modeled(1),
+        "2 workers must beat 1 on the dense {dense}-shard leg: {} vs {}",
+        secs(modeled(2)),
+        secs(modeled(1))
+    );
+    for &(_, workers, ref d) in &legs {
+        if workers > 1 {
+            anyhow::ensure!(
+                d.remote_fraction > 0.0 && d.remote_fraction < 1.0,
+                "{workers} workers: remote fraction {} out of (0, 1)",
+                d.remote_fraction
+            );
+            anyhow::ensure!(d.net.bytes > 0 && d.net.rpcs > 0, "{workers} workers moved no bytes");
+        }
+    }
+    println!(
+        "\ndense {dense}-shard leg: 1 worker {} -> 2 workers {} (modeled storage+compute+comm)",
+        secs(modeled(1)),
+        secs(modeled(2)),
+    );
+
+    // ---- the DistDGL contrast (analytic model, full mode only) ---------
+    let mut distdgl_json: Vec<Json> = Vec::new();
+    if !tiny {
+        let r = &single[0].1;
+        let num_minibatches = r.metrics.minibatches;
+        let sampled_per_mb = r.metrics.sampled_nodes / num_minibatches.max(1);
+        let spec =
+            agnes::graph::datasets::DatasetSpec::preset("pa", 0.1, base.dataset.feature_dim)
+                .unwrap();
+        let g = spec.generate();
+        for machines in [1usize, 2, 4] {
+            let m = DistDglModel {
+                num_machines: machines,
+                compute_per_minibatch: MODELED_COMPUTE_NS as f64 * 1e-9,
+                ..Default::default()
+            };
+            let e = m.epoch(&g, num_minibatches, sampled_per_mb, base.dataset.feature_dim);
+            t.row(vec![
+                "distdgl".into(),
+                machines.to_string(),
+                "-".into(),
+                format!("{:.2}", e.total_secs),
+                format!("{:.2}", e.comm_secs),
+                format!("{:.3}", e.remote_fraction),
+                "-".into(),
+            ]);
+            distdgl_json.push(Json::obj(vec![
+                ("system", Json::str("distdgl")),
+                ("machines", Json::num(machines as f64)),
+                ("epoch_modeled_s", Json::num(e.total_secs)),
+                ("comm_s", Json::num(e.comm_secs)),
+                ("remote_fraction", Json::num(e.remote_fraction)),
+            ]));
+        }
     }
     t.finish();
+
+    // machine-readable perf record for the trajectory
+    let report = Json::obj(vec![
+        ("bench", Json::str("fig7_distributed")),
+        ("mode", Json::str(if tiny { "tiny" } else { "bench" })),
+        ("dist", Json::arr(dist_json_rows)),
+        ("distdgl", Json::arr(distdgl_json)),
+    ]);
+    std::fs::create_dir_all("target/bench_results")?;
+    std::fs::write("target/bench_results/BENCH_fig7.json", report.to_string())?;
+    println!("\n[json] target/bench_results/BENCH_fig7.json");
+
     println!(
-        "\nShape check vs paper: AGNES on one machine is comparable to DistDGL \
-         on ~2 instances — storage I/O (intra-machine) is cheaper than \
-         inter-machine communication."
+        "\nShape check vs paper: AGNES's distributed epoch splits the storage \
+         and compute work across workers while the interconnect charge stays \
+         a small fraction of the saved time (halo features + ring all-reduce \
+         over 100 Gb/s), so the modeled epoch shortens with workers; DistDGL's \
+         analytic curve flattens as inter-machine communication takes over."
     );
     Ok(())
 }

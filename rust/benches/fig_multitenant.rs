@@ -23,7 +23,9 @@
 //! bench emits `target/bench_results/BENCH_multitenant.json`.
 
 use agnes::coordinator::NullCompute;
-use agnes::storage::device::{SharedArray, SsdArray, SsdSpec, TenantId, TenantStats, TENANT_DEFAULT};
+use agnes::storage::device::{
+    IoBatch, SharedArray, SsdArray, SsdSpec, TenantId, TenantStats, TENANT_DEFAULT,
+};
 use agnes::util::bench::{bench_config, run_epoch_by_name, Table};
 use agnes::util::json::Json;
 
@@ -62,7 +64,7 @@ fn fairness_leg(n: usize, rounds: usize) -> Vec<(TenantId, TenantStats)> {
     let batch: Vec<Vec<u64>> = (0..SHARDS).map(|_| vec![1u64 << 20; 8]).collect();
     for _ in 0..rounds {
         for t in 0..n {
-            ssd.submit_sharded_for(t as TenantId, &batch, 32);
+            ssd.submit(&IoBatch::shard_sizes(&batch).for_tenant(t as TenantId), 32);
         }
     }
     ssd.tenant_stats()
@@ -80,9 +82,9 @@ fn hot_tenant_leg(rounds: usize) -> (TenantStats, TenantStats, u32) {
     let light_batch: Vec<Vec<u64>> = (0..SHARDS).map(|_| vec![1u64 << 20; 2]).collect();
     let mut max_backoff = 0;
     for _ in 0..rounds {
-        ssd.submit_sharded_for(HOT, &hot_batch, 32);
+        ssd.submit(&IoBatch::shard_sizes(&hot_batch).for_tenant(HOT), 32);
         max_backoff = max_backoff.max(ssd.tenant_backoff(HOT));
-        ssd.submit_sharded_for(LIGHT, &light_batch, 16);
+        ssd.submit(&IoBatch::shard_sizes(&light_batch).for_tenant(LIGHT), 16);
     }
     let stats = ssd.tenant_stats();
     (stat_for(&stats, LIGHT), stat_for(&stats, HOT), max_backoff)
@@ -204,16 +206,16 @@ fn main() -> anyhow::Result<()> {
         base.metrics.device.num_requests == reg.metrics.device.num_requests
             && base.metrics.device.total_bytes == reg.metrics.device.total_bytes
             && base.metrics.device.busy_ns == reg.metrics.device.busy_ns
-            && base.metrics.shard_busy_ns == reg.metrics.shard_busy_ns,
+            && base.metrics.shards.busy_ns == reg.metrics.shards.busy_ns,
         "registering an idle tenant changed the device counters"
     );
     let train = TENANT_DEFAULT as usize;
     anyhow::ensure!(
-        reg.metrics.tenant_requests.get(train).copied().unwrap_or(0) > 0,
+        reg.metrics.tenants.get(train).map_or(0, |t| t.requests) > 0,
         "registered epoch attributed no requests to the training tenant"
     );
     anyhow::ensure!(
-        reg.metrics.tenant_stall_ns.iter().sum::<u64>() == 0,
+        reg.metrics.tenants.iter().map(|t| t.stall_ns).sum::<u64>() == 0,
         "solo training epoch accrued interference stall"
     );
 

@@ -65,6 +65,12 @@ const NUMERIC_KEYS: &[&str] = &[
     "reactive_hit_rate",
     "belady_hit_rate",
     "achieved_share",
+    "epoch_modeled_s",
+    "comm_s",
+    "remote_fraction",
+    "edge_cut",
+    "halo_bytes",
+    "allreduce_bytes",
 ];
 /// String leaf keys gated exactly (f32 bit patterns).
 const EXACT_KEYS: &[&str] = &["loss_bits"];

@@ -6,9 +6,10 @@
 //! as the datasets, see DESIGN.md §Substitutions).
 
 use crate::graph::layout::Layout;
+use crate::graph::partition::Partitioner;
 use crate::graph::reorder::{LayoutPolicy, TraceSource};
 use crate::memory::trace::CachePolicy;
-use crate::storage::device::SsdSpec;
+use crate::storage::device::{NetSpec, SsdSpec};
 use std::collections::BTreeMap;
 use std::path::Path;
 
@@ -404,6 +405,56 @@ impl Default for TenantConfig {
     }
 }
 
+/// Distributed multi-worker training knobs (`[dist]` — see
+/// [`crate::runtime::dist`]). With `workers = 1` (the default) the
+/// distributed runner degenerates to the single-machine path
+/// bit-for-bit; above 1 the graph is partitioned across workers, each
+/// with its own SSD array, and every minibatch pays a modeled halo
+/// feature exchange plus a gradient all-reduce over the [`NetSpec`]
+/// interconnect.
+#[derive(Debug, Clone)]
+pub struct DistConfig {
+    /// Number of simulated workers (machines). 1 = single-machine.
+    pub workers: usize,
+    /// Node-to-worker partitioner: `range` (contiguous, locality-
+    /// preserving) or `ldg` (greedy min-cut stand-in).
+    pub partitioner: Partitioner,
+    /// Interconnect bandwidth per worker, bytes/s (default 100 Gb/s).
+    pub net_bandwidth: f64,
+    /// Per-RPC round latency, seconds.
+    pub net_rpc_latency: f64,
+    /// Remote-fetch messages coalesced into one RPC.
+    pub net_rpc_batch: u64,
+    /// Model parameter bytes all-reduced per minibatch (ring all-reduce:
+    /// each worker moves `2 (M-1)/M` of this per step).
+    pub param_bytes: u64,
+}
+
+impl Default for DistConfig {
+    fn default() -> Self {
+        let n = NetSpec::default();
+        DistConfig {
+            workers: 1,
+            partitioner: Partitioner::Range,
+            net_bandwidth: n.bandwidth,
+            net_rpc_latency: n.rpc_latency,
+            net_rpc_batch: n.rpc_batch,
+            param_bytes: 4 << 20,
+        }
+    }
+}
+
+impl DistConfig {
+    /// The interconnect model these knobs describe.
+    pub fn net_spec(&self) -> NetSpec {
+        NetSpec {
+            bandwidth: self.net_bandwidth,
+            rpc_latency: self.net_rpc_latency,
+            rpc_batch: self.net_rpc_batch,
+        }
+    }
+}
+
 /// Top-level configuration.
 #[derive(Debug, Clone, Default)]
 pub struct AgnesConfig {
@@ -417,6 +468,7 @@ pub struct AgnesConfig {
     pub adaptive: AdaptiveConfig,
     pub serve: ServeConfig,
     pub tenant: TenantConfig,
+    pub dist: DistConfig,
 }
 
 impl AgnesConfig {
@@ -476,6 +528,7 @@ impl AgnesConfig {
         check_adaptive_min_gain(self.adaptive.min_gain).map_err(anyhow::Error::msg)?;
         check_serve(self.serve.workers, self.serve.max_inflight).map_err(anyhow::Error::msg)?;
         check_tenant(self.tenant.share, self.tenant.max_outstanding).map_err(anyhow::Error::msg)?;
+        check_dist(&self.dist).map_err(anyhow::Error::msg)?;
         Ok(())
     }
 
@@ -558,6 +611,12 @@ impl AgnesConfig {
             ("serve", "max_inflight") => self.serve.max_inflight = p(value)?,
             ("tenant", "share") => self.tenant.share = p(value)?,
             ("tenant", "max_outstanding") => self.tenant.max_outstanding = p(value)?,
+            ("dist", "workers") => self.dist.workers = p(value)?,
+            ("dist", "partitioner") => self.dist.partitioner = value.parse()?,
+            ("dist", "net_bandwidth") => self.dist.net_bandwidth = p(value)?,
+            ("dist", "net_rpc_latency") => self.dist.net_rpc_latency = p(value)?,
+            ("dist", "net_rpc_batch") => self.dist.net_rpc_batch = p(value)?,
+            ("dist", "param_bytes") => self.dist.param_bytes = p(value)?,
             _ => return Err(format!("unknown key {section}.{key}")),
         }
         Ok(())
@@ -630,6 +689,13 @@ impl AgnesConfig {
         w("\n[tenant]");
         w(&format!("share = {}", self.tenant.share));
         w(&format!("max_outstanding = {}", self.tenant.max_outstanding));
+        w("\n[dist]");
+        w(&format!("workers = {}", self.dist.workers));
+        w(&format!("partitioner = \"{}\"", self.dist.partitioner.name()));
+        w(&format!("net_bandwidth = {}", self.dist.net_bandwidth));
+        w(&format!("net_rpc_latency = {}", self.dist.net_rpc_latency));
+        w(&format!("net_rpc_batch = {}", self.dist.net_rpc_batch));
+        w(&format!("param_bytes = {}", self.dist.param_bytes));
         out
     }
 
@@ -777,6 +843,26 @@ impl AgnesConfig {
                     self.tenant.max_outstanding = m
                 }
                 _ => eprintln!("ignoring invalid AGNES_TENANT_MAX_OUTSTANDING={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_DIST_WORKERS") {
+            let mut d = self.dist.clone();
+            match v.trim().parse::<usize>() {
+                Ok(w) => {
+                    d.workers = w;
+                    if check_dist(&d).is_ok() {
+                        self.dist.workers = w;
+                    } else {
+                        eprintln!("ignoring out-of-range AGNES_DIST_WORKERS={v:?}");
+                    }
+                }
+                _ => eprintln!("ignoring invalid AGNES_DIST_WORKERS={v:?}"),
+            }
+        }
+        if let Some(v) = var("AGNES_DIST_PARTITIONER") {
+            match v.trim().parse::<Partitioner>() {
+                Ok(p) => self.dist.partitioner = p,
+                _ => eprintln!("ignoring invalid AGNES_DIST_PARTITIONER={v:?} (range | ldg)"),
             }
         }
     }
@@ -940,6 +1026,29 @@ fn check_tenant(share: f64, max_outstanding: u32) -> Result<(), String> {
         return Err(format!(
             "tenant.max_outstanding = {max_outstanding} must be <= 4096 (0 = no cap)"
         ));
+    }
+    Ok(())
+}
+
+/// Range check for the `[dist]` section (shared with env overrides, see
+/// [`check_gap_blocks`]): a zero-worker cluster is a typo, an absurd one
+/// is a typo too (each worker owns a full engine + SSD array), and the
+/// interconnect must move bytes forward in time.
+fn check_dist(d: &DistConfig) -> Result<(), String> {
+    if !(1..=64).contains(&d.workers) {
+        return Err(format!(
+            "dist.workers = {} must be in 1..=64 (each worker simulates a whole machine)",
+            d.workers
+        ));
+    }
+    if !(d.net_bandwidth > 0.0) {
+        return Err(format!("dist.net_bandwidth = {} must be > 0 bytes/s", d.net_bandwidth));
+    }
+    if d.net_rpc_latency.is_nan() || d.net_rpc_latency < 0.0 {
+        return Err(format!("dist.net_rpc_latency = {} must be >= 0 seconds", d.net_rpc_latency));
+    }
+    if d.net_rpc_batch < 1 {
+        return Err("dist.net_rpc_batch must be >= 1 message per RPC".into());
     }
     Ok(())
 }
@@ -1392,6 +1501,73 @@ mod tests {
         ]));
         assert_eq!(c.tenant.share, 0.8, "out-of-range share override ignored");
         assert_eq!(c.tenant.max_outstanding, 64, "out-of-range cap override ignored");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn dist_section_parses_and_roundtrips() {
+        let c = AgnesConfig::from_toml_str(
+            "[dist]\nworkers = 4\npartitioner = \"ldg\"\nnet_bandwidth = 1e9\n\
+             net_rpc_latency = 1e-4\nnet_rpc_batch = 64\nparam_bytes = 1048576\n",
+        )
+        .unwrap();
+        assert_eq!(c.dist.workers, 4);
+        assert_eq!(c.dist.partitioner, Partitioner::Ldg);
+        assert_eq!(c.dist.net_bandwidth, 1e9);
+        assert_eq!(c.dist.net_rpc_latency, 1e-4);
+        assert_eq!(c.dist.net_rpc_batch, 64);
+        assert_eq!(c.dist.param_bytes, 1 << 20);
+        c.validate().unwrap();
+        let back = AgnesConfig::from_toml_str(&c.to_toml()).unwrap();
+        assert_eq!(back.dist.workers, 4);
+        assert_eq!(back.dist.partitioner, Partitioner::Ldg);
+        assert_eq!(back.dist.net_bandwidth, 1e9);
+        assert_eq!(back.dist.net_rpc_latency, 1e-4);
+        assert_eq!(back.dist.net_rpc_batch, 64);
+        assert_eq!(back.dist.param_bytes, 1 << 20);
+        // defaults: single machine, range partitioner, DistDGL-style net
+        let d = AgnesConfig::default().dist;
+        assert_eq!(d.workers, 1);
+        assert_eq!(d.partitioner, Partitioner::Range);
+        assert_eq!(d.net_spec(), NetSpec::default());
+        assert_eq!(d.param_bytes, 4 << 20);
+        // bad values fail loudly, naming the key
+        assert!(AgnesConfig::from_toml_str("[dist]\npartitioner = \"metis\"\n").is_err());
+        let mut c = AgnesConfig::default();
+        c.dist.workers = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("dist.workers"));
+        let mut c = AgnesConfig::default();
+        c.dist.workers = 1000;
+        assert!(c.validate().unwrap_err().to_string().contains("dist.workers"));
+        let mut c = AgnesConfig::default();
+        c.dist.net_bandwidth = 0.0;
+        assert!(c.validate().unwrap_err().to_string().contains("dist.net_bandwidth"));
+        let mut c = AgnesConfig::default();
+        c.dist.net_rpc_batch = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("dist.net_rpc_batch"));
+    }
+
+    #[test]
+    fn dist_env_overrides_agree_with_validate() {
+        let vars = |pairs: &[(&str, &str)]| {
+            let m: std::collections::HashMap<String, String> =
+                pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+            move |name: &str| m.get(name).cloned()
+        };
+        let mut c = AgnesConfig::default();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_DIST_WORKERS", "3"),
+            ("AGNES_DIST_PARTITIONER", "ldg"),
+        ]));
+        assert_eq!(c.dist.workers, 3);
+        assert_eq!(c.dist.partitioner, Partitioner::Ldg);
+        c.validate().unwrap();
+        c.apply_overrides_from(vars(&[
+            ("AGNES_DIST_WORKERS", "0"),          // < 1
+            ("AGNES_DIST_PARTITIONER", "metis"),  // unknown
+        ]));
+        assert_eq!(c.dist.workers, 3, "out-of-range worker override ignored");
+        assert_eq!(c.dist.partitioner, Partitioner::Ldg, "invalid partitioner ignored");
         c.validate().unwrap();
     }
 

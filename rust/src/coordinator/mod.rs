@@ -737,11 +737,11 @@ mod tests {
         // per-shard accounting: one entry per shard, every shard served
         // requests on the dense sweep, bytes are conserved, and the
         // imbalance ratio is well-formed
-        assert_eq!(r1.metrics.shard_busy_ns.len(), 1);
-        assert_eq!(r4.metrics.shard_busy_ns.len(), 4);
-        let reqs = &r4.metrics.shard_requests;
+        assert_eq!(r1.metrics.shards.busy_ns.len(), 1);
+        assert_eq!(r4.metrics.shards.busy_ns.len(), 4);
+        let reqs = &r4.metrics.shards.requests;
         assert!(reqs.iter().all(|&n| n > 0), "every shard must serve requests: {reqs:?}");
-        assert_eq!(r4.metrics.shard_bytes.iter().sum::<u64>(), r4.metrics.device.total_bytes);
+        assert_eq!(r4.metrics.shards.bytes.iter().sum::<u64>(), r4.metrics.device.total_bytes);
         let imb = r4.metrics.shard_imbalance();
         assert!((1.0..=4.0).contains(&imb), "imbalance {imb}");
         assert_eq!(r1.metrics.shard_imbalance(), 1.0);
@@ -749,7 +749,7 @@ mod tests {
         // what the per-stage storage attribution sums to
         assert_eq!(
             r4.metrics.device.busy_ns,
-            *r4.metrics.shard_busy_ns.iter().max().unwrap()
+            *r4.metrics.shards.busy_ns.iter().max().unwrap()
         );
         // tiny() pins the gap knob, so the planner reports that value
         assert_eq!(r4.metrics.effective_gap_blocks, 0);

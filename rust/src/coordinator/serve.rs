@@ -15,8 +15,8 @@
 //! * **Bounded admission** — at most `serve.max_inflight` requests may
 //!   be in flight; the next one is rejected with the typed
 //!   [`ServeError::Overloaded`] instead of queueing without bound.
-//!   Rejected requests count in `serve_rejected` but never touch the
-//!   latency histogram.
+//!   Rejected requests count in `ServeMetrics::rejected` but never
+//!   touch the latency histogram.
 //! * **Latency accounting** — every completed request records its
 //!   sample/gather/compute breakdown and total latency into a log2
 //!   [`LatencyHistogram`]; [`InferenceServer::metrics`] reports
@@ -239,14 +239,16 @@ impl InferenceServer {
     pub fn metrics(&self) -> RunMetrics {
         let st = self.lock_stats();
         RunMetrics {
-            serve_requests: st.requests,
-            serve_rejected: st.rejected,
-            serve_p50_ns: st.latency.percentile(50.0),
-            serve_p95_ns: st.latency.percentile(95.0),
-            serve_p99_ns: st.latency.percentile(99.0),
-            serve_sample_ns: st.sample_ns,
-            serve_gather_ns: st.gather_ns,
-            serve_compute_ns: st.compute_ns,
+            serve: crate::metrics::ServeMetrics {
+                requests: st.requests,
+                rejected: st.rejected,
+                p50_ns: st.latency.percentile(50.0),
+                p95_ns: st.latency.percentile(95.0),
+                p99_ns: st.latency.percentile(99.0),
+                sample_ns: st.sample_ns,
+                gather_ns: st.gather_ns,
+                compute_ns: st.compute_ns,
+            },
             ..RunMetrics::default()
         }
     }
@@ -548,11 +550,11 @@ mod tests {
         }
         // all 24 requests (12 sequential + 12 concurrent) completed
         let m = server.metrics();
-        assert_eq!(m.serve_requests, 24);
-        assert_eq!(m.serve_rejected, 0);
-        assert!(m.serve_p99_ns >= m.serve_p50_ns);
-        assert!(m.serve_p50_ns > 0);
-        assert!(m.serve_sample_ns > 0 && m.serve_gather_ns > 0);
+        assert_eq!(m.serve.requests, 24);
+        assert_eq!(m.serve.rejected, 0);
+        assert!(m.serve.p99_ns >= m.serve.p50_ns);
+        assert!(m.serve.p50_ns > 0);
+        assert!(m.serve.sample_ns > 0 && m.serve.gather_ns > 0);
     }
 
     /// A compute backend that parks inside `train_step` until released,
@@ -614,8 +616,8 @@ mod tests {
 
         assert_eq!(server.inflight(), 0, "slots released after completion");
         let m = server.metrics();
-        assert_eq!(m.serve_requests, 2);
-        assert_eq!(m.serve_rejected, 1);
+        assert_eq!(m.serve.requests, 2);
+        assert_eq!(m.serve.rejected, 1);
         // the rejection left no trace in the latency accounting
         assert_eq!(server.recorded_latencies(), 2);
     }
@@ -664,8 +666,8 @@ mod tests {
 
         // every request completed exactly once per pass
         let m = server.metrics();
-        assert_eq!(m.serve_requests, 24);
-        assert_eq!(m.serve_rejected, 0);
+        assert_eq!(m.serve.requests, 24);
+        assert_eq!(m.serve.rejected, 0);
 
         // rejected reloads: out-of-range value, non-whitelisted keys
         let err = server.reload("io.gap_blocks", "9999").unwrap_err();
@@ -733,6 +735,6 @@ mod tests {
         // dropping an unused token releases without executing
         drop(server.try_admit().unwrap());
         assert_eq!(server.inflight(), 0);
-        assert_eq!(server.metrics().serve_requests, 1);
+        assert_eq!(server.metrics().serve.requests, 1);
     }
 }

@@ -161,16 +161,32 @@ impl EngineServices {
         })
     }
 
-    /// The epoch's hyperbatches: shuffled targets → minibatches →
-    /// hyperbatches (paper §4.1: minibatch 1000, hyperbatch 1024).
-    pub fn epoch_hyperbatches(&self, epoch: usize) -> Vec<Vec<Vec<u32>>> {
+    /// The epoch's shuffled target nodes (paper §4.1). Exposed separately
+    /// from [`Self::hyperbatches_from_targets`] so the distributed runner
+    /// can filter the *same* global target stream down to one worker's
+    /// partition while preserving order — with one worker the filtered
+    /// stream is the global stream, which is what makes `dist.workers = 1`
+    /// bit-identical to the single-machine path.
+    pub fn epoch_targets(&self, epoch: usize) -> Vec<u32> {
         let t = &self.config.train;
-        let targets = select_targets(
+        select_targets(
             self.dataset.spec.num_nodes,
             t.target_fraction,
             t.seed.wrapping_add(epoch as u64),
-        );
-        make_hyperbatches(make_minibatches(&targets, t.minibatch_size), t.hyperbatch_size)
+        )
+    }
+
+    /// Chunk a target stream into minibatches, then hyperbatches (paper
+    /// §4.1: minibatch 1000, hyperbatch 1024).
+    pub fn hyperbatches_from_targets(&self, targets: &[u32]) -> Vec<Vec<Vec<u32>>> {
+        let t = &self.config.train;
+        make_hyperbatches(make_minibatches(targets, t.minibatch_size), t.hyperbatch_size)
+    }
+
+    /// The epoch's hyperbatches: shuffled targets → minibatches →
+    /// hyperbatches (paper §4.1: minibatch 1000, hyperbatch 1024).
+    pub fn epoch_hyperbatches(&self, epoch: usize) -> Vec<Vec<Vec<u32>>> {
+        self.hyperbatches_from_targets(&self.epoch_targets(epoch))
     }
 
     /// Data preparation for one hyperbatch: sampling sweep + gathering
@@ -298,23 +314,16 @@ impl EngineServices {
         metrics.layout_policy = self.config.layout.policy.name().to_string();
         metrics.plan = self.engine.plan_stats();
         let per_shard = self.ssd.per_shard_stats();
-        metrics.shard_busy_ns = per_shard.iter().map(|s| s.busy_ns).collect();
-        metrics.shard_requests = per_shard.iter().map(|s| s.num_requests).collect();
-        metrics.shard_bytes = per_shard.iter().map(|s| s.total_bytes).collect();
+        metrics.shards.busy_ns = per_shard.iter().map(|s| s.busy_ns).collect();
+        metrics.shards.requests = per_shard.iter().map(|s| s.num_requests).collect();
+        metrics.shards.bytes = per_shard.iter().map(|s| s.total_bytes).collect();
         // per-tenant attribution (empty when multi-tenancy is off —
         // unregistered arrays have no tenant table)
         let tenants = self.ssd.tenant_stats();
         if let Some(n) = tenants.iter().map(|(id, _)| *id as usize + 1).max() {
-            metrics.tenant_bytes = vec![0; n];
-            metrics.tenant_requests = vec![0; n];
-            metrics.tenant_busy_ns = vec![0; n];
-            metrics.tenant_stall_ns = vec![0; n];
+            metrics.tenants = vec![TenantStats::default(); n];
             for (id, st) in &tenants {
-                let i = *id as usize;
-                metrics.tenant_bytes[i] = st.bytes;
-                metrics.tenant_requests[i] = st.requests;
-                metrics.tenant_busy_ns[i] = st.busy_ns;
-                metrics.tenant_stall_ns[i] = st.stall_ns;
+                metrics.tenants[*id as usize] = *st;
             }
         }
     }
@@ -776,7 +785,9 @@ mod tests {
         // window sums per tenant
         let per_shard: Vec<Vec<u64>> =
             (0..s.ssd.num_shards()).map(|_| vec![1u64 << 20]).collect();
-        s.ssd.submit_sharded_for(TENANT_SERVE, &per_shard, 4);
+        let batch = crate::storage::device::IoBatch::shard_sizes(&per_shard)
+            .for_tenant(TENANT_SERVE);
+        s.ssd.submit(&batch, 4);
         let w1 = window.roll(&s);
         assert_eq!(w1.tenants[TENANT_DEFAULT as usize].requests, 0);
         assert!(w1.tenants[TENANT_SERVE as usize].requests > 0);

@@ -55,6 +55,56 @@ impl Partitioning {
     }
 }
 
+/// Which partitioner assigns nodes to distributed workers (the `[dist]`
+/// config section; see `runtime::dist`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Partitioner {
+    /// Contiguous node ranges — locality-preserving under the paper's
+    /// storage layout, so each worker's partition maps to a contiguous
+    /// span of blocks on its own SSD array.
+    #[default]
+    Range,
+    /// Linear deterministic greedy streaming partitioner — the min-cut
+    /// (METIS) stand-in, minimizing the halo exchanged between workers.
+    Ldg,
+}
+
+impl Partitioner {
+    /// Stable lowercase name (config value / report label).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Partitioner::Range => "range",
+            Partitioner::Ldg => "ldg",
+        }
+    }
+
+    /// Partition `g` into `num_parts` worker shards.
+    pub fn partition(&self, g: &CsrGraph, num_parts: usize) -> Partitioning {
+        match self {
+            Partitioner::Range => range_partition(g.num_nodes(), num_parts),
+            Partitioner::Ldg => ldg_partition(g, num_parts),
+        }
+    }
+}
+
+impl std::str::FromStr for Partitioner {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Partitioner, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "range" => Ok(Partitioner::Range),
+            "ldg" => Ok(Partitioner::Ldg),
+            other => Err(format!("unknown partitioner '{other}' (range|ldg)")),
+        }
+    }
+}
+
+impl std::fmt::Display for Partitioner {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
 /// Contiguous range partitioning (equal node counts). With the paper's
 /// locality layout this is also locality-preserving.
 pub fn range_partition(num_nodes: usize, num_parts: usize) -> Partitioning {
@@ -146,5 +196,129 @@ mod tests {
         let p = range_partition(200, 8);
         let c = p.edge_cut(&g);
         assert!((0.0..=1.0).contains(&c));
+    }
+
+    #[test]
+    fn partitioner_parses_and_dispatches() {
+        use std::str::FromStr;
+        assert_eq!(Partitioner::from_str("range").unwrap(), Partitioner::Range);
+        assert_eq!(Partitioner::from_str("LDG").unwrap(), Partitioner::Ldg);
+        assert!(Partitioner::from_str("metis").is_err());
+        assert_eq!(Partitioner::default(), Partitioner::Range);
+        assert_eq!(Partitioner::Range.name(), "range");
+        assert_eq!(Partitioner::Ldg.to_string(), "ldg");
+        let g = chung_lu(&PowerLawParams { num_nodes: 64, num_edges: 400, ..Default::default() });
+        let r = Partitioner::Range.partition(&g, 4);
+        assert_eq!(r.assignment, range_partition(64, 4).assignment);
+        let l = Partitioner::Ldg.partition(&g, 4);
+        assert_eq!(l.assignment, ldg_partition(&g, 4).assignment);
+    }
+
+    /// Random graph parameters for the seeded property fans below.
+    fn random_graph(rng: &mut crate::util::Rng) -> CsrGraph {
+        let n = 50 + rng.gen_range(400);
+        let m = n + rng.gen_range(8 * n);
+        chung_lu(&PowerLawParams {
+            num_nodes: n,
+            num_edges: m,
+            seed: rng.next_u64(),
+            ..Default::default()
+        })
+    }
+
+    /// Property: the range partitioner covers every node exactly once —
+    /// `members()` is a disjoint exact cover of `0..n` — and every
+    /// assignment id is in range, for random (n, parts) shapes including
+    /// parts > n.
+    #[test]
+    fn prop_range_partition_exact_cover() {
+        for case in 0..16u64 {
+            let mut rng = crate::util::Rng::seed_from_u64(0xd157_0000 + case);
+            let n = 1 + rng.gen_range(2_000);
+            let parts = 1 + rng.gen_range(12);
+            let p = range_partition(n, parts);
+            assert_eq!(p.assignment.len(), n, "case {case}");
+            assert!(
+                p.assignment.iter().all(|&a| (a as usize) < parts),
+                "case {case}: assignment out of range"
+            );
+            let members = p.members();
+            assert_eq!(members.len(), parts, "case {case}");
+            let mut seen = vec![false; n];
+            for part in &members {
+                for &v in part {
+                    assert!(!seen[v as usize], "case {case}: node {v} assigned twice");
+                    seen[v as usize] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "case {case}: a node was never assigned");
+        }
+    }
+
+    /// Property: LDG respects its capacity cap — no partition exceeds
+    /// `ceil(n / parts) * 1.05` nodes (the linear penalty's hard wall is
+    /// soft, but the balance factor stays within the slack) — and its
+    /// edge cut is a valid fraction.
+    #[test]
+    fn prop_ldg_balanced_within_cap() {
+        for case in 0..12u64 {
+            let mut rng = crate::util::Rng::seed_from_u64(0x1d9b_0000 + case);
+            let g = random_graph(&mut rng);
+            let parts = 2 + rng.gen_range(7);
+            let p = ldg_partition(&g, parts);
+            assert_eq!(p.assignment.len(), g.num_nodes(), "case {case}");
+            let cap = g.num_nodes().div_ceil(parts) as f64 * 1.05;
+            for (i, part) in p.members().iter().enumerate() {
+                assert!(
+                    part.len() as f64 <= cap.ceil(),
+                    "case {case}: partition {i} holds {} nodes, cap {:.1}",
+                    part.len(),
+                    cap
+                );
+            }
+            let cut = p.edge_cut(&g);
+            assert!((0.0..=1.0).contains(&cut), "case {case}: cut {cut}");
+            assert!(p.balance() <= 1.05 * parts as f64, "case {case}: balance {}", p.balance());
+        }
+    }
+
+    /// Property: both partitioners are deterministic — the same graph
+    /// (regenerated from the same seed) partitions to the same
+    /// assignment, which is what lets distributed workers agree on node
+    /// ownership without coordination.
+    #[test]
+    fn prop_partitioners_deterministic() {
+        for case in 0..8u64 {
+            let mut rng_a = crate::util::Rng::seed_from_u64(0xde7e_0000 + case);
+            let mut rng_b = crate::util::Rng::seed_from_u64(0xde7e_0000 + case);
+            let ga = random_graph(&mut rng_a);
+            let gb = random_graph(&mut rng_b);
+            let parts = 2 + (case as usize % 6);
+            for part in [Partitioner::Range, Partitioner::Ldg] {
+                let pa = part.partition(&ga, parts);
+                let pb = part.partition(&gb, parts);
+                assert_eq!(pa.assignment, pb.assignment, "case {case} {part}");
+            }
+        }
+    }
+
+    /// Property: edge_cut is symmetric-consistent — counting per-node
+    /// out-neighbors over the whole graph counts every edge once, so the
+    /// single-partition cut is exactly 0 and an adversarial one-node-per-
+    /// partition split counts every inter-node edge.
+    #[test]
+    fn prop_edge_cut_extremes() {
+        for case in 0..8u64 {
+            let mut rng = crate::util::Rng::seed_from_u64(0xec07_0000 + case);
+            let g = random_graph(&mut rng);
+            let n = g.num_nodes();
+            let whole = Partitioning { num_parts: 1, assignment: vec![0; n] };
+            assert_eq!(whole.edge_cut(&g), 0.0, "case {case}");
+            let singleton =
+                Partitioning { num_parts: n, assignment: (0..n as u32).collect() };
+            let cut = singleton.edge_cut(&g);
+            // only self-loops survive a singleton split; chung_lu emits none
+            assert!(cut >= 0.999 || g.num_edges() == 0, "case {case}: cut {cut}");
+        }
     }
 }

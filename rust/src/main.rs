@@ -9,6 +9,10 @@
 //!   serve      long-running node-inference server over shared services:
 //!              a stdin command loop feeds a bounded worker pool
 //!              (admission control, latency percentiles, hot-reload)
+//!   dist       distributed multi-worker training: one full services
+//!              stack per worker over its graph partition, modeled halo
+//!              feature exchange + per-minibatch gradient all-reduce on
+//!              the configured interconnect, barrier-synchronized epochs
 //!
 //! flags (all optional):
 //!   --config <file>        flat TOML config; CLI flags override it
@@ -67,6 +71,9 @@
 //!                          remaining 1 - share
 //!   --tenant-max-outstanding <n> per-submit cap on one tenant's
 //!                          outstanding device requests (0 = no cap)
+//!   --workers <n>          dist: number of training workers (1..=64);
+//!                          1 is bit-identical to the single-machine path
+//!   --partitioner <p>      dist: node partitioner, range | ldg
 //!
 //! serve stdin protocol (one command per line):
 //!   infer <seed> <node...>        one request for the given target nodes
@@ -84,9 +91,11 @@ use agnes::coordinator::{
     InferenceServer, ModeledCompute, NullCompute, ServeError, StatsWindow,
 };
 use agnes::graph::datasets::DatasetSpec;
+use agnes::graph::partition::Partitioner;
 use agnes::graph::reorder::{LayoutPolicy, TraceSource};
 use agnes::memory::CachePolicy;
 use agnes::metrics::{fmt_bytes, fmt_ns};
+use agnes::runtime::dist::DistRunner;
 use agnes::runtime::{ArtifactPaths, XlaCompute};
 use agnes::AgnesRunner;
 use std::collections::HashMap;
@@ -249,6 +258,12 @@ fn build_config(args: &Args) -> anyhow::Result<AgnesConfig> {
     if let Some(m) = args.get::<u32>("tenant-max-outstanding")? {
         c.tenant.max_outstanding = m;
     }
+    if let Some(w) = args.get::<usize>("workers")? {
+        c.dist.workers = w;
+    }
+    if let Some(p) = args.get::<Partitioner>("partitioner")? {
+        c.dist.partitioner = p;
+    }
     // fail fast on out-of-range values whether they came from the config
     // file or from CLI overrides
     c.validate()?;
@@ -315,25 +330,27 @@ fn run_system(
                 "         shards: {} queues, imbalance={:.2} (busy {})",
                 m.num_shards(),
                 m.shard_imbalance(),
-                m.shard_busy_ns
+                m.shards
+                    .busy_ns
                     .iter()
                     .map(|&ns| fmt_ns(ns))
                     .collect::<Vec<_>>()
                     .join(" / "),
             );
         }
-        if !m.tenant_requests.is_empty() {
+        if !m.tenants.is_empty() {
             // multi-tenant run: per-tenant device attribution
             let line = m
-                .tenant_requests
+                .tenants
                 .iter()
                 .enumerate()
-                .map(|(i, &reqs)| {
+                .map(|(i, t)| {
                     format!(
-                        "t{i}: {reqs} reqs {} stall={} share={:.2}",
-                        fmt_bytes(m.tenant_bytes.get(i).copied().unwrap_or(0)),
-                        fmt_ns(m.tenant_stall_ns.get(i).copied().unwrap_or(0)),
-                        m.tenant_achieved_share(i),
+                        "t{i}: {} reqs {} stall={} share={:.2}",
+                        t.requests,
+                        fmt_bytes(t.bytes),
+                        fmt_ns(t.stall_ns),
+                        t.achieved_share(),
                     )
                 })
                 .collect::<Vec<_>>()
@@ -506,11 +523,11 @@ fn serve_loop(server: Arc<InferenceServer>, args: &Args) -> anyhow::Result<()> {
                     println!(
                         "stats: inflight={} requests={} rejected={} p50={} p95={} p99={}",
                         server.inflight(),
-                        m.serve_requests,
-                        m.serve_rejected,
-                        fmt_ns(m.serve_p50_ns),
-                        fmt_ns(m.serve_p95_ns),
-                        fmt_ns(m.serve_p99_ns),
+                        m.serve.requests,
+                        m.serve.rejected,
+                        fmt_ns(m.serve.p50_ns),
+                        fmt_ns(m.serve.p95_ns),
+                        fmt_ns(m.serve.p99_ns),
                     );
                     println!(
                         "  window: graph {:.1}% / feature {:.1}% / cache {:.1}% hit, \
@@ -560,24 +577,24 @@ fn serve_loop(server: Arc<InferenceServer>, args: &Args) -> anyhow::Result<()> {
     let m = server.metrics();
     println!(
         "serve summary: requests={} rejected={} p50={} p95={} p99={}",
-        m.serve_requests,
-        m.serve_rejected,
-        fmt_ns(m.serve_p50_ns),
-        fmt_ns(m.serve_p95_ns),
-        fmt_ns(m.serve_p99_ns),
+        m.serve.requests,
+        m.serve.rejected,
+        fmt_ns(m.serve.p50_ns),
+        fmt_ns(m.serve.p95_ns),
+        fmt_ns(m.serve.p99_ns),
     );
     println!(
         "  stage totals: sample={} gather={} compute={}",
-        fmt_ns(m.serve_sample_ns),
-        fmt_ns(m.serve_gather_ns),
-        fmt_ns(m.serve_compute_ns),
+        fmt_ns(m.serve.sample_ns),
+        fmt_ns(m.serve.gather_ns),
+        fmt_ns(m.serve.compute_ns),
     );
     println!("workers joined: {workers}");
     Ok(())
 }
 
 const HELP: &str = "agnes — storage-based GNN training (AGNES, KDD'26)\n\
-commands: gen-data | train | prep | report | serve | help\n\
+commands: gen-data | train | prep | report | serve | dist | help\n\
 see `rust/src/main.rs` header or README for flags";
 
 fn main() -> anyhow::Result<()> {
@@ -617,6 +634,69 @@ fn main() -> anyhow::Result<()> {
             let services = Arc::new(EngineServices::open(config)?);
             let server = Arc::new(InferenceServer::new(services));
             serve_loop(server, &args)?;
+        }
+        "dist" => {
+            let epochs = args.get::<usize>("epochs")?.unwrap_or(1);
+            let artifacts =
+                args.flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".to_string());
+            let modeled = args.has("modeled-compute");
+            let name = config.train.model.name().to_string();
+            if !modeled {
+                let paths = ArtifactPaths::in_dir(&artifacts, &name);
+                anyhow::ensure!(
+                    paths.exist(),
+                    "artifacts for model {name:?} not found in {artifacts:?}; run `make artifacts` \
+                     or pass --modeled-compute"
+                );
+            }
+            let runner = DistRunner::open(config)?;
+            let m = runner.num_workers();
+            println!(
+                "dist: {m} workers, partitioner={}, edge_cut={:.4}",
+                runner.partitioner(),
+                runner.edge_cut(),
+            );
+            // one model replica per worker (backends are stateful)
+            let mut computes: Vec<Box<dyn ComputeBackend>> = Vec::with_capacity(m);
+            for _ in 0..m {
+                computes.push(if modeled {
+                    Box::new(ModeledCompute::new(5_000_000))
+                } else {
+                    Box::new(XlaCompute::load(&artifacts, &name)?)
+                });
+            }
+            for epoch in 0..epochs {
+                let d = runner.run_epoch(epoch, &mut computes)?;
+                println!(
+                    "epoch {epoch}: span={} modeled={} loss={:.4} acc={:.3} remote={:.1}% | \
+                     net: {} in {} rpcs ({}/s)",
+                    fmt_ns(d.epoch_ns),
+                    fmt_ns(d.modeled_epoch_ns),
+                    d.mean_loss,
+                    d.accuracy,
+                    d.remote_fraction * 100.0,
+                    fmt_bytes(d.net.bytes),
+                    d.net.rpcs,
+                    fmt_bytes(d.net.achieved_bandwidth() as u64),
+                );
+                for (w, we) in d.workers.iter().enumerate() {
+                    let wm = &we.result.metrics;
+                    println!(
+                        "  worker {w}: {} targets, prep={} compute={} barrier={} | comm: \
+                         halo {} ({} nodes, {}), allreduce {} ({}) | {:.1}% remote",
+                        we.targets,
+                        fmt_ns(wm.prep_ns()),
+                        fmt_ns(wm.compute_ns()),
+                        fmt_ns(we.barrier_ns),
+                        fmt_bytes(we.comm.halo_bytes),
+                        we.comm.halo_messages,
+                        fmt_ns(we.comm.halo_ns),
+                        fmt_bytes(we.comm.allreduce_bytes),
+                        fmt_ns(we.comm.allreduce_ns),
+                        we.remote_fraction() * 100.0,
+                    );
+                }
+            }
         }
         "train" => {
             let system = args.get::<System>("system")?.unwrap_or(System::Agnes);

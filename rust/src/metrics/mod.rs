@@ -4,7 +4,7 @@
 //! formatting shared by the benches.
 
 use crate::runtime::controller::ControllerLog;
-use crate::storage::device::DeviceStats;
+use crate::storage::device::{DeviceStats, NetStats, TenantStats};
 use crate::storage::plan::PlanStats;
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -20,6 +20,95 @@ pub enum Stage {
     Transfer,
     /// (iv)+(v) forward/backward propagation.
     Compute,
+}
+
+/// Per-shard device counters of a sharded [`crate::storage::SsdArray`]
+/// (index = shard id; empty or length 1 for single-queue runs). Merging
+/// adds element-wise, growing to the longer shard count.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct ShardMetrics {
+    /// Per-shard busy (service) nanoseconds.
+    pub busy_ns: Vec<u64>,
+    /// Per-shard device request counts.
+    pub requests: Vec<u64>,
+    /// Per-shard bytes read.
+    pub bytes: Vec<u64>,
+}
+
+impl ShardMetrics {
+    pub fn merge(&mut self, o: &ShardMetrics) {
+        merge_stage_vec(&mut self.busy_ns, &o.busy_ns);
+        merge_stage_vec(&mut self.requests, &o.requests);
+        merge_stage_vec(&mut self.bytes, &o.bytes);
+    }
+}
+
+/// Inference-serving counters (all zero for training-only runs; see
+/// `coordinator::serve`). Request counts and stage sums add across
+/// windows; latency percentiles keep the worst observed — they don't
+/// add.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct ServeMetrics {
+    /// Requests the serving loop completed.
+    pub requests: u64,
+    /// Requests rejected by admission control (above
+    /// `serve.max_inflight`). Rejections never enter the latency
+    /// histogram.
+    pub rejected: u64,
+    /// Per-request latency percentiles over completed requests
+    /// (log2-bucketed upper bounds; see [`LatencyHistogram`]).
+    pub p50_ns: u64,
+    pub p95_ns: u64,
+    pub p99_ns: u64,
+    /// Per-stage breakdown summed over completed requests: sampling
+    /// sweep, gathering sweep, forward pass.
+    pub sample_ns: u64,
+    pub gather_ns: u64,
+    pub compute_ns: u64,
+}
+
+impl ServeMetrics {
+    pub fn merge(&mut self, o: &ServeMetrics) {
+        self.requests += o.requests;
+        self.rejected += o.rejected;
+        // percentiles don't add across windows; keep the worst observed
+        self.p50_ns = self.p50_ns.max(o.p50_ns);
+        self.p95_ns = self.p95_ns.max(o.p95_ns);
+        self.p99_ns = self.p99_ns.max(o.p99_ns);
+        self.sample_ns += o.sample_ns;
+        self.gather_ns += o.gather_ns;
+        self.compute_ns += o.compute_ns;
+    }
+}
+
+/// Interconnect traffic breakdown of one worker's distributed epoch
+/// (all zero for single-machine runs; see `runtime::dist`). Halo =
+/// remote feature fetches for sampled nodes owned by other workers;
+/// all-reduce = the per-minibatch gradient synchronization.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CommStats {
+    pub halo_bytes: u64,
+    /// Remote nodes fetched (one message each, RPC-batched on the wire).
+    pub halo_messages: u64,
+    pub halo_ns: u64,
+    pub allreduce_bytes: u64,
+    pub allreduce_ns: u64,
+    /// Total modeled communication nanoseconds (halo + all-reduce).
+    pub comm_ns: u64,
+    /// The underlying link counters (transfers, bytes, RPC rounds).
+    pub net: NetStats,
+}
+
+impl CommStats {
+    pub fn merge(&mut self, o: &CommStats) {
+        self.halo_bytes += o.halo_bytes;
+        self.halo_messages += o.halo_messages;
+        self.halo_ns += o.halo_ns;
+        self.allreduce_bytes += o.allreduce_bytes;
+        self.allreduce_ns += o.allreduce_ns;
+        self.comm_ns += o.comm_ns;
+        self.net.merge(&o.net);
+    }
 }
 
 /// Per-run metrics. Times are split into *wall* nanoseconds (CPU work
@@ -85,24 +174,13 @@ pub struct RunMetrics {
     /// sum across shards and `busy_ns` is the array elapsed (max shard
     /// clock).
     pub device: DeviceStats,
-    /// Per-shard busy nanoseconds (index = shard; empty or length 1 for
-    /// single-queue runs).
-    pub shard_busy_ns: Vec<u64>,
-    /// Per-shard device request counts.
-    pub shard_requests: Vec<u64>,
-    /// Per-shard bytes read.
-    pub shard_bytes: Vec<u64>,
-    /// Per-tenant bytes charged through the array's fair-share scheduler
-    /// (index = `TenantId`; empty when no tenant is registered — the
-    /// single-tenant fast path never touches the scheduler).
-    pub tenant_bytes: Vec<u64>,
-    /// Per-tenant device request counts.
-    pub tenant_requests: Vec<u64>,
-    /// Per-tenant modeled service nanoseconds (the tenant's own I/O).
-    pub tenant_busy_ns: Vec<u64>,
-    /// Per-tenant modeled stall nanoseconds (queueing behind other
-    /// tenants' work on shared shards).
-    pub tenant_stall_ns: Vec<u64>,
+    /// Per-shard device counters of the sharded array (empty or length 1
+    /// for single-queue runs).
+    pub shards: ShardMetrics,
+    /// Per-tenant fair-share scheduler counters (index = `TenantId`;
+    /// empty when no tenant is registered — the single-tenant fast path
+    /// never touches the scheduler).
+    pub tenants: Vec<TenantStats>,
     /// Graph-buffer cache hit ratio.
     pub graph_hit_ratio: f64,
     /// Feature-cache hit ratio.
@@ -122,23 +200,12 @@ pub struct RunMetrics {
     pub minibatches: u64,
     pub sampled_nodes: u64,
     pub gathered_features: u64,
-    /// Inference requests the serving loop completed (0 for training-only
-    /// runs; see `coordinator::serve`).
-    pub serve_requests: u64,
-    /// Inference requests rejected by admission control (above
-    /// `serve.max_inflight`). Rejections never enter the latency
-    /// histogram.
-    pub serve_rejected: u64,
-    /// Per-request latency percentiles over completed requests
-    /// (log2-bucketed upper bounds; see [`LatencyHistogram`]).
-    pub serve_p50_ns: u64,
-    pub serve_p95_ns: u64,
-    pub serve_p99_ns: u64,
-    /// Per-stage serving breakdown summed over completed requests:
-    /// sampling sweep, gathering sweep, forward pass.
-    pub serve_sample_ns: u64,
-    pub serve_gather_ns: u64,
-    pub serve_compute_ns: u64,
+    /// Inference-serving counters (all zero for training-only runs; see
+    /// `coordinator::serve`).
+    pub serve: ServeMetrics,
+    /// Interconnect traffic of a distributed worker's epoch (all zero
+    /// for single-machine runs; see `runtime::dist`).
+    pub comm: CommStats,
     /// Planner hole/run-length histograms accumulated over every coalesced
     /// plan this run issued (see `storage::plan::PlanStats`). Holes are
     /// recorded budget-independently (the workload's gap distribution);
@@ -240,7 +307,7 @@ impl RunMetrics {
 
     /// Number of device shards this run charged (1 for single-queue runs).
     pub fn num_shards(&self) -> usize {
-        self.shard_busy_ns.len().max(1)
+        self.shards.busy_ns.len().max(1)
     }
 
     /// Queue-imbalance ratio of the sharded backend: busiest shard clock
@@ -248,7 +315,7 @@ impl RunMetrics {
     /// the value for single-queue runs). Shares its definition with
     /// [`crate::storage::device::SsdArray::imbalance_ratio`].
     pub fn shard_imbalance(&self) -> f64 {
-        crate::storage::device::shard_imbalance(&self.shard_busy_ns)
+        crate::storage::device::shard_imbalance(&self.shards.busy_ns)
     }
 
     /// A tenant's achieved device share: own modeled service time over
@@ -256,13 +323,7 @@ impl RunMetrics {
     /// never went through the scheduler) — an uncontended tenant keeps
     /// the whole device.
     pub fn tenant_achieved_share(&self, tenant: usize) -> f64 {
-        let busy = self.tenant_busy_ns.get(tenant).copied().unwrap_or(0);
-        let stall = self.tenant_stall_ns.get(tenant).copied().unwrap_or(0);
-        if busy + stall == 0 {
-            1.0
-        } else {
-            busy as f64 / (busy + stall) as f64
-        }
+        self.tenants.get(tenant).copied().unwrap_or_default().achieved_share()
     }
 
     /// Graph-store hit rate over the per-store counters (graph buffer
@@ -309,25 +370,13 @@ impl RunMetrics {
         self.feature_cache_misses += o.feature_cache_misses;
         self.feature_cache_evictions += o.feature_cache_evictions;
         self.device.merge(&o.device);
-        merge_stage_vec(&mut self.shard_busy_ns, &o.shard_busy_ns);
-        merge_stage_vec(&mut self.shard_requests, &o.shard_requests);
-        merge_stage_vec(&mut self.shard_bytes, &o.shard_bytes);
-        merge_stage_vec(&mut self.tenant_bytes, &o.tenant_bytes);
-        merge_stage_vec(&mut self.tenant_requests, &o.tenant_requests);
-        merge_stage_vec(&mut self.tenant_busy_ns, &o.tenant_busy_ns);
-        merge_stage_vec(&mut self.tenant_stall_ns, &o.tenant_stall_ns);
+        self.shards.merge(&o.shards);
+        merge_tenant_vec(&mut self.tenants, &o.tenants);
         self.minibatches += o.minibatches;
         self.sampled_nodes += o.sampled_nodes;
         self.gathered_features += o.gathered_features;
-        self.serve_requests += o.serve_requests;
-        self.serve_rejected += o.serve_rejected;
-        // percentiles don't add across windows; keep the worst observed
-        self.serve_p50_ns = self.serve_p50_ns.max(o.serve_p50_ns);
-        self.serve_p95_ns = self.serve_p95_ns.max(o.serve_p95_ns);
-        self.serve_p99_ns = self.serve_p99_ns.max(o.serve_p99_ns);
-        self.serve_sample_ns += o.serve_sample_ns;
-        self.serve_gather_ns += o.serve_gather_ns;
-        self.serve_compute_ns += o.serve_compute_ns;
+        self.serve.merge(&o.serve);
+        self.comm.merge(&o.comm);
         self.plan.merge(&o.plan);
         self.controller.merge(&o.controller);
         // ratios: keep the last run's (benches report per-config runs)
@@ -353,6 +402,16 @@ fn merge_stage_vec(dst: &mut Vec<u64>, src: &[u64]) {
     }
     for (d, s) in dst.iter_mut().zip(src) {
         *d += s;
+    }
+}
+
+/// Element-wise fold of per-tenant counters, growing `dst` as needed.
+fn merge_tenant_vec(dst: &mut Vec<TenantStats>, src: &[TenantStats]) {
+    if dst.len() < src.len() {
+        dst.resize(src.len(), TenantStats::default());
+    }
+    for (d, s) in dst.iter_mut().zip(src) {
+        d.merge(s);
     }
 }
 
@@ -765,20 +824,25 @@ mod tests {
         assert_eq!(a.num_shards(), 1);
         assert_eq!(a.shard_imbalance(), 1.0, "single-queue runs are balanced by definition");
         let b = RunMetrics {
-            shard_busy_ns: vec![30, 10],
-            shard_requests: vec![3, 1],
-            shard_bytes: vec![300, 100],
+            shards: ShardMetrics {
+                busy_ns: vec![30, 10],
+                requests: vec![3, 1],
+                bytes: vec![300, 100],
+            },
             effective_gap_blocks: 4,
             ..Default::default()
         };
         assert!((b.shard_imbalance() - 1.5).abs() < 1e-12);
         assert_eq!(b.num_shards(), 2);
         a.merge(&b);
-        assert_eq!(a.shard_busy_ns, vec![30, 10]);
-        assert_eq!(a.shard_requests, vec![3, 1]);
+        assert_eq!(a.shards.busy_ns, vec![30, 10]);
+        assert_eq!(a.shards.requests, vec![3, 1]);
         assert_eq!(a.effective_gap_blocks, 4);
-        a.merge(&RunMetrics { shard_busy_ns: vec![0, 20], ..Default::default() });
-        assert_eq!(a.shard_busy_ns, vec![30, 30]);
+        a.merge(&RunMetrics {
+            shards: ShardMetrics { busy_ns: vec![0, 20], ..Default::default() },
+            ..Default::default()
+        });
+        assert_eq!(a.shards.busy_ns, vec![30, 30]);
         assert_eq!(a.shard_imbalance(), 1.0);
     }
 
@@ -787,21 +851,22 @@ mod tests {
         let mut a = RunMetrics::default();
         assert_eq!(a.tenant_achieved_share(0), 1.0, "no scheduled I/O = full share");
         let b = RunMetrics {
-            tenant_bytes: vec![400, 100],
-            tenant_requests: vec![4, 1],
-            tenant_busy_ns: vec![60, 10],
-            tenant_stall_ns: vec![20, 0],
+            tenants: vec![
+                TenantStats { bytes: 400, requests: 4, busy_ns: 60, stall_ns: 20 },
+                TenantStats { bytes: 100, requests: 1, busy_ns: 10, stall_ns: 0 },
+            ],
             ..Default::default()
         };
         assert!((b.tenant_achieved_share(0) - 0.75).abs() < 1e-12);
         assert_eq!(b.tenant_achieved_share(1), 1.0, "stall-free tenant keeps full share");
         assert_eq!(b.tenant_achieved_share(9), 1.0, "unknown tenants default to 1");
         a.merge(&b);
-        a.merge(&RunMetrics { tenant_stall_ns: vec![0, 30], ..Default::default() });
-        assert_eq!(a.tenant_bytes, vec![400, 100]);
-        assert_eq!(a.tenant_requests, vec![4, 1]);
-        assert_eq!(a.tenant_busy_ns, vec![60, 10]);
-        assert_eq!(a.tenant_stall_ns, vec![20, 30]);
+        a.merge(&RunMetrics {
+            tenants: vec![TenantStats::default(), TenantStats { stall_ns: 30, ..Default::default() }],
+            ..Default::default()
+        });
+        assert_eq!(a.tenants[0], TenantStats { bytes: 400, requests: 4, busy_ns: 60, stall_ns: 20 });
+        assert_eq!(a.tenants[1], TenantStats { bytes: 100, requests: 1, busy_ns: 10, stall_ns: 30 });
         assert!((a.tenant_achieved_share(1) - 0.25).abs() < 1e-12);
     }
 
@@ -855,31 +920,61 @@ mod tests {
     #[test]
     fn serve_metrics_merge() {
         let mut a = RunMetrics {
-            serve_requests: 10,
-            serve_rejected: 1,
-            serve_p50_ns: 100,
-            serve_p99_ns: 900,
-            serve_sample_ns: 40,
+            serve: ServeMetrics {
+                requests: 10,
+                rejected: 1,
+                p50_ns: 100,
+                p99_ns: 900,
+                sample_ns: 40,
+                ..Default::default()
+            },
             ..Default::default()
         };
         let b = RunMetrics {
-            serve_requests: 5,
-            serve_rejected: 2,
-            serve_p50_ns: 80,
-            serve_p99_ns: 1_200,
-            serve_sample_ns: 10,
-            serve_gather_ns: 7,
-            serve_compute_ns: 3,
+            serve: ServeMetrics {
+                requests: 5,
+                rejected: 2,
+                p50_ns: 80,
+                p99_ns: 1_200,
+                sample_ns: 10,
+                gather_ns: 7,
+                compute_ns: 3,
+                ..Default::default()
+            },
             ..Default::default()
         };
         a.merge(&b);
-        assert_eq!(a.serve_requests, 15, "request counts add across windows");
-        assert_eq!(a.serve_rejected, 3);
-        assert_eq!(a.serve_p50_ns, 100, "percentiles keep the worst observed");
-        assert_eq!(a.serve_p99_ns, 1_200);
-        assert_eq!(a.serve_sample_ns, 50);
-        assert_eq!(a.serve_gather_ns, 7);
-        assert_eq!(a.serve_compute_ns, 3);
+        assert_eq!(a.serve.requests, 15, "request counts add across windows");
+        assert_eq!(a.serve.rejected, 3);
+        assert_eq!(a.serve.p50_ns, 100, "percentiles keep the worst observed");
+        assert_eq!(a.serve.p99_ns, 1_200);
+        assert_eq!(a.serve.sample_ns, 50);
+        assert_eq!(a.serve.gather_ns, 7);
+        assert_eq!(a.serve.compute_ns, 3);
+    }
+
+    #[test]
+    fn comm_stats_merge() {
+        let mut a = RunMetrics {
+            comm: CommStats {
+                halo_bytes: 1_000,
+                halo_messages: 10,
+                halo_ns: 500,
+                allreduce_bytes: 2_000,
+                allreduce_ns: 700,
+                comm_ns: 1_200,
+                net: NetStats { transfers: 2, bytes: 3_000, rpcs: 11, busy_ns: 1_200 },
+            },
+            ..Default::default()
+        };
+        let b = a.clone();
+        a.merge(&b);
+        assert_eq!(a.comm.halo_bytes, 2_000);
+        assert_eq!(a.comm.halo_messages, 20);
+        assert_eq!(a.comm.comm_ns, 2_400, "comm time adds across workers");
+        assert_eq!(a.comm.net.transfers, 4);
+        assert_eq!(a.comm.net.rpcs, 22);
+        assert_eq!(a.comm.comm_ns, a.comm.halo_ns + a.comm.allreduce_ns);
     }
 
     #[test]

@@ -1,0 +1,509 @@
+//! Distributed multi-worker training over partitioned SSD arrays —
+//! the real engine behind Figure 7's AGNES-vs-DistDGL contrast
+//! (previously a closed-form analytic model; see
+//! `baselines::distdgl` for the DistDGL side, which stays analytic).
+//!
+//! [`DistRunner`] instantiates `dist.workers` full [`EngineServices`]
+//! stacks — each worker owns its own simulated SSD array, buffer
+//! pools, feature cache, and I/O engine over the shared on-disk
+//! stores — and drives synchronized epochs where every worker:
+//!
+//! 1. trains on the minibatches whose **target nodes its partition
+//!    owns** (range or LDG partitioning, `dist.partitioner`), paying
+//!    local storage I/O through the ordinary planner/engine path;
+//! 2. pays a modeled **halo exchange** for every sampled node owned by
+//!    another worker (feature vectors fetched over the [`NetModel`]
+//!    interconnect, one message per remote node, RPC-batched);
+//! 3. pays a **gradient all-reduce** per minibatch (ring: each worker
+//!    moves `2 (M-1)/M * dist.param_bytes`).
+//!
+//! Workers are simulated sequentially but timed concurrently: each
+//! hyperbatch round ends at the **slowest** worker (a barrier), and the
+//! epoch span is the sum of round maxima. With `dist.workers = 1` the
+//! partition is the whole graph, no halo or all-reduce traffic exists,
+//! and the loop is the single-machine sequential schedule —
+//! bit-identical loss and device counters (the fig7 bench asserts
+//! this).
+
+use crate::config::AgnesConfig;
+use crate::coordinator::{ComputeBackend, EngineServices, EpochResult};
+use crate::graph::partition::Partitioner;
+use crate::memory::CachePolicy;
+use crate::metrics::{CommStats, RunMetrics, SpanModel, StageTimer};
+use crate::storage::device::{NetModel, NetStats};
+use crate::Result;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One worker's share of a distributed epoch.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerEpoch {
+    /// The worker's local epoch result: storage/pipeline metrics from its
+    /// own services stack, plus its partition's loss/accuracy.
+    pub result: EpochResult,
+    /// Modeled interconnect traffic this worker initiated.
+    pub comm: CommStats,
+    /// Nanoseconds this worker idled at hyperbatch barriers waiting for
+    /// slower peers (0 for the slowest worker of every round).
+    pub barrier_ns: u64,
+    /// Target nodes this worker's partition owns this epoch.
+    pub targets: u64,
+    /// Sampled-node gathers served from the worker's own partition.
+    pub local_nodes: u64,
+    /// Sampled-node gathers owned by other workers (halo traffic).
+    pub remote_nodes: u64,
+}
+
+impl WorkerEpoch {
+    /// This worker's share of gathers that crossed the interconnect.
+    pub fn remote_fraction(&self) -> f64 {
+        let total = self.local_nodes + self.remote_nodes;
+        if total == 0 {
+            0.0
+        } else {
+            self.remote_nodes as f64 / total as f64
+        }
+    }
+}
+
+/// A synchronized distributed epoch across all workers.
+#[derive(Debug, Clone, Default)]
+pub struct DistEpochResult {
+    pub workers: Vec<WorkerEpoch>,
+    /// Steps-weighted mean training loss across workers (with one worker
+    /// this is that worker's mean loss, bit-for-bit).
+    pub mean_loss: f32,
+    pub accuracy: f32,
+    /// Barrier-synchronized epoch span: the sum over hyperbatch rounds of
+    /// the slowest worker's (prep + compute + comm) work. Includes wall
+    /// time, so it is *not* deterministic — gate on
+    /// [`Self::modeled_epoch_ns`] instead.
+    pub epoch_ns: u64,
+    /// The deterministic modeled span: simulated storage + simulated
+    /// compute + modeled comm only, barrier-synchronized the same way.
+    /// This is the "epoch storage+comm time" the fig7 sweep reports.
+    pub modeled_epoch_ns: u64,
+    /// Remote fraction of all gathers cluster-wide (0 for one worker).
+    pub remote_fraction: f64,
+    /// Edge cut of the partitioning (0 for one worker).
+    pub edge_cut: f64,
+    /// Cluster-wide interconnect counters for the epoch.
+    pub net: NetStats,
+}
+
+/// Loss/accuracy tally mirroring the coordinator's epoch tally math
+/// exactly (same accumulation order and types), so a one-worker
+/// distributed run reproduces `AgnesRunner`'s `mean_loss` bits.
+#[derive(Default)]
+struct Tally {
+    loss_sum: f64,
+    correct: u64,
+    total: u64,
+    steps: u64,
+}
+
+impl Tally {
+    fn mean_loss(&self) -> f32 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            (self.loss_sum / self.steps as f64) as f32
+        }
+    }
+
+    fn accuracy(&self) -> f32 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.correct as f32 / self.total as f32
+        }
+    }
+}
+
+/// The distributed epoch driver. See the module docs for the model.
+pub struct DistRunner {
+    workers: Vec<Arc<EngineServices>>,
+    /// `assignment[v]` = index of the worker owning node `v`.
+    assignment: Vec<u32>,
+    partitioner: Partitioner,
+    edge_cut: f64,
+    /// The shared interconnect (cluster-wide stats; per-worker traffic is
+    /// tracked in each [`WorkerEpoch::comm`]).
+    net: NetModel,
+    param_bytes: u64,
+}
+
+impl DistRunner {
+    /// Build (or reuse) the dataset and assemble one services stack per
+    /// worker. The graph is regenerated deterministically from the
+    /// dataset spec (same generator + layout relabel the store builder
+    /// used) to compute the node→worker partition; with one worker the
+    /// partition is trivially the whole graph and no generation runs.
+    pub fn open(config: AgnesConfig) -> Result<DistRunner> {
+        let m = config.dist.workers.max(1);
+        let partitioner = config.dist.partitioner;
+        let net = NetModel::new(config.dist.net_spec());
+        let param_bytes = config.dist.param_bytes;
+        let mut workers = Vec::with_capacity(m);
+        for _ in 0..m {
+            workers.push(Arc::new(EngineServices::open(config.clone())?));
+        }
+        let num_nodes = workers[0].dataset.spec.num_nodes;
+        let (assignment, edge_cut) = if m == 1 {
+            (vec![0u32; num_nodes], 0.0)
+        } else {
+            // same deterministic recipe the store builder applied, so the
+            // partition speaks the on-disk node ids
+            let spec = &workers[0].dataset.spec;
+            let g = spec.generate();
+            let perm = config.dataset.layout.permutation(&g, spec.seed);
+            let g = g.relabel(&perm);
+            let p = partitioner.partition(&g, m);
+            let cut = p.edge_cut(&g);
+            (p.assignment, cut)
+        };
+        Ok(DistRunner { workers, assignment, partitioner, edge_cut, net, param_bytes })
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn partitioner(&self) -> Partitioner {
+        self.partitioner
+    }
+
+    /// Edge cut of the active partitioning (0 with one worker).
+    pub fn edge_cut(&self) -> f64 {
+        self.edge_cut
+    }
+
+    /// The services stack of one worker (benches compare worker 0's
+    /// device counters against the single-machine path).
+    pub fn worker(&self, w: usize) -> &Arc<EngineServices> {
+        &self.workers[w]
+    }
+
+    /// Cumulative interconnect counters across all epochs so far.
+    pub fn net_stats(&self) -> NetStats {
+        self.net.stats()
+    }
+
+    /// Reset every worker's device/buffer counters and the interconnect
+    /// (between bench phases).
+    pub fn reset_counters(&self) {
+        for w in &self.workers {
+            w.reset_counters();
+        }
+        self.net.reset();
+    }
+
+    /// Run one synchronized epoch. `computes` supplies each worker's
+    /// model replica (one backend per worker, `computes.len()` must equal
+    /// [`Self::num_workers`]).
+    pub fn run_epoch(
+        &self,
+        epoch: usize,
+        computes: &mut [Box<dyn ComputeBackend>],
+    ) -> Result<DistEpochResult> {
+        let m = self.workers.len();
+        anyhow::ensure!(
+            computes.len() == m,
+            "run_epoch needs one compute backend per worker ({} != {m})",
+            computes.len()
+        );
+        // every worker derives the same global target stream (same seed)
+        // and keeps the subsequence its partition owns — order preserved,
+        // so one worker sees exactly the single-machine stream
+        let global_targets = self.workers[0].epoch_targets(epoch);
+
+        let mut worker_epochs: Vec<WorkerEpoch> = Vec::with_capacity(m);
+        // per-round (hyperbatch-index) work per worker, for barrier math:
+        // (full work incl. wall, modeled-only work)
+        let mut rounds: Vec<Vec<(u64, u64)>> = Vec::with_capacity(m);
+        let mut tally_all = Tally::default();
+
+        for (w, compute) in computes.iter_mut().enumerate() {
+            let services = &self.workers[w];
+            let targets: Vec<u32> = if m == 1 {
+                global_targets.clone()
+            } else {
+                global_targets
+                    .iter()
+                    .copied()
+                    .filter(|&v| self.assignment[v as usize] == w as u32)
+                    .collect()
+            };
+            let (we, tally, round_work) =
+                self.run_worker_epoch(epoch, services, compute.as_mut(), w, &targets)?;
+            tally_all.loss_sum += tally.loss_sum;
+            tally_all.correct += tally.correct;
+            tally_all.total += tally.total;
+            tally_all.steps += tally.steps;
+            worker_epochs.push(we);
+            rounds.push(round_work);
+        }
+
+        // barrier synchronization: each hyperbatch round ends at the
+        // slowest worker; a worker with no hyperbatch this round idles it
+        let num_rounds = rounds.iter().map(Vec::len).max().unwrap_or(0);
+        let mut epoch_ns = 0u64;
+        let mut modeled_epoch_ns = 0u64;
+        for r in 0..num_rounds {
+            let full_max = (0..m).map(|w| rounds[w].get(r).map_or(0, |x| x.0)).max().unwrap_or(0);
+            let model_max = (0..m).map(|w| rounds[w].get(r).map_or(0, |x| x.1)).max().unwrap_or(0);
+            epoch_ns += full_max;
+            modeled_epoch_ns += model_max;
+            for w in 0..m {
+                let own = rounds[w].get(r).map_or(0, |x| x.0);
+                worker_epochs[w].barrier_ns += full_max - own;
+            }
+        }
+
+        let (local, remote) = worker_epochs
+            .iter()
+            .fold((0u64, 0u64), |(l, r), we| (l + we.local_nodes, r + we.remote_nodes));
+        let mut net_epoch = NetStats::default();
+        for we in &worker_epochs {
+            net_epoch.merge(&we.comm.net);
+        }
+        Ok(DistEpochResult {
+            mean_loss: tally_all.mean_loss(),
+            accuracy: tally_all.accuracy(),
+            workers: worker_epochs,
+            epoch_ns,
+            modeled_epoch_ns,
+            remote_fraction: if local + remote == 0 {
+                0.0
+            } else {
+                remote as f64 / (local + remote) as f64
+            },
+            edge_cut: self.edge_cut,
+            net: net_epoch,
+        })
+    }
+
+    /// One worker's sequential epoch over its partition's targets —
+    /// the single-machine sequential schedule plus per-minibatch halo
+    /// and all-reduce accounting. Returns the worker summary, its loss
+    /// tally, and per-hyperbatch (full, modeled) work for barrier math.
+    fn run_worker_epoch(
+        &self,
+        epoch: usize,
+        services: &Arc<EngineServices>,
+        compute: &mut dyn ComputeBackend,
+        w: usize,
+        targets: &[u32],
+    ) -> Result<(WorkerEpoch, Tally, Vec<(u64, u64)>)> {
+        let m = self.workers.len();
+        let dim = services.dataset.spec.feature_dim as u64;
+        let mut metrics =
+            RunMetrics { pipeline_depth: 1, prepare_stages: 1, ..Default::default() };
+        let mut tally = Tally::default();
+        let mut comm = CommStats::default();
+        let mut local_nodes = 0u64;
+        let mut remote_nodes = 0u64;
+        let mut round_work = Vec::new();
+        let mut span = SpanModel::new(1);
+        let epoch_t0 = Instant::now();
+
+        for (index, hyperbatch) in
+            services.hyperbatches_from_targets(targets).into_iter().enumerate()
+        {
+            let prep_before = metrics.prep_ns();
+            let model_before = metrics.sample_io_ns + metrics.gather_io_ns;
+            let minibatches = services.prepare_hyperbatch(index, &hyperbatch, &mut metrics)?;
+            let prep_work = metrics.prep_ns() - prep_before;
+            let model_io = metrics.sample_io_ns + metrics.gather_io_ns - model_before;
+
+            // interconnect: halo features + gradient all-reduce, charged
+            // per minibatch (the synchronization quantum of data-parallel
+            // training); with one worker both terms are exactly zero
+            let mut comm_ns = 0u64;
+            for mb in &minibatches {
+                let total: u64 = mb.levels.iter().map(|l| l.len() as u64).sum();
+                let remote = if m == 1 {
+                    0
+                } else {
+                    mb.levels
+                        .iter()
+                        .flatten()
+                        .filter(|&&v| self.assignment[v as usize] != w as u32)
+                        .count() as u64
+                };
+                local_nodes += total - remote;
+                remote_nodes += remote;
+                if remote > 0 {
+                    let bytes = remote * dim * 4;
+                    let ns = self.net.transfer(bytes, remote);
+                    comm.halo_bytes += bytes;
+                    comm.halo_messages += remote;
+                    comm.halo_ns += ns;
+                    comm.net.merge(&NetStats {
+                        transfers: 1,
+                        bytes,
+                        rpcs: self.net.spec.rpcs_for(remote),
+                        busy_ns: ns,
+                    });
+                    comm_ns += ns;
+                }
+                if m > 1 {
+                    // ring all-reduce: 2 (M-1)/M of the parameters move
+                    // per worker, in 2 (M-1) pipelined rounds
+                    let bytes = 2 * (m as u64 - 1) * self.param_bytes / m as u64;
+                    let msgs = 2 * (m as u64 - 1);
+                    let ns = self.net.transfer(bytes, msgs);
+                    comm.allreduce_bytes += bytes;
+                    comm.allreduce_ns += ns;
+                    comm.net.merge(&NetStats {
+                        transfers: 1,
+                        bytes,
+                        rpcs: self.net.spec.rpcs_for(msgs),
+                        busy_ns: ns,
+                    });
+                    comm_ns += ns;
+                }
+            }
+
+            // compute, mirroring the coordinator's tally math exactly
+            let sim_before = compute.simulated_ns();
+            let wall_before = metrics.compute_wall_ns;
+            for mb in &minibatches {
+                let _t = StageTimer::new(&mut metrics.compute_wall_ns);
+                let r = compute.train_step(mb)?;
+                tally.loss_sum += r.loss as f64;
+                tally.correct += r.correct as u64;
+                tally.total += r.total as u64;
+                tally.steps += 1;
+            }
+            let comp_wall = metrics.compute_wall_ns - wall_before;
+            let comp_sim = compute.simulated_ns() - sim_before;
+            metrics.compute_sim_ns += comp_sim;
+            let comp_work = comp_wall + comp_sim;
+
+            span.advance(prep_work, comp_work + comm_ns);
+            round_work.push((prep_work + comp_work + comm_ns, model_io + comp_sim + comm_ns));
+        }
+
+        metrics.epoch_span_ns = span.span();
+        metrics.epoch_wall_ns = epoch_t0.elapsed().as_nanos() as u64;
+        services.finish_metrics(&mut metrics);
+
+        // same end-of-epoch bookkeeping the single-machine driver does:
+        // one drain, shared by Belady scheduling and the controller
+        let logs = services.drain_access_logs();
+        if services.config.cache.policy == CachePolicy::Belady {
+            services.install_belady_from(&logs);
+        }
+        let decisions =
+            services.controller_step(epoch as u32, &logs, metrics.compute_sim_ns)?;
+        metrics.controller.decisions.extend(decisions);
+        comm.comm_ns = comm.halo_ns + comm.allreduce_ns;
+        metrics.comm = comm;
+
+        let we = WorkerEpoch {
+            result: EpochResult {
+                metrics,
+                mean_loss: tally.mean_loss(),
+                accuracy: tally.accuracy(),
+            },
+            comm,
+            barrier_ns: 0,
+            targets: targets.len() as u64,
+            local_nodes,
+            remote_nodes,
+        };
+        Ok((we, tally, round_work))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{AgnesRunner, NullCompute};
+
+    fn dist_config(workers: usize, dir: &std::path::Path) -> AgnesConfig {
+        let mut c = AgnesConfig::tiny();
+        c.dataset.data_dir = dir.to_string_lossy().into_owned();
+        c.dist.workers = workers;
+        c
+    }
+
+    #[test]
+    fn one_worker_is_bit_identical_to_single_machine() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let c = dist_config(1, tmp.path());
+        let mut runner = AgnesRunner::open(c.clone()).unwrap();
+        let base = runner.run_epoch(0, &mut NullCompute).unwrap();
+
+        let dist = DistRunner::open(c).unwrap();
+        let mut computes: Vec<Box<dyn ComputeBackend>> = vec![Box::new(NullCompute)];
+        let d = dist.run_epoch(0, &mut computes).unwrap();
+
+        assert_eq!(d.workers.len(), 1);
+        assert_eq!(d.mean_loss.to_bits(), base.mean_loss.to_bits());
+        let dm = &d.workers[0].result.metrics;
+        let bm = &base.metrics;
+        assert_eq!(dm.device.num_requests, bm.device.num_requests);
+        assert_eq!(dm.device.total_bytes, bm.device.total_bytes);
+        assert_eq!(dm.device.busy_ns, bm.device.busy_ns);
+        assert_eq!(dm.minibatches, bm.minibatches);
+        // no interconnect traffic exists with one worker
+        assert_eq!(d.net, NetStats::default());
+        assert_eq!(d.remote_fraction, 0.0);
+        assert_eq!(d.edge_cut, 0.0);
+        assert_eq!(d.workers[0].remote_nodes, 0);
+        assert_eq!(d.workers[0].barrier_ns, 0);
+    }
+
+    #[test]
+    fn two_workers_split_targets_and_pay_comm() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let dist = DistRunner::open(dist_config(2, tmp.path())).unwrap();
+        let mut computes: Vec<Box<dyn ComputeBackend>> =
+            vec![Box::new(NullCompute), Box::new(NullCompute)];
+        let d = dist.run_epoch(0, &mut computes).unwrap();
+
+        assert_eq!(d.workers.len(), 2);
+        // the two partitions cover the global target stream exactly
+        let single = dist.worker(0).epoch_targets(0).len() as u64;
+        assert_eq!(d.workers[0].targets + d.workers[1].targets, single);
+        assert!(d.workers.iter().all(|w| w.targets > 0), "a worker got no targets");
+        // fanout sampling crosses partitions, so halo traffic must exist
+        assert!(d.remote_fraction > 0.0 && d.remote_fraction < 1.0);
+        assert!(d.net.bytes > 0 && d.net.rpcs > 0);
+        assert!(d.workers.iter().any(|w| w.comm.halo_bytes > 0));
+        // every minibatch all-reduces, on both workers
+        for w in &d.workers {
+            assert!(w.comm.allreduce_bytes > 0);
+            assert_eq!(
+                w.comm.comm_ns,
+                w.comm.halo_ns + w.comm.allreduce_ns,
+                "comm breakdown must sum"
+            );
+        }
+        assert!((0.0..=1.0).contains(&d.edge_cut) && d.edge_cut > 0.0);
+        // barrier: at least one worker idled (they can't tie exactly)
+        assert!(d.epoch_ns > 0 && d.modeled_epoch_ns > 0);
+    }
+
+    #[test]
+    fn dist_epochs_are_deterministic() {
+        let tmp = crate::util::TempDir::new().unwrap();
+        let c = dist_config(2, tmp.path());
+        let run = |c: &AgnesConfig| {
+            let dist = DistRunner::open(c.clone()).unwrap();
+            let mut computes: Vec<Box<dyn ComputeBackend>> =
+                vec![Box::new(NullCompute), Box::new(NullCompute)];
+            let d = dist.run_epoch(0, &mut computes).unwrap();
+            (
+                d.mean_loss.to_bits(),
+                d.modeled_epoch_ns,
+                d.remote_fraction,
+                d.net,
+                d.workers.iter().map(|w| w.result.metrics.device.num_requests).collect::<Vec<_>>(),
+            )
+        };
+        assert_eq!(run(&c), run(&c), "same seed must replay bit-identically");
+    }
+}

@@ -20,6 +20,7 @@
 //! short (last) minibatches exact: padded rows carry zero weight.
 
 pub mod controller;
+pub mod dist;
 
 use crate::coordinator::{ComputeBackend, MinibatchData, StepResult};
 use crate::Result;

@@ -24,6 +24,7 @@
 //! histogram of individual I/O sizes, plus busy-time so benches can report
 //! I/O-bandwidth utilization (Figure 11).
 
+use super::plan::RunRequest;
 use super::BlockId;
 use crate::graph::layout::StripeMap;
 use std::sync::Mutex;
@@ -318,6 +319,134 @@ struct TenantSched {
     shard_clock: Vec<u64>,
 }
 
+/// Where an I/O batch originated — a diagnostic tag carried by
+/// [`IoBatch`] so shared-array traffic stays attributable once several
+/// engines (tenants, workers) contend for the same device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum IoOrigin {
+    /// Unattributed traffic (tests, benches, raw device sweeps).
+    #[default]
+    Untagged,
+    /// Graph-topology reads (the sampling stage).
+    Graph,
+    /// Node-feature reads (the gathering stage).
+    Feature,
+    /// Inference-serving reads.
+    Serve,
+}
+
+impl IoOrigin {
+    pub fn label(&self) -> &'static str {
+        match self {
+            IoOrigin::Untagged => "untagged",
+            IoOrigin::Graph => "graph",
+            IoOrigin::Feature => "feature",
+            IoOrigin::Serve => "serve",
+        }
+    }
+}
+
+/// What an [`IoBatch`] carries: either planner-shaped coalesced runs
+/// (split at stripe boundaries and bucketed onto their owning shards at
+/// submit time) or request byte sizes already bucketed per shard.
+#[derive(Debug, Clone, Copy)]
+enum IoPayload<'a> {
+    /// Coalesced **physical** block runs; `block_size` (set via
+    /// [`IoBatch::with_block_size`]) converts block counts to bytes.
+    Runs(&'a [RunRequest]),
+    /// Pre-bucketed per-shard request byte sizes (index = shard).
+    ShardSizes(&'a [Vec<u64>]),
+}
+
+/// A typed I/O submission: the payload plus *who* it is for (tenant) and
+/// *where* it came from (origin). This is the single argument of
+/// [`SsdArray::submit`] and the stores' `charge` — it replaces the old
+/// four-way `submit_sharded` / `submit_sharded_for` / `charge_runs` /
+/// `charge_runs_as` method family with one builder-style type:
+///
+/// ```text
+/// ssd.submit(&IoBatch::shard_sizes(&per_shard), conc);            // plain
+/// ssd.submit(&IoBatch::shard_sizes(&per_shard).for_tenant(t), c); // tenant
+/// store.charge(&IoBatch::runs(&runs).for_tenant(t), c);           // runs
+/// ```
+///
+/// The default tenant is [`TENANT_DEFAULT`]; unregistered tenants keep
+/// the bit-identical direct (pre-scheduler) path.
+#[derive(Debug, Clone, Copy)]
+pub struct IoBatch<'a> {
+    payload: IoPayload<'a>,
+    tenant: TenantId,
+    origin: IoOrigin,
+    /// Bytes per block for run payloads (unused for shard sizes).
+    block_size: usize,
+}
+
+impl<'a> IoBatch<'a> {
+    /// A batch of coalesced **physical** block runs. The store that
+    /// charges it supplies the block size via
+    /// [`Self::with_block_size`]; the array then splits straddling runs
+    /// at stripe boundaries and buckets them onto their owning shards.
+    pub fn runs(runs: &'a [RunRequest]) -> IoBatch<'a> {
+        IoBatch {
+            payload: IoPayload::Runs(runs),
+            tenant: TENANT_DEFAULT,
+            origin: IoOrigin::default(),
+            block_size: 0,
+        }
+    }
+
+    /// A batch of request byte sizes already bucketed per shard
+    /// (`per_shard[i]` dispatches on shard `i`'s own queue).
+    pub fn shard_sizes(per_shard: &'a [Vec<u64>]) -> IoBatch<'a> {
+        IoBatch {
+            payload: IoPayload::ShardSizes(per_shard),
+            tenant: TENANT_DEFAULT,
+            origin: IoOrigin::default(),
+            block_size: 0,
+        }
+    }
+
+    /// Attribute the batch to `tenant` (fair-share scheduled if the
+    /// tenant is registered on the array).
+    pub fn for_tenant(mut self, tenant: TenantId) -> IoBatch<'a> {
+        self.tenant = tenant;
+        self
+    }
+
+    /// Tag the batch's origin (diagnostics only — never changes charging).
+    pub fn with_origin(mut self, origin: IoOrigin) -> IoBatch<'a> {
+        self.origin = origin;
+        self
+    }
+
+    /// Set the store block size used to convert run payloads to bytes.
+    pub fn with_block_size(mut self, block_size: usize) -> IoBatch<'a> {
+        self.block_size = block_size;
+        self
+    }
+
+    #[inline]
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+
+    #[inline]
+    pub fn origin(&self) -> IoOrigin {
+        self.origin
+    }
+
+    /// `(runs, blocks)` totals of a run payload (both zero for per-shard
+    /// size payloads) — what the stores' issue counters record.
+    pub fn run_totals(&self) -> (u64, u64) {
+        match self.payload {
+            IoPayload::Runs(runs) => {
+                (runs.len() as u64, runs.iter().map(|r| r.len as u64).sum())
+            }
+            IoPayload::ShardSizes(_) => (0, 0),
+        }
+    }
+}
+
 /// A (possibly sharded) SSD array in front of a block store.
 ///
 /// Two construction modes:
@@ -333,8 +462,8 @@ struct TenantSched {
 ///   (`num_ssds = 1` per shard — no borrowing idle shards' queue slots)
 ///   and stats. Blocks map to shards RAID0-style through a [`StripeMap`]:
 ///   each shard owns every `num_ssds`-th stripe region of the backing
-///   file. A batch charged with [`SsdArray::submit_sharded`] runs the
-///   shards concurrently, so its elapsed time is the **max** over the
+///   file. A batch charged with [`SsdArray::submit`] runs the shards
+///   concurrently, so its elapsed time is the **max** over the
 ///   per-shard charges, not the sum.
 ///
 /// With `num_ssds = 1` the two modes are bit-for-bit identical (same
@@ -429,23 +558,60 @@ impl SsdArray {
         self.shards[self.shard_of(block)].submit_one(size, concurrency)
     }
 
-    /// Charge per-shard request batches concurrently: `per_shard[i]` is
-    /// dispatched on shard `i`'s own queue, each shard clamps to its own
-    /// queue depth, and the returned elapsed nanoseconds are the **max**
-    /// over the shards (they run in parallel), not the sum.
+    /// The unified typed submission path: charge `batch` with
+    /// `concurrency` outstanding requests and return the simulated
+    /// elapsed nanoseconds (max over the shards — they run in parallel,
+    /// not in sequence).
     ///
-    /// The caller's `concurrency` outstanding requests are assigned to
-    /// the shard lanes in proportion to each lane's queued bytes
-    /// (backlog-proportional queue assignment, see [`backlog_lanes`]):
-    /// idle shards get no slots, a hot shard can absorb the entire
-    /// budget up to its own queue depth, and budget past a lane's clamp
-    /// water-fills the remaining lanes. A balanced batch degenerates to
-    /// the historical even split; a skewed one no longer wastes queue
-    /// slots on idle shards. A hot shard still cannot exceed its own
-    /// queue depth — borrowing *submission slots* is allowed, borrowing
-    /// another device's *queue* is not.
-    pub fn submit_sharded(&self, per_shard: &[Vec<u64>], concurrency: u32) -> u64 {
-        debug_assert_eq!(per_shard.len(), self.shards.len(), "per-shard batch arity");
+    /// Run payloads are split at stripe boundaries and bucketed onto
+    /// their owning shards first (see [`IoBatch::runs`]); per-shard size
+    /// payloads dispatch as given. Either way the outstanding budget is
+    /// assigned to the shard lanes in proportion to each lane's queued
+    /// bytes (backlog-proportional queue assignment, see
+    /// [`backlog_lanes`]): idle shards get no slots, a hot shard can
+    /// absorb the entire budget up to its own queue depth, and budget
+    /// past a lane's clamp water-fills the remaining lanes. A hot shard
+    /// still cannot exceed its own queue depth — borrowing *submission
+    /// slots* is allowed, borrowing another device's *queue* is not.
+    ///
+    /// Batches for a registered tenant go through the fair-share
+    /// scheduler: the charge runs with the tenant's (possibly
+    /// congestion-backed-off) outstanding budget, then waits behind
+    /// other tenants' modeled queued shard work in proportion to the
+    /// competing share weight — the fluid (byte-granular) limit of
+    /// deficit-round-robin dispatch, which guarantees each tenant at
+    /// least `share / total_active_share` of device time while it is
+    /// backlogged. Batches for unregistered tenants (and every batch on
+    /// an array with no registrations — [`TENANT_DEFAULT`] is the
+    /// builder default) take the plain direct path unchanged; a *solo*
+    /// registered tenant is also bit-identical to that path, because
+    /// with no competing occupancy every submit stalls zero and keeps
+    /// its full budget (the scheduler is work-conserving).
+    pub fn submit(&self, batch: &IoBatch<'_>, concurrency: u32) -> u64 {
+        let bucketed;
+        let per_shard: &[Vec<u64>] = match batch.payload {
+            IoPayload::ShardSizes(sizes) => {
+                debug_assert_eq!(sizes.len(), self.shards.len(), "per-shard batch arity");
+                sizes
+            }
+            IoPayload::Runs(runs) => {
+                bucketed = self.bucket_runs(runs, batch.block_size);
+                &bucketed
+            }
+        };
+        let scheduled = {
+            let sched = self.sched.lock().unwrap();
+            sched.tenants.iter().any(|t| t.id == batch.tenant)
+        };
+        if scheduled {
+            self.submit_scheduled(batch.tenant, per_shard, concurrency)
+        } else {
+            self.submit_direct(per_shard, concurrency)
+        }
+    }
+
+    /// The unscheduled per-shard dispatch behind [`Self::submit`].
+    fn submit_direct(&self, per_shard: &[Vec<u64>], concurrency: u32) -> u64 {
         let lanes = backlog_lanes(per_shard, concurrency, self.spec.queue_depth);
         let mut elapsed = 0u64;
         for ((shard, sizes), &lane) in self.shards.iter().zip(per_shard).zip(&lanes) {
@@ -454,6 +620,34 @@ impl SsdArray {
             }
         }
         elapsed
+    }
+
+    /// Group coalesced runs by owning shard. Planner-striped runs never
+    /// straddle a stripe boundary, so the common case is one charge per
+    /// run on the shard owning its start block; a straddling run from a
+    /// caller that planned without
+    /// [`IoPlanner::plan_striped`](super::plan::IoPlanner::plan_striped)
+    /// is split at the boundaries *for charging* — each shard is billed
+    /// for exactly the stripe regions it owns (on real RAID0 a
+    /// straddling request fans out to one request per device), never
+    /// silently charged to the first shard alone. With a single shard
+    /// all of this degrades to exactly the legacy one-queue batch in
+    /// run order.
+    fn bucket_runs(&self, runs: &[RunRequest], block_size: usize) -> Vec<Vec<u64>> {
+        debug_assert!(runs.is_empty() || block_size > 0, "run batches need a block size");
+        let map = self.map;
+        let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); self.shards.len()];
+        for r in runs {
+            let mut start = r.start.0;
+            let end = r.end();
+            while start < end {
+                let cut = if self.shards.len() == 1 { end } else { map.stripe_end(start).min(end) };
+                let bytes = (cut - start) as u64 * block_size as u64;
+                per_shard[map.shard_of(start) as usize].push(bytes);
+                start = cut;
+            }
+        }
+        per_shard
     }
 
     /// Register a tenant with the fair-share scheduler. `share` is the
@@ -505,39 +699,8 @@ impl SsdArray {
             .unwrap_or(0)
     }
 
-    /// [`Self::submit_sharded`] on behalf of `tenant`.
-    ///
-    /// Registered tenants go through the fair-share scheduler: the
-    /// batch is charged on the owning shards with the tenant's
-    /// (possibly congestion-backed-off) outstanding budget, then
-    /// delayed behind other tenants' modeled queued shard work in
-    /// proportion to the competing share weight — the fluid
-    /// (byte-granular) limit of deficit-round-robin dispatch, which
-    /// guarantees each tenant at least `share / total_active_share` of
-    /// device time while it is backlogged. Unregistered tenants (and
-    /// arrays with no registrations) take the plain
-    /// [`Self::submit_sharded`] path unchanged; a *solo* registered
-    /// tenant is also bit-identical to that path, because with no
-    /// competing occupancy every submit stalls zero and keeps its full
-    /// budget (the scheduler is work-conserving).
-    pub fn submit_sharded_for(
-        &self,
-        tenant: TenantId,
-        per_shard: &[Vec<u64>],
-        concurrency: u32,
-    ) -> u64 {
-        {
-            let sched = self.sched.lock().unwrap();
-            if !sched.tenants.iter().any(|t| t.id == tenant) {
-                drop(sched);
-                return self.submit_sharded(per_shard, concurrency);
-            }
-        }
-        self.submit_scheduled(tenant, per_shard, concurrency)
-    }
-
-    /// The scheduler path of [`Self::submit_sharded_for`] (tenant is
-    /// known to be registered).
+    /// The scheduler path of [`Self::submit`] (tenant is known to be
+    /// registered).
     fn submit_scheduled(&self, tenant: TenantId, per_shard: &[Vec<u64>], concurrency: u32) -> u64 {
         debug_assert_eq!(per_shard.len(), self.shards.len(), "per-shard batch arity");
         let mut sched = self.sched.lock().unwrap();
@@ -764,6 +927,120 @@ pub fn shard_imbalance(busy_ns: &[u64]) -> f64 {
     max / (total as f64 / busy_ns.len() as f64)
 }
 
+/// Static description of the cluster interconnect — the network sibling
+/// of [`SsdSpec`]. The distributed runner charges halo feature exchange
+/// and gradient all-reduce traffic against it (Figure 7's AGNES vs
+/// DistDGL contrast): a transfer pays link serialization plus one
+/// round-trip latency per batched RPC.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NetSpec {
+    /// Link bandwidth per worker, bytes/s (default 100 Gb/s Ethernet).
+    pub bandwidth: f64,
+    /// Per-RPC round latency, seconds.
+    pub rpc_latency: f64,
+    /// Messages coalesced into one RPC.
+    pub rpc_batch: u64,
+}
+
+impl Default for NetSpec {
+    fn default() -> Self {
+        NetSpec { bandwidth: 100e9 / 8.0, rpc_latency: 50e-6, rpc_batch: 512 }
+    }
+}
+
+impl NetSpec {
+    /// Modeled nanoseconds to move `bytes` as `messages` individual
+    /// messages: serialization on the link plus one latency per RPC
+    /// (messages coalesce `rpc_batch` at a time). Zero work is free —
+    /// the mirror of the device model's zero-sized-request convention.
+    pub fn transfer_ns(&self, bytes: u64, messages: u64) -> u64 {
+        if bytes == 0 && messages == 0 {
+            return 0;
+        }
+        let rpcs = self.rpcs_for(messages);
+        let t = bytes as f64 / self.bandwidth.max(1.0) + rpcs as f64 * self.rpc_latency;
+        (t * 1e9) as u64
+    }
+
+    /// RPC rounds needed for `messages` messages (at least one once any
+    /// payload moves).
+    pub fn rpcs_for(&self, messages: u64) -> u64 {
+        messages.div_ceil(self.rpc_batch.max(1)).max(1)
+    }
+}
+
+/// Cumulative interconnect statistics (simulated ns) — the network
+/// sibling of [`DeviceStats`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct NetStats {
+    /// Batched transfers accounted.
+    pub transfers: u64,
+    pub bytes: u64,
+    /// RPC rounds paid (latency term).
+    pub rpcs: u64,
+    /// Simulated link-busy nanoseconds.
+    pub busy_ns: u64,
+}
+
+impl NetStats {
+    /// Achieved link bandwidth over busy time, bytes/s.
+    pub fn achieved_bandwidth(&self) -> f64 {
+        if self.busy_ns == 0 {
+            0.0
+        } else {
+            self.bytes as f64 / (self.busy_ns as f64 * 1e-9)
+        }
+    }
+
+    pub fn merge(&mut self, other: &NetStats) {
+        self.transfers += other.transfers;
+        self.bytes += other.bytes;
+        self.rpcs += other.rpcs;
+        self.busy_ns += other.busy_ns;
+    }
+}
+
+/// The simulated interconnect: a [`NetSpec`] plus cumulative stats —
+/// the network sibling of [`SsdModel`]. Thread-safe; one instance per
+/// worker link in the distributed runner.
+#[derive(Debug)]
+pub struct NetModel {
+    pub spec: NetSpec,
+    stats: Mutex<NetStats>,
+}
+
+impl NetModel {
+    pub fn new(spec: NetSpec) -> NetModel {
+        NetModel { spec, stats: Mutex::new(NetStats::default()) }
+    }
+
+    /// Account one batched transfer of `bytes` across `messages`
+    /// messages; returns the simulated elapsed nanoseconds. Zero work
+    /// is free and never lands in the stats.
+    pub fn transfer(&self, bytes: u64, messages: u64) -> u64 {
+        let ns = self.spec.transfer_ns(bytes, messages);
+        if bytes == 0 && messages == 0 {
+            return 0;
+        }
+        let mut s = self.stats.lock().unwrap();
+        s.transfers += 1;
+        s.bytes += bytes;
+        s.rpcs += self.spec.rpcs_for(messages);
+        s.busy_ns += ns;
+        ns
+    }
+
+    /// Snapshot cumulative stats.
+    pub fn stats(&self) -> NetStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Reset counters (between bench phases).
+    pub fn reset(&self) {
+        *self.stats.lock().unwrap() = NetStats::default();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -878,7 +1155,7 @@ mod tests {
         for &(sizes, conc) in trace {
             let a = raw.submit_batch(sizes, conc);
             let b = agg.submit_batch(sizes, conc);
-            let c = sh.submit_sharded(&[sizes.to_vec()], conc);
+            let c = sh.submit(&IoBatch::shard_sizes(&[sizes.to_vec()]), conc);
             assert_eq!(a, b);
             assert_eq!(a, c);
         }
@@ -898,7 +1175,7 @@ mod tests {
         let per_shard: Vec<Vec<u64>> = (0..4).map(|_| vec![1u64 << 20; 64]).collect();
         let all: Vec<u64> = vec![1u64 << 20; 256];
         let t1 = one.submit_batch(&all, 256);
-        let t4 = four.submit_sharded(&per_shard, 256);
+        let t4 = four.submit(&IoBatch::shard_sizes(&per_shard), 256);
         assert!((t1 as f64 / t4 as f64 - 4.0).abs() < 0.05, "t1 {t1} t4 {t4}");
         // stats: bytes sum across shards, busy is the array elapsed (max)
         let s = four.stats();
@@ -922,7 +1199,7 @@ mod tests {
         // concurrency 512 splits to 128 per lane; the shard's own clamp
         // is queue_depth = 128, so the old aggregate model (clamp 512)
         // would finish 4x faster
-        let t_hot = hot.submit_sharded(&per_shard, 512);
+        let t_hot = hot.submit(&IoBatch::shard_sizes(&per_shard), 512);
         let aggregate = SsdArray::aggregate(SsdSpec::default().with_ssds(4));
         let t_agg = aggregate.submit_batch(&sizes, 512);
         assert!(
@@ -939,9 +1216,9 @@ mod tests {
         // nothing from the array (the threads are the bottleneck)
         let one = SsdArray::sharded(SsdSpec::default(), 1);
         let four = SsdArray::sharded(SsdSpec::default().with_ssds(4), 1);
-        let t1 = one.submit_sharded(&[vec![4096u64; 8000]], 16);
+        let t1 = one.submit(&IoBatch::shard_sizes(&[vec![4096u64; 8000]]), 16);
         let per_shard: Vec<Vec<u64>> = (0..4).map(|_| vec![4096u64; 2000]).collect();
-        let t4 = four.submit_sharded(&per_shard, 16);
+        let t4 = four.submit(&IoBatch::shard_sizes(&per_shard), 16);
         assert_eq!(t1, t4);
     }
 
@@ -984,10 +1261,10 @@ mod tests {
         let four = SsdArray::sharded(SsdSpec::default().with_ssds(4), 1);
         let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); 4];
         per_shard[1] = vec![4096u64; 2000];
-        let t_hot = four.submit_sharded(&per_shard, 16);
+        let t_hot = four.submit(&IoBatch::shard_sizes(&per_shard), 16);
         // identical to a lone single-shard device at the same concurrency
         let solo = SsdArray::sharded(SsdSpec::default(), 1);
-        let t_solo = solo.submit_sharded(&[per_shard[1].clone()], 16);
+        let t_solo = solo.submit(&IoBatch::shard_sizes(&[per_shard[1].clone()]), 16);
         assert_eq!(t_hot, t_solo, "idle lanes' budget must follow the backlog");
         // the old even split floored the hot lane at 16/4 = 4 outstanding
         let t_old = model(1).submit_batch(&per_shard[1], 4);
@@ -1022,8 +1299,8 @@ mod tests {
         let a = SsdArray::sharded(SsdSpec::default().with_ssds(2), 1);
         let b = SsdArray::sharded(SsdSpec::default().with_ssds(2), 1);
         let batch = vec![vec![4096u64; 50], vec![1u64 << 20; 3]];
-        let ta = a.submit_sharded_for(9, &batch, 8);
-        let tb = b.submit_sharded(&batch, 8);
+        let ta = a.submit(&IoBatch::shard_sizes(&batch).for_tenant(9), 8);
+        let tb = b.submit(&IoBatch::shard_sizes(&batch), 8);
         assert_eq!(ta, tb);
         assert!(a.tenant_stats().is_empty(), "no registrations, no tenant accounting");
     }
@@ -1044,8 +1321,8 @@ mod tests {
             (vec![Vec::new(), vec![0, 4096], Vec::new(), Vec::new()], 1),
         ];
         for (batch, conc) in &traces {
-            let a = sched.submit_sharded_for(TENANT_DEFAULT, batch, *conc);
-            let b = plain.submit_sharded(batch, *conc);
+            let a = sched.submit(&IoBatch::shard_sizes(batch).for_tenant(TENANT_DEFAULT), *conc);
+            let b = plain.submit(&IoBatch::shard_sizes(batch), *conc);
             assert_eq!(a, b);
         }
         let (ss, ps) = (sched.stats(), plain.stats());
@@ -1070,8 +1347,8 @@ mod tests {
         arr.register_tenant(1, 0.5, 0);
         let batch: Vec<Vec<u64>> = (0..4).map(|_| vec![1u64 << 20; 16]).collect();
         for _ in 0..20 {
-            arr.submit_sharded_for(0, &batch, 64);
-            arr.submit_sharded_for(1, &batch, 64);
+            arr.submit(&IoBatch::shard_sizes(&batch).for_tenant(0), 64);
+            arr.submit(&IoBatch::shard_sizes(&batch).for_tenant(1), 64);
         }
         let stats = arr.tenant_stats();
         for (id, s) in &stats {
@@ -1098,8 +1375,8 @@ mod tests {
         let light: Vec<Vec<u64>> = (0..4).map(|_| vec![1u64 << 20; 4]).collect();
         let mut saw_backoff = 0u32;
         for _ in 0..10 {
-            arr.submit_sharded_for(0, &hot, 64);
-            arr.submit_sharded_for(1, &light, 64);
+            arr.submit(&IoBatch::shard_sizes(&hot).for_tenant(0), 64);
+            arr.submit(&IoBatch::shard_sizes(&light).for_tenant(1), 64);
             saw_backoff = saw_backoff.max(arr.tenant_backoff(0));
         }
         assert!(saw_backoff > 0, "hot tenant never backed off");
@@ -1115,10 +1392,10 @@ mod tests {
         // latency-bound sweep runs at the capped depth
         let capped = SsdArray::sharded(SsdSpec::default(), 1);
         capped.register_tenant(3, 1.0, 4);
-        let t_capped = capped.submit_sharded_for(3, &[vec![4096u64; 2000]], 64);
+        let t_capped = capped.submit(&IoBatch::shard_sizes(&[vec![4096u64; 2000]]).for_tenant(3), 64);
         let free = SsdArray::sharded(SsdSpec::default(), 1);
         free.register_tenant(3, 1.0, 0);
-        let t_free = free.submit_sharded_for(3, &[vec![4096u64; 2000]], 64);
+        let t_free = free.submit(&IoBatch::shard_sizes(&[vec![4096u64; 2000]]).for_tenant(3), 64);
         assert!(
             (t_capped as f64 / t_free as f64 - 16.0).abs() < 1e-3,
             "budget 4 vs 64 outstanding: {t_capped} vs {t_free}"
@@ -1131,8 +1408,8 @@ mod tests {
         arr.register_tenant(0, 0.5, 0);
         arr.register_tenant(1, 0.5, 0);
         let batch = vec![vec![1u64 << 20; 8], vec![1u64 << 20; 8]];
-        arr.submit_sharded_for(0, &batch, 16);
-        arr.submit_sharded_for(1, &batch, 16);
+        arr.submit(&IoBatch::shard_sizes(&batch).for_tenant(0), 16);
+        arr.submit(&IoBatch::shard_sizes(&batch).for_tenant(1), 16);
         assert!(arr.tenant_stats()[1].1.stall_ns > 0);
         arr.reset();
         assert_eq!(arr.busy_ns(), 0);
@@ -1140,9 +1417,73 @@ mod tests {
             assert_eq!(s, TenantStats::default());
         }
         // still registered: the scheduler path re-engages, stall-free
-        let t = arr.submit_sharded_for(0, &batch, 16);
+        let t = arr.submit(&IoBatch::shard_sizes(&batch).for_tenant(0), 16);
         assert!(t > 0);
         assert_eq!(arr.tenant_stats()[0].1.stall_ns, 0);
+    }
+
+    // ---- IoBatch run payloads + network model ----
+
+    #[test]
+    fn run_batch_buckets_by_stripe_and_matches_shard_sizes() {
+        use crate::storage::plan::RunRequest;
+        use crate::storage::BlockId;
+        // a run payload must charge exactly like the equivalent
+        // hand-bucketed per-shard sizes (2 shards, 2-block stripes:
+        // blocks {0,1} shard 0, {2,3} shard 1, {4,5} shard 0, ...)
+        let a = SsdArray::sharded(SsdSpec::default().with_ssds(2), 2);
+        let b = SsdArray::sharded(SsdSpec::default().with_ssds(2), 2);
+        let runs = [
+            RunRequest { start: BlockId(0), len: 2 }, // shard 0
+            RunRequest { start: BlockId(1), len: 2 }, // straddles: one block each
+            RunRequest { start: BlockId(4), len: 1 }, // shard 0
+        ];
+        let batch = IoBatch::runs(&runs).with_block_size(4096);
+        assert_eq!(batch.run_totals(), (3, 5));
+        let ta = a.submit(&batch, 8);
+        let per_shard = vec![vec![8192u64, 4096, 4096], vec![4096u64]];
+        let tb = b.submit(&IoBatch::shard_sizes(&per_shard), 8);
+        assert_eq!(ta, tb);
+        let (sa, sb) = (a.stats(), b.stats());
+        assert_eq!(sa.num_requests, sb.num_requests);
+        assert_eq!(sa.total_bytes, sb.total_bytes);
+        assert_eq!(sa.busy_ns, sb.busy_ns);
+        // origin/tenant builders ride along without changing charging
+        assert_eq!(batch.with_origin(IoOrigin::Feature).origin(), IoOrigin::Feature);
+        assert_eq!(batch.tenant(), TENANT_DEFAULT);
+    }
+
+    #[test]
+    fn net_transfer_bandwidth_and_latency_terms() {
+        let spec = NetSpec::default(); // 12.5 GB/s, 50 µs, 512 msgs/RPC
+        // bandwidth term: one big batched transfer pays one latency
+        let ns = spec.transfer_ns(125_000_000, 1);
+        let expect = (125_000_000.0 / 12.5e9 + 50e-6) * 1e9;
+        assert!((ns as f64 - expect).abs() / expect < 1e-3);
+        // latency term: messages coalesce rpc_batch at a time
+        assert_eq!(spec.rpcs_for(1), 1);
+        assert_eq!(spec.rpcs_for(512), 1);
+        assert_eq!(spec.rpcs_for(513), 2);
+        assert_eq!(spec.rpcs_for(1024), 2);
+        // zero work is free
+        assert_eq!(spec.transfer_ns(0, 0), 0);
+    }
+
+    #[test]
+    fn net_model_accumulates_and_resets() {
+        let net = NetModel::new(NetSpec::default());
+        assert_eq!(net.transfer(0, 0), 0);
+        assert_eq!(net.stats(), NetStats::default(), "zero work never counted");
+        let ns = net.transfer(1 << 20, 600);
+        assert!(ns > 0);
+        let s = net.stats();
+        assert_eq!(s.transfers, 1);
+        assert_eq!(s.bytes, 1 << 20);
+        assert_eq!(s.rpcs, 2);
+        assert_eq!(s.busy_ns, ns);
+        assert!(s.achieved_bandwidth() > 0.0);
+        net.reset();
+        assert_eq!(net.stats(), NetStats::default());
     }
 
     #[test]

@@ -39,9 +39,9 @@
 //!   stage.
 
 use super::block::GraphBlock;
-use super::device::{TenantId, TENANT_DEFAULT};
+use super::device::{IoBatch, IoOrigin, TenantId, TENANT_DEFAULT};
 use super::plan::{BlockBytes, IoPlanner, PlanRecorder, PlanStats, RunRequest};
-use super::store::{FeatureStore, GraphStore};
+use super::store::{ChargeTarget, FeatureStore, GraphStore};
 use super::BlockId;
 use crate::Result;
 use std::collections::HashMap;
@@ -288,6 +288,25 @@ impl IoEngine {
         self.num_threads as u32 * self.async_depth
     }
 
+    /// The engine's single charging entry point: account a batch of
+    /// planned runs against `target`'s device array as one typed
+    /// [`IoBatch`] — attributed to this engine's tenant, tagged with
+    /// `origin`, at the engine's effective concurrency. Both block
+    /// stores are [`ChargeTarget`]s, which is what collapses the old
+    /// per-store `charge_runs`/`charge_runs_as` family into one pair
+    /// with [`SsdArray::submit`](super::device::SsdArray::submit).
+    pub fn charge<T: ChargeTarget + ?Sized>(
+        &self,
+        target: &T,
+        runs: &[RunRequest],
+        origin: IoOrigin,
+    ) -> u64 {
+        target.charge(
+            &IoBatch::runs(runs).for_tenant(self.tenant).with_origin(origin),
+            self.effective_concurrency(),
+        )
+    }
+
     /// Install (or with `None` clear) the runtime controller's per-epoch
     /// gap-budget override. Takes effect on the next planned batch, on
     /// every clone of this engine.
@@ -385,7 +404,7 @@ impl IoEngine {
                 .map(|(i, p)| (remap.logical(p), GraphBlock::decode(&raw[i * bs..(i + 1) * bs])))
                 .collect::<Vec<_>>())
         })?;
-        store.charge_runs_as(self.tenant, runs, self.effective_concurrency());
+        self.charge(store, runs, IoOrigin::Graph);
         Ok(per_run.into_iter().flatten().collect())
     }
 
@@ -411,7 +430,7 @@ impl IoEngine {
                 .map(|(i, p)| (remap.logical(p), BlockBytes::slice_of(raw.clone(), i * bs, bs)))
                 .collect::<Vec<_>>())
         })?;
-        store.charge_runs_as(self.tenant, runs, self.effective_concurrency());
+        self.charge(store, runs, IoOrigin::Feature);
         Ok(per_run.into_iter().flatten().collect())
     }
 

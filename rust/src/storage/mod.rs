@@ -27,11 +27,14 @@ pub use block::{FeatureBlockLayout, GraphBlock, ObjectRecord, BLOCK_HEADER_BYTES
 pub use builder::{
     apply_block_remap, build_feature_store, build_graph_store, LayoutMeta, StorePaths,
 };
-pub use device::{shard_imbalance, DeviceStats, IoClass, SharedArray, SsdArray, SsdModel, SsdSpec};
+pub use device::{
+    shard_imbalance, DeviceStats, IoBatch, IoClass, IoOrigin, NetModel, NetSpec, NetStats,
+    SharedArray, SsdArray, SsdModel, SsdSpec,
+};
 pub use engine::IoEngine;
 pub use object_index::ObjectIndexTable;
 pub use plan::{BlockBytes, IoPlanner, RunRequest};
-pub use store::{FeatureStore, GraphStore};
+pub use store::{ChargeTarget, FeatureStore, GraphStore};
 
 /// Identifier of a fixed-size block within one store file.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]

@@ -4,9 +4,8 @@
 
 use super::block::{FeatureBlockLayout, GraphBlock};
 use super::builder::{GraphStoreMeta, LayoutMeta, StorePaths};
-use super::device::{SharedArray, TenantId, TENANT_DEFAULT};
+use super::device::{IoBatch, SharedArray};
 use super::object_index::ObjectIndexTable;
-use super::plan::RunRequest;
 use super::BlockId;
 use crate::graph::layout::{BlockRemap, StripeMap};
 use crate::Result;
@@ -41,7 +40,7 @@ pub struct GraphStore {
     /// `layout.policy` other than `none`). **Logical** ids are what every
     /// caller-facing block API speaks; **physical** ids appear only in
     /// run-shaped APIs ([`Self::read_run_raw_uncharged`],
-    /// [`Self::charge_runs`]) because a run must be contiguous *on disk*
+    /// [`Self::charge`]) because a run must be contiguous *on disk*
     /// and a device charge must land on the shard that physically owns
     /// the bytes.
     remap: RwLock<Arc<BlockRemap>>,
@@ -52,7 +51,7 @@ pub struct GraphStore {
     /// only reads the feature store).
     charged_ns: AtomicU64,
     /// Coalesced run requests issued against this store (see
-    /// [`Self::charge_runs`]).
+    /// [`Self::charge`]).
     runs_issued: AtomicU64,
     /// Blocks delivered through those runs (>= requested blocks when the
     /// planner bridged gaps).
@@ -153,29 +152,24 @@ impl GraphStore {
         self.ssd.stripe_map()
     }
 
-    /// Charge a batch of *coalesced run* reads — one device request per
-    /// run, which is the whole point of the planner (the per-block path
-    /// charges one request per block). Runs are **physical** (see
-    /// [`Self::read_run_raw_uncharged`]), grouped by the shard that owns
-    /// them (the planner's stripe-split guarantees a run never straddles
-    /// shards) and each shard's group is charged on that shard's own
-    /// queue concurrently: the returned — and attributed — elapsed time
-    /// is the max over the shards, not the sum.
-    pub fn charge_runs(&self, runs: &[RunRequest], concurrency: u32) -> u64 {
-        self.charge_runs_as(TENANT_DEFAULT, runs, concurrency)
-    }
-
-    /// [`Self::charge_runs`] on behalf of a tenant: the device charge
-    /// goes through the array's fair-share scheduler when the tenant is
-    /// registered (see
-    /// [`SsdArray::register_tenant`](super::device::SsdArray::register_tenant)),
-    /// so the attributed elapsed time includes any modeled stall behind
-    /// other tenants' queued work. Unregistered tenants charge exactly
-    /// like [`Self::charge_runs`].
-    pub fn charge_runs_as(&self, tenant: TenantId, runs: &[RunRequest], concurrency: u32) -> u64 {
-        let ns = charge_runs_sharded(&self.ssd, tenant, runs, self.meta.block_size, concurrency);
-        self.runs_issued.fetch_add(runs.len() as u64, Ordering::Relaxed);
-        let blocks: u64 = runs.iter().map(|r| r.len as u64).sum();
+    /// Charge a typed [`IoBatch`] against this store's device array,
+    /// attributing the simulated elapsed time to this store. Run
+    /// payloads are the planner path — one device request per run (the
+    /// whole point over the per-block path's request-per-block), each
+    /// charged on the shard that physically owns it, concurrently: the
+    /// returned — and attributed — elapsed time is the max over the
+    /// shards, not the sum. Runs are **physical** (see
+    /// [`Self::read_run_raw_uncharged`]). The batch's tenant routes the
+    /// charge through the array's fair-share scheduler when registered
+    /// (see [`SsdArray::register_tenant`](super::device::SsdArray::register_tenant)),
+    /// so the attributed time then includes any modeled stall behind
+    /// other tenants' queued work; unregistered tenants (the
+    /// [`IoBatch::runs`] default) charge on the bit-identical direct
+    /// path.
+    pub fn charge(&self, batch: &IoBatch<'_>, concurrency: u32) -> u64 {
+        let (runs, blocks) = batch.run_totals();
+        let ns = self.ssd.submit(&batch.with_block_size(self.meta.block_size), concurrency);
+        self.runs_issued.fetch_add(runs, Ordering::Relaxed);
         self.run_blocks.fetch_add(blocks, Ordering::Relaxed);
         self.charged_ns.fetch_add(ns, Ordering::Relaxed);
         ns
@@ -247,7 +241,7 @@ impl GraphStore {
     /// Read a coalesced run of `len` consecutive **physical** blocks
     /// starting at `start` with **one** `pread`, without charging the
     /// device model (the engine charges one request per run via
-    /// [`Self::charge_runs`]). Run requests are always physical — a run
+    /// [`Self::charge`]). Run requests are always physical — a run
     /// is only sequential on disk in physical space; callers translate
     /// each delivered block back to its logical id via [`Self::remap`].
     pub fn read_run_raw_uncharged(&self, start: BlockId, len: u32) -> Result<Vec<u8>> {
@@ -320,7 +314,7 @@ pub struct FeatureStore {
     /// Simulated device ns charged through this store (see
     /// [`GraphStore::charged_ns`]).
     charged_ns: AtomicU64,
-    /// Coalesced run requests issued (see [`GraphStore::charge_runs`]).
+    /// Coalesced run requests issued (see [`GraphStore::charge`]).
     runs_issued: AtomicU64,
     /// Blocks delivered through those runs.
     run_blocks: AtomicU64,
@@ -424,19 +418,14 @@ impl FeatureStore {
         self.ssd.stripe_map()
     }
 
-    /// Charge a batch of coalesced run reads, each run on its owning
-    /// shard's queue (one device request per run — see
-    /// [`GraphStore::charge_runs`]).
-    pub fn charge_runs(&self, runs: &[RunRequest], concurrency: u32) -> u64 {
-        self.charge_runs_as(TENANT_DEFAULT, runs, concurrency)
-    }
-
-    /// [`Self::charge_runs`] on behalf of a tenant (see
-    /// [`GraphStore::charge_runs_as`]).
-    pub fn charge_runs_as(&self, tenant: TenantId, runs: &[RunRequest], concurrency: u32) -> u64 {
-        let ns = charge_runs_sharded(&self.ssd, tenant, runs, self.layout.block_size, concurrency);
-        self.runs_issued.fetch_add(runs.len() as u64, Ordering::Relaxed);
-        let blocks: u64 = runs.iter().map(|r| r.len as u64).sum();
+    /// Charge a typed [`IoBatch`] against this store's device array,
+    /// attributed to this store (run payloads are one device request per
+    /// run on its owning shard's queue; tenant-routed — see
+    /// [`GraphStore::charge`]).
+    pub fn charge(&self, batch: &IoBatch<'_>, concurrency: u32) -> u64 {
+        let (runs, blocks) = batch.run_totals();
+        let ns = self.ssd.submit(&batch.with_block_size(self.layout.block_size), concurrency);
+        self.runs_issued.fetch_add(runs, Ordering::Relaxed);
         self.run_blocks.fetch_add(blocks, Ordering::Relaxed);
         self.charged_ns.fetch_add(ns, Ordering::Relaxed);
         ns
@@ -482,7 +471,7 @@ impl FeatureStore {
 
     /// Read a coalesced run of `len` consecutive **physical** feature
     /// blocks with one `pread` (uncharged — the engine charges one
-    /// request per run via [`Self::charge_runs`]; see
+    /// request per run via [`Self::charge`]; see
     /// [`GraphStore::read_run_raw_uncharged`] for the physical-id
     /// contract). Per-block EOF semantics are preserved: a run whose
     /// *last block* starts beyond EOF is a phantom read and an error,
@@ -537,36 +526,26 @@ impl FeatureStore {
     }
 }
 
-/// Group coalesced runs by owning shard and charge each shard's group on
-/// its own queue (elapsed = max over shards). Planner-striped runs never
-/// straddle a stripe boundary, so the common case is one charge per run
-/// on the shard owning its start block; a straddling run from a caller
-/// that planned without [`IoPlanner::plan_striped`](super::plan::IoPlanner::plan_striped)
-/// is split at the boundaries *for charging* — each shard is billed for
-/// exactly the stripe regions it owns (on real RAID0 a straddling
-/// request fans out to one request per device), never silently charged
-/// to the first shard alone. With a single shard all of this degrades to
-/// exactly the legacy one-queue batch in run order.
-fn charge_runs_sharded(
-    ssd: &SharedArray,
-    tenant: TenantId,
-    runs: &[RunRequest],
-    block_size: usize,
-    concurrency: u32,
-) -> u64 {
-    let map = ssd.stripe_map();
-    let mut per_shard: Vec<Vec<u64>> = vec![Vec::new(); ssd.num_shards()];
-    for r in runs {
-        let mut start = r.start.0;
-        let end = r.end();
-        while start < end {
-            let cut = if ssd.num_shards() == 1 { end } else { map.stripe_end(start).min(end) };
-            let bytes = (cut - start) as u64 * block_size as u64;
-            per_shard[map.shard_of(start) as usize].push(bytes);
-            start = cut;
-        }
+/// Anything an [`IoEngine`](super::engine::IoEngine) can charge a typed
+/// [`IoBatch`] against. Both block stores implement it (attributing the
+/// elapsed time to their own per-store clock), which is what lets the
+/// engine keep **one** `charge` entry point across graph and feature
+/// traffic.
+pub trait ChargeTarget {
+    /// Charge the batch; returns the attributed simulated nanoseconds.
+    fn charge(&self, batch: &IoBatch<'_>, concurrency: u32) -> u64;
+}
+
+impl ChargeTarget for GraphStore {
+    fn charge(&self, batch: &IoBatch<'_>, concurrency: u32) -> u64 {
+        GraphStore::charge(self, batch, concurrency)
     }
-    ssd.submit_sharded_for(tenant, &per_shard, concurrency)
+}
+
+impl ChargeTarget for FeatureStore {
+    fn charge(&self, batch: &IoBatch<'_>, concurrency: u32) -> u64 {
+        FeatureStore::charge(self, batch, concurrency)
+    }
 }
 
 #[cfg(test)]
@@ -654,7 +633,7 @@ mod tests {
 
     #[test]
     fn sharded_run_charges_land_on_owning_shards() {
-        use crate::storage::device::SsdArray;
+        use crate::storage::device::{IoBatch, SsdArray};
         use crate::storage::plan::RunRequest;
         let (_d, paths, _g) = setup();
         // 2 shards, 2-block stripes: blocks {0,1} shard0, {2,3} shard1, ...
@@ -665,7 +644,7 @@ mod tests {
             RunRequest { start: BlockId(2), len: 2 }, // shard 1
             RunRequest { start: BlockId(4), len: 1 }, // shard 0
         ];
-        let ns = store.charge_runs(&runs, 8);
+        let ns = store.charge(&IoBatch::runs(&runs), 8);
         let per = arr.per_shard_stats();
         assert_eq!(per[0].num_requests, 2);
         assert_eq!(per[1].num_requests, 1);
@@ -683,7 +662,7 @@ mod tests {
 
     #[test]
     fn straddling_run_is_charged_per_owning_shard() {
-        use crate::storage::device::SsdArray;
+        use crate::storage::device::{IoBatch, SsdArray};
         use crate::storage::plan::RunRequest;
         let (_d, paths, _g) = setup();
         let arr = SsdArray::sharded(SsdSpec::default().with_ssds(2), 2);
@@ -692,7 +671,7 @@ mod tests {
         // straddle the stripe boundary at 2. The charge must fan out like
         // a real RAID0 straddling request — one per device region — not
         // land wholly on the start shard.
-        store.charge_runs(&[RunRequest { start: BlockId(1), len: 2 }], 4);
+        store.charge(&IoBatch::runs(&[RunRequest { start: BlockId(1), len: 2 }]), 4);
         let per = arr.per_shard_stats();
         assert_eq!(per[0].num_requests, 1);
         assert_eq!(per[1].num_requests, 1);

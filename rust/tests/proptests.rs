@@ -366,7 +366,8 @@ fn prop_single_shard_charges_match_prerefactor_model() {
                 (0..n).map(|_| [4096u64, 65536, 262144, 1 << 20][rng.gen_range(4)]).collect();
             let conc = 1 + rng.gen_range(256) as u32;
             let a = legacy.submit_batch(&sizes, conc);
-            let b = sharded.submit_sharded(&[sizes.clone()], conc);
+            let lanes = [sizes.clone()];
+            let b = sharded.submit(&agnes::storage::IoBatch::shard_sizes(&lanes), conc);
             assert_eq!(a, b, "case {case}: per-batch elapsed diverged");
         }
         let (l, s) = (legacy.stats(), sharded.stats());

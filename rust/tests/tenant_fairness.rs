@@ -14,7 +14,7 @@
 //!   `share / total_active_share` of device time no matter how much
 //!   volume a competing hot tenant pushes.
 
-use agnes::storage::device::{SsdArray, SsdSpec, TenantId};
+use agnes::storage::device::{IoBatch, SsdArray, SsdSpec, TenantId};
 use agnes::util::Rng;
 
 const LIGHT: TenantId = 0;
@@ -61,8 +61,8 @@ fn prop_work_conserving_solo_tenant_is_bit_identical() {
         for step in 0..32 {
             let batch = random_batch(&mut rng, shards as usize);
             let conc = 1 + rng.gen_range(64) as u32;
-            let a = scheduled.submit_sharded_for(LIGHT, &batch, conc);
-            let b = plain.submit_sharded(&batch, conc);
+            let a = scheduled.submit(&IoBatch::shard_sizes(&batch).for_tenant(LIGHT), conc);
+            let b = plain.submit(&IoBatch::shard_sizes(&batch), conc);
             assert_eq!(a, b, "case {case} step {step}: solo elapsed diverged");
         }
         for (i, (s, p)) in scheduled
@@ -99,8 +99,9 @@ fn prop_work_conserving_after_competitor_departs() {
         // contention phase: hot pushes 10x volume
         for _ in 0..16 {
             let hot: Vec<Vec<u64>> = (0..4).map(|_| vec![1u64 << 21; 10]).collect();
-            ssd.submit_sharded_for(HOT, &hot, 32);
-            ssd.submit_sharded_for(LIGHT, &random_nonempty_batch(&mut rng, 4), 32);
+            ssd.submit(&IoBatch::shard_sizes(&hot).for_tenant(HOT), 32);
+            let light = random_nonempty_batch(&mut rng, 4);
+            ssd.submit(&IoBatch::shard_sizes(&light).for_tenant(LIGHT), 32);
         }
 
         // departure: the light tenant keeps going alone; its stall must
@@ -108,7 +109,8 @@ fn prop_work_conserving_after_competitor_departs() {
         let mut quiet = 0;
         let mut last_stall = 0;
         for step in 0..400 {
-            ssd.submit_sharded_for(LIGHT, &random_nonempty_batch(&mut rng, 4), 32);
+            let batch = random_nonempty_batch(&mut rng, 4);
+            ssd.submit(&IoBatch::shard_sizes(&batch).for_tenant(LIGHT), 32);
             let stats = ssd.tenant_stats();
             let light = stats.iter().find(|(id, _)| *id == LIGHT).unwrap().1;
             if step > 0 && light.stall_ns == last_stall {
@@ -147,8 +149,9 @@ fn prop_light_tenant_never_starves() {
             let volume = 4 + rng.gen_range(12);
             let hot: Vec<Vec<u64>> =
                 (0..4).map(|_| vec![1u64 << 21; volume]).collect();
-            ssd.submit_sharded_for(HOT, &hot, 32);
-            ssd.submit_sharded_for(LIGHT, &random_nonempty_batch(&mut rng, 4), 16);
+            ssd.submit(&IoBatch::shard_sizes(&hot).for_tenant(HOT), 32);
+            let light = random_nonempty_batch(&mut rng, 4);
+            ssd.submit(&IoBatch::shard_sizes(&light).for_tenant(LIGHT), 16);
         }
 
         let stats = ssd.tenant_stats();
